@@ -1,0 +1,114 @@
+//! End-to-end driver — the Section IV-B verification experiment, and this
+//! repo's headline validation run (recorded in EXPERIMENTS.md).
+//!
+//! Simulates the NaiveBayes job on the 5-slave cluster three times (no AG,
+//! CPU AG, I/O AG), runs the full BigRoots pipeline through the XLA
+//! runtime when artifacts exist, prints Fig. 3–5-style summaries and the
+//! Table III-style confusion, and **exits non-zero if the headline shape
+//! fails** (BigRoots FP must undercut PCC FP; I/O TP must be ≥ PCC's).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example anomaly_injection
+//! ```
+
+use bigroots::analysis::features::extract_all;
+use bigroots::analysis::roc::{ground_truth, resource_features, score_filtered};
+use bigroots::analysis::{bigroots as rules, pcc, Confusion};
+use bigroots::coordinator::experiments::{run_verification_job, AgSetting, GT_COVERAGE};
+use bigroots::runtime::auto_backend;
+use bigroots::trace::AnomalyKind;
+use bigroots::util::table::{pct, Align, Table};
+
+fn main() {
+    let mut backend = auto_backend();
+    println!("stats backend: {}", backend.name());
+    let scale = std::env::args()
+        .skip_while(|a| a != "--scale")
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+
+    let mut table = Table::new("Verification: BigRoots vs PCC per injection setting")
+        .header(&["Setting", "Stragglers", "BR TP", "BR FP", "PCC TP", "PCC FP", "BR ACC", "PCC ACC"])
+        .aligns(&[
+            Align::Left,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+        ]);
+
+    let mut failures = Vec::new();
+    let mut io_tp = (0usize, 0usize);
+    let mut fp_totals = (0usize, 0usize);
+
+    for setting in [
+        AgSetting::None,
+        AgSetting::Single(AnomalyKind::Cpu),
+        AgSetting::Single(AnomalyKind::Io),
+    ] {
+        let trace = run_verification_job(setting, 42, scale);
+        let mut br_conf = Confusion::default();
+        let mut pcc_conf = Confusion::default();
+        let mut stragglers = 0;
+        for sf in extract_all(&trace, 3.0) {
+            let stats = backend.stage_stats(&sf);
+            let gt = ground_truth(&trace, &sf, GT_COVERAGE);
+            let a_br = rules::analyze_stage_with_stats(&sf, &stats, &Default::default());
+            // PCC with the thresholds tuned in the single-AG experiments
+            // (the paper's comparison point; defaults leave PCC blind here).
+            let pcfg = bigroots::analysis::PccConfig {
+                pearson_threshold: 0.2,
+                max_quantile: 0.7,
+                ..Default::default()
+            };
+            let a_pcc = pcc::analyze_stage_with_stats(&sf, &stats, &pcfg);
+            stragglers += a_br.stragglers.rows.len();
+            br_conf.add(score_filtered(&a_br, &gt, &resource_features()));
+            pcc_conf.add(score_filtered(&a_pcc, &gt, &resource_features()));
+        }
+        if setting == AgSetting::Single(AnomalyKind::Io) {
+            io_tp = (br_conf.tp, pcc_conf.tp);
+        }
+        if setting != AgSetting::None {
+            fp_totals.0 += br_conf.fp;
+            fp_totals.1 += pcc_conf.fp;
+        }
+        table.row(vec![
+            setting.label(),
+            stragglers.to_string(),
+            br_conf.tp.to_string(),
+            br_conf.fp.to_string(),
+            pcc_conf.tp.to_string(),
+            pcc_conf.fp.to_string(),
+            pct(br_conf.acc()),
+            pct(pcc_conf.acc()),
+        ]);
+    }
+    print!("{}", table.render());
+
+    // Headline shape assertions (the end-to-end validation contract).
+    if fp_totals.0 > fp_totals.1 {
+        failures.push(format!(
+            "BigRoots FP {} exceeds PCC FP {} — paper shape violated",
+            fp_totals.0, fp_totals.1
+        ));
+    }
+    if io_tp.0 < io_tp.1.saturating_sub(io_tp.1 / 4) {
+        failures.push(format!(
+            "I/O AG: BigRoots TP {} well below PCC TP {} — paper shape violated",
+            io_tp.0, io_tp.1
+        ));
+    }
+    if failures.is_empty() {
+        println!("VALIDATION OK: headline shapes hold (BigRoots FP < PCC FP; IO TP competitive)");
+    } else {
+        for f in &failures {
+            eprintln!("VALIDATION FAILED: {f}");
+        }
+        std::process::exit(1);
+    }
+}

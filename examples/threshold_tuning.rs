@@ -1,0 +1,61 @@
+//! Threshold tuning: sweep BigRoots' (λ_q, λ_p) grid against injected
+//! ground truth and print the accuracy surface — how a user would tune the
+//! thresholds for their own cluster (Section IV-B.2's quantitative
+//! analysis, interactively).
+//!
+//! ```sh
+//! cargo run --release --example threshold_tuning
+//! ```
+
+use bigroots::analysis::bigroots::BigRootsConfig;
+use bigroots::analysis::features::extract_all;
+use bigroots::analysis::roc::{ground_truth, sweep_bigroots};
+use bigroots::analysis::stats::compute_native;
+use bigroots::coordinator::experiments::{run_verification_job, AgSetting, GT_COVERAGE};
+use bigroots::trace::AnomalyKind;
+use bigroots::util::table::{fnum, Align, Table};
+
+fn main() {
+    let trace = run_verification_job(AgSetting::Single(AnomalyKind::Io), 42, 0.8);
+    let mut owned = Vec::new();
+    for sf in extract_all(&trace, 3.0) {
+        let stats = compute_native(&sf);
+        let gt = ground_truth(&trace, &sf, GT_COVERAGE);
+        owned.push((sf, stats, gt));
+    }
+    let stages: Vec<_> = owned.iter().map(|(a, b, c)| (a, b, c)).collect();
+
+    let lq: Vec<f64> = vec![0.5, 0.6, 0.7, 0.8, 0.9];
+    let lp: Vec<f64> = vec![1.1, 1.25, 1.5, 2.0, 3.0];
+    let points = sweep_bigroots(&stages, &BigRootsConfig::default(), &lq, &lp);
+
+    let mut t = Table::new("Accuracy surface: rows λ_q, columns λ_p (cells: ACC% / TPR%)")
+        .header(&["λ_q \\ λ_p", "1.1", "1.25", "1.5", "2.0", "3.0"])
+        .aligns(&[Align::Left, Align::Right, Align::Right, Align::Right, Align::Right, Align::Right]);
+    for &q in &lq {
+        let mut row = vec![format!("{q:.2}")];
+        for &p in &lp {
+            let pt = points
+                .iter()
+                .find(|x| (x.t1 - q).abs() < 1e-9 && (x.t2 - p).abs() < 1e-9)
+                .unwrap();
+            row.push(format!("{}/{}", fnum(pt.acc * 100.0, 1), fnum(pt.tpr * 100.0, 0)));
+        }
+        t.row(row);
+    }
+    print!("{}", t.render());
+
+    let best = points
+        .iter()
+        .max_by(|a, b| a.acc.partial_cmp(&b.acc).unwrap())
+        .unwrap();
+    println!(
+        "best ACC {} at λ_q={}, λ_p={} (TPR {}, FPR {})",
+        fnum(best.acc, 4),
+        best.t1,
+        best.t2,
+        fnum(best.tpr, 3),
+        fnum(best.fpr, 4)
+    );
+    println!("(the paper's defaults λ_q=0.8, λ_p=1.5 should sit near the plateau)");
+}

@@ -1,0 +1,101 @@
+"""AOT compilation: lower the L2 stage-stats graph to HLO **text** for the
+rust PJRT runtime.
+
+HLO text — NOT ``lowered.compile()`` or a serialized HloModuleProto — is the
+interchange format: jax ≥ 0.5 emits protos with 64-bit instruction ids that
+the crate's xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (one per task-axis bucket):
+
+    artifacts/stage_stats_t{T}.hlo.txt
+    artifacts/edge_means_t{T}.hlo.txt
+    artifacts/manifest.json          — shapes the rust loader validates
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (from python/).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_stage_stats(t: int) -> str:
+    # The artifact takes presorted columns (see model.build_stage_stats).
+    fn = model.build_stage_stats(use_pallas=True, presorted=True)
+    lowered = jax.jit(fn).lower(*model.example_args(t))
+    return to_hlo_text(lowered)
+
+
+def lower_edge_means(t: int) -> str:
+    fn = model.build_edge_means(use_pallas=True)
+    lowered = jax.jit(fn).lower(*model.edge_example_args(t))
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--buckets", default=",".join(str(b) for b in model.BUCKETS))
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    buckets = [int(b) for b in args.buckets.split(",") if b]
+    manifest = {
+        "version": 2,
+        "presorted": True,
+        "num_features": model.NUM_FEATURES,
+        "grid_q": model.GRID_Q,
+        "max_nodes": model.MAX_NODES,
+        "edge_window": model.EDGE_W,
+        "buckets": buckets,
+        "outputs": {
+            "stage_stats": [
+                {"name": "col", "shape": [3, model.NUM_FEATURES]},
+                {"name": "dur_stats", "shape": [1, 4]},
+                {"name": "node_sum", "shape": [model.MAX_NODES, model.NUM_FEATURES]},
+                {"name": "node_count", "shape": [model.MAX_NODES, 1]},
+                {"name": "quantiles", "shape": [model.GRID_Q, model.NUM_FEATURES]},
+                {"name": "pearson", "shape": [model.NUM_FEATURES]},
+            ]
+        },
+        "artifacts": {},
+    }
+
+    for t in buckets:
+        path = os.path.join(args.out_dir, f"stage_stats_t{t}.hlo.txt")
+        text = lower_stage_stats(t)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][f"stage_stats_t{t}"] = os.path.basename(path)
+        print(f"wrote {path} ({len(text)} chars)")
+
+        epath = os.path.join(args.out_dir, f"edge_means_t{t}.hlo.txt")
+        etext = lower_edge_means(t)
+        with open(epath, "w") as f:
+            f.write(etext)
+        manifest["artifacts"][f"edge_means_t{t}"] = os.path.basename(epath)
+        print(f"wrote {epath} ({len(etext)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

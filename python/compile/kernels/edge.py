@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: edge-detection window means (Eq. 6).
+
+Input rows carry each task's pre-gathered resource samples for the window
+*before* task start and *after* task end — three segments of W samples
+(cpu | disk | net) per row. The kernel reduces each segment to its mean in
+one VMEM pass, tiled along the task axis like ``stats.py``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_T_MAX = 512
+
+
+def _tile(t):
+    # Largest power-of-two tile ≤ TILE_T_MAX that divides the task axis.
+    tile = min(TILE_T_MAX, t)
+    while t % tile != 0:
+        tile //= 2
+    return max(tile, 1)
+
+
+def _edge_kernel(window, head_ref, tail_ref, hout_ref, tout_ref):
+    tt = head_ref.shape[0]
+    h = head_ref[...].reshape(tt, 3, window)
+    t = tail_ref[...].reshape(tt, 3, window)
+    hout_ref[...] = h.mean(axis=2)
+    tout_ref[...] = t.mean(axis=2)
+
+
+@functools.partial(jax.jit, static_argnames=("window",))
+def edge_means(head, tail, window):
+    """Pallas-backed window means; contract of ``ref.edge_means_ref``."""
+    t, cw = head.shape
+    tile_t = _tile(t)
+    assert cw == 3 * window, f"expected 3*{window} columns, got {cw}"
+    assert t % tile_t == 0, f"task axis {t} must be a multiple of {tile_t}"
+    grid = (t // tile_t,)
+    kernel = functools.partial(_edge_kernel, window)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_t, cw), lambda i: (i, 0)),
+            pl.BlockSpec((tile_t, cw), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_t, 3), lambda i: (i, 0)),
+            pl.BlockSpec((tile_t, 3), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, 3), head.dtype),
+            jax.ShapeDtypeStruct((t, 3), head.dtype),
+        ],
+        interpret=True,
+    )(head, tail)

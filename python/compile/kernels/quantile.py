@@ -1,0 +1,60 @@
+"""L1 Pallas kernel: quantile grid by interpolation matmul.
+
+The columns arrive pre-sorted (the L2 graph does ``jnp.sort`` — sorting is
+an XLA-native op with no Pallas benefit). The kernel evaluates the whole
+λ_q grid at once as a single ``(Q, T) @ (T, F)`` matmul against
+linear-interpolation *hat weights*:
+
+    pos_q = q · (n − 1)            (numpy's quantile position)
+    w[q, t] = clip(1 − |pos_q − t|, 0, 1)
+
+Each weight row has at most two non-zeros (floor/ceil of pos) summing to 1,
+so the matmul IS numpy's interpolated quantile — but expressed as a dense
+MXU-shaped contraction instead of a dynamic gather, which is exactly the
+GPU→TPU rethink the hardware-adaptation guide asks for: gathers are slow on
+TPU, matmuls are free.
+
+``n`` (the valid-row count) is a runtime scalar, passed as a (1, 1) array.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+GRID_Q = ref.GRID_Q
+
+
+def _quantile_kernel(n_ref, xs_ref, out_ref):
+    t = xs_ref.shape[0]
+    n = n_ref[0, 0]
+    dtype = xs_ref.dtype
+    q = jax.lax.broadcasted_iota(dtype, (GRID_Q, 1), 0) / (GRID_Q - 1)
+    pos = q * jnp.maximum(n - 1.0, 0.0)  # [Q, 1]
+    rows = jax.lax.broadcasted_iota(dtype, (1, t), 1)  # [1, T]
+    w = jnp.clip(1.0 - jnp.abs(pos - rows), 0.0, 1.0)  # [Q, T]
+    out_ref[...] = w @ xs_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def quantile_grid(x_sorted, n):
+    """Pallas-backed quantile grid; same contract as ``ref.quantile_grid_ref``.
+
+    ``x_sorted``: f32[T, F] column-ascending, padding at the end replaced by
+    the column max (finite). ``n``: f32[] valid count.
+    """
+    t, f = x_sorted.shape
+    return pl.pallas_call(
+        _quantile_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((t, f), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((GRID_Q, f), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((GRID_Q, f), x_sorted.dtype),
+        interpret=True,
+    )(jnp.asarray(n, x_sorted.dtype).reshape(1, 1), x_sorted)

@@ -1,0 +1,103 @@
+"""Pure-jnp oracle for the L1 Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain jax.numpy ops. pytest compares kernel vs reference
+(`python/tests/test_kernels.py`), and the L2 model is free to swap either
+in (`model.build_stage_stats(use_pallas=False)` uses these).
+
+Conventions (shared with the rust side — see
+`rust/src/analysis/stats.rs` and `rust/src/runtime/stats_exec.rs`):
+
+- ``x``: f32[T, F] feature matrix, rows past the valid count zeroed.
+- ``dur``: f32[T] task durations, same padding.
+- ``mask``: f32[T] with 1.0 for valid rows.
+- ``node_onehot``: f32[N, T]; column t is the one-hot node of task t
+  (all-zero for padded rows).
+- Quantiles use numpy's linear-interpolation definition on the fixed grid
+  q = i/(Q-1), i in 0..Q.
+"""
+
+import jax.numpy as jnp
+
+# Fixed quantile-grid size (keep in sync with rust analysis::stats::GRID_Q).
+GRID_Q = 21
+# Feature count (rust analysis::features::FeatureKind::COUNT).
+NUM_FEATURES = 12
+
+
+def moments_ref(x, dur, mask, node_onehot):
+    """Masked column moments + per-node aggregation.
+
+    Returns:
+      col: f32[3, F] — rows are (sum, sum of squares, dot with duration)
+      dur_stats: f32[1, 4] — (sum, sumsq, count, 0) of masked durations
+      node_sum: f32[N, F]
+      node_count: f32[N, 1]
+    """
+    m = mask[:, None]  # [T, 1]
+    xm = x * m
+    col_sum = xm.sum(axis=0)
+    col_sumsq = (xm * xm).sum(axis=0)
+    col_dot = (xm * (dur * mask)[:, None]).sum(axis=0)
+    col = jnp.stack([col_sum, col_sumsq, col_dot], axis=0)
+    dm = dur * mask
+    dur_stats = jnp.array(
+        [[0.0, 0.0, 0.0, 0.0]], dtype=x.dtype
+    ) + jnp.stack([dm.sum(), (dm * dm).sum(), mask.sum(), 0.0])[None, :]
+    node_sum = node_onehot @ xm
+    node_count = (node_onehot @ mask)[:, None]
+    return col, dur_stats, node_sum, node_count
+
+
+def quantile_grid_ref(x_sorted, n):
+    """Quantile grid over pre-sorted columns.
+
+    ``x_sorted``: f32[T, F], each column ascending with padded entries
+    placed at the END (the model sorts ``where(mask, x, +inf)`` and then
+    replaces +inf by the column max so the matmul formulation below stays
+    finite; entries at index >= n are never touched when n >= 1).
+
+    ``n``: f32[] — valid count.
+
+    Returns f32[GRID_Q, F].
+    """
+    t = x_sorted.shape[0]
+    q = jnp.arange(GRID_Q, dtype=x_sorted.dtype) / (GRID_Q - 1)
+    pos = q * jnp.maximum(n - 1.0, 0.0)  # [Q]
+    rows = jnp.arange(t, dtype=x_sorted.dtype)  # [T]
+    # Linear-interpolation "hat" weights: 1 at pos, sloping to 0 one row away.
+    w = jnp.clip(1.0 - jnp.abs(pos[:, None] - rows[None, :]), 0.0, 1.0)  # [Q, T]
+    return w @ x_sorted
+
+
+def edge_means_ref(head, tail, window):
+    """Head/tail window means for edge detection (Eq. 6).
+
+    ``head``/``tail``: f32[T, 3*W] — per-task pre-gathered resource samples
+    (cpu | disk | net segments of W samples each) before start / after end.
+    ``window``: static int W.
+
+    Returns (head_mean, tail_mean): each f32[T, 3].
+    """
+    t = head.shape[0]
+    h = head.reshape(t, 3, window).mean(axis=2)
+    ta = tail.reshape(t, 3, window).mean(axis=2)
+    return h, ta
+
+
+def pearson_from_moments(col, dur_stats):
+    """Pearson correlation of each feature column with duration, from the
+    moment outputs (shared by the reference and the Pallas path — this part
+    is plain jnp in the L2 graph either way).
+
+    Returns f32[F].
+    """
+    n = jnp.maximum(dur_stats[0, 2], 1.0)
+    col_mean = col[0] / n
+    col_var = jnp.maximum(col[1] / n - col_mean * col_mean, 0.0)
+    dur_mean = dur_stats[0, 0] / n
+    dur_var = jnp.maximum(dur_stats[0, 1] / n - dur_mean * dur_mean, 0.0)
+    cov = col[2] / n - col_mean * dur_mean
+    denom = jnp.sqrt(col_var * dur_var)
+    rho = jnp.where(denom > 1e-30, cov / jnp.maximum(denom, 1e-30), 0.0)
+    return jnp.clip(rho, -1.0, 1.0)

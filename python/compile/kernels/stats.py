@@ -1,0 +1,104 @@
+"""L1 Pallas kernel: fused masked moments + per-node aggregation.
+
+One pass over the ``tasks × features`` matrix produces every reduction the
+BigRoots rules need (Eq. 5 global thresholds, peer means by node exclusion,
+Eq. 8 Pearson numerators):
+
+- column sum / sum-of-squares / dot-with-duration,
+- masked duration sum / sumsq / count,
+- per-node feature sums (``node_onehot @ x`` — an MXU matmul on real TPU),
+- per-node task counts.
+
+TPU shaping: the grid walks the task axis in ``TILE_T``-row blocks; each
+block's ``(TILE_T, F)`` tile and its ``(N, TILE_T)`` one-hot slice live in
+VMEM, outputs are accumulated in-place across the sequential grid (the
+standard Pallas revisiting-output pattern). VMEM per step ≈
+TILE_T·(F+N+2)·4 B ≈ 512·22·4 ≈ 45 KiB — far under budget; see DESIGN.md
+§Perf for the roofline discussion.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO, which is what the AOT
+artifact ships.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Max tile along the task axis. §Perf iteration 3: 128 → 512 quarters the
+# interpret-mode grid steps (each step lowers to a while-loop iteration of
+# dynamic-update-slices in the AOT HLO) at t=2048 while keeping the VMEM
+# estimate at 512·(F+N+2)·4 B ≈ 45 KiB — far inside a real TPU's ~16 MiB.
+TILE_T_MAX = 512
+
+
+def _tile(t):
+    # Largest power-of-two tile ≤ TILE_T_MAX that divides the task axis.
+    tile = min(TILE_T_MAX, t)
+    while t % tile != 0:
+        tile //= 2
+    return max(tile, 1)
+
+
+def _moments_kernel(x_ref, dur_ref, mask_ref, onehot_ref, col_ref, dur_out_ref,
+                    node_sum_ref, node_count_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        col_ref[...] = jnp.zeros_like(col_ref)
+        dur_out_ref[...] = jnp.zeros_like(dur_out_ref)
+        node_sum_ref[...] = jnp.zeros_like(node_sum_ref)
+        node_count_ref[...] = jnp.zeros_like(node_count_ref)
+
+    m = mask_ref[...]  # [Tt, 1]
+    xm = x_ref[...] * m  # [Tt, F]
+    dm = dur_ref[...] * m  # [Tt, 1]
+    onehot = onehot_ref[...]  # [N, Tt]
+
+    col_ref[0, :] += xm.sum(axis=0)
+    col_ref[1, :] += (xm * xm).sum(axis=0)
+    col_ref[2, :] += (xm * dm).sum(axis=0)
+
+    dur_out_ref[0, 0] += dm.sum()
+    dur_out_ref[0, 1] += (dm * dm).sum()
+    dur_out_ref[0, 2] += m.sum()
+
+    # Per-node aggregation: (N, Tt) @ (Tt, F) → MXU-shaped on real TPU.
+    node_sum_ref[...] += onehot @ xm
+    node_count_ref[...] += onehot @ m
+
+
+@functools.partial(jax.jit, static_argnames=())
+def moments(x, dur, mask, node_onehot):
+    """Pallas-backed masked moments; same contract as ``ref.moments_ref``."""
+    t, f = x.shape
+    n = node_onehot.shape[0]
+    tile_t = _tile(t)
+    assert t % tile_t == 0, f"task axis {t} must be a multiple of {tile_t}"
+    grid = (t // tile_t,)
+    return pl.pallas_call(
+        _moments_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_t, f), lambda i: (i, 0)),
+            pl.BlockSpec((tile_t, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tile_t, 1), lambda i: (i, 0)),
+            pl.BlockSpec((n, tile_t), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((3, f), lambda i: (0, 0)),
+            pl.BlockSpec((1, 4), lambda i: (0, 0)),
+            pl.BlockSpec((n, f), lambda i: (0, 0)),
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((3, f), x.dtype),
+            jax.ShapeDtypeStruct((1, 4), x.dtype),
+            jax.ShapeDtypeStruct((n, f), x.dtype),
+            jax.ShapeDtypeStruct((n, 1), x.dtype),
+        ],
+        interpret=True,
+    )(x, dur[:, None], mask[:, None], node_onehot)

@@ -1,0 +1,232 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py) and vs
+numpy, including hypothesis sweeps over shapes and value ranges.
+
+This is the CORE correctness signal for the compiled artifact: the AOT HLO
+is lowered from exactly the functions under test here.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import edge as edge_kernel
+from compile.kernels import quantile as quantile_kernel
+from compile.kernels import ref
+from compile.kernels import stats as stats_kernel
+
+F = ref.NUM_FEATURES
+N = model.MAX_NODES
+W = model.EDGE_W
+
+
+def make_inputs(rng, t, n_valid, scale=1.0):
+    x = rng.uniform(0.0, scale, size=(t, F)).astype(np.float32)
+    dur = rng.uniform(0.1, 10.0, size=(t,)).astype(np.float32)
+    mask = np.zeros((t,), dtype=np.float32)
+    mask[:n_valid] = 1.0
+    x[n_valid:] = 0.0
+    dur[n_valid:] = 0.0
+    nodes = rng.integers(0, 5, size=(t,))
+    onehot = np.zeros((N, t), dtype=np.float32)
+    for i in range(n_valid):
+        onehot[nodes[i], i] = 1.0
+    return x, dur, mask, onehot
+
+
+# ---------------------------------------------------------------- moments
+
+class TestMoments:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(0)
+        x, dur, mask, onehot = make_inputs(rng, 256, 200)
+        out_k = stats_kernel.moments(x, dur, mask, onehot)
+        out_r = ref.moments_ref(x, dur, mask, onehot)
+        for k, r in zip(out_k, out_r):
+            np.testing.assert_allclose(np.asarray(k), np.asarray(r), rtol=2e-5, atol=1e-4)
+
+    def test_matches_numpy(self):
+        rng = np.random.default_rng(1)
+        x, dur, mask, onehot = make_inputs(rng, 128, 100)
+        col, dur_stats, node_sum, node_count = stats_kernel.moments(x, dur, mask, onehot)
+        v = x[:100]
+        np.testing.assert_allclose(np.asarray(col)[0], v.sum(axis=0), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(col)[1], (v * v).sum(axis=0), rtol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(col)[2], (v * dur[:100, None]).sum(axis=0), rtol=1e-5
+        )
+        assert np.asarray(dur_stats)[0, 2] == pytest.approx(100.0)
+        np.testing.assert_allclose(
+            np.asarray(node_sum), onehot @ (x * mask[:, None]), rtol=1e-5, atol=1e-5
+        )
+        np.testing.assert_allclose(
+            np.asarray(node_count)[:, 0], onehot @ mask, rtol=1e-6
+        )
+
+    def test_full_mask(self):
+        rng = np.random.default_rng(2)
+        x, dur, mask, onehot = make_inputs(rng, 128, 128)
+        col, dur_stats, *_ = stats_kernel.moments(x, dur, mask, onehot)
+        assert np.asarray(dur_stats)[0, 2] == pytest.approx(128.0)
+        np.testing.assert_allclose(np.asarray(col)[0], x.sum(axis=0), rtol=1e-5)
+
+    def test_empty_mask(self):
+        x = np.zeros((128, F), np.float32)
+        dur = np.zeros((128,), np.float32)
+        mask = np.zeros((128,), np.float32)
+        onehot = np.zeros((N, 128), np.float32)
+        col, dur_stats, node_sum, node_count = stats_kernel.moments(x, dur, mask, onehot)
+        assert float(np.abs(np.asarray(col)).sum()) == 0.0
+        assert float(np.asarray(dur_stats)[0, 2]) == 0.0
+        assert float(np.abs(np.asarray(node_sum)).sum()) == 0.0
+
+    def test_mask_zeroes_padding_influence(self):
+        # Garbage in padded rows must not leak (the kernel multiplies by mask).
+        rng = np.random.default_rng(3)
+        x, dur, mask, onehot = make_inputs(rng, 256, 130)
+        x2 = x.copy()
+        x2[130:] = 999.0
+        dur2 = dur.copy()
+        dur2[130:] = 123.0
+        a = stats_kernel.moments(x, dur, mask, onehot)
+        b = stats_kernel.moments(x2, dur2, mask, onehot)
+        for u, v in zip(a, b):
+            np.testing.assert_allclose(np.asarray(u), np.asarray(v), rtol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        t_mult=st.integers(min_value=1, max_value=6),
+        frac=st.floats(min_value=0.05, max_value=1.0),
+        scale=st.sampled_from([0.01, 1.0, 100.0, 1e4]),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_hypothesis_sweep(self, t_mult, frac, scale, seed):
+        t = 128 * t_mult
+        n_valid = max(1, int(t * frac))
+        rng = np.random.default_rng(seed)
+        x, dur, mask, onehot = make_inputs(rng, t, n_valid, scale)
+        out_k = stats_kernel.moments(x, dur, mask, onehot)
+        out_r = ref.moments_ref(x, dur, mask, onehot)
+        for k, r in zip(out_k, out_r):
+            np.testing.assert_allclose(
+                np.asarray(k), np.asarray(r), rtol=5e-4, atol=1e-3 * scale
+            )
+
+
+# --------------------------------------------------------------- quantiles
+
+class TestQuantiles:
+    def sorted_cols(self, x, mask):
+        return np.asarray(model._sorted_columns(jnp.asarray(x), jnp.asarray(mask)))
+
+    def test_matches_numpy_quantile(self):
+        rng = np.random.default_rng(4)
+        t, n_valid = 256, 177
+        x, _, mask, _ = make_inputs(rng, t, n_valid, scale=10.0)
+        xs = self.sorted_cols(x, mask)
+        out = np.asarray(quantile_kernel.quantile_grid(xs, float(n_valid)))
+        qs = np.arange(ref.GRID_Q) / (ref.GRID_Q - 1)
+        expect = np.quantile(x[:n_valid], qs, axis=0)
+        np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+
+    def test_matches_ref(self):
+        rng = np.random.default_rng(5)
+        x, _, mask, _ = make_inputs(rng, 128, 77)
+        xs = self.sorted_cols(x, mask)
+        k = np.asarray(quantile_kernel.quantile_grid(xs, 77.0))
+        r = np.asarray(ref.quantile_grid_ref(jnp.asarray(xs), 77.0))
+        np.testing.assert_allclose(k, r, rtol=1e-5, atol=1e-6)
+
+    def test_single_valid_row(self):
+        x = np.zeros((128, F), np.float32)
+        x[0] = 7.5
+        mask = np.zeros((128,), np.float32)
+        mask[0] = 1.0
+        xs = self.sorted_cols(x, mask)
+        out = np.asarray(quantile_kernel.quantile_grid(xs, 1.0))
+        np.testing.assert_allclose(out, 7.5, rtol=1e-6)
+
+    def test_monotone_in_q(self):
+        rng = np.random.default_rng(6)
+        x, _, mask, _ = make_inputs(rng, 256, 256)
+        xs = self.sorted_cols(x, mask)
+        out = np.asarray(quantile_kernel.quantile_grid(xs, 256.0))
+        assert (np.diff(out, axis=0) >= -1e-6).all()
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n_valid=st.integers(min_value=1, max_value=512),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_hypothesis_vs_numpy(self, n_valid, seed):
+        t = 512
+        rng = np.random.default_rng(seed)
+        x, _, mask, _ = make_inputs(rng, t, n_valid, scale=5.0)
+        xs = self.sorted_cols(x, mask)
+        out = np.asarray(quantile_kernel.quantile_grid(xs, float(n_valid)))
+        qs = np.arange(ref.GRID_Q) / (ref.GRID_Q - 1)
+        expect = np.quantile(x[:n_valid], qs, axis=0)
+        np.testing.assert_allclose(out, expect, rtol=1e-3, atol=1e-3)
+
+
+# -------------------------------------------------------------- edge means
+
+class TestEdgeMeans:
+    def test_matches_ref_and_numpy(self):
+        rng = np.random.default_rng(7)
+        t = 256
+        head = rng.uniform(0, 1, (t, 3 * W)).astype(np.float32)
+        tail = rng.uniform(0, 1, (t, 3 * W)).astype(np.float32)
+        hk, tk = edge_kernel.edge_means(head, tail, W)
+        hr, tr = ref.edge_means_ref(jnp.asarray(head), jnp.asarray(tail), W)
+        np.testing.assert_allclose(np.asarray(hk), np.asarray(hr), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(tk), np.asarray(tr), rtol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(hk), head.reshape(t, 3, W).mean(axis=2), rtol=1e-5
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        t_mult=st.integers(min_value=1, max_value=4),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_hypothesis_sweep(self, t_mult, seed):
+        t = 128 * t_mult
+        rng = np.random.default_rng(seed)
+        head = rng.uniform(0, 100, (t, 3 * W)).astype(np.float32)
+        tail = rng.uniform(0, 100, (t, 3 * W)).astype(np.float32)
+        hk, tk = edge_kernel.edge_means(head, tail, W)
+        hr, tr = ref.edge_means_ref(jnp.asarray(head), jnp.asarray(tail), W)
+        np.testing.assert_allclose(np.asarray(hk), np.asarray(hr), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(tk), np.asarray(tr), rtol=1e-5)
+
+
+# ---------------------------------------------------------------- pearson
+
+class TestPearson:
+    def test_matches_numpy_corrcoef(self):
+        rng = np.random.default_rng(8)
+        t, n_valid = 256, 211
+        x, dur, mask, onehot = make_inputs(rng, t, n_valid)
+        col, dur_stats, *_ = ref.moments_ref(
+            jnp.asarray(x), jnp.asarray(dur), jnp.asarray(mask), jnp.asarray(onehot)
+        )
+        rho = np.asarray(ref.pearson_from_moments(col, dur_stats))
+        for k in range(F):
+            expect = np.corrcoef(x[:n_valid, k], dur[:n_valid])[0, 1]
+            assert rho[k] == pytest.approx(expect, rel=2e-3, abs=2e-3), f"feature {k}"
+
+    def test_constant_feature_is_zero(self):
+        t = 128
+        x = np.ones((t, F), np.float32)
+        dur = np.linspace(1, 5, t).astype(np.float32)
+        mask = np.ones((t,), np.float32)
+        onehot = np.zeros((N, t), np.float32)
+        col, dur_stats, *_ = ref.moments_ref(
+            jnp.asarray(x), jnp.asarray(dur), jnp.asarray(mask), jnp.asarray(onehot)
+        )
+        rho = np.asarray(ref.pearson_from_moments(col, dur_stats))
+        np.testing.assert_allclose(rho, 0.0, atol=1e-5)

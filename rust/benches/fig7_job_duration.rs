@@ -1,0 +1,61 @@
+//! Bench: **Figure 7** — job duration under different AG settings,
+//! repeated (paper: 10 repetitions per setting).
+//!
+//! Paper shape: mean delay vs baseline is small (CPU 4.22%, I/O 5.86%,
+//! network 3.53%, mixed 4.02%): I/O worst, network least, none severe.
+//!
+//! Run: `cargo bench --bench fig7_job_duration [-- --quick]`
+
+use bigroots::coordinator::experiments::fig7;
+use bigroots::testing::bench::Bench;
+use bigroots::util::stats::{mean, stddev};
+use bigroots::util::table::{fnum, pct, Align, Table};
+
+fn main() {
+    let bench = Bench::new();
+    let (reps, scale) = if bench.quick { (3, 0.3) } else { (10, 1.0) };
+
+    let rows = fig7(reps, scale, 42);
+    let base = mean(&rows[0].1);
+
+    let mut t = Table::new(&format!("Figure 7: job duration, {reps} reps, scale {scale}"))
+        .header(&["Setting", "mean (s)", "std (s)", "delay vs baseline"])
+        .aligns(&[Align::Left, Align::Right, Align::Right, Align::Right]);
+    let mut delays = Vec::new();
+    for (setting, durs) in &rows {
+        let m = mean(durs);
+        let delay = (m - base) / base;
+        t.row(vec![
+            setting.label(),
+            fnum(m, 2),
+            fnum(stddev(durs), 2),
+            pct(delay),
+        ]);
+        delays.push((setting.label(), delay));
+    }
+    print!("{}", t.render());
+
+    std::fs::create_dir_all("bench_out").ok();
+    let mut csv = String::from("setting,rep,duration_s\n");
+    for (setting, durs) in &rows {
+        for (i, d) in durs.iter().enumerate() {
+            csv.push_str(&format!("{},{},{}\n", setting.label(), i, d));
+        }
+    }
+    std::fs::write("bench_out/fig7_job_duration.csv", csv).expect("write csv");
+    println!("wrote bench_out/fig7_job_duration.csv");
+
+    let io = delays.iter().find(|(l, _)| l.contains("IO")).unwrap().1;
+    let net = delays.iter().find(|(l, _)| l.contains("NETWORK")).unwrap().1;
+    println!(
+        "shape: no setting delays the job catastrophically (max {}): {}",
+        pct(delays.iter().map(|d| d.1).fold(0.0, f64::max)),
+        if delays.iter().all(|d| d.1 < 0.35) { "OK" } else { "MISMATCH" }
+    );
+    println!(
+        "shape: network delay ({}) below IO delay ({}): {}",
+        pct(net),
+        pct(io),
+        if net <= io + 0.02 { "OK" } else { "MISMATCH" }
+    );
+}

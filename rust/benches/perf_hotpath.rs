@@ -1,0 +1,88 @@
+//! Bench: the analysis **hot path** — stage-stats throughput through the
+//! native backend and the XLA (AOT Pallas) backend, feature extraction,
+//! rule evaluation, and the end-to-end pipeline. This is the §Perf
+//! deliverable's measurement harness (see EXPERIMENTS.md §Perf).
+//!
+//! Run: `cargo bench --bench perf_hotpath [-- --quick]`
+
+use bigroots::analysis::bigroots::{analyze_stage_with_stats, BigRootsConfig};
+use bigroots::analysis::features::extract_all;
+use bigroots::analysis::stats::{compute_native, StatsBackend};
+use bigroots::coordinator::Pipeline;
+use bigroots::runtime::XlaBackend;
+use bigroots::sim::{workloads, Engine, InjectionPlan, SimConfig, StageSpec};
+use bigroots::testing::bench::{black_box, Bench};
+
+fn main() {
+    let mut bench = Bench::new();
+
+    // --- fixture: one large stage per bucket size -------------------------
+    let stage_of = |n: usize, seed: u64| {
+        let mut s = StageSpec::base("perf", n);
+        s.input_mean_bytes = 4e6;
+        s.compute_base = 0.1;
+        s.compute_per_byte = 0.0;
+        let mut eng = Engine::new(SimConfig { seed, ..Default::default() });
+        let trace = eng.run("perf", "perf", &[s], &InjectionPlan::none());
+        let sf = extract_all(&trace, 3.0).remove(0);
+        (trace, sf)
+    };
+
+    for &n in &[100, 500, 2000] {
+        let (_trace, sf) = stage_of(n, 9);
+        bench.run(&format!("stats/native/tasks={n}"), n as f64, || {
+            black_box(compute_native(&sf));
+        });
+    }
+
+    // --- XLA backend (needs artifacts) ------------------------------------
+    let dir = XlaBackend::default_dir();
+    if std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        let mut xla = XlaBackend::open(&dir).expect("artifacts unloadable");
+        for &n in &[100, 500, 2000] {
+            let (_trace, sf) = stage_of(n, 9);
+            // Warm compile outside the timed region happens inside run()'s
+            // warmup phase automatically.
+            bench.run(&format!("stats/xla-pjrt/tasks={n}"), n as f64, || {
+                black_box(xla.stage_stats(&sf));
+            });
+        }
+    } else {
+        println!("(artifacts missing — skipping XLA backend timings; run `make artifacts`)");
+    }
+
+    // --- rule evaluation ---------------------------------------------------
+    let (_trace, sf) = stage_of(2000, 9);
+    let stats = compute_native(&sf);
+    bench.run("rules/bigroots/tasks=2000", 2000.0, || {
+        black_box(analyze_stage_with_stats(&sf, &stats, &BigRootsConfig::default()));
+    });
+
+    // --- feature extraction -------------------------------------------------
+    let w = workloads::naive_bayes(0.6);
+    let mut eng = Engine::new(SimConfig { seed: 10, ..Default::default() });
+    let trace = eng.run("perf", "NaiveBayes", &w.stages, &InjectionPlan::none());
+    let ntasks = trace.tasks.len() as f64;
+    bench.run("extract/naive_bayes", ntasks, || {
+        black_box(extract_all(&trace, 3.0));
+    });
+
+    // --- simulator ----------------------------------------------------------
+    bench.run("sim/naive_bayes(scale=0.6)", ntasks, || {
+        let mut eng = Engine::new(SimConfig { seed: 11, ..Default::default() });
+        black_box(eng.run("perf", "NaiveBayes", &w.stages, &InjectionPlan::none()));
+    });
+
+    // --- end-to-end pipeline -------------------------------------------------
+    bench.run("pipeline/native/naive_bayes", ntasks, || {
+        let mut p = Pipeline::native();
+        black_box(p.analyze(&trace, "ml"));
+    });
+    if std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        let backend = XlaBackend::open(&dir).expect("artifacts unloadable");
+        let mut p = Pipeline::new(Box::new(backend));
+        bench.run("pipeline/xla/naive_bayes", ntasks, || {
+            black_box(p.analyze(&trace, "ml"));
+        });
+    }
+}

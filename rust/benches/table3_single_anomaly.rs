@@ -1,0 +1,66 @@
+//! Bench: **Table III** — TP/FP of BigRoots vs PCC under single-AG
+//! injection (CPU / I/O / network), plus the wall-time of the full
+//! verification pipeline.
+//!
+//! Paper shape to reproduce: BigRoots FP ≈ 0 while PCC accumulates tens of
+//! FPs; BigRoots TP ≥ PCC TP for I/O.
+//!
+//! Run: `cargo bench --bench table3_single_anomaly [-- --quick]`
+
+use bigroots::coordinator::experiments::{self, AgSetting};
+use bigroots::testing::bench::Bench;
+use bigroots::trace::AnomalyKind;
+use bigroots::util::table::{Align, Table};
+
+fn main() {
+    let mut bench = Bench::new();
+    let (reps, scale): (usize, f64) = if bench.quick { (2, 0.4) } else { (10, 1.0) };
+
+    // Time one full verification run (sim + both analyzers).
+    bench.run("table3/one_verification_run(sim+analyze)", 1.0, || {
+        let trace = experiments::run_verification_job(
+            AgSetting::Single(AnomalyKind::Cpu),
+            7,
+            scale.min(0.5),
+        );
+        let m = experiments::compare_methods(
+            &trace,
+            &Default::default(),
+            &Default::default(),
+            Some(AnomalyKind::Cpu),
+        );
+        bigroots::testing::bench::black_box(m);
+    });
+
+    let rows = experiments::table3(reps, scale, 42);
+    let mut t = Table::new(&format!(
+        "Table III: BigRoots vs PCC (TP/FP, {reps} reps, scale {scale})"
+    ))
+    .header(&["Experiment", "BigRoots TP", "BigRoots FP", "PCC TP", "PCC FP"])
+    .aligns(&[Align::Left, Align::Right, Align::Right, Align::Right, Align::Right]);
+    for (kind, m) in &rows {
+        t.row(vec![
+            format!("{} AG", kind.as_str()),
+            m.bigroots_kind.0.to_string(),
+            m.bigroots_kind.1.to_string(),
+            m.pcc_kind.0.to_string(),
+            m.pcc_kind.1.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // Shape checks (reported, not fatal in quick mode).
+    let br_fp: usize = rows.iter().map(|(_, m)| m.bigroots_kind.1).sum();
+    let pcc_fp: usize = rows.iter().map(|(_, m)| m.pcc_kind.1).sum();
+    println!(
+        "shape: BigRoots total FP {br_fp} vs PCC total FP {pcc_fp} ({})",
+        if br_fp < pcc_fp { "OK — matches paper" } else { "MISMATCH" }
+    );
+    let io = rows.iter().find(|(k, _)| *k == AnomalyKind::Io).unwrap();
+    println!(
+        "shape: IO AG BigRoots TP {} vs PCC TP {} ({})",
+        io.1.bigroots_kind.0,
+        io.1.pcc_kind.0,
+        if io.1.bigroots_kind.0 >= io.1.pcc_kind.0 { "OK — matches paper" } else { "MISMATCH" }
+    );
+}

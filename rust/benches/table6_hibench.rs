@@ -1,0 +1,50 @@
+//! Bench: **Table VI** — the HiBench case study: BigRoots root causes and
+//! straggler counts across all 11 workloads.
+//!
+//! Paper shape: Kmeans dominated by shuffle-read skew; LR/SVM by
+//! bytes_read; PCA/SVM produce the most stragglers (small-task noise);
+//! micro/SQL workloads mostly unexplained or resource-contention.
+//!
+//! Run: `cargo bench --bench table6_hibench [-- --quick]`
+
+use bigroots::analysis::report::render_table6;
+use bigroots::analysis::FeatureKind;
+use bigroots::coordinator::experiments;
+use bigroots::testing::bench::Bench;
+
+fn main() {
+    let mut bench = Bench::new();
+    let scale: f64 = if bench.quick { 0.1 } else { 1.0 };
+
+    bench.run("table6/hibench_suite(sim+analyze)", 11.0, || {
+        let rows = experiments::table6(scale.min(0.2), 5);
+        bigroots::testing::bench::black_box(rows);
+    });
+
+    let rows = experiments::table6(scale, 42);
+    print!("{}", render_table6(&rows));
+
+    // Shape checks against the paper's qualitative story.
+    let get = |name: &str| rows.iter().find(|r| r.workload == name).unwrap();
+    let has = |name: &str, k: FeatureKind| get(name).causes.iter().any(|&(c, _)| c == k);
+    let checks = [
+        ("Kmeans has shuffle-read skew", has("Kmeans", FeatureKind::ShuffleReadBytes)),
+        (
+            "LogisticRegression has bytes_read skew",
+            has("LogisticRegression", FeatureKind::BytesRead),
+        ),
+        ("SVM has bytes_read skew", has("SVM", FeatureKind::BytesRead)),
+        (
+            "PCA among most stragglers",
+            get("PCA").stragglers
+                >= rows.iter().map(|r| r.stragglers).max().unwrap_or(0) / 2,
+        ),
+        (
+            "Terasort near-free of stragglers",
+            get("Terasort").stragglers <= get("Kmeans").stragglers,
+        ),
+    ];
+    for (desc, ok) in checks {
+        println!("shape: {desc}: {}", if ok { "OK" } else { "MISMATCH" });
+    }
+}

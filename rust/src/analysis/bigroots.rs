@@ -1,0 +1,455 @@
+//! The BigRoots root-cause identification rules — Section III-B.
+//!
+//! For each straggler and each feature, the feature is a root cause when:
+//!
+//! - **numerical / resource / time** (Eq. 5):
+//!   `F > global_quantile(λ_q)` AND `F > mean(F_peer) · λ_p`, where the
+//!   peer test passes against *either* the inter-node or the intra-node
+//!   peer group (the paper's two observations are alternatives — intra-node
+//!   evidence would be drowned out if the groups were pooled);
+//! - **time**: additionally `F > 0.2` (the empirical lower bound — a
+//!   blocking time far below task duration cannot explain the straggler);
+//! - **resource**: *edge detection* (Eq. 6) — if utilization in the window
+//!   before the task starts AND after it finishes stays below
+//!   `λ_e · F`, the utilization edge coincides with the task itself, so
+//!   the task (not an external hog) caused it → filtered out.
+//!   NOTE: the paper's printed Eq. 6 has the inequality pointing the other
+//!   way, which contradicts its own prose ("if system resource utilization
+//!   raises after task begins and drops after task ends, we will attribute
+//!   the resource utilization to the job itself"); we implement the prose
+//!   (see DESIGN.md §Errata).
+//! - **discrete / locality** (Eq. 7): `F_locality = 2` AND
+//!   `sum(F_locality over normal tasks) < num(normal)/2` — the straggler
+//!   read remotely while its peers read locally.
+
+use super::features::{FeatureCategory, FeatureKind, StageFeatures};
+use super::stats::{StageStats, StatsBackend};
+use super::straggler::{detect, StragglerSet};
+
+/// All thresholds of the method (paper defaults; the ROC benches sweep
+/// `lambda_q` and `lambda_p`).
+#[derive(Debug, Clone, Copy)]
+pub struct BigRootsConfig {
+    /// Straggler definition: duration > ratio × stage median.
+    pub straggler_ratio: f64,
+    /// λ_q — global quantile the feature must exceed (Eq. 5, first line).
+    pub lambda_q: f64,
+    /// λ_p — peer-mean multiplier (Eq. 5, second line).
+    pub lambda_p: f64,
+    /// Absolute lower bound for time features (paper: 0.2).
+    pub time_lower_bound: f64,
+    /// Edge-detection window width t (s).
+    pub edge_width: f64,
+    /// λ_e — edge filter threshold (Eq. 6).
+    pub lambda_e: f64,
+    /// Ablation switch (Fig. 9 compares with/without).
+    pub use_edge_detection: bool,
+    /// Absolute utilization floor for CPU/disk resource features — the
+    /// empirical lower bound of Section III applied to resources: an
+    /// almost-idle resource (noise blips over near-zero peers) cannot
+    /// explain a straggler. Prior straggler studies use 80% [11]; we
+    /// default to 0.5 to keep recall under partial overlap.
+    pub min_resource_util: f64,
+    /// Same floor for the network feature, in bytes per sampling interval
+    /// (Eq. 3 is absolute traffic, not a ratio).
+    pub min_net_bytes: f64,
+}
+
+impl Default for BigRootsConfig {
+    fn default() -> Self {
+        BigRootsConfig {
+            straggler_ratio: 1.5,
+            lambda_q: 0.8,
+            lambda_p: 1.5,
+            time_lower_bound: 0.2,
+            edge_width: 3.0,
+            lambda_e: 0.6,
+            use_edge_detection: true,
+            min_resource_util: 0.5,
+            min_net_bytes: 20e6,
+        }
+    }
+}
+
+/// Which peer group produced the supporting evidence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PeerEvidence {
+    InterNode,
+    IntraNode,
+    Both,
+    /// Locality rule (Eq. 7) — no peer-mean comparison involved.
+    LocalityVote,
+}
+
+/// One identified root cause: feature `kind` explains straggler `row`.
+#[derive(Debug, Clone)]
+pub struct RootCause {
+    pub row: usize,
+    pub task_id: u64,
+    pub kind: FeatureKind,
+    /// The feature value of the straggler.
+    pub value: f64,
+    /// The global quantile threshold it exceeded.
+    pub global_threshold: f64,
+    pub peer: PeerEvidence,
+}
+
+/// Analysis result of one stage.
+#[derive(Debug, Clone)]
+pub struct StageAnalysis {
+    pub stage_id: u64,
+    pub stragglers: StragglerSet,
+    pub causes: Vec<RootCause>,
+}
+
+impl StageAnalysis {
+    /// Root causes of a specific straggler row.
+    pub fn causes_of(&self, row: usize) -> Vec<&RootCause> {
+        self.causes.iter().filter(|c| c.row == row).collect()
+    }
+
+    /// Count of identified causes per feature kind.
+    pub fn cause_histogram(&self) -> Vec<(FeatureKind, usize)> {
+        FeatureKind::ALL
+            .iter()
+            .map(|&k| (k, self.causes.iter().filter(|c| c.kind == k).count()))
+            .filter(|&(_, n)| n > 0)
+            .collect()
+    }
+}
+
+/// Evaluate the peer-deviation test (Eq. 5 second line) for one straggler
+/// feature; returns the supporting evidence if it passes.
+fn peer_test(
+    stats: &StageStats,
+    node: usize,
+    k: FeatureKind,
+    v: f64,
+    lambda_p: f64,
+) -> Option<PeerEvidence> {
+    let inter = stats
+        .inter_node_mean(node, k)
+        .map(|m| v > m * lambda_p)
+        .unwrap_or(false);
+    let intra = stats
+        .intra_node_mean(node, k, v)
+        .map(|m| v > m * lambda_p)
+        .unwrap_or(false);
+    match (inter, intra) {
+        (true, true) => Some(PeerEvidence::Both),
+        (true, false) => Some(PeerEvidence::InterNode),
+        (false, true) => Some(PeerEvidence::IntraNode),
+        (false, false) => None,
+    }
+}
+
+/// Run the full BigRoots identification on one stage.
+pub fn analyze_stage(
+    sf: &StageFeatures,
+    backend: &mut dyn StatsBackend,
+    cfg: &BigRootsConfig,
+) -> StageAnalysis {
+    let stats = backend.stage_stats(sf);
+    analyze_stage_with_stats(sf, &stats, cfg)
+}
+
+/// Identification given precomputed stats (lets callers reuse one stats
+/// pass for BigRoots + PCC + threshold sweeps).
+pub fn analyze_stage_with_stats(
+    sf: &StageFeatures,
+    stats: &StageStats,
+    cfg: &BigRootsConfig,
+) -> StageAnalysis {
+    let stragglers = detect(sf, cfg.straggler_ratio);
+    let mut causes = Vec::new();
+
+    // Eq. 7 precomputation: locality sum over *normal* tasks.
+    let loc_col = sf.column(FeatureKind::Locality);
+    let normal_count = sf.num_tasks() - stragglers.rows.len();
+    let normal_loc_sum: f64 = (0..sf.num_tasks())
+        .filter(|r| !stragglers.is_straggler(*r))
+        .map(|r| loc_col[r])
+        .sum();
+    let locality_vote = normal_loc_sum < normal_count as f64 / 2.0;
+
+    for &row in &stragglers.rows {
+        let node = sf.nodes[row];
+        for &k in &FeatureKind::ALL {
+            let v = sf.get(row, k);
+            match k.category() {
+                FeatureCategory::Discrete => {
+                    // Eq. 7: straggler read remotely, peers read locally.
+                    if v >= 2.0 && locality_vote && normal_count > 0 {
+                        causes.push(RootCause {
+                            row,
+                            task_id: sf.task_ids[row],
+                            kind: k,
+                            value: v,
+                            global_threshold: 2.0,
+                            peer: PeerEvidence::LocalityVote,
+                        });
+                    }
+                }
+                cat => {
+                    // Eq. 5, first line: global quantile bound.
+                    let gq = stats.quantile(k, cfg.lambda_q);
+                    if !(v > gq) || v <= 0.0 {
+                        continue;
+                    }
+                    // Time features: absolute lower bound.
+                    if cat == FeatureCategory::Time && v <= cfg.time_lower_bound {
+                        continue;
+                    }
+                    // Resource features: absolute utilization floor (see
+                    // config docs) — relative tests alone misfire when the
+                    // whole stage sits near zero utilization.
+                    if cat == FeatureCategory::Resource {
+                        let floor = if k == FeatureKind::Network {
+                            cfg.min_net_bytes
+                        } else {
+                            cfg.min_resource_util
+                        };
+                        if v < floor {
+                            continue;
+                        }
+                    }
+                    // Eq. 5, second line: peer deviation (either group).
+                    let Some(peer) = peer_test(stats, node, k, v, cfg.lambda_p) else {
+                        continue;
+                    };
+                    // Resource features: edge detection (Eq. 6, prose
+                    // semantics — see module docs).
+                    if cat == FeatureCategory::Resource && cfg.use_edge_detection {
+                        let (head, tail) = sf.edge_means(row, k);
+                        let self_inflicted =
+                            head < cfg.lambda_e * v && tail < cfg.lambda_e * v;
+                        if self_inflicted {
+                            continue;
+                        }
+                    }
+                    causes.push(RootCause {
+                        row,
+                        task_id: sf.task_ids[row],
+                        kind: k,
+                        value: v,
+                        global_threshold: gq,
+                        peer,
+                    });
+                }
+            }
+        }
+    }
+    StageAnalysis { stage_id: sf.stage_id, stragglers, causes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::features::FeatureKind as F;
+    use crate::analysis::stats::NativeBackend;
+
+    /// Build a stage where row `hot` is a straggler with an elevated value
+    /// in column `k`, and everything else is flat.
+    fn stage_with_hot(k: F, hot_value: f64, n: usize, hot: usize) -> StageFeatures {
+        let f = F::COUNT;
+        let mut matrix = vec![0.0; n * f];
+        let mut durations = vec![1.0; n];
+        durations[hot] = 3.0;
+        for r in 0..n {
+            matrix[r * f + k.index()] = if r == hot { hot_value } else { 0.1 };
+        }
+        StageFeatures {
+            stage_id: 0,
+            task_ids: (0..n as u64).collect(),
+            nodes: (0..n).map(|r| r % 4).collect(),
+            durations,
+            matrix,
+            // Head/tail resource means default HIGH so edge detection does
+            // NOT filter (external contention persisted around the task).
+            head_means: vec![1.0; n * 3],
+            tail_means: vec![1.0; n * 3],
+        }
+    }
+
+    fn run(sf: &StageFeatures, cfg: &BigRootsConfig) -> StageAnalysis {
+        analyze_stage(sf, &mut NativeBackend, cfg)
+    }
+
+    #[test]
+    fn numerical_outlier_identified() {
+        let sf = stage_with_hot(F::ShuffleReadBytes, 5.0, 20, 7);
+        let a = run(&sf, &BigRootsConfig::default());
+        assert_eq!(a.stragglers.rows, vec![7]);
+        let causes = a.causes_of(7);
+        assert!(causes.iter().any(|c| c.kind == F::ShuffleReadBytes), "{causes:?}");
+    }
+
+    #[test]
+    fn flat_feature_not_identified() {
+        // Straggler exists but no feature deviates → no causes.
+        let f = F::COUNT;
+        let n = 20;
+        let mut durations = vec![1.0; n];
+        durations[3] = 3.0;
+        let sf = StageFeatures {
+            stage_id: 0,
+            task_ids: (0..n as u64).collect(),
+            nodes: (0..n).map(|r| r % 4).collect(),
+            durations,
+            matrix: vec![0.5; n * f],
+            head_means: vec![1.0; n * 3],
+            tail_means: vec![1.0; n * 3],
+        };
+        let a = run(&sf, &BigRootsConfig::default());
+        assert_eq!(a.stragglers.rows, vec![3]);
+        assert!(a.causes.is_empty(), "{:?}", a.causes);
+    }
+
+    #[test]
+    fn time_feature_lower_bound_filters_small_values() {
+        // GC elevated relative to peers but below the 0.2 absolute bound.
+        let sf = stage_with_hot(F::JvmGcTime, 0.15, 20, 5);
+        let a = run(&sf, &BigRootsConfig::default());
+        assert!(a.causes_of(5).iter().all(|c| c.kind != F::JvmGcTime));
+        // Above the bound it is identified.
+        let sf2 = stage_with_hot(F::JvmGcTime, 0.5, 20, 5);
+        let a2 = run(&sf2, &BigRootsConfig::default());
+        assert!(a2.causes_of(5).iter().any(|c| c.kind == F::JvmGcTime));
+    }
+
+    #[test]
+    fn edge_detection_filters_self_inflicted_resource() {
+        let mut sf = stage_with_hot(F::Cpu, 0.9, 20, 5);
+        // Head/tail low → the task itself caused the utilization.
+        for v in sf.head_means.iter_mut().chain(sf.tail_means.iter_mut()) {
+            *v = 0.05;
+        }
+        let with_edge = run(&sf, &BigRootsConfig::default());
+        assert!(with_edge.causes_of(5).iter().all(|c| c.kind != F::Cpu));
+        // Without edge detection the same feature IS flagged (Fig. 9's FP).
+        let cfg = BigRootsConfig { use_edge_detection: false, ..Default::default() };
+        let no_edge = run(&sf, &cfg);
+        assert!(no_edge.causes_of(5).iter().any(|c| c.kind == F::Cpu));
+    }
+
+    #[test]
+    fn edge_detection_keeps_external_resource() {
+        // Head/tail high → contention existed before/after → external.
+        let sf = stage_with_hot(F::Cpu, 0.9, 20, 5);
+        let a = run(&sf, &BigRootsConfig::default());
+        assert!(a.causes_of(5).iter().any(|c| c.kind == F::Cpu));
+    }
+
+    #[test]
+    fn locality_rule_eq7() {
+        let f = F::COUNT;
+        let n = 12;
+        let mut matrix = vec![0.0; n * f];
+        let mut durations = vec![1.0; n];
+        durations[2] = 3.0;
+        // Straggler reads remotely (2.0), peers locally (0.0).
+        matrix[2 * f + F::Locality.index()] = 2.0;
+        let sf = StageFeatures {
+            stage_id: 0,
+            task_ids: (0..n as u64).collect(),
+            nodes: (0..n).map(|r| r % 3).collect(),
+            durations: durations.clone(),
+            matrix: matrix.clone(),
+            head_means: vec![1.0; n * 3],
+            tail_means: vec![1.0; n * 3],
+        };
+        let a = run(&sf, &BigRootsConfig::default());
+        assert!(a.causes_of(2).iter().any(|c| c.kind == F::Locality));
+
+        // If peers ALSO read remotely, the vote fails (Eq. 7).
+        let mut m2 = matrix;
+        for r in 0..n {
+            m2[r * f + F::Locality.index()] = 2.0;
+        }
+        let sf2 = StageFeatures {
+            stage_id: 0,
+            task_ids: (0..n as u64).collect(),
+            nodes: (0..n).map(|r| r % 3).collect(),
+            durations,
+            matrix: m2,
+            head_means: vec![1.0; n * 3],
+            tail_means: vec![1.0; n * 3],
+        };
+        let a2 = run(&sf2, &BigRootsConfig::default());
+        assert!(a2.causes_of(2).iter().all(|c| c.kind != F::Locality));
+    }
+
+    #[test]
+    fn lambda_p_monotone() {
+        // Raising λ_p can only remove causes.
+        let sf = stage_with_hot(F::BytesRead, 3.0, 30, 11);
+        let lo = run(&sf, &BigRootsConfig { lambda_p: 1.2, ..Default::default() });
+        let hi = run(&sf, &BigRootsConfig { lambda_p: 4.0, ..Default::default() });
+        assert!(hi.causes.len() <= lo.causes.len());
+    }
+
+    #[test]
+    fn lambda_q_monotone() {
+        let sf = stage_with_hot(F::BytesRead, 3.0, 30, 11);
+        let lo = run(&sf, &BigRootsConfig { lambda_q: 0.2, ..Default::default() });
+        let hi = run(&sf, &BigRootsConfig { lambda_q: 0.99, ..Default::default() });
+        assert!(hi.causes.len() <= lo.causes.len());
+    }
+
+    #[test]
+    fn non_stragglers_never_get_causes() {
+        let sf = stage_with_hot(F::BytesRead, 5.0, 20, 7);
+        let a = run(&sf, &BigRootsConfig::default());
+        for c in &a.causes {
+            assert!(a.stragglers.is_straggler(c.row));
+        }
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let sf = stage_with_hot(F::ShuffleReadBytes, 5.0, 20, 7);
+        let a = run(&sf, &BigRootsConfig::default());
+        let h = a.cause_histogram();
+        assert!(h.iter().any(|&(k, n)| k == F::ShuffleReadBytes && n >= 1));
+    }
+
+    #[test]
+    fn intra_node_evidence_detected() {
+        // Straggler's value deviates from intra-node peers only: all tasks on
+        // node 0; other nodes' tasks have elevated values too, so inter-node
+        // mean is high, but intra-node mean is low.
+        let f = F::COUNT;
+        let n = 16;
+        let k = F::DiskBytesSpilled;
+        let mut matrix = vec![0.0; n * f];
+        let mut durations = vec![1.0; n];
+        let nodes: Vec<usize> = (0..n).map(|r| r % 4).collect();
+        durations[0] = 3.0; // straggler, node 0
+        for r in 0..n {
+            let v = if r == 0 {
+                4.0 // straggler value
+            } else if nodes[r] == 0 {
+                0.2 // intra-node peers: low
+            } else {
+                3.0 // inter-node peers: high → inter test fails at λ_p=1.5
+            };
+            matrix[r * f + k.index()] = v;
+        }
+        let sf = StageFeatures {
+            stage_id: 0,
+            task_ids: (0..n as u64).collect(),
+            nodes,
+            durations,
+            matrix,
+            head_means: vec![1.0; n * 3],
+            tail_means: vec![1.0; n * 3],
+        };
+        let a = run(&sf, &BigRootsConfig::default());
+        let c = a
+            .causes_of(0)
+            .into_iter()
+            .find(|c| c.kind == k)
+            .expect("intra-node deviation must be found");
+        assert_eq!(c.peer, PeerEvidence::IntraNode);
+    }
+}

@@ -1,0 +1,275 @@
+//! Feature-correlation analysis — the paper's stated future work
+//! (Section VI): *"we would like to consider the correlation between
+//! different features, which helps us to identify the complicated root
+//! cause where features are not independent of each other. For instance,
+//! poor locality may be correlated with high network utilization."*
+//!
+//! Per stage we compute the full feature×feature Pearson matrix and use it
+//! to (a) surface strongly-coupled feature pairs, and (b) merge a
+//! straggler's root causes into *joint causes*: groups of identified
+//! features that are mutually correlated above a threshold, so the report
+//! reads "locality + network (coupled)" instead of two independent causes.
+
+use super::bigroots::StageAnalysis;
+use super::features::{FeatureKind, StageFeatures};
+
+/// Pairwise feature correlations of one stage, row-major `F × F`.
+#[derive(Debug, Clone)]
+pub struct FeatureCorrelations {
+    pub matrix: Vec<f64>,
+}
+
+impl FeatureCorrelations {
+    pub fn get(&self, a: FeatureKind, b: FeatureKind) -> f64 {
+        self.matrix[a.index() * FeatureKind::COUNT + b.index()]
+    }
+
+    /// Feature pairs with |ρ| above `threshold`, strongest first.
+    pub fn coupled_pairs(&self, threshold: f64) -> Vec<(FeatureKind, FeatureKind, f64)> {
+        let mut out = Vec::new();
+        for i in 0..FeatureKind::COUNT {
+            for j in (i + 1)..FeatureKind::COUNT {
+                let rho = self.matrix[i * FeatureKind::COUNT + j];
+                if rho.abs() > threshold {
+                    out.push((FeatureKind::ALL[i], FeatureKind::ALL[j], rho));
+                }
+            }
+        }
+        out.sort_by(|a, b| b.2.abs().partial_cmp(&a.2.abs()).unwrap());
+        out
+    }
+}
+
+/// Compute the feature×feature Pearson matrix over a stage (one pass:
+/// sums, sums of squares and cross products).
+pub fn feature_correlations(sf: &StageFeatures) -> FeatureCorrelations {
+    let f = FeatureKind::COUNT;
+    let n = sf.num_tasks();
+    let mut sum = vec![0.0f64; f];
+    let mut cross = vec![0.0f64; f * f];
+    for row in 0..n {
+        let base = row * f;
+        let vals = &sf.matrix[base..base + f];
+        for i in 0..f {
+            sum[i] += vals[i];
+            // Upper triangle incl. diagonal.
+            for j in i..f {
+                cross[i * f + j] += vals[i] * vals[j];
+            }
+        }
+    }
+    let nf = (n as f64).max(1.0);
+    let mean: Vec<f64> = sum.iter().map(|s| s / nf).collect();
+    let var: Vec<f64> =
+        (0..f).map(|i| (cross[i * f + i] / nf - mean[i] * mean[i]).max(0.0)).collect();
+    let mut matrix = vec![0.0f64; f * f];
+    for i in 0..f {
+        matrix[i * f + i] = if var[i] > 0.0 { 1.0 } else { 0.0 };
+        for j in (i + 1)..f {
+            let cov = cross[i * f + j] / nf - mean[i] * mean[j];
+            let denom = (var[i] * var[j]).sqrt();
+            let rho = if denom <= 1e-30 { 0.0 } else { (cov / denom).clamp(-1.0, 1.0) };
+            matrix[i * f + j] = rho;
+            matrix[j * f + i] = rho;
+        }
+    }
+    FeatureCorrelations { matrix }
+}
+
+/// A joint root cause: features identified for the same straggler that are
+/// mutually correlated across the stage — likely one underlying mechanism.
+#[derive(Debug, Clone)]
+pub struct JointCause {
+    pub row: usize,
+    pub task_id: u64,
+    /// ≥ 2 mutually-correlated identified features.
+    pub features: Vec<FeatureKind>,
+    /// The weakest pairwise |ρ| within the group.
+    pub min_abs_rho: f64,
+}
+
+/// Group each straggler's identified causes into correlated clusters
+/// (single-linkage over |ρ| > threshold). Singleton causes are omitted —
+/// they are already reported individually.
+pub fn joint_causes(
+    analysis: &StageAnalysis,
+    corr: &FeatureCorrelations,
+    threshold: f64,
+) -> Vec<JointCause> {
+    let mut out = Vec::new();
+    for &row in &analysis.stragglers.rows {
+        let feats: Vec<FeatureKind> =
+            analysis.causes_of(row).iter().map(|c| c.kind).collect();
+        if feats.len() < 2 {
+            continue;
+        }
+        // Single-linkage clustering over the identified features.
+        let mut cluster_of: Vec<usize> = (0..feats.len()).collect();
+        for i in 0..feats.len() {
+            for j in (i + 1)..feats.len() {
+                if corr.get(feats[i], feats[j]).abs() > threshold {
+                    let (a, b) = (cluster_of[i], cluster_of[j]);
+                    if a != b {
+                        for c in cluster_of.iter_mut() {
+                            if *c == b {
+                                *c = a;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let mut clusters: std::collections::BTreeMap<usize, Vec<FeatureKind>> =
+            Default::default();
+        for (i, &c) in cluster_of.iter().enumerate() {
+            clusters.entry(c).or_default().push(feats[i]);
+        }
+        for (_, group) in clusters {
+            if group.len() < 2 {
+                continue;
+            }
+            let mut min_rho = f64::INFINITY;
+            for i in 0..group.len() {
+                for j in (i + 1)..group.len() {
+                    min_rho = min_rho.min(corr.get(group[i], group[j]).abs());
+                }
+            }
+            out.push(JointCause {
+                row,
+                task_id: analysis
+                    .causes_of(row)
+                    .first()
+                    .map(|c| c.task_id)
+                    .unwrap_or_default(),
+                features: group,
+                min_abs_rho: if min_rho.is_finite() { min_rho } else { 0.0 },
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::bigroots::{analyze_stage_with_stats, BigRootsConfig};
+    use crate::analysis::features::FeatureKind as F;
+    use crate::analysis::stats::compute_native;
+
+    /// Stage where Locality and Network move together (the paper's §VI
+    /// example) and BytesRead is independent.
+    fn coupled_stage(n: usize) -> StageFeatures {
+        let f = F::COUNT;
+        let mut matrix = vec![0.0; n * f];
+        let mut durations = vec![1.0; n];
+        for r in 0..n {
+            let remote = r % 4 == 0;
+            matrix[r * f + F::Locality.index()] = if remote { 2.0 } else { 0.0 };
+            matrix[r * f + F::Network.index()] = if remote { 90e6 } else { 5e6 };
+            matrix[r * f + F::BytesRead.index()] = if r % 3 == 0 { 2.0 } else { 0.8 };
+            if remote {
+                durations[r] = 3.0;
+            }
+        }
+        StageFeatures {
+            stage_id: 0,
+            task_ids: (0..n as u64).collect(),
+            nodes: (0..n).map(|r| r % 4).collect(),
+            durations,
+            matrix,
+            head_means: vec![1.0; n * 3],
+            tail_means: vec![1.0; n * 3],
+        }
+    }
+
+    #[test]
+    fn correlation_matrix_detects_coupling() {
+        let sf = coupled_stage(40);
+        let corr = feature_correlations(&sf);
+        assert!(corr.get(F::Locality, F::Network) > 0.95, "locality↔network coupled");
+        assert!(corr.get(F::Locality, F::BytesRead).abs() < 0.4, "independent pair");
+        // Symmetric with unit diagonal (for non-constant features).
+        assert_eq!(corr.get(F::Network, F::Locality), corr.get(F::Locality, F::Network));
+        assert_eq!(corr.get(F::Network, F::Network), 1.0);
+        // Constant feature (never set) → zero correlation row.
+        assert_eq!(corr.get(F::JvmGcTime, F::Network), 0.0);
+    }
+
+    #[test]
+    fn coupled_pairs_sorted_by_strength() {
+        let sf = coupled_stage(40);
+        let corr = feature_correlations(&sf);
+        let pairs = corr.coupled_pairs(0.8);
+        assert!(!pairs.is_empty());
+        assert!(pairs
+            .iter()
+            .any(|&(a, b, _)| (a == F::Locality && b == F::Network)
+                || (a == F::Network && b == F::Locality)));
+        for w in pairs.windows(2) {
+            assert!(w[0].2.abs() >= w[1].2.abs());
+        }
+    }
+
+    #[test]
+    fn joint_causes_group_correlated_findings() {
+        let sf = coupled_stage(40);
+        let stats = compute_native(&sf);
+        // Loose config so both locality and network get identified.
+        let cfg = BigRootsConfig {
+            lambda_q: 0.5,
+            lambda_p: 1.2,
+            min_net_bytes: 10e6,
+            // The fixture has no meaningful head/tail windows.
+            use_edge_detection: false,
+            ..Default::default()
+        };
+        let a = analyze_stage_with_stats(&sf, &stats, &cfg);
+        assert!(!a.stragglers.rows.is_empty());
+        let corr = feature_correlations(&sf);
+        let joints = joint_causes(&a, &corr, 0.8);
+        // The locality+network pair must be merged for at least one straggler.
+        assert!(
+            joints.iter().any(|j| j.features.contains(&F::Locality)
+                && j.features.contains(&F::Network)),
+            "expected a joint locality+network cause, got {joints:?}"
+        );
+        for j in &joints {
+            assert!(j.features.len() >= 2);
+            assert!(j.min_abs_rho > 0.8);
+        }
+    }
+
+    #[test]
+    fn uncorrelated_causes_stay_separate() {
+        let sf = coupled_stage(40);
+        let corr = feature_correlations(&sf);
+        // Fabricate an analysis where BytesRead and Network are both causes;
+        // they are uncorrelated, so no joint cause should appear.
+        let stats = compute_native(&sf);
+        let cfg = BigRootsConfig { lambda_q: 0.5, lambda_p: 1.2, ..Default::default() };
+        let mut a = analyze_stage_with_stats(&sf, &stats, &cfg);
+        a.causes.retain(|c| c.kind == F::BytesRead || c.kind == F::Network);
+        let joints = joint_causes(&a, &corr, 0.8);
+        assert!(
+            joints.iter().all(|j| !(j.features.contains(&F::BytesRead)
+                && j.features.contains(&F::Network))),
+            "uncorrelated features must not merge"
+        );
+    }
+
+    #[test]
+    fn empty_stage_safe() {
+        let sf = StageFeatures {
+            stage_id: 0,
+            task_ids: vec![],
+            nodes: vec![],
+            durations: vec![],
+            matrix: vec![],
+            head_means: vec![],
+            tail_means: vec![],
+        };
+        let corr = feature_correlations(&sf);
+        assert_eq!(corr.matrix.len(), F::COUNT * F::COUNT);
+        assert!(corr.coupled_pairs(0.5).is_empty());
+    }
+}

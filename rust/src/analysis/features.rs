@@ -1,0 +1,388 @@
+//! Feature extraction — Section III-A of the paper.
+//!
+//! Twelve features per task, in four categories:
+//!
+//! | category  | features | definition |
+//! |-----------|----------|------------|
+//! | resource  | CPU, disk, network | Eq. 1–3: mean node utilization over the task's window |
+//! | numerical | bytes_read, shuffle_read/write, memory/disk spilled | `B / B_avg` over the stage (Table II) |
+//! | time      | JVM GC, serialize, deserialize | `T / T_task` (Table II) |
+//! | discrete  | locality | Eq. 4: 0 / 1 / 2 |
+//!
+//! Extraction produces a dense `tasks × features` matrix per stage — the
+//! input to both the native stats path and the AOT-compiled XLA kernel.
+
+use crate::trace::{JobTrace, NodeSeries, TaskRecord};
+
+/// Feature identity. Order defines the matrix column layout (keep in sync
+/// with `python/compile/model.py::FEATURES`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FeatureKind {
+    Cpu,
+    Disk,
+    Network,
+    BytesRead,
+    ShuffleReadBytes,
+    ShuffleWriteBytes,
+    MemoryBytesSpilled,
+    DiskBytesSpilled,
+    JvmGcTime,
+    SerializeTime,
+    DeserializeTime,
+    Locality,
+}
+
+/// Statistical category determining which identification rule applies
+/// (Section III-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FeatureCategory {
+    Resource,
+    Numerical,
+    Time,
+    Discrete,
+}
+
+impl FeatureKind {
+    pub const ALL: [FeatureKind; 12] = [
+        FeatureKind::Cpu,
+        FeatureKind::Disk,
+        FeatureKind::Network,
+        FeatureKind::BytesRead,
+        FeatureKind::ShuffleReadBytes,
+        FeatureKind::ShuffleWriteBytes,
+        FeatureKind::MemoryBytesSpilled,
+        FeatureKind::DiskBytesSpilled,
+        FeatureKind::JvmGcTime,
+        FeatureKind::SerializeTime,
+        FeatureKind::DeserializeTime,
+        FeatureKind::Locality,
+    ];
+
+    pub const COUNT: usize = 12;
+
+    pub fn index(self) -> usize {
+        Self::ALL.iter().position(|&k| k == self).unwrap()
+    }
+
+    pub fn category(self) -> FeatureCategory {
+        match self {
+            FeatureKind::Cpu | FeatureKind::Disk | FeatureKind::Network => {
+                FeatureCategory::Resource
+            }
+            FeatureKind::BytesRead
+            | FeatureKind::ShuffleReadBytes
+            | FeatureKind::ShuffleWriteBytes
+            | FeatureKind::MemoryBytesSpilled
+            | FeatureKind::DiskBytesSpilled => FeatureCategory::Numerical,
+            FeatureKind::JvmGcTime | FeatureKind::SerializeTime | FeatureKind::DeserializeTime => {
+                FeatureCategory::Time
+            }
+            FeatureKind::Locality => FeatureCategory::Discrete,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FeatureKind::Cpu => "cpu",
+            FeatureKind::Disk => "disk",
+            FeatureKind::Network => "network",
+            FeatureKind::BytesRead => "bytes_read",
+            FeatureKind::ShuffleReadBytes => "shuffle_read_bytes",
+            FeatureKind::ShuffleWriteBytes => "shuffle_write_bytes",
+            FeatureKind::MemoryBytesSpilled => "memory_bytes_spilled",
+            FeatureKind::DiskBytesSpilled => "disk_bytes_spilled",
+            FeatureKind::JvmGcTime => "jvm_gc_time",
+            FeatureKind::SerializeTime => "serialize_time",
+            FeatureKind::DeserializeTime => "deserialize_time",
+            FeatureKind::Locality => "locality",
+        }
+    }
+
+    /// The anomaly-generator kind whose injection this feature should flag
+    /// (ground-truth mapping for TP/FP scoring); None for framework features.
+    pub fn matching_anomaly(self) -> Option<crate::trace::AnomalyKind> {
+        match self {
+            FeatureKind::Cpu => Some(crate::trace::AnomalyKind::Cpu),
+            FeatureKind::Disk => Some(crate::trace::AnomalyKind::Io),
+            FeatureKind::Network => Some(crate::trace::AnomalyKind::Network),
+            _ => None,
+        }
+    }
+}
+
+/// The per-stage feature matrix plus everything the rules need that is not
+/// a plain matrix column: per-task node placement, durations, and the edge
+/// detection head/tail resource means.
+#[derive(Debug, Clone)]
+pub struct StageFeatures {
+    pub stage_id: u64,
+    /// Task ids, row-aligned with `matrix`.
+    pub task_ids: Vec<u64>,
+    /// Node of each task.
+    pub nodes: Vec<usize>,
+    /// Duration of each task (s).
+    pub durations: Vec<f64>,
+    /// Row-major `tasks × FeatureKind::COUNT`.
+    pub matrix: Vec<f64>,
+    /// Head-window mean of each resource feature before task start:
+    /// row-major `tasks × 3` (cpu, disk, network), for Eq. 6.
+    pub head_means: Vec<f64>,
+    /// Tail-window mean after task end, same layout.
+    pub tail_means: Vec<f64>,
+}
+
+impl StageFeatures {
+    pub fn num_tasks(&self) -> usize {
+        self.task_ids.len()
+    }
+
+    /// Value of feature `k` for row `row`.
+    pub fn get(&self, row: usize, k: FeatureKind) -> f64 {
+        self.matrix[row * FeatureKind::COUNT + k.index()]
+    }
+
+    /// All values of feature `k` (column copy).
+    pub fn column(&self, k: FeatureKind) -> Vec<f64> {
+        (0..self.num_tasks()).map(|r| self.get(r, k)).collect()
+    }
+
+    /// Head/tail means of resource feature `k` (Cpu/Disk/Network) for `row`.
+    pub fn edge_means(&self, row: usize, k: FeatureKind) -> (f64, f64) {
+        let c = match k {
+            FeatureKind::Cpu => 0,
+            FeatureKind::Disk => 1,
+            FeatureKind::Network => 2,
+            _ => panic!("edge_means on non-resource feature"),
+        };
+        (self.head_means[row * 3 + c], self.tail_means[row * 3 + c])
+    }
+}
+
+/// Resource features Eq. 1–3: average the node's sampled series over the
+/// task's execution window. Network uses mean bytes per sampling interval.
+fn resource_features(task: &TaskRecord, series: &NodeSeries) -> (f64, f64, f64) {
+    let (t0, t1) = (task.start, task.finish);
+    let p = series.period;
+    (
+        NodeSeries::window_mean(&series.cpu, p, t0, t1),
+        NodeSeries::window_mean(&series.disk, p, t0, t1),
+        NodeSeries::window_mean(&series.net_bytes, p, t0, t1),
+    )
+}
+
+/// Extract the feature matrix for one stage of a trace. `edge_width` is the
+/// duration (s) of the head/tail windows monitored for edge detection.
+pub fn extract_stage(trace: &JobTrace, stage_id: u64, edge_width: f64) -> StageFeatures {
+    let tasks = trace.stage_tasks(stage_id);
+    let n = tasks.len();
+    let f = FeatureKind::COUNT;
+
+    // Stage averages for the numerical (B/B_avg) features.
+    let avg = |get: &dyn Fn(&TaskRecord) -> f64| -> f64 {
+        if n == 0 {
+            return 0.0;
+        }
+        tasks.iter().map(|t| get(t)).sum::<f64>() / n as f64
+    };
+    let avg_bytes_read = avg(&|t| t.bytes_read);
+    let avg_sh_read = avg(&|t| t.shuffle_read_bytes);
+    let avg_sh_write = avg(&|t| t.shuffle_write_bytes);
+    let avg_mem_spill = avg(&|t| t.memory_bytes_spilled);
+    let avg_disk_spill = avg(&|t| t.disk_bytes_spilled);
+    // A zero stage average makes B/B_avg degenerate; treat as "all zero"
+    // (feature identically 0 — never a root cause, matching the paper's
+    // stages that simply lack e.g. shuffle reads).
+    let ratio = |b: f64, avg: f64| if avg > 0.0 { b / avg } else { 0.0 };
+
+    let mut matrix = vec![0.0f64; n * f];
+    let mut head_means = vec![0.0f64; n * 3];
+    let mut tail_means = vec![0.0f64; n * 3];
+    let mut task_ids = Vec::with_capacity(n);
+    let mut nodes = Vec::with_capacity(n);
+    let mut durations = Vec::with_capacity(n);
+
+    for (row, t) in tasks.iter().enumerate() {
+        let series = trace.series(t.node);
+        let (f_cpu, f_disk, f_net) = resource_features(t, series);
+        let dur = t.duration().max(1e-9);
+        let vals: [f64; FeatureKind::COUNT] = [
+            f_cpu,
+            f_disk,
+            f_net,
+            ratio(t.bytes_read, avg_bytes_read),
+            ratio(t.shuffle_read_bytes, avg_sh_read),
+            ratio(t.shuffle_write_bytes, avg_sh_write),
+            ratio(t.memory_bytes_spilled, avg_mem_spill),
+            ratio(t.disk_bytes_spilled, avg_disk_spill),
+            t.jvm_gc_time / dur,
+            t.serialize_time / dur,
+            t.deserialize_time / dur,
+            t.locality.numeric(),
+        ];
+        matrix[row * f..(row + 1) * f].copy_from_slice(&vals);
+
+        // Edge-detection windows: [start - w, start) and (finish, finish + w].
+        let p = series.period;
+        let hw = |s: &[f64]| NodeSeries::window_mean(s, p, t.start - edge_width, t.start);
+        let tw = |s: &[f64]| NodeSeries::window_mean(s, p, t.finish, t.finish + edge_width);
+        head_means[row * 3] = hw(&series.cpu);
+        head_means[row * 3 + 1] = hw(&series.disk);
+        head_means[row * 3 + 2] = hw(&series.net_bytes);
+        tail_means[row * 3] = tw(&series.cpu);
+        tail_means[row * 3 + 1] = tw(&series.disk);
+        tail_means[row * 3 + 2] = tw(&series.net_bytes);
+
+        task_ids.push(t.task_id);
+        nodes.push(t.node);
+        durations.push(t.duration());
+    }
+
+    StageFeatures { stage_id, task_ids, nodes, durations, matrix, head_means, tail_means }
+}
+
+/// Extract every stage of a trace.
+pub fn extract_all(trace: &JobTrace, edge_width: f64) -> Vec<StageFeatures> {
+    trace.stages.iter().map(|s| extract_stage(trace, s.stage_id, edge_width)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::*;
+
+    fn trace() -> JobTrace {
+        let mk = |task_id, node, start: f64, finish: f64, br: f64, gc: f64, loc| TaskRecord {
+            task_id,
+            stage_id: 0,
+            node,
+            executor: 0,
+            start,
+            finish,
+            locality: loc,
+            bytes_read: br,
+            shuffle_read_bytes: 0.0,
+            shuffle_write_bytes: 2.0 * br,
+            memory_bytes_spilled: 0.0,
+            disk_bytes_spilled: 0.0,
+            jvm_gc_time: gc,
+            serialize_time: 0.1,
+            deserialize_time: 0.2,
+        };
+        JobTrace {
+            job_name: "t".into(),
+            workload: "u".into(),
+            cluster: ClusterInfo { nodes: 2, cores_per_node: 4, executors_per_node: 1 },
+            stages: vec![StageRecord { stage_id: 0, name: "s".into(), tasks: vec![0, 1, 2] }],
+            tasks: vec![
+                mk(0, 0, 0.0, 2.0, 100.0, 0.2, Locality::NodeLocal),
+                mk(1, 0, 0.0, 4.0, 300.0, 0.4, Locality::ProcessLocal),
+                mk(2, 1, 2.0, 6.0, 200.0, 1.0, Locality::Any),
+            ],
+            node_series: vec![
+                NodeSeries {
+                    node: 0,
+                    period: 1.0,
+                    cpu: vec![0.2, 0.4, 0.6, 0.8, 1.0, 1.0, 1.0, 1.0],
+                    disk: vec![0.1; 8],
+                    net_bytes: vec![10.0; 8],
+                },
+                NodeSeries {
+                    node: 1,
+                    period: 1.0,
+                    cpu: vec![0.5; 8],
+                    disk: vec![0.9; 8],
+                    net_bytes: vec![100.0, 100.0, 200.0, 200.0, 200.0, 200.0, 0.0, 0.0],
+                },
+            ],
+            injections: vec![],
+        }
+    }
+
+    #[test]
+    fn column_layout_is_stable() {
+        assert_eq!(FeatureKind::COUNT, FeatureKind::ALL.len());
+        for (i, k) in FeatureKind::ALL.iter().enumerate() {
+            assert_eq!(k.index(), i);
+        }
+        assert_eq!(FeatureKind::Cpu.index(), 0);
+        assert_eq!(FeatureKind::Locality.index(), 11);
+    }
+
+    #[test]
+    fn categories_match_paper() {
+        use FeatureCategory::*;
+        assert_eq!(FeatureKind::Cpu.category(), Resource);
+        assert_eq!(FeatureKind::Network.category(), Resource);
+        assert_eq!(FeatureKind::BytesRead.category(), Numerical);
+        assert_eq!(FeatureKind::DiskBytesSpilled.category(), Numerical);
+        assert_eq!(FeatureKind::JvmGcTime.category(), Time);
+        assert_eq!(FeatureKind::Locality.category(), Discrete);
+    }
+
+    #[test]
+    fn numerical_features_are_b_over_bavg() {
+        let sf = extract_stage(&trace(), 0, 3.0);
+        // bytes_read: 100, 300, 200 → avg 200.
+        assert!((sf.get(0, FeatureKind::BytesRead) - 0.5).abs() < 1e-12);
+        assert!((sf.get(1, FeatureKind::BytesRead) - 1.5).abs() < 1e-12);
+        assert!((sf.get(2, FeatureKind::BytesRead) - 1.0).abs() < 1e-12);
+        // shuffle_read is identically zero → ratio 0, not NaN.
+        assert_eq!(sf.get(0, FeatureKind::ShuffleReadBytes), 0.0);
+    }
+
+    #[test]
+    fn time_features_are_t_over_task() {
+        let sf = extract_stage(&trace(), 0, 3.0);
+        // task 0: gc 0.2 over 2.0 s → 0.1
+        assert!((sf.get(0, FeatureKind::JvmGcTime) - 0.1).abs() < 1e-12);
+        // task 2: gc 1.0 over 4.0 s → 0.25
+        assert!((sf.get(2, FeatureKind::JvmGcTime) - 0.25).abs() < 1e-12);
+        assert!((sf.get(0, FeatureKind::SerializeTime) - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn resource_features_average_task_window() {
+        let sf = extract_stage(&trace(), 0, 3.0);
+        // task 0 on node 0, window [0,2): cpu mean (0.2+0.4)/2 = 0.3
+        assert!((sf.get(0, FeatureKind::Cpu) - 0.3).abs() < 1e-12);
+        // task 2 on node 1, window [2,6): net mean = 200
+        assert!((sf.get(2, FeatureKind::Network) - 200.0).abs() < 1e-12);
+        assert!((sf.get(2, FeatureKind::Disk) - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn locality_encoded_numerically() {
+        let sf = extract_stage(&trace(), 0, 3.0);
+        assert_eq!(sf.get(0, FeatureKind::Locality), 1.0);
+        assert_eq!(sf.get(1, FeatureKind::Locality), 0.0);
+        assert_eq!(sf.get(2, FeatureKind::Locality), 2.0);
+    }
+
+    #[test]
+    fn edge_windows_cover_head_and_tail() {
+        let sf = extract_stage(&trace(), 0, 2.0);
+        // task 2 on node 1: head window [0,2): net mean 100; tail (6,8]: 0.
+        let (head, tail) = sf.edge_means(2, FeatureKind::Network);
+        assert!((head - 100.0).abs() < 1e-12);
+        assert!((tail - 0.0).abs() < 1e-12);
+        // task 0 head window [-2,0) clamps into the recorded series.
+        let (h0, _) = sf.edge_means(0, FeatureKind::Cpu);
+        assert!(h0 >= 0.0);
+    }
+
+    #[test]
+    fn matching_anomaly_mapping() {
+        assert_eq!(FeatureKind::Cpu.matching_anomaly(), Some(AnomalyKind::Cpu));
+        assert_eq!(FeatureKind::Disk.matching_anomaly(), Some(AnomalyKind::Io));
+        assert_eq!(FeatureKind::Network.matching_anomaly(), Some(AnomalyKind::Network));
+        assert_eq!(FeatureKind::BytesRead.matching_anomaly(), None);
+    }
+
+    #[test]
+    fn extract_all_covers_stages() {
+        let all = extract_all(&trace(), 3.0);
+        assert_eq!(all.len(), 1);
+        assert_eq!(all[0].num_tasks(), 3);
+        assert_eq!(all[0].column(FeatureKind::BytesRead).len(), 3);
+    }
+}

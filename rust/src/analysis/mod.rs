@@ -1,0 +1,28 @@
+//! The BigRoots analyzer — the paper's contribution (Section III).
+//!
+//! - [`features`] — feature extraction (Eq. 1–4, Table II): the
+//!   `tasks × features` matrix per stage
+//! - [`stats`] — batched stage statistics (quantile grid, Pearson, per-node
+//!   sums) behind the [`stats::StatsBackend`] trait (native or XLA)
+//! - [`straggler`] — Mantri-style detection (1.5× stage median)
+//! - [`bigroots`] — the identification rules (Eq. 5–7) incl. edge detection
+//! - [`pcc`] — the Pearson-correlation baseline (Eq. 8)
+//! - [`roc`] — ground-truth scoring, ROC sweeps, AUC (Eq. 9, Fig. 8/9)
+//! - [`report`] — straggler annotations, Table VI summaries, figure CSVs
+
+pub mod bigroots;
+pub mod correlation;
+pub mod features;
+pub mod pcc;
+pub mod report;
+pub mod roc;
+pub mod stats;
+pub mod straggler;
+
+pub use bigroots::{analyze_stage, BigRootsConfig, RootCause, StageAnalysis};
+pub use correlation::{feature_correlations, joint_causes, FeatureCorrelations, JointCause};
+pub use features::{extract_all, extract_stage, FeatureCategory, FeatureKind, StageFeatures};
+pub use pcc::PccConfig;
+pub use roc::{ground_truth, score, Confusion, GroundTruth};
+pub use stats::{NativeBackend, StageStats, StatsBackend};
+pub use straggler::{detect, StragglerSet};

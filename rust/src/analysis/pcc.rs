@@ -1,0 +1,170 @@
+//! The PCC baseline — Pearson-correlation root-cause analysis (Eq. 8),
+//! the comparison method of Sections IV-B/IV-C (used by prior work
+//! [17, 18] in the paper's references).
+//!
+//! A feature F of a straggler is a root cause iff
+//!
+//! - `|ρ(F, duration)| > λ_ca` over the stage (Pearson threshold), and
+//! - `F > quantile(max_threshold)` over the stage (the "how close to the
+//!   max" condition).
+//!
+//! Both thresholds are swept in the Fig. 8 ROC bench.
+
+use super::features::{FeatureKind, StageFeatures};
+use super::stats::{StageStats, StatsBackend};
+use super::straggler::detect;
+use super::bigroots::{RootCause, PeerEvidence, StageAnalysis};
+
+/// PCC configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct PccConfig {
+    pub straggler_ratio: f64,
+    /// λ_ca: minimum |Pearson correlation| between feature and duration.
+    pub pearson_threshold: f64,
+    /// Quantile the straggler's feature value must exceed ("max threshold").
+    pub max_quantile: f64,
+}
+
+impl Default for PccConfig {
+    fn default() -> Self {
+        PccConfig { straggler_ratio: 1.5, pearson_threshold: 0.5, max_quantile: 0.8 }
+    }
+}
+
+/// Run the PCC baseline on one stage.
+pub fn analyze_stage(
+    sf: &StageFeatures,
+    backend: &mut dyn StatsBackend,
+    cfg: &PccConfig,
+) -> StageAnalysis {
+    let stats = backend.stage_stats(sf);
+    analyze_stage_with_stats(sf, &stats, cfg)
+}
+
+/// PCC identification given precomputed stats.
+pub fn analyze_stage_with_stats(
+    sf: &StageFeatures,
+    stats: &StageStats,
+    cfg: &PccConfig,
+) -> StageAnalysis {
+    let stragglers = detect(sf, cfg.straggler_ratio);
+    let mut causes = Vec::new();
+    for &row in &stragglers.rows {
+        for &k in &FeatureKind::ALL {
+            let rho = stats.pearson[k.index()];
+            if rho.abs() <= cfg.pearson_threshold {
+                continue;
+            }
+            let v = sf.get(row, k);
+            let gq = stats.quantile(k, cfg.max_quantile);
+            if v > gq && v > 0.0 {
+                causes.push(RootCause {
+                    row,
+                    task_id: sf.task_ids[row],
+                    kind: k,
+                    value: v,
+                    global_threshold: gq,
+                    // PCC has no peer-group notion; record the evidence slot
+                    // as inter-node (whole-stage correlation).
+                    peer: PeerEvidence::InterNode,
+                });
+            }
+        }
+    }
+    StageAnalysis { stage_id: sf.stage_id, stragglers, causes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::features::FeatureKind as F;
+    use crate::analysis::stats::NativeBackend;
+
+    /// Stage where feature `k` is linearly tied to duration (ρ = 1) and one
+    /// task is a straggler.
+    fn correlated_stage(k: F, n: usize) -> StageFeatures {
+        let f = F::COUNT;
+        let mut matrix = vec![0.0; n * f];
+        let mut durations = Vec::with_capacity(n);
+        for r in 0..n {
+            // Durations ~1.0 with one huge outlier at the end.
+            let d = if r == n - 1 { 4.0 } else { 1.0 + r as f64 * 0.01 };
+            durations.push(d);
+            matrix[r * f + k.index()] = d * 2.0; // perfectly correlated
+        }
+        StageFeatures {
+            stage_id: 0,
+            task_ids: (0..n as u64).collect(),
+            nodes: (0..n).map(|r| r % 4).collect(),
+            durations,
+            matrix,
+            head_means: vec![0.0; n * 3],
+            tail_means: vec![0.0; n * 3],
+        }
+    }
+
+    #[test]
+    fn correlated_feature_identified() {
+        let sf = correlated_stage(F::BytesRead, 20);
+        let a = analyze_stage(&sf, &mut NativeBackend, &PccConfig::default());
+        assert_eq!(a.stragglers.rows, vec![19]);
+        assert!(a.causes_of(19).iter().any(|c| c.kind == F::BytesRead));
+    }
+
+    #[test]
+    fn uncorrelated_feature_ignored() {
+        // Feature high on the straggler but constant elsewhere in a pattern
+        // with low correlation: alternate high/low independent of duration.
+        let f = F::COUNT;
+        let n = 21;
+        let mut sf = correlated_stage(F::BytesRead, n);
+        // Overwrite GC column with alternating values uncorrelated with dur.
+        for r in 0..n {
+            sf.matrix[r * f + F::JvmGcTime.index()] = if r % 2 == 0 { 0.8 } else { 0.1 };
+        }
+        let a = analyze_stage(&sf, &mut NativeBackend, &PccConfig::default());
+        assert!(a.causes_of(20).iter().all(|c| c.kind != F::JvmGcTime));
+    }
+
+    #[test]
+    fn pcc_false_positives_on_co_correlated_features() {
+        // The paper's critique: features correlated with duration get
+        // flagged even when they are consequences, not causes. Two features
+        // both ∝ duration → both flagged for the straggler.
+        let f = F::COUNT;
+        let n = 20;
+        let mut sf = correlated_stage(F::BytesRead, n);
+        for r in 0..n {
+            sf.matrix[r * f + F::ShuffleWriteBytes.index()] = sf.durations[r] * 3.0;
+        }
+        let a = analyze_stage(&sf, &mut NativeBackend, &PccConfig::default());
+        let kinds: Vec<_> = a.causes_of(n - 1).iter().map(|c| c.kind).collect();
+        assert!(kinds.contains(&F::BytesRead));
+        assert!(kinds.contains(&F::ShuffleWriteBytes), "PCC flags the co-correlate too");
+    }
+
+    #[test]
+    fn thresholds_monotone() {
+        let sf = correlated_stage(F::BytesRead, 30);
+        let lo = analyze_stage(
+            &sf,
+            &mut NativeBackend,
+            &PccConfig { pearson_threshold: 0.1, max_quantile: 0.5, ..Default::default() },
+        );
+        let hi = analyze_stage(
+            &sf,
+            &mut NativeBackend,
+            &PccConfig { pearson_threshold: 0.99, max_quantile: 0.99, ..Default::default() },
+        );
+        assert!(hi.causes.len() <= lo.causes.len());
+    }
+
+    #[test]
+    fn non_straggler_rows_unflagged() {
+        let sf = correlated_stage(F::BytesRead, 20);
+        let a = analyze_stage(&sf, &mut NativeBackend, &PccConfig::default());
+        for c in &a.causes {
+            assert!(a.stragglers.is_straggler(c.row));
+        }
+    }
+}

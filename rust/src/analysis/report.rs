@@ -1,0 +1,219 @@
+//! Human-readable reports and figure data: per-straggler annotations
+//! (Figures 3–6 timelines), Table VI-style workload summaries, and CSV
+//! emission for external plotting.
+
+use super::bigroots::StageAnalysis;
+use super::features::{FeatureKind, StageFeatures};
+use crate::trace::JobTrace;
+use crate::util::table::{fnum, Align, Table};
+
+/// A straggler annotation: the black lines of Figures 3–6.
+#[derive(Debug, Clone)]
+pub struct StragglerAnnotation {
+    pub task_id: u64,
+    pub stage_id: u64,
+    pub node: usize,
+    pub start: f64,
+    pub finish: f64,
+    /// duration / stage median (right y-axis of Figures 3–6).
+    pub scale: f64,
+    /// Identified root-cause features (may be empty — unexplained).
+    pub causes: Vec<FeatureKind>,
+}
+
+/// Collect annotations from per-stage analyses.
+pub fn annotations(
+    trace: &JobTrace,
+    per_stage: &[(StageFeatures, StageAnalysis)],
+) -> Vec<StragglerAnnotation> {
+    let mut out = Vec::new();
+    for (sf, a) in per_stage {
+        for &row in &a.stragglers.rows {
+            let task = trace
+                .tasks
+                .iter()
+                .find(|t| t.task_id == sf.task_ids[row])
+                .expect("annotation for unknown task");
+            out.push(StragglerAnnotation {
+                task_id: task.task_id,
+                stage_id: sf.stage_id,
+                node: task.node,
+                start: task.start,
+                finish: task.finish,
+                scale: a.stragglers.scale(task.duration()),
+                causes: a.causes_of(row).iter().map(|c| c.kind).collect(),
+            });
+        }
+    }
+    out.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+    out
+}
+
+/// Figure 3–6 data: per-second resource utilization of one node plus the
+/// straggler annotations, as CSV ("time,cpu,disk,net_bytes" then a second
+/// section "task_id,start,finish,scale,causes").
+pub fn timeline_csv(trace: &JobTrace, node: usize, anns: &[StragglerAnnotation]) -> String {
+    let s = trace.series(node);
+    let mut out = String::from("time,cpu,disk,net_bytes\n");
+    for i in 0..s.len() {
+        out.push_str(&format!(
+            "{},{},{},{}\n",
+            i as f64 * s.period,
+            fnum(s.cpu[i], 4),
+            fnum(s.disk[i], 4),
+            fnum(s.net_bytes[i], 0)
+        ));
+    }
+    out.push_str("\ntask_id,node,start,finish,scale,causes\n");
+    for a in anns.iter().filter(|a| a.node == node) {
+        let causes: Vec<&str> = a.causes.iter().map(|k| k.name()).collect();
+        out.push_str(&format!(
+            "{},{},{},{},{},{}\n",
+            a.task_id,
+            a.node,
+            fnum(a.start, 2),
+            fnum(a.finish, 2),
+            fnum(a.scale, 2),
+            causes.join("|")
+        ));
+    }
+    out
+}
+
+/// Table VI-style row for one workload: the identified root causes
+/// histogram and the straggler count.
+#[derive(Debug, Clone)]
+pub struct WorkloadSummary {
+    pub domain: String,
+    pub workload: String,
+    pub stragglers: usize,
+    /// (feature, count) of identified causes, sorted descending.
+    pub causes: Vec<(FeatureKind, usize)>,
+}
+
+/// Summarize a full job analysis.
+pub fn summarize_workload(
+    domain: &str,
+    workload: &str,
+    per_stage: &[(StageFeatures, StageAnalysis)],
+) -> WorkloadSummary {
+    let stragglers = per_stage.iter().map(|(_, a)| a.stragglers.rows.len()).sum();
+    let mut hist: Vec<(FeatureKind, usize)> = FeatureKind::ALL
+        .iter()
+        .map(|&k| {
+            (
+                k,
+                per_stage
+                    .iter()
+                    .map(|(_, a)| a.causes.iter().filter(|c| c.kind == k).count())
+                    .sum(),
+            )
+        })
+        .filter(|&(_, n)| n > 0)
+        .collect();
+    hist.sort_by(|a, b| b.1.cmp(&a.1));
+    WorkloadSummary {
+        domain: domain.to_string(),
+        workload: workload.to_string(),
+        stragglers,
+        causes: hist,
+    }
+}
+
+/// Render Table VI from workload summaries.
+pub fn render_table6(rows: &[WorkloadSummary]) -> String {
+    let mut t = Table::new("Table VI: Root cause analysis on Hibench workloads")
+        .header(&["Domain", "Workload", "BigRoots Result", "# Stragglers"])
+        .aligns(&[Align::Left, Align::Left, Align::Left, Align::Right]);
+    for r in rows {
+        let result = if r.causes.is_empty() {
+            "-".to_string()
+        } else {
+            r.causes
+                .iter()
+                .map(|(k, n)| format!("{} ({})", k.name(), n))
+                .collect::<Vec<_>>()
+                .join(", ")
+        };
+        t.row(vec![
+            r.domain.clone(),
+            r.workload.clone(),
+            result,
+            r.stragglers.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::bigroots::{analyze_stage, BigRootsConfig};
+    use crate::analysis::features::extract_all;
+    use crate::analysis::stats::NativeBackend;
+    use crate::sim::{workloads, Engine, InjectionPlan, SimConfig};
+
+    fn analyzed() -> (JobTrace, Vec<(StageFeatures, StageAnalysis)>) {
+        let w = workloads::kmeans(0.2);
+        let mut eng = Engine::new(SimConfig { seed: 31, ..Default::default() });
+        let trace = eng.run("j", w.name, &w.stages, &InjectionPlan::none());
+        let per_stage: Vec<_> = extract_all(&trace, 3.0)
+            .into_iter()
+            .map(|sf| {
+                let a = analyze_stage(&sf, &mut NativeBackend, &BigRootsConfig::default());
+                (sf, a)
+            })
+            .collect();
+        (trace, per_stage)
+    }
+
+    #[test]
+    fn annotations_are_time_sorted_stragglers() {
+        let (trace, per_stage) = analyzed();
+        let anns = annotations(&trace, &per_stage);
+        for w in anns.windows(2) {
+            assert!(w[0].start <= w[1].start);
+        }
+        for a in &anns {
+            assert!(a.scale > 1.5, "annotation scale {}", a.scale);
+            assert!(a.finish > a.start);
+        }
+    }
+
+    #[test]
+    fn timeline_csv_has_both_sections() {
+        let (trace, per_stage) = analyzed();
+        let anns = annotations(&trace, &per_stage);
+        let csv = timeline_csv(&trace, 0, &anns);
+        assert!(csv.starts_with("time,cpu,disk,net_bytes\n"));
+        assert!(csv.contains("task_id,node,start,finish,scale,causes"));
+        let lines = csv.lines().count();
+        assert!(lines > trace.series(0).len(), "one line per sample plus annotations");
+    }
+
+    #[test]
+    fn workload_summary_counts() {
+        let (_, per_stage) = analyzed();
+        let s = summarize_workload("Machine Learning", "Kmeans", &per_stage);
+        assert_eq!(s.workload, "Kmeans");
+        let total: usize = per_stage.iter().map(|(_, a)| a.stragglers.rows.len()).sum();
+        assert_eq!(s.stragglers, total);
+        // Histogram sorted descending.
+        for w in s.causes.windows(2) {
+            assert!(w[0].1 >= w[1].1);
+        }
+    }
+
+    #[test]
+    fn table6_renders_dash_for_no_causes() {
+        let rows = vec![WorkloadSummary {
+            domain: "Micro".into(),
+            workload: "Terasort".into(),
+            stragglers: 2,
+            causes: vec![],
+        }];
+        let s = render_table6(&rows);
+        assert!(s.contains("Terasort"));
+        assert!(s.contains(" - "));
+    }
+}

@@ -1,0 +1,327 @@
+//! Per-stage batched feature statistics — the numeric hot path.
+//!
+//! Everything the identification rules (Eq. 5–8) need is reduced here from
+//! the `tasks × features` matrix in one pass:
+//!
+//! - per-feature mean / std / Pearson correlation with duration,
+//! - a quantile grid (λ_q is swept over this grid during ROC experiments),
+//! - per-node sums and counts (peer means for inter-/intra-node groups are
+//!   derived by exclusion, so no per-straggler recomputation is needed).
+//!
+//! Two interchangeable backends produce [`StageStats`]:
+//! [`NativeBackend`] (pure rust, below) and the PJRT-executed AOT kernel
+//! (`crate::runtime::XlaBackend`) compiled from the L1 Pallas kernels.
+//! Parity between them is tested in `rust/tests/`.
+
+use super::features::{FeatureKind, StageFeatures};
+
+/// Number of quantile grid points: q = i / (GRID_Q - 1), i ∈ 0..GRID_Q.
+pub const GRID_Q: usize = 21;
+
+/// The quantile grid values (0.00, 0.05, …, 1.00).
+pub fn quantile_grid() -> Vec<f64> {
+    (0..GRID_Q).map(|i| i as f64 / (GRID_Q - 1) as f64).collect()
+}
+
+/// Batched statistics of one stage's feature matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageStats {
+    pub count: usize,
+    /// Per-feature sum, `[F]`.
+    pub col_sum: Vec<f64>,
+    /// Per-feature mean, `[F]`.
+    pub col_mean: Vec<f64>,
+    /// Per-feature population std, `[F]`.
+    pub col_std: Vec<f64>,
+    /// Pearson correlation of each feature with task duration, `[F]`.
+    pub pearson: Vec<f64>,
+    /// Quantile values, row-major `[GRID_Q × F]`.
+    pub quantiles: Vec<f64>,
+    /// Distinct node ids present in the stage.
+    pub nodes: Vec<usize>,
+    /// Per-node feature sums, row-major `[nodes.len() × F]`.
+    pub node_sum: Vec<f64>,
+    /// Per-node task counts, `[nodes.len()]`.
+    pub node_count: Vec<usize>,
+}
+
+impl StageStats {
+    /// Quantile of feature `k` at probability `q`, linearly interpolated on
+    /// the grid (grid resolution 1/(GRID_Q-1) = 0.05).
+    pub fn quantile(&self, k: FeatureKind, q: f64) -> f64 {
+        let f = FeatureKind::COUNT;
+        let q = q.clamp(0.0, 1.0);
+        let pos = q * (GRID_Q - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        let v_lo = self.quantiles[lo * f + k.index()];
+        if lo == hi {
+            return v_lo;
+        }
+        let v_hi = self.quantiles[hi * f + k.index()];
+        let frac = pos - lo as f64;
+        v_lo * (1.0 - frac) + v_hi * frac
+    }
+
+    fn node_slot(&self, node: usize) -> Option<usize> {
+        self.nodes.iter().position(|&n| n == node)
+    }
+
+    /// Mean of feature `k` over *inter-node peers* of a task on `node`
+    /// (all stage tasks on other nodes). None if the stage has no tasks on
+    /// other nodes.
+    pub fn inter_node_mean(&self, node: usize, k: FeatureKind) -> Option<f64> {
+        let f = FeatureKind::COUNT;
+        let slot = self.node_slot(node)?;
+        let n_other = self.count - self.node_count[slot];
+        if n_other == 0 {
+            return None;
+        }
+        let sum_other = self.col_sum[k.index()] - self.node_sum[slot * f + k.index()];
+        Some(sum_other / n_other as f64)
+    }
+
+    /// Mean of feature `k` over *intra-node peers* of a task on `node` with
+    /// feature value `own` (other stage tasks on the same node). None if the
+    /// task is alone on its node.
+    pub fn intra_node_mean(&self, node: usize, k: FeatureKind, own: f64) -> Option<f64> {
+        let f = FeatureKind::COUNT;
+        let slot = self.node_slot(node)?;
+        let n_here = self.node_count[slot];
+        if n_here <= 1 {
+            return None;
+        }
+        let sum_here = self.node_sum[slot * f + k.index()] - own;
+        Some(sum_here / (n_here - 1) as f64)
+    }
+}
+
+/// Backend interface: compute [`StageStats`] from a stage feature matrix.
+/// Implemented natively below and by the XLA runtime.
+pub trait StatsBackend {
+    fn stage_stats(&mut self, sf: &StageFeatures) -> StageStats;
+    /// Human-readable backend name (for reports / perf logs).
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-rust reference backend (also the fallback when `artifacts/` is
+/// absent). Single-threaded, allocation-light.
+#[derive(Debug, Default, Clone)]
+pub struct NativeBackend;
+
+impl StatsBackend for NativeBackend {
+    fn stage_stats(&mut self, sf: &StageFeatures) -> StageStats {
+        compute_native(sf)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// The native computation, shared with tests.
+pub fn compute_native(sf: &StageFeatures) -> StageStats {
+    let f = FeatureKind::COUNT;
+    let n = sf.num_tasks();
+    let mut col_sum = vec![0.0f64; f];
+    let mut col_sumsq = vec![0.0f64; f];
+    let mut col_dot_dur = vec![0.0f64; f];
+    let mut dur_sum = 0.0f64;
+    let mut dur_sumsq = 0.0f64;
+
+    // Node slots in first-appearance order.
+    let mut nodes: Vec<usize> = Vec::new();
+    let mut node_of_row: Vec<usize> = Vec::with_capacity(n);
+    for &nd in &sf.nodes {
+        let slot = match nodes.iter().position(|&x| x == nd) {
+            Some(s) => s,
+            None => {
+                nodes.push(nd);
+                nodes.len() - 1
+            }
+        };
+        node_of_row.push(slot);
+    }
+    let mut node_sum = vec![0.0f64; nodes.len() * f];
+    let mut node_count = vec![0usize; nodes.len()];
+
+    for row in 0..n {
+        let d = sf.durations[row];
+        dur_sum += d;
+        dur_sumsq += d * d;
+        let slot = node_of_row[row];
+        node_count[slot] += 1;
+        let base = row * f;
+        for k in 0..f {
+            let v = sf.matrix[base + k];
+            col_sum[k] += v;
+            col_sumsq[k] += v * v;
+            col_dot_dur[k] += v * d;
+            node_sum[slot * f + k] += v;
+        }
+    }
+
+    let nf = n as f64;
+    let col_mean: Vec<f64> = col_sum.iter().map(|s| if n > 0 { s / nf } else { 0.0 }).collect();
+    let col_var: Vec<f64> = (0..f)
+        .map(|k| if n > 0 { (col_sumsq[k] / nf - col_mean[k] * col_mean[k]).max(0.0) } else { 0.0 })
+        .collect();
+    let col_std: Vec<f64> = col_var.iter().map(|v| v.sqrt()).collect();
+    let dur_mean = if n > 0 { dur_sum / nf } else { 0.0 };
+    let dur_var = if n > 0 { (dur_sumsq / nf - dur_mean * dur_mean).max(0.0) } else { 0.0 };
+
+    let pearson: Vec<f64> = (0..f)
+        .map(|k| {
+            if n < 2 {
+                return 0.0;
+            }
+            let cov = col_dot_dur[k] / nf - col_mean[k] * dur_mean;
+            let denom = (col_var[k] * dur_var).sqrt();
+            if denom <= 1e-30 {
+                0.0
+            } else {
+                (cov / denom).clamp(-1.0, 1.0)
+            }
+        })
+        .collect();
+
+    // Quantile grid: sort each column once.
+    let mut quantiles = vec![0.0f64; GRID_Q * f];
+    let grid = quantile_grid();
+    let mut col_buf: Vec<f64> = Vec::with_capacity(n);
+    for k in 0..f {
+        col_buf.clear();
+        col_buf.extend((0..n).map(|r| sf.matrix[r * f + k]));
+        col_buf.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for (qi, &q) in grid.iter().enumerate() {
+            quantiles[qi * f + k] = crate::util::stats::quantile_sorted(&col_buf, q);
+        }
+    }
+
+    StageStats {
+        count: n,
+        col_sum,
+        col_mean,
+        col_std,
+        pearson,
+        quantiles,
+        nodes,
+        node_sum,
+        node_count,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::features::FeatureKind as F;
+
+    /// Hand-built StageFeatures: 4 tasks, 2 nodes.
+    fn sf() -> StageFeatures {
+        let f = F::COUNT;
+        let mut matrix = vec![0.0; 4 * f];
+        // bytes_read column: 1, 2, 3, 10 ; cpu column: .1 .2 .3 .4
+        let br = F::BytesRead.index();
+        let cpu = F::Cpu.index();
+        for (r, (b, c)) in [(1.0, 0.1), (2.0, 0.2), (3.0, 0.3), (10.0, 0.4)].iter().enumerate() {
+            matrix[r * f + br] = *b;
+            matrix[r * f + cpu] = *c;
+        }
+        StageFeatures {
+            stage_id: 0,
+            task_ids: vec![0, 1, 2, 3],
+            nodes: vec![0, 0, 1, 1],
+            durations: vec![1.0, 2.0, 3.0, 10.0],
+            matrix,
+            head_means: vec![0.0; 12],
+            tail_means: vec![0.0; 12],
+        }
+    }
+
+    #[test]
+    fn means_and_sums() {
+        let s = compute_native(&sf());
+        assert_eq!(s.count, 4);
+        assert!((s.col_mean[F::BytesRead.index()] - 4.0).abs() < 1e-12);
+        assert!((s.col_sum[F::Cpu.index()] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_matches_scalar_impl() {
+        let s = compute_native(&sf());
+        let expect = crate::util::stats::pearson(&[1.0, 2.0, 3.0, 10.0], &[1.0, 2.0, 3.0, 10.0]);
+        assert!((s.pearson[F::BytesRead.index()] - expect).abs() < 1e-12);
+        assert!((s.pearson[F::BytesRead.index()] - 1.0).abs() < 1e-12); // identical vectors
+        let e2 = crate::util::stats::pearson(&[0.1, 0.2, 0.3, 0.4], &[1.0, 2.0, 3.0, 10.0]);
+        assert!((s.pearson[F::Cpu.index()] - e2).abs() < 1e-12);
+        // Constant column → 0 correlation.
+        assert_eq!(s.pearson[F::Locality.index()], 0.0);
+    }
+
+    #[test]
+    fn quantile_grid_interpolates() {
+        let s = compute_native(&sf());
+        assert!((s.quantile(F::BytesRead, 0.0) - 1.0).abs() < 1e-12);
+        assert!((s.quantile(F::BytesRead, 1.0) - 10.0).abs() < 1e-12);
+        assert!((s.quantile(F::BytesRead, 0.5) - 2.5).abs() < 1e-12);
+        // Off-grid q interpolates smoothly and monotonically.
+        let q1 = s.quantile(F::BytesRead, 0.62);
+        let q2 = s.quantile(F::BytesRead, 0.63);
+        assert!(q2 >= q1);
+    }
+
+    #[test]
+    fn peer_means_by_exclusion() {
+        let s = compute_native(&sf());
+        // Task on node 0: inter-node peers are rows 2,3 → bytes mean 6.5.
+        assert!((s.inter_node_mean(0, F::BytesRead).unwrap() - 6.5).abs() < 1e-12);
+        // Row 0 (value 1.0) on node 0: intra peer is row 1 → mean 2.0.
+        assert!((s.intra_node_mean(0, F::BytesRead, 1.0).unwrap() - 2.0).abs() < 1e-12);
+        // Unknown node → None.
+        assert!(s.inter_node_mean(9, F::BytesRead).is_none());
+    }
+
+    #[test]
+    fn intra_none_when_alone() {
+        let mut x = sf();
+        x.nodes = vec![0, 1, 2, 3]; // every task alone on its node
+        let s = compute_native(&x);
+        assert!(s.intra_node_mean(0, F::BytesRead, 1.0).is_none());
+        // All inter-node means exist.
+        assert!(s.inter_node_mean(0, F::BytesRead).is_some());
+    }
+
+    #[test]
+    fn inter_none_when_single_node() {
+        let mut x = sf();
+        x.nodes = vec![5, 5, 5, 5];
+        let s = compute_native(&x);
+        assert!(s.inter_node_mean(5, F::BytesRead).is_none());
+        assert!(s.intra_node_mean(5, F::BytesRead, 1.0).is_some());
+    }
+
+    #[test]
+    fn empty_stage_is_safe() {
+        let x = StageFeatures {
+            stage_id: 0,
+            task_ids: vec![],
+            nodes: vec![],
+            durations: vec![],
+            matrix: vec![],
+            head_means: vec![],
+            tail_means: vec![],
+        };
+        let s = compute_native(&x);
+        assert_eq!(s.count, 0);
+        assert_eq!(s.col_mean[0], 0.0);
+        assert_eq!(s.pearson[0], 0.0);
+    }
+
+    #[test]
+    fn backend_trait_dispatch() {
+        let mut b = NativeBackend;
+        let s = b.stage_stats(&sf());
+        assert_eq!(s, compute_native(&sf()));
+        assert_eq!(b.name(), "native");
+    }
+}

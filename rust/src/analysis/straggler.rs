@@ -1,0 +1,110 @@
+//! Straggler detection — the Mantri definition the paper adopts: a task is
+//! a straggler when its duration exceeds `ratio` × the *median* task
+//! duration of its stage (ratio = 1.5).
+
+use super::features::StageFeatures;
+use crate::util::stats::median;
+
+/// Detection result for one stage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StragglerSet {
+    /// Median task duration of the stage (s).
+    pub median: f64,
+    /// Duration threshold = ratio × median.
+    pub threshold: f64,
+    /// Row indices (into the stage's feature matrix) of stragglers.
+    pub rows: Vec<usize>,
+}
+
+impl StragglerSet {
+    pub fn is_straggler(&self, row: usize) -> bool {
+        self.rows.binary_search(&row).is_ok()
+    }
+
+    /// Straggler *scale* of a task: duration / median (the right-hand y-axis
+    /// of Figures 3–6).
+    pub fn scale(&self, duration: f64) -> f64 {
+        if self.median > 0.0 {
+            duration / self.median
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Detect stragglers in a stage.
+pub fn detect(sf: &StageFeatures, ratio: f64) -> StragglerSet {
+    let med = median(&sf.durations);
+    let threshold = ratio * med;
+    let rows: Vec<usize> = (0..sf.num_tasks())
+        .filter(|&r| sf.durations[r] > threshold && sf.durations[r] > 0.0)
+        .collect();
+    StragglerSet { median: med, threshold, rows }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::features::FeatureKind;
+
+    fn sf(durations: Vec<f64>) -> StageFeatures {
+        let n = durations.len();
+        StageFeatures {
+            stage_id: 0,
+            task_ids: (0..n as u64).collect(),
+            nodes: vec![0; n],
+            durations,
+            matrix: vec![0.0; n * FeatureKind::COUNT],
+            head_means: vec![0.0; n * 3],
+            tail_means: vec![0.0; n * 3],
+        }
+    }
+
+    #[test]
+    fn flags_only_above_threshold() {
+        let s = detect(&sf(vec![1.0, 1.0, 1.0, 1.4, 1.6, 3.0]), 1.5);
+        assert_eq!(s.median, 1.2);
+        assert!((s.threshold - 1.8).abs() < 1e-12);
+        assert_eq!(s.rows, vec![5]);
+        assert!(s.is_straggler(5));
+        assert!(!s.is_straggler(4));
+    }
+
+    #[test]
+    fn boundary_is_strict() {
+        // Exactly 1.5× the median is NOT a straggler ("1.5× larger").
+        let s = detect(&sf(vec![2.0, 2.0, 2.0, 3.0]), 1.5);
+        assert!(s.rows.is_empty());
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert!(detect(&sf(vec![]), 1.5).rows.is_empty());
+        assert!(detect(&sf(vec![5.0]), 1.5).rows.is_empty());
+    }
+
+    #[test]
+    fn scale_is_duration_over_median() {
+        let s = detect(&sf(vec![1.0, 2.0, 3.0]), 1.5);
+        assert_eq!(s.median, 2.0);
+        assert!((s.scale(5.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn monotone_in_ratio() {
+        // Raising the ratio can only shrink the straggler set.
+        let d = vec![1.0, 1.1, 1.2, 1.9, 2.5, 4.0, 0.9, 1.05];
+        let lo = detect(&sf(d.clone()), 1.2);
+        let hi = detect(&sf(d), 2.0);
+        for r in &hi.rows {
+            assert!(lo.rows.contains(r));
+        }
+        assert!(hi.rows.len() <= lo.rows.len());
+    }
+
+    #[test]
+    fn all_equal_durations_no_stragglers() {
+        let s = detect(&sf(vec![2.0; 50]), 1.5);
+        assert!(s.rows.is_empty());
+    }
+}

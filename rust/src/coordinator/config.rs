@@ -1,0 +1,244 @@
+//! Experiment configuration files: a JSON schema binding together the
+//! simulator, injection plan, and analyzer thresholds, so experiments are
+//! reproducible from a single declarative file (`bigroots run --config`).
+
+use crate::analysis::bigroots::BigRootsConfig;
+use crate::analysis::pcc::PccConfig;
+use crate::sim::{InjectionPlan, SimConfig};
+use crate::trace::AnomalyKind;
+use crate::util::json::{Json, JsonError};
+use crate::util::rng::Pcg64;
+
+/// A full experiment: what to simulate and how to analyze it.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub workload: String,
+    pub scale: f64,
+    pub seed: u64,
+    pub sim: SimConfig,
+    pub bigroots: BigRootsConfig,
+    pub pcc: PccConfig,
+    pub injection: InjectionSpec,
+}
+
+/// Declarative injection plans.
+#[derive(Debug, Clone, PartialEq)]
+pub enum InjectionSpec {
+    None,
+    Intermittent { kind: AnomalyKind, node: usize, on: f64, off: f64, horizon: f64 },
+    Mixed { node: usize, on: f64, off: f64, horizon: f64 },
+    RandomMulti { count: usize, min_dur: f64, max_dur: f64, horizon: f64 },
+    Table4,
+}
+
+impl InjectionSpec {
+    /// Materialize the plan (deterministic given `seed`).
+    pub fn plan(&self, seed: u64, nodes: usize) -> InjectionPlan {
+        match self {
+            InjectionSpec::None => InjectionPlan::none(),
+            InjectionSpec::Intermittent { kind, node, on, off, horizon } => {
+                InjectionPlan::intermittent(*kind, *node, *on, *off, *horizon)
+            }
+            InjectionSpec::Mixed { node, on, off, horizon } => {
+                let mut rng = Pcg64::seeded(seed ^ 0xA6);
+                InjectionPlan::mixed(&mut rng, *node, *on, *off, *horizon)
+            }
+            InjectionSpec::RandomMulti { count, min_dur, max_dur, horizon } => {
+                let mut rng = Pcg64::seeded(seed ^ 0xB7);
+                let all: Vec<usize> = (0..nodes).collect();
+                InjectionPlan::random_multi_node(
+                    &mut rng,
+                    &all,
+                    *count,
+                    (*min_dur, *max_dur),
+                    *horizon,
+                )
+            }
+            InjectionSpec::Table4 => InjectionPlan::table4(|slave| slave - 1),
+        }
+    }
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            workload: "NaiveBayes".into(),
+            scale: 1.0,
+            seed: 42,
+            sim: SimConfig::default(),
+            bigroots: BigRootsConfig::default(),
+            pcc: PccConfig::default(),
+            injection: InjectionSpec::None,
+        }
+    }
+}
+
+fn err(msg: &str) -> JsonError {
+    JsonError { offset: 0, message: msg.to_string() }
+}
+
+impl ExperimentConfig {
+    /// Parse from JSON text; every field is optional and defaults to the
+    /// paper's setup, so `{}` is a valid config.
+    pub fn from_json(text: &str) -> Result<ExperimentConfig, JsonError> {
+        let j = Json::parse(text)?;
+        let mut cfg = ExperimentConfig::default();
+        if let Some(w) = j.get("workload").as_str() {
+            cfg.workload = w.to_string();
+        }
+        cfg.scale = j.opt_f64("scale", cfg.scale);
+        cfg.seed = j.get("seed").as_u64().unwrap_or(cfg.seed);
+
+        let sim = j.get("sim");
+        if sim.as_obj().is_some() {
+            cfg.sim.nodes = sim.get("nodes").as_usize().unwrap_or(cfg.sim.nodes);
+            cfg.sim.cores_per_node =
+                sim.get("cores_per_node").as_usize().unwrap_or(cfg.sim.cores_per_node);
+            cfg.sim.slots_per_node =
+                sim.get("slots_per_node").as_usize().unwrap_or(cfg.sim.slots_per_node);
+            cfg.sim.disk_bw = sim.opt_f64("disk_bw", cfg.sim.disk_bw);
+            cfg.sim.net_bw = sim.opt_f64("net_bw", cfg.sim.net_bw);
+            cfg.sim.locality_wait = sim.opt_f64("locality_wait", cfg.sim.locality_wait);
+        }
+        cfg.sim.seed = cfg.seed;
+
+        let br = j.get("bigroots");
+        if br.as_obj().is_some() {
+            cfg.bigroots.straggler_ratio =
+                br.opt_f64("straggler_ratio", cfg.bigroots.straggler_ratio);
+            cfg.bigroots.lambda_q = br.opt_f64("lambda_q", cfg.bigroots.lambda_q);
+            cfg.bigroots.lambda_p = br.opt_f64("lambda_p", cfg.bigroots.lambda_p);
+            cfg.bigroots.time_lower_bound =
+                br.opt_f64("time_lower_bound", cfg.bigroots.time_lower_bound);
+            cfg.bigroots.edge_width = br.opt_f64("edge_width", cfg.bigroots.edge_width);
+            cfg.bigroots.lambda_e = br.opt_f64("lambda_e", cfg.bigroots.lambda_e);
+            if let Some(b) = br.get("use_edge_detection").as_bool() {
+                cfg.bigroots.use_edge_detection = b;
+            }
+        }
+        let pc = j.get("pcc");
+        if pc.as_obj().is_some() {
+            cfg.pcc.pearson_threshold =
+                pc.opt_f64("pearson_threshold", cfg.pcc.pearson_threshold);
+            cfg.pcc.max_quantile = pc.opt_f64("max_quantile", cfg.pcc.max_quantile);
+        }
+
+        let inj = j.get("injection");
+        if inj.as_obj().is_some() {
+            let kind_of = |s: &str| {
+                AnomalyKind::from_str(&s.to_ascii_uppercase())
+                    .ok_or_else(|| err(&format!("unknown anomaly kind '{s}'")))
+            };
+            cfg.injection = match inj.req_str("type")? {
+                "none" => InjectionSpec::None,
+                "intermittent" => InjectionSpec::Intermittent {
+                    kind: kind_of(inj.req_str("kind")?)?,
+                    node: inj.get("node").as_usize().unwrap_or(1),
+                    on: inj.opt_f64("on", 15.0),
+                    off: inj.opt_f64("off", 10.0),
+                    horizon: inj.opt_f64("horizon", 400.0),
+                },
+                "mixed" => InjectionSpec::Mixed {
+                    node: inj.get("node").as_usize().unwrap_or(1),
+                    on: inj.opt_f64("on", 15.0),
+                    off: inj.opt_f64("off", 10.0),
+                    horizon: inj.opt_f64("horizon", 400.0),
+                },
+                "random_multi" => InjectionSpec::RandomMulti {
+                    count: inj.get("count").as_usize().unwrap_or(13),
+                    min_dur: inj.opt_f64("min_dur", 8.0),
+                    max_dur: inj.opt_f64("max_dur", 12.0),
+                    horizon: inj.opt_f64("horizon", 150.0),
+                },
+                "table4" => InjectionSpec::Table4,
+                other => return Err(err(&format!("unknown injection type '{other}'"))),
+            };
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> anyhow::Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Self::from_json(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_object_is_paper_defaults() {
+        let c = ExperimentConfig::from_json("{}").unwrap();
+        assert_eq!(c.workload, "NaiveBayes");
+        assert_eq!(c.sim.nodes, 5);
+        assert_eq!(c.bigroots.lambda_q, 0.8);
+        assert_eq!(c.injection, InjectionSpec::None);
+    }
+
+    #[test]
+    fn full_config_parses() {
+        let c = ExperimentConfig::from_json(
+            r#"{
+                "workload": "Kmeans", "scale": 0.5, "seed": 7,
+                "sim": {"nodes": 4, "disk_bw": 5e7, "locality_wait": 1.5},
+                "bigroots": {"lambda_q": 0.9, "use_edge_detection": false},
+                "pcc": {"pearson_threshold": 0.7},
+                "injection": {"type": "intermittent", "kind": "io", "node": 2}
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(c.workload, "Kmeans");
+        assert_eq!(c.sim.nodes, 4);
+        assert_eq!(c.sim.disk_bw, 5e7);
+        assert_eq!(c.bigroots.lambda_q, 0.9);
+        assert!(!c.bigroots.use_edge_detection);
+        assert_eq!(c.pcc.pearson_threshold, 0.7);
+        assert_eq!(
+            c.injection,
+            InjectionSpec::Intermittent {
+                kind: AnomalyKind::Io,
+                node: 2,
+                on: 15.0,
+                off: 10.0,
+                horizon: 400.0
+            }
+        );
+        // Seed propagates into the simulator.
+        assert_eq!(c.sim.seed, 7);
+    }
+
+    #[test]
+    fn bad_injection_kind_rejected() {
+        assert!(
+            ExperimentConfig::from_json(r#"{"injection":{"type":"intermittent","kind":"wat"}}"#)
+                .is_err()
+        );
+        assert!(ExperimentConfig::from_json(r#"{"injection":{"type":"bogus"}}"#).is_err());
+    }
+
+    #[test]
+    fn plans_materialize() {
+        for spec in [
+            InjectionSpec::None,
+            InjectionSpec::Intermittent {
+                kind: AnomalyKind::Cpu,
+                node: 1,
+                on: 10.0,
+                off: 10.0,
+                horizon: 60.0,
+            },
+            InjectionSpec::Mixed { node: 0, on: 5.0, off: 5.0, horizon: 50.0 },
+            InjectionSpec::RandomMulti { count: 5, min_dur: 5.0, max_dur: 10.0, horizon: 100.0 },
+            InjectionSpec::Table4,
+        ] {
+            let plan = spec.plan(42, 5);
+            for inj in &plan.injections {
+                assert!(inj.t_end > inj.t_start);
+            }
+            // Deterministic across calls.
+            let plan2 = spec.plan(42, 5);
+            assert_eq!(plan.injections.len(), plan2.injections.len());
+        }
+    }
+}

@@ -1,0 +1,398 @@
+//! Experiment drivers — one function per paper table/figure, shared by the
+//! bench binaries (`rust/benches/`) and the examples so every number in
+//! EXPERIMENTS.md comes from exactly one code path.
+//!
+//! All experiments run the Section IV setup: the NaiveBayes "large"
+//! workload on the 5-slave simulated cluster, with anomaly generators
+//! injected intermittently on one slave (or per the Table IV schedule).
+
+use crate::analysis::bigroots::{analyze_stage_with_stats, BigRootsConfig};
+use crate::analysis::features::{extract_all, FeatureKind};
+use crate::analysis::pcc::{analyze_stage_with_stats as pcc_analyze, PccConfig};
+use crate::analysis::roc::{
+    ground_truth, resource_features, score_filtered, score_injected_kind, sweep_auc,
+    sweep_bigroots, sweep_pcc, Confusion, RocPoint,
+};
+use crate::analysis::stats::compute_native;
+use crate::sim::{workloads, Engine, InjectionPlan, SimConfig};
+use crate::trace::{AnomalyKind, JobTrace};
+use crate::util::rng::Pcg64;
+use crate::util::threadpool::ThreadPool;
+
+/// Ground-truth coverage threshold: an injection must overlap ≥ this
+/// fraction of a task's duration to count as affecting it.
+pub const GT_COVERAGE: f64 = 0.02;
+
+/// Which anomaly setting an experiment runs under.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AgSetting {
+    None,
+    Single(AnomalyKind),
+    Mixed,
+}
+
+impl AgSetting {
+    pub fn label(self) -> String {
+        match self {
+            AgSetting::None => "baseline".into(),
+            AgSetting::Single(k) => format!("{} AG", k.as_str()),
+            AgSetting::Mixed => "Mixed AG".into(),
+        }
+    }
+}
+
+/// Simulate the verification workload under an AG setting.
+/// `scale` scales task counts (1.0 = paper scale); AGs run intermittently
+/// on slave node 1 (15 s on / 10 s off, the fluctuation pattern of §IV-B).
+pub fn run_verification_job(setting: AgSetting, seed: u64, scale: f64) -> JobTrace {
+    let w = workloads::naive_bayes(scale);
+    let mut eng = Engine::new(SimConfig { seed, ..Default::default() });
+    let horizon = 400.0 * scale.max(0.25);
+    let plan = match setting {
+        AgSetting::None => InjectionPlan::none(),
+        AgSetting::Single(kind) => InjectionPlan::intermittent(kind, 1, 15.0, 20.0, horizon),
+        AgSetting::Mixed => {
+            let mut rng = Pcg64::seeded(seed ^ 0xA6);
+            InjectionPlan::mixed(&mut rng, 1, 15.0, 20.0, horizon)
+        }
+    };
+    eng.run(&format!("naivebayes-{}", setting.label()), w.name, &w.stages, &plan)
+}
+
+/// Confusions of both methods on one trace.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MethodComparison {
+    pub bigroots: Confusion,
+    pub pcc: Confusion,
+    /// Table III accounting: TP restricted to the injected kind's feature.
+    pub bigroots_kind: (usize, usize),
+    pub pcc_kind: (usize, usize),
+}
+
+/// Score BigRoots and PCC on a trace with injection ground truth.
+pub fn compare_methods(
+    trace: &JobTrace,
+    bcfg: &BigRootsConfig,
+    pcfg: &PccConfig,
+    kind: Option<AnomalyKind>,
+) -> MethodComparison {
+    let mut out = MethodComparison::default();
+    for sf in extract_all(trace, bcfg.edge_width) {
+        let stats = compute_native(&sf);
+        let gt = ground_truth(trace, &sf, GT_COVERAGE);
+        let a_br = analyze_stage_with_stats(&sf, &stats, bcfg);
+        let a_pcc = pcc_analyze(&sf, &stats, pcfg);
+        let feats = resource_features();
+        out.bigroots.add(score_filtered(&a_br, &gt, &feats));
+        out.pcc.add(score_filtered(&a_pcc, &gt, &feats));
+        if let Some(k) = kind {
+            let feat = FeatureKind::ALL
+                .iter()
+                .copied()
+                .find(|f| f.matching_anomaly() == Some(k))
+                .unwrap();
+            let (tp, fp) = score_injected_kind(&a_br, &gt, feat);
+            out.bigroots_kind.0 += tp;
+            out.bigroots_kind.1 += fp;
+            let (tp, fp) = score_injected_kind(&a_pcc, &gt, feat);
+            out.pcc_kind.0 += tp;
+            out.pcc_kind.1 += fp;
+        }
+    }
+    out
+}
+
+/// Table III: TP/FP of BigRoots vs PCC per single-AG experiment, summed
+/// over `reps` repetitions.
+///
+/// Per the paper ("For PCC, we choose the best parameter setup through
+/// exhaustive search"), the PCC thresholds are swept per experiment and the
+/// point maximizing the injected kind's TP (ties → fewer FP) is reported;
+/// BigRoots always runs with its defaults.
+pub fn table3(reps: usize, scale: f64, seed0: u64) -> Vec<(AnomalyKind, MethodComparison)> {
+    let pool = ThreadPool::default_size();
+    let pcc_grid: Vec<PccConfig> = {
+        let mut g = Vec::new();
+        for &pt in &[0.05, 0.1, 0.2, 0.3, 0.5] {
+            for &qt in &[0.5, 0.6, 0.7, 0.8, 0.9] {
+                g.push(PccConfig { pearson_threshold: pt, max_quantile: qt, ..Default::default() });
+            }
+        }
+        g
+    };
+    AnomalyKind::all()
+        .into_iter()
+        .map(|kind| {
+            let grid = pcc_grid.clone();
+            let sums = pool.map((0..reps as u64).collect(), move |rep| {
+                let trace = run_verification_job(AgSetting::Single(kind), seed0 + rep, scale);
+                let base = compare_methods(
+                    &trace,
+                    &BigRootsConfig::default(),
+                    &PccConfig::default(),
+                    Some(kind),
+                );
+                // Per-rep PCC grid results (summed per grid point later).
+                let per_grid: Vec<MethodComparison> = grid
+                    .iter()
+                    .map(|pcfg| {
+                        compare_methods(&trace, &BigRootsConfig::default(), pcfg, Some(kind))
+                    })
+                    .collect();
+                (base, per_grid)
+            });
+            let mut total = MethodComparison::default();
+            let mut grid_totals = vec![MethodComparison::default(); pcc_grid.len()];
+            for (base, per_grid) in sums {
+                total.bigroots.add(base.bigroots);
+                total.bigroots_kind.0 += base.bigroots_kind.0;
+                total.bigroots_kind.1 += base.bigroots_kind.1;
+                for (gt, g) in grid_totals.iter_mut().zip(per_grid) {
+                    gt.pcc.add(g.pcc);
+                    gt.pcc_kind.0 += g.pcc_kind.0;
+                    gt.pcc_kind.1 += g.pcc_kind.1;
+                }
+            }
+            // Exhaustive search: maximize TP, tie-break on fewer FP.
+            let best = grid_totals
+                .into_iter()
+                .max_by(|a, b| {
+                    (a.pcc_kind.0, std::cmp::Reverse(a.pcc_kind.1))
+                        .cmp(&(b.pcc_kind.0, std::cmp::Reverse(b.pcc_kind.1)))
+                })
+                .unwrap();
+            total.pcc = best.pcc;
+            total.pcc_kind = best.pcc_kind;
+            (kind, total)
+        })
+        .collect()
+}
+
+/// Figure 7: mean job duration per AG setting over `reps` repetitions.
+/// Returns (setting, durations).
+pub fn fig7(reps: usize, scale: f64, seed0: u64) -> Vec<(AgSetting, Vec<f64>)> {
+    let settings = [
+        AgSetting::None,
+        AgSetting::Single(AnomalyKind::Cpu),
+        AgSetting::Single(AnomalyKind::Io),
+        AgSetting::Single(AnomalyKind::Network),
+        AgSetting::Mixed,
+    ];
+    let pool = ThreadPool::default_size();
+    settings
+        .into_iter()
+        .map(|setting| {
+            let durs = pool.map((0..reps as u64).collect(), move |rep| {
+                run_verification_job(setting, seed0 + rep, scale).makespan()
+            });
+            (setting, durs)
+        })
+        .collect()
+}
+
+/// Figure 8: ROC sweeps of both methods under one AG setting.
+pub struct RocResult {
+    pub bigroots_points: Vec<RocPoint>,
+    pub pcc_points: Vec<RocPoint>,
+    pub bigroots_auc: f64,
+    pub pcc_auc: f64,
+}
+
+pub fn fig8(setting: AgSetting, reps: usize, scale: f64, seed0: u64) -> RocResult {
+    // Pre-simulate traces and their per-stage stats once; sweeps reuse them.
+    let pool = ThreadPool::default_size();
+    let runs: Vec<JobTrace> = pool.map((0..reps as u64).collect(), move |rep| {
+        run_verification_job(setting, seed0 + rep, scale)
+    });
+    let mut owned = Vec::new();
+    for trace in &runs {
+        for sf in extract_all(trace, BigRootsConfig::default().edge_width) {
+            let stats = compute_native(&sf);
+            let gt = ground_truth(trace, &sf, GT_COVERAGE);
+            owned.push((sf, stats, gt));
+        }
+    }
+    let stages: Vec<_> = owned.iter().map(|(a, b, c)| (a, b, c)).collect();
+
+    let lq: Vec<f64> = (0..10).map(|i| i as f64 * 0.1).collect();
+    let lp: Vec<f64> = vec![1.0, 1.1, 1.25, 1.5, 2.0, 3.0, 5.0];
+    let bigroots_points = sweep_bigroots(&stages, &BigRootsConfig::default(), &lq, &lp);
+
+    let pt: Vec<f64> = (0..10).map(|i| i as f64 * 0.1).collect();
+    let qt: Vec<f64> = (0..10).map(|i| i as f64 * 0.1).collect();
+    let pcc_points = sweep_pcc(&stages, &PccConfig::default(), &pt, &qt);
+
+    RocResult {
+        bigroots_auc: sweep_auc(&bigroots_points),
+        pcc_auc: sweep_auc(&pcc_points),
+        bigroots_points,
+        pcc_points,
+    }
+}
+
+/// Figure 9: edge-detection ablation — FPR and ACC with/without, per AG
+/// setting, plus PCC for reference.
+#[derive(Debug, Clone, Copy)]
+pub struct EdgeAblation {
+    pub with_edge: Confusion,
+    pub without_edge: Confusion,
+    pub pcc: Confusion,
+}
+
+pub fn fig9(setting: AgSetting, reps: usize, scale: f64, seed0: u64) -> EdgeAblation {
+    let pool = ThreadPool::default_size();
+    let runs: Vec<JobTrace> = pool.map((0..reps as u64).collect(), move |rep| {
+        run_verification_job(setting, seed0 + rep, scale)
+    });
+    let mut with_edge = Confusion::default();
+    let mut without_edge = Confusion::default();
+    let mut pcc_c = Confusion::default();
+    let cfg_with = BigRootsConfig::default();
+    let cfg_without = BigRootsConfig { use_edge_detection: false, ..Default::default() };
+    for trace in &runs {
+        for sf in extract_all(trace, cfg_with.edge_width) {
+            let stats = compute_native(&sf);
+            let gt = ground_truth(trace, &sf, GT_COVERAGE);
+            let feats = resource_features();
+            with_edge
+                .add(score_filtered(&analyze_stage_with_stats(&sf, &stats, &cfg_with), &gt, &feats));
+            without_edge.add(score_filtered(
+                &analyze_stage_with_stats(&sf, &stats, &cfg_without),
+                &gt,
+                &feats,
+            ));
+            pcc_c.add(score_filtered(&pcc_analyze(&sf, &stats, &PccConfig::default()), &gt, &feats));
+        }
+    }
+    EdgeAblation { with_edge, without_edge, pcc: pcc_c }
+}
+
+/// Tables IV+V: the paper's multi-node schedule (slave k → node k-1) on a
+/// long two-stage job; returns both methods' confusion matrices.
+pub fn table5(scale: f64, seed: u64) -> MethodComparison {
+    let plan = InjectionPlan::table4(|slave| slave - 1);
+    let w = workloads::naive_bayes(scale);
+    let mut eng = Engine::new(SimConfig { seed, ..Default::default() });
+    let trace = eng.run("table4", w.name, &w.stages, &plan);
+    // PCC runs with the thresholds tuned during the single-AG experiments
+    // (the paper tunes both methods there and then applies them to the
+    // multi-node run); 0.5 would leave PCC blind on this workload.
+    let pcc = PccConfig { pearson_threshold: 0.2, max_quantile: 0.7, ..Default::default() };
+    compare_methods(&trace, &BigRootsConfig::default(), &pcc, None)
+}
+
+/// Table VI: the HiBench case study. Each workload runs in its natural
+/// cluster environment: random background contention bursts (busy
+/// machines) whose ground truth the analyst does NOT get — exactly the
+/// paper's production setting. Returns per-workload summaries.
+pub fn table6(scale: f64, seed: u64) -> Vec<crate::analysis::report::WorkloadSummary> {
+    let pool = ThreadPool::default_size();
+    let suite = workloads::hibench_suite(scale);
+    pool.map(suite, move |w| {
+        let mut rng = Pcg64::seeded(seed ^ fxhash(w.name));
+        // Dry-run once to size the busy-machine window to the job, so the
+        // environment bursts actually overlap work (a production cluster is
+        // contended *while* the job runs).
+        let mut dry = Engine::new(SimConfig { seed: seed ^ fxhash(w.name), ..Default::default() });
+        let makespan = dry.run(w.name, w.name, &w.stages, &InjectionPlan::none()).makespan();
+        let mut eng = Engine::new(SimConfig { seed: seed ^ fxhash(w.name), ..Default::default() });
+        let plan = InjectionPlan::random_multi_node(
+            &mut rng,
+            &[0, 1, 2, 3, 4],
+            6,
+            (makespan * 0.1, makespan * 0.3),
+            makespan * 0.9,
+        );
+        let mut trace = eng.run(w.name, w.name, &w.stages, &plan);
+        // The case study has no ground truth channel.
+        trace.injections.clear();
+        let mut pipeline = super::pipeline::Pipeline::native();
+        pipeline.pcc = None;
+        let analysis = pipeline.analyze(&trace, w.domain);
+        analysis.summary
+    })
+}
+
+fn fxhash(s: &str) -> u64 {
+    s.bytes().fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn verification_job_has_injections_and_stragglers() {
+        let t = run_verification_job(AgSetting::Single(AnomalyKind::Io), 3, 0.3);
+        assert!(!t.injections.is_empty());
+        t.validate().unwrap();
+        let none = run_verification_job(AgSetting::None, 3, 0.3);
+        assert!(none.injections.is_empty());
+    }
+
+    #[test]
+    fn table3_shape_bigroots_fp_below_pcc() {
+        // The paper's headline: BigRoots produces far fewer FPs than PCC.
+        let rows = table3(2, 0.3, 100);
+        assert_eq!(rows.len(), 3);
+        let total_br_fp: usize = rows.iter().map(|(_, m)| m.bigroots.fp).sum();
+        let total_pcc_fp: usize = rows.iter().map(|(_, m)| m.pcc.fp).sum();
+        assert!(
+            total_br_fp < total_pcc_fp.max(1),
+            "BigRoots FP {total_br_fp} must undercut PCC FP {total_pcc_fp}"
+        );
+    }
+
+    #[test]
+    fn fig7_contention_rarely_speeds_jobs() {
+        let rows = fig7(2, 0.25, 200);
+        assert_eq!(rows.len(), 5);
+        let base = crate::util::stats::mean(&rows[0].1);
+        for (setting, durs) in &rows[1..] {
+            let m = crate::util::stats::mean(durs);
+            assert!(
+                m > base * 0.9,
+                "{} mean {m} vs baseline {base}",
+                setting.label()
+            );
+        }
+    }
+
+    #[test]
+    fn fig8_bigroots_beats_pcc_auc() {
+        let r = fig8(AgSetting::Single(AnomalyKind::Io), 2, 0.3, 300);
+        assert!(r.bigroots_auc > r.pcc_auc, "AUC {} vs {}", r.bigroots_auc, r.pcc_auc);
+        assert!(!r.bigroots_points.is_empty() && !r.pcc_points.is_empty());
+    }
+
+    #[test]
+    fn fig9_edge_detection_reduces_fpr() {
+        let e = fig9(AgSetting::Single(AnomalyKind::Cpu), 2, 0.3, 400);
+        assert!(
+            e.with_edge.fpr() <= e.without_edge.fpr(),
+            "edge detection must not increase FPR: {} vs {}",
+            e.with_edge.fpr(),
+            e.without_edge.fpr()
+        );
+        assert!(e.with_edge.acc() >= e.without_edge.acc() - 1e-9);
+    }
+
+    #[test]
+    fn table5_bigroots_low_fpr() {
+        let m = table5(0.5, 500);
+        assert!(m.bigroots.fpr() <= m.pcc.fpr() + 1e-9, "{:?} vs {:?}", m.bigroots, m.pcc);
+    }
+
+    #[test]
+    fn table6_produces_all_rows() {
+        let rows = table6(0.08, 600);
+        assert_eq!(rows.len(), 11);
+        // Kmeans's dominant cause should be shuffle-read skew (paper row 1).
+        let km = rows.iter().find(|r| r.workload == "Kmeans").unwrap();
+        assert!(
+            km.causes.iter().any(|&(k, _)| k == FeatureKind::ShuffleReadBytes),
+            "kmeans causes must include shuffle-read skew: {:?}",
+            km.causes
+        );
+    }
+}

@@ -1,0 +1,18 @@
+//! The L3 coordinator: ties simulator, trace, analyzer and runtime into
+//! the workflows a user actually runs.
+//!
+//! - [`pipeline`] — the offline analysis pipeline (Fig. 1 of the paper)
+//! - [`streaming`] — event-stream analysis (stage-complete granularity)
+//! - [`experiments`] — one driver per paper table/figure (shared by
+//!   benches and examples)
+//! - [`config`] — declarative experiment configuration files
+
+pub mod config;
+pub mod experiments;
+pub mod pipeline;
+pub mod streaming;
+
+pub use config::{ExperimentConfig, InjectionSpec};
+pub use experiments::AgSetting;
+pub use pipeline::{JobAnalysis, Pipeline};
+pub use streaming::StreamAnalyzer;

@@ -1,0 +1,114 @@
+//! The offline analysis pipeline — Figure 1 of the paper: collect features
+//! for all tasks of each stage, detect stragglers, filter root-cause
+//! features, report.
+
+use crate::analysis::bigroots::{analyze_stage_with_stats, BigRootsConfig, StageAnalysis};
+use crate::analysis::features::{extract_all, StageFeatures};
+use crate::analysis::pcc::{self, PccConfig};
+use crate::analysis::report::{annotations, summarize_workload, StragglerAnnotation, WorkloadSummary};
+use crate::analysis::stats::StatsBackend;
+use crate::trace::JobTrace;
+
+/// Full analysis of one job trace: BigRoots and (optionally) the PCC
+/// baseline over every stage, plus derived reports.
+pub struct JobAnalysis {
+    /// (features, BigRoots result) per stage.
+    pub per_stage: Vec<(StageFeatures, StageAnalysis)>,
+    /// PCC results, stage-aligned with `per_stage` (empty if not requested).
+    pub pcc_per_stage: Vec<StageAnalysis>,
+    pub annotations: Vec<StragglerAnnotation>,
+    pub summary: WorkloadSummary,
+}
+
+impl JobAnalysis {
+    pub fn total_stragglers(&self) -> usize {
+        self.per_stage.iter().map(|(_, a)| a.stragglers.rows.len()).sum()
+    }
+
+    pub fn total_causes(&self) -> usize {
+        self.per_stage.iter().map(|(_, a)| a.causes.len()).sum()
+    }
+}
+
+/// The pipeline: owns the stats backend and the two analyzers' configs.
+pub struct Pipeline {
+    pub backend: Box<dyn StatsBackend>,
+    pub bigroots: BigRootsConfig,
+    pub pcc: Option<PccConfig>,
+}
+
+impl Pipeline {
+    /// Pipeline on the given backend with paper-default thresholds.
+    pub fn new(backend: Box<dyn StatsBackend>) -> Self {
+        Pipeline { backend, bigroots: BigRootsConfig::default(), pcc: Some(PccConfig::default()) }
+    }
+
+    /// Pipeline on the best available backend (XLA if artifacts exist).
+    pub fn auto() -> Self {
+        Self::new(crate::runtime::auto_backend())
+    }
+
+    /// Pipeline on the native backend (no artifacts needed).
+    pub fn native() -> Self {
+        Self::new(Box::new(crate::analysis::stats::NativeBackend))
+    }
+
+    /// Analyze a complete trace.
+    pub fn analyze(&mut self, trace: &JobTrace, domain: &str) -> JobAnalysis {
+        let mut per_stage = Vec::new();
+        let mut pcc_per_stage = Vec::new();
+        for sf in extract_all(trace, self.bigroots.edge_width) {
+            // One stats pass serves both analyzers.
+            let stats = self.backend.stage_stats(&sf);
+            let a = analyze_stage_with_stats(&sf, &stats, &self.bigroots);
+            if let Some(pcfg) = &self.pcc {
+                pcc_per_stage.push(pcc::analyze_stage_with_stats(&sf, &stats, pcfg));
+            }
+            per_stage.push((sf, a));
+        }
+        let annotations = annotations(trace, &per_stage);
+        let summary = summarize_workload(domain, &trace.workload, &per_stage);
+        JobAnalysis { per_stage, pcc_per_stage, annotations, summary }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{workloads, Engine, InjectionPlan, SimConfig};
+
+    fn trace() -> JobTrace {
+        let w = workloads::naive_bayes(0.2);
+        let mut eng = Engine::new(SimConfig { seed: 41, ..Default::default() });
+        eng.run("t", w.name, &w.stages, &InjectionPlan::none())
+    }
+
+    #[test]
+    fn analyzes_every_stage() {
+        let t = trace();
+        let mut p = Pipeline::native();
+        let a = p.analyze(&t, "Machine Learning");
+        assert_eq!(a.per_stage.len(), t.stages.len());
+        assert_eq!(a.pcc_per_stage.len(), t.stages.len());
+        assert_eq!(a.summary.workload, "NaiveBayes");
+        assert_eq!(a.total_stragglers(), a.annotations.len());
+    }
+
+    #[test]
+    fn pcc_can_be_disabled() {
+        let t = trace();
+        let mut p = Pipeline::native();
+        p.pcc = None;
+        let a = p.analyze(&t, "ml");
+        assert!(a.pcc_per_stage.is_empty());
+    }
+
+    #[test]
+    fn auto_backend_runs() {
+        // Works with or without artifacts (falls back to native).
+        let t = trace();
+        let mut p = Pipeline::auto();
+        let a = p.analyze(&t, "ml");
+        assert_eq!(a.per_stage.len(), t.stages.len());
+    }
+}

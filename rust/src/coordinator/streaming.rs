@@ -1,0 +1,270 @@
+//! Streaming analysis — the paper's "scheduler periodically collects
+//! information from Spark and AG log files" loop, generalized to an event
+//! stream: consume `trace::eventlog` events as they arrive, accumulate
+//! per-stage state, and run the BigRoots analysis the moment a stage
+//! completes (all of its announced tasks ended).
+//!
+//! The synchronous [`StreamAnalyzer`] is the core; [`analyze_stream_threaded`]
+//! wraps it with a reader thread + channel for file-tail style use.
+
+use std::collections::HashMap;
+use std::sync::mpsc::channel;
+
+use crate::analysis::bigroots::{analyze_stage_with_stats, BigRootsConfig, StageAnalysis};
+use crate::analysis::features::extract_stage;
+use crate::analysis::stats::StatsBackend;
+use crate::trace::eventlog::Event;
+use crate::trace::{ClusterInfo, JobTrace, NodeSeries, StageRecord, TaskRecord};
+
+/// Incremental stage state.
+#[derive(Debug)]
+struct StageState {
+    name: String,
+    announced_tasks: usize,
+    completed: Vec<TaskRecord>,
+    analyzed: bool,
+}
+
+/// The streaming analyzer: feed events, collect completed-stage analyses.
+pub struct StreamAnalyzer {
+    cfg: BigRootsConfig,
+    backend: Box<dyn StatsBackend>,
+    cluster: Option<ClusterInfo>,
+    job_name: String,
+    workload: String,
+    stages: HashMap<u64, StageState>,
+    samples: Vec<(usize, f64, f64, f64, f64)>,
+    /// Completed per-stage analyses, in completion order.
+    pub results: Vec<StageAnalysis>,
+    /// Events consumed.
+    pub events_seen: usize,
+}
+
+impl StreamAnalyzer {
+    pub fn new(backend: Box<dyn StatsBackend>, cfg: BigRootsConfig) -> Self {
+        StreamAnalyzer {
+            cfg,
+            backend,
+            cluster: None,
+            job_name: String::new(),
+            workload: String::new(),
+            stages: HashMap::new(),
+            samples: Vec::new(),
+            results: Vec::new(),
+            events_seen: 0,
+        }
+    }
+
+    /// Feed one event; returns the stage id if this event completed a stage
+    /// (its analysis has been appended to `results`).
+    pub fn feed(&mut self, event: &Event) -> Option<u64> {
+        self.events_seen += 1;
+        match event {
+            Event::JobStart { job_name, workload, cluster } => {
+                self.job_name = job_name.clone();
+                self.workload = workload.clone();
+                self.cluster = Some(cluster.clone());
+                None
+            }
+            Event::StageSubmitted { stage_id, name, num_tasks } => {
+                self.stages.insert(
+                    *stage_id,
+                    StageState {
+                        name: name.clone(),
+                        announced_tasks: *num_tasks,
+                        completed: Vec::new(),
+                        analyzed: false,
+                    },
+                );
+                None
+            }
+            Event::ResourceSample { node, time, cpu, disk, net_bytes } => {
+                self.samples.push((*node, *time, *cpu, *disk, *net_bytes));
+                None
+            }
+            Event::TaskEnd(t) => {
+                let stage_id = t.stage_id;
+                let ready = {
+                    let st = self.stages.get_mut(&stage_id)?;
+                    st.completed.push(t.clone());
+                    !st.analyzed && st.completed.len() >= st.announced_tasks
+                };
+                if ready {
+                    self.analyze_stage(stage_id);
+                    Some(stage_id)
+                } else {
+                    None
+                }
+            }
+            Event::TaskStart { .. } | Event::Injection(_) | Event::JobEnd { .. } => None,
+        }
+    }
+
+    /// Build a point-in-time trace view for one completed stage and run the
+    /// analysis on it.
+    fn analyze_stage(&mut self, stage_id: u64) {
+        let Some(cluster) = self.cluster.clone() else { return };
+        let st = self.stages.get_mut(&stage_id).unwrap();
+        st.analyzed = true;
+        let mut tasks = st.completed.clone();
+        tasks.sort_by_key(|t| t.task_id);
+        let stage = StageRecord {
+            stage_id,
+            name: st.name.clone(),
+            tasks: tasks.iter().map(|t| t.task_id).collect(),
+        };
+        // Node series from the samples seen so far (1 Hz grid).
+        let mut node_series: Vec<NodeSeries> =
+            (0..cluster.nodes).map(|n| NodeSeries::empty(n, 1.0)).collect();
+        let mut ordered = self.samples.clone();
+        ordered.sort_by(|a, b| (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap());
+        for (node, _t, cpu, disk, net) in ordered {
+            if node < node_series.len() {
+                node_series[node].cpu.push(cpu);
+                node_series[node].disk.push(disk);
+                node_series[node].net_bytes.push(net);
+            }
+        }
+        let view = JobTrace {
+            job_name: self.job_name.clone(),
+            workload: self.workload.clone(),
+            cluster,
+            stages: vec![stage],
+            tasks,
+            node_series,
+            injections: vec![],
+        };
+        let sf = extract_stage(&view, stage_id, self.cfg.edge_width);
+        let stats = self.backend.stage_stats(&sf);
+        self.results.push(analyze_stage_with_stats(&sf, &stats, &self.cfg));
+    }
+
+    /// Stages announced but not yet complete (e.g. stream truncated).
+    pub fn incomplete_stages(&self) -> Vec<u64> {
+        let mut v: Vec<u64> = self
+            .stages
+            .iter()
+            .filter(|(_, s)| !s.analyzed)
+            .map(|(id, _)| *id)
+            .collect();
+        v.sort();
+        v
+    }
+}
+
+/// Run a reader thread that parses newline-delimited events from `text`
+/// and streams them through an analyzer on this thread. Returns the
+/// analyzer after the stream ends.
+pub fn analyze_stream_threaded(
+    text: String,
+    backend: Box<dyn StatsBackend>,
+    cfg: BigRootsConfig,
+) -> Result<StreamAnalyzer, String> {
+    let (tx, rx) = channel::<Result<Event, String>>();
+    let reader = std::thread::spawn(move || {
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let parsed = crate::util::json::Json::parse(line)
+                .map_err(|e| e.to_string())
+                .and_then(|j| Event::decode(&j).map_err(|e| e.to_string()));
+            if tx.send(parsed).is_err() {
+                break;
+            }
+        }
+    });
+    let mut analyzer = StreamAnalyzer::new(backend, cfg);
+    for msg in rx {
+        let event = msg?;
+        analyzer.feed(&event);
+    }
+    reader.join().map_err(|_| "reader thread panicked".to_string())?;
+    Ok(analyzer)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::stats::NativeBackend;
+    use crate::coordinator::pipeline::Pipeline;
+    use crate::sim::{workloads, Engine, InjectionPlan, SimConfig};
+    use crate::trace::eventlog::trace_to_events;
+
+    fn trace() -> JobTrace {
+        let w = workloads::naive_bayes(0.15);
+        let mut eng = Engine::new(SimConfig { seed: 51, ..Default::default() });
+        eng.run("stream-test", w.name, &w.stages, &InjectionPlan::none())
+    }
+
+    #[test]
+    fn streaming_analyzes_every_stage() {
+        let t = trace();
+        let events = trace_to_events(&t);
+        let mut an = StreamAnalyzer::new(Box::new(NativeBackend), BigRootsConfig::default());
+        let mut completed = Vec::new();
+        for e in &events {
+            if let Some(sid) = an.feed(e) {
+                completed.push(sid);
+            }
+        }
+        assert_eq!(completed.len(), t.stages.len());
+        assert_eq!(an.results.len(), t.stages.len());
+        assert!(an.incomplete_stages().is_empty());
+        assert_eq!(an.events_seen, events.len());
+    }
+
+    #[test]
+    fn streaming_matches_offline_straggler_sets() {
+        // The stream view sees samples only up to stage completion, but the
+        // straggler sets must match the offline pipeline exactly (straggler
+        // detection uses durations only).
+        let t = trace();
+        let events = trace_to_events(&t);
+        let mut an = StreamAnalyzer::new(Box::new(NativeBackend), BigRootsConfig::default());
+        for e in &events {
+            an.feed(e);
+        }
+        let mut offline = Pipeline::native();
+        let off = offline.analyze(&t, "ml");
+        for (stream_a, (_, off_a)) in an.results.iter().zip(&off.per_stage) {
+            assert_eq!(stream_a.stragglers.rows, off_a.stragglers.rows);
+        }
+    }
+
+    #[test]
+    fn truncated_stream_reports_incomplete() {
+        let t = trace();
+        let events = trace_to_events(&t);
+        let cut = events.len() / 2;
+        let mut an = StreamAnalyzer::new(Box::new(NativeBackend), BigRootsConfig::default());
+        for e in &events[..cut] {
+            an.feed(e);
+        }
+        assert!(!an.incomplete_stages().is_empty() || !an.results.is_empty());
+    }
+
+    #[test]
+    fn threaded_stream_end_to_end() {
+        let t = trace();
+        let events = trace_to_events(&t);
+        let text: String = events.iter().map(|e| e.encode().to_string() + "\n").collect();
+        let an = analyze_stream_threaded(
+            text,
+            Box::new(NativeBackend),
+            BigRootsConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(an.results.len(), t.stages.len());
+    }
+
+    #[test]
+    fn threaded_stream_bad_line_is_error() {
+        let r = analyze_stream_threaded(
+            "not json\n".to_string(),
+            Box::new(NativeBackend),
+            BigRootsConfig::default(),
+        );
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,29 @@
+//! # BigRoots — root-cause analysis of stragglers in big data systems
+//!
+//! A full reproduction of *"BigRoots: An Effective Approach for Root-cause
+//! Analysis of Stragglers in Big Data System"* (Zhou, Li, Yang, Jia, Li;
+//! 2018) as a Rust + JAX + Pallas three-layer stack:
+//!
+//! - **L3 (this crate)** — the coordinator: a discrete-event Spark-like
+//!   cluster simulator substrate ([`sim`]), the trace model ([`trace`]), the
+//!   BigRoots analyzer and PCC baseline ([`analysis`]), a PJRT runtime that
+//!   executes the AOT-compiled stats kernel ([`runtime`]), and the pipeline
+//!   that ties them together ([`coordinator`]).
+//! - **L2 (python/compile/model.py)** — the batched per-stage feature
+//!   statistics graph in JAX, lowered once to HLO text.
+//! - **L1 (python/compile/kernels/)** — Pallas kernels for the fused
+//!   moments/Pearson reduction and edge-detection window means.
+//!
+//! Python never runs at analysis time: `make artifacts` AOT-compiles the
+//! L1/L2 stack, and the rust binary loads `artifacts/*.hlo.txt` via PJRT.
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod analysis;
+pub mod coordinator;
+pub mod runtime;
+pub mod sim;
+pub mod testing;
+pub mod trace;
+pub mod util;

@@ -1,0 +1,408 @@
+//! `bigroots` — the command-line launcher.
+//!
+//! Subcommands cover the full paper workflow:
+//!
+//! ```text
+//! bigroots simulate   — run a workload on the simulated cluster → trace.json
+//! bigroots analyze    — offline root-cause analysis of a trace file
+//! bigroots stream     — streaming analysis of an event log (ndjson)
+//! bigroots verify     — Table III single-AG verification (BigRoots vs PCC)
+//! bigroots multi      — Tables IV+V multi-node anomaly schedule
+//! bigroots hibench    — Table VI case study over the 11 workloads
+//! bigroots roc        — Fig. 8 threshold sweep + AUC comparison
+//! bigroots run        — run a declarative experiment config (JSON)
+//! ```
+
+use bigroots::analysis::features::FeatureKind;
+use bigroots::analysis::roc::resource_features;
+use bigroots::coordinator::experiments::{self, AgSetting};
+use bigroots::coordinator::{ExperimentConfig, Pipeline};
+use bigroots::sim::{workloads, Engine};
+use bigroots::trace::{codec, eventlog, AnomalyKind};
+use bigroots::util::cli::Command;
+use bigroots::util::table::{fnum, pct, Align, Table};
+
+fn main() {
+    let cmd = Command::new("bigroots", "root-cause analysis of stragglers in big data systems")
+        .subcommand(
+            Command::new("simulate", "simulate a workload, write a trace file")
+                .opt("workload", "NaiveBayes", "workload name (see `hibench` for the list)")
+                .opt("scale", "1.0", "task-count scale factor")
+                .opt("seed", "42", "rng seed")
+                .opt("inject", "none", "anomaly: none | cpu | io | network | mixed | table4")
+                .opt("node", "1", "injection target node")
+                .opt("out", "trace.json", "output trace path")
+                .flag("events", "also write an event log next to the trace"),
+        )
+        .subcommand(
+            Command::new("analyze", "offline analysis of a trace file")
+                .opt_req("input", "trace file (from `simulate` or a converter)")
+                .opt("backend", "auto", "stats backend: auto | native | xla")
+                .flag("pcc", "also run the PCC baseline")
+                .flag("verbose", "print every straggler with its causes"),
+        )
+        .subcommand(
+            Command::new("stream", "streaming analysis of an ndjson event log")
+                .opt_req("input", "event log path"),
+        )
+        .subcommand(
+            Command::new("verify", "Table III: single-AG verification vs PCC")
+                .opt("reps", "10", "repetitions per AG kind")
+                .opt("scale", "1.0", "workload scale")
+                .opt("seed", "42", "base seed"),
+        )
+        .subcommand(
+            Command::new("multi", "Tables IV+V: multi-node anomaly schedule")
+                .opt("scale", "1.0", "workload scale")
+                .opt("seed", "42", "seed"),
+        )
+        .subcommand(
+            Command::new("hibench", "Table VI: the 11-workload case study")
+                .opt("scale", "1.0", "workload scale")
+                .opt("seed", "42", "seed"),
+        )
+        .subcommand(
+            Command::new("roc", "Fig. 8: ROC sweep + AUC, BigRoots vs PCC")
+                .opt("setting", "cpu", "cpu | io | network | mixed")
+                .opt("reps", "5", "repetitions")
+                .opt("scale", "0.6", "workload scale")
+                .opt("seed", "42", "base seed"),
+        )
+        .subcommand(
+            Command::new("run", "run a declarative experiment config")
+                .opt_req("config", "JSON config path (see coordinator::config)"),
+        );
+
+    let (sub, args) = cmd.parse_env();
+    let code = match sub.as_str() {
+        "simulate" => cmd_simulate(&args),
+        "analyze" => cmd_analyze(&args),
+        "stream" => cmd_stream(&args),
+        "verify" => cmd_verify(&args),
+        "multi" => cmd_multi(&args),
+        "hibench" => cmd_hibench(&args),
+        "roc" => cmd_roc(&args),
+        "run" => cmd_run(&args),
+        _ => unreachable!(),
+    };
+    std::process::exit(code);
+}
+
+fn parse_setting(s: &str) -> Option<AgSetting> {
+    Some(match s.to_ascii_lowercase().as_str() {
+        "none" => AgSetting::None,
+        "cpu" => AgSetting::Single(AnomalyKind::Cpu),
+        "io" => AgSetting::Single(AnomalyKind::Io),
+        "network" | "net" => AgSetting::Single(AnomalyKind::Network),
+        "mixed" => AgSetting::Mixed,
+        _ => return None,
+    })
+}
+
+fn cmd_simulate(args: &bigroots::util::cli::Args) -> i32 {
+    let name = args.get_or("workload", "NaiveBayes");
+    let scale = args.get_f64("scale", 1.0);
+    let seed = args.get_u64("seed", 42);
+    let Some(w) = workloads::by_name(&name, scale) else {
+        eprintln!("unknown workload '{name}'");
+        return 2;
+    };
+    let inject = args.get_or("inject", "none");
+    let node = args.get_usize("node", 1);
+    let horizon = 400.0 * scale.max(0.25);
+    let plan = match inject.as_str() {
+        "none" => bigroots::sim::InjectionPlan::none(),
+        "cpu" => bigroots::sim::InjectionPlan::intermittent(AnomalyKind::Cpu, node, 15.0, 10.0, horizon),
+        "io" => bigroots::sim::InjectionPlan::intermittent(AnomalyKind::Io, node, 15.0, 10.0, horizon),
+        "network" | "net" => {
+            bigroots::sim::InjectionPlan::intermittent(AnomalyKind::Network, node, 15.0, 10.0, horizon)
+        }
+        "mixed" => {
+            let mut rng = bigroots::util::rng::Pcg64::seeded(seed ^ 0xA6);
+            bigroots::sim::InjectionPlan::mixed(&mut rng, node, 15.0, 10.0, horizon)
+        }
+        "table4" => bigroots::sim::InjectionPlan::table4(|s| s - 1),
+        other => {
+            eprintln!("unknown injection '{other}'");
+            return 2;
+        }
+    };
+    let mut eng = Engine::new(bigroots::sim::SimConfig { seed, ..Default::default() });
+    let trace = eng.run(&format!("{name}-{inject}"), w.name, &w.stages, &plan);
+    let out = args.get_or("out", "trace.json");
+    if let Err(e) = codec::save(&trace, &out) {
+        eprintln!("write failed: {e:#}");
+        return 1;
+    }
+    println!(
+        "wrote {out}: {} tasks, {} stages, makespan {:.1}s, {} injections",
+        trace.tasks.len(),
+        trace.stages.len(),
+        trace.makespan(),
+        trace.injections.len()
+    );
+    if args.flag("events") {
+        let epath = format!("{out}.events.ndjson");
+        let events = eventlog::trace_to_events(&trace);
+        if let Err(e) = eventlog::write_events(&events, &epath) {
+            eprintln!("event log write failed: {e:#}");
+            return 1;
+        }
+        println!("wrote {epath}: {} events", events.len());
+    }
+    0
+}
+
+fn make_pipeline(backend: &str) -> Result<Pipeline, String> {
+    match backend {
+        "auto" => Ok(Pipeline::auto()),
+        "native" => Ok(Pipeline::native()),
+        "xla" => {
+            let dir = bigroots::runtime::XlaBackend::default_dir();
+            let b = bigroots::runtime::XlaBackend::open(&dir)
+                .map_err(|e| format!("XLA backend: {e:#}"))?;
+            Ok(Pipeline::new(Box::new(b)))
+        }
+        other => Err(format!("unknown backend '{other}'")),
+    }
+}
+
+fn cmd_analyze(args: &bigroots::util::cli::Args) -> i32 {
+    let input = args.get("input").unwrap();
+    let trace = match codec::load(input) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("loading {input}: {e:#}");
+            return 1;
+        }
+    };
+    let mut pipeline = match make_pipeline(&args.get_or("backend", "auto")) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    if !args.flag("pcc") {
+        pipeline.pcc = None;
+    }
+    let analysis = pipeline.analyze(&trace, "-");
+    println!(
+        "{} [{}] — {} tasks, {} stages, backend {}",
+        trace.job_name,
+        trace.workload,
+        trace.tasks.len(),
+        trace.stages.len(),
+        pipeline.backend.name()
+    );
+    let mut t = Table::new("Per-stage summary")
+        .header(&["stage", "tasks", "median (s)", "stragglers", "causes"])
+        .aligns(&[Align::Left, Align::Right, Align::Right, Align::Right, Align::Left]);
+    for (sf, a) in &analysis.per_stage {
+        let hist = a
+            .cause_histogram()
+            .iter()
+            .map(|(k, n)| format!("{}({})", k.name(), n))
+            .collect::<Vec<_>>()
+            .join(" ");
+        t.row(vec![
+            format!("{}", sf.stage_id),
+            format!("{}", sf.num_tasks()),
+            fnum(a.stragglers.median, 2),
+            format!("{}", a.stragglers.rows.len()),
+            if hist.is_empty() { "-".into() } else { hist },
+        ]);
+    }
+    print!("{}", t.render());
+    if args.flag("verbose") {
+        for ann in &analysis.annotations {
+            let causes: Vec<&str> = ann.causes.iter().map(|k| k.name()).collect();
+            println!(
+                "straggler task {} (stage {}, node {}) [{:.1}s..{:.1}s] scale {:.2}x → {}",
+                ann.task_id,
+                ann.stage_id,
+                ann.node,
+                ann.start,
+                ann.finish,
+                ann.scale,
+                if causes.is_empty() { "unexplained".to_string() } else { causes.join(", ") }
+            );
+        }
+    }
+    if args.flag("pcc") {
+        let pcc_causes: usize = analysis.pcc_per_stage.iter().map(|a| a.causes.len()).sum();
+        println!("PCC baseline: {pcc_causes} causes (vs BigRoots {})", analysis.total_causes());
+    }
+    0
+}
+
+fn cmd_stream(args: &bigroots::util::cli::Args) -> i32 {
+    let input = args.get("input").unwrap();
+    let text = match std::fs::read_to_string(input) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("reading {input}: {e}");
+            return 1;
+        }
+    };
+    match bigroots::coordinator::streaming::analyze_stream_threaded(
+        text,
+        Box::new(bigroots::analysis::stats::NativeBackend),
+        Default::default(),
+    ) {
+        Ok(an) => {
+            println!("consumed {} events, analyzed {} stages", an.events_seen, an.results.len());
+            for a in &an.results {
+                println!(
+                    "stage {}: {} stragglers, {} causes",
+                    a.stage_id,
+                    a.stragglers.rows.len(),
+                    a.causes.len()
+                );
+            }
+            let inc = an.incomplete_stages();
+            if !inc.is_empty() {
+                println!("incomplete stages at stream end: {inc:?}");
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("stream error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_verify(args: &bigroots::util::cli::Args) -> i32 {
+    let reps = args.get_usize("reps", 10);
+    let scale = args.get_f64("scale", 1.0);
+    let seed = args.get_u64("seed", 42);
+    let rows = experiments::table3(reps, scale, seed);
+    let mut t = Table::new("Table III: BigRoots vs PCC (TP/FP over resource features)")
+        .header(&["Experiment", "BigRoots TP", "BigRoots FP", "PCC TP", "PCC FP"])
+        .aligns(&[Align::Left, Align::Right, Align::Right, Align::Right, Align::Right]);
+    for (kind, m) in &rows {
+        t.row(vec![
+            format!("{} AG", kind.as_str()),
+            m.bigroots_kind.0.to_string(),
+            m.bigroots_kind.1.to_string(),
+            m.pcc_kind.0.to_string(),
+            m.pcc_kind.1.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    0
+}
+
+fn cmd_multi(args: &bigroots::util::cli::Args) -> i32 {
+    let m = experiments::table5(args.get_f64("scale", 1.0), args.get_u64("seed", 42));
+    let mut t = Table::new("Table V: multi-node anomaly schedule (Table IV)")
+        .header(&["Method", "TP", "TN", "FP", "FN", "FPR", "TPR", "ACC"])
+        .aligns(&[
+            Align::Left,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+        ]);
+    for (name, c) in [("BigRoots", m.bigroots), ("PCC", m.pcc)] {
+        t.row(vec![
+            name.to_string(),
+            c.tp.to_string(),
+            c.tn.to_string(),
+            c.fp.to_string(),
+            c.fn_.to_string(),
+            pct(c.fpr()),
+            pct(c.tpr()),
+            pct(c.acc()),
+        ]);
+    }
+    print!("{}", t.render());
+    0
+}
+
+fn cmd_hibench(args: &bigroots::util::cli::Args) -> i32 {
+    let rows = experiments::table6(args.get_f64("scale", 1.0), args.get_u64("seed", 42));
+    print!("{}", bigroots::analysis::report::render_table6(&rows));
+    0
+}
+
+fn cmd_roc(args: &bigroots::util::cli::Args) -> i32 {
+    let Some(setting) = parse_setting(&args.get_or("setting", "cpu")) else {
+        eprintln!("unknown setting");
+        return 2;
+    };
+    let r = experiments::fig8(
+        setting,
+        args.get_usize("reps", 5),
+        args.get_f64("scale", 0.6),
+        args.get_u64("seed", 42),
+    );
+    println!(
+        "{}: BigRoots AUC {} vs PCC AUC {} ({} / {} sweep points)",
+        setting.label(),
+        fnum(r.bigroots_auc, 4),
+        fnum(r.pcc_auc, 4),
+        r.bigroots_points.len(),
+        r.pcc_points.len()
+    );
+    0
+}
+
+fn cmd_run(args: &bigroots::util::cli::Args) -> i32 {
+    let path = args.get("config").unwrap();
+    let cfg = match ExperimentConfig::load(path) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("config: {e:#}");
+            return 1;
+        }
+    };
+    let Some(w) = workloads::by_name(&cfg.workload, cfg.scale) else {
+        eprintln!("unknown workload '{}'", cfg.workload);
+        return 2;
+    };
+    let plan = cfg.injection.plan(cfg.seed, cfg.sim.nodes);
+    let mut eng = Engine::new(cfg.sim.clone());
+    let trace = eng.run(&cfg.workload, w.name, &w.stages, &plan);
+    let mut pipeline = Pipeline::auto();
+    pipeline.bigroots = cfg.bigroots;
+    pipeline.pcc = Some(cfg.pcc);
+    let analysis = pipeline.analyze(&trace, w.domain);
+    println!(
+        "{}: {} stragglers / {} tasks; causes: {}",
+        cfg.workload,
+        analysis.total_stragglers(),
+        trace.tasks.len(),
+        analysis
+            .summary
+            .causes
+            .iter()
+            .map(|(k, n)| format!("{}({})", k.name(), n))
+            .collect::<Vec<_>>()
+            .join(" ")
+    );
+    // Scored confusion when the plan carries ground truth.
+    if !trace.injections.is_empty() {
+        let mut conf = bigroots::analysis::Confusion::default();
+        for (sf, a) in &analysis.per_stage {
+            let gt = bigroots::analysis::ground_truth(&trace, sf, experiments::GT_COVERAGE);
+            conf.add(bigroots::analysis::roc::score_filtered(a, &gt, &resource_features()));
+        }
+        println!(
+            "vs ground truth: TP {} FP {} TN {} FN {} (FPR {} TPR {} ACC {})",
+            conf.tp,
+            conf.fp,
+            conf.tn,
+            conf.fn_,
+            pct(conf.fpr()),
+            pct(conf.tpr()),
+            pct(conf.acc())
+        );
+    }
+    let _ = FeatureKind::COUNT;
+    0
+}

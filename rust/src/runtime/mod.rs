@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `make artifacts` (python/compile/aot.py) and executes them on the
+//! analysis hot path. Python never runs here — the artifacts are
+//! self-contained XLA programs.
+//!
+//! - [`client`] — PJRT CPU client + HLO-text loader + f32 executor
+//! - [`stats_exec`] — [`XlaBackend`]: the stage-stats artifact behind the
+//!   [`crate::analysis::StatsBackend`] trait, with padding/bucketing and
+//!   native fallback
+
+pub mod client;
+pub mod stats_exec;
+
+pub use client::{CompiledModule, PjrtRuntime};
+pub use stats_exec::{auto_backend, Manifest, XlaBackend};

@@ -1,0 +1,746 @@
+//! The discrete-event cluster engine: a fluid-flow simulation of tasks
+//! executing phases on shared node resources, with delay scheduling,
+//! background OS noise, and anomaly-generator injections.
+//!
+//! Rates are piecewise-constant: whenever any resource's user set changes
+//! (phase start/end, AG start/end, noise re-sample), affected tasks'
+//! remaining work is advanced at the old rate and their completion events
+//! are re-scheduled at the new rate (versioned events make stale
+//! completions no-ops). This is the standard processor-sharing DES
+//! construction, so contention physics — a CPU hog dilating co-located
+//! compute phases — emerges from the model rather than being scripted.
+
+use std::collections::HashMap;
+
+use super::anomaly::InjectionPlan;
+use super::event::EventQueue;
+use super::resources::{NodeResources, Res};
+use super::sampler::{sample_node, SamplerConfig};
+use super::scheduler::{Assignment, Scheduler, Topology};
+use super::task::{InputKind, StageSpec, TaskSpec};
+use crate::trace::{ClusterInfo, JobTrace, Locality, StageRecord, TaskRecord};
+use crate::util::rng::Pcg64;
+
+/// Background OS noise configuration: small random demands re-sampled
+/// periodically on every node, so baseline utilization fluctuates like the
+/// paper's real cluster instead of sitting at exactly zero.
+#[derive(Debug, Clone, Copy)]
+pub struct NoiseConfig {
+    /// Max cores of CPU noise.
+    pub cpu_max_cores: f64,
+    /// Max fraction of disk bandwidth.
+    pub disk_max_frac: f64,
+    /// Max fraction of network bandwidth.
+    pub net_max_frac: f64,
+    /// Re-sample period (s).
+    pub tick: f64,
+}
+
+impl Default for NoiseConfig {
+    fn default() -> Self {
+        NoiseConfig { cpu_max_cores: 1.2, disk_max_frac: 0.06, net_max_frac: 0.03, tick: 2.0 }
+    }
+}
+
+/// Full simulator configuration, defaulting to the paper's testbed: five
+/// slave nodes with 16 cores, 1 Gbps network, locality wait 3 s.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub nodes: usize,
+    pub cores_per_node: usize,
+    pub executors_per_node: usize,
+    /// Concurrent task slots per node (Spark: executor cores).
+    pub slots_per_node: usize,
+    /// Disk bandwidth per node (bytes/s).
+    pub disk_bw: f64,
+    /// NIC bandwidth per node (bytes/s); 1 Gbps = 125 MB/s.
+    pub net_bw: f64,
+    /// Delay-scheduling locality wait (s).
+    pub locality_wait: f64,
+    /// Max disk read/write rate of a single task (bytes/s).
+    pub task_disk_rate: f64,
+    /// Max network fetch rate of a single task (bytes/s).
+    pub task_net_rate: f64,
+    pub noise: NoiseConfig,
+    pub sampler: SamplerConfig,
+    /// Per-node CPU speed heterogeneity: each node's compute work is
+    /// dilated by 1/speed with speed ~ N(1, spread) (the paper's testbed
+    /// nodes are nominally identical but real clusters drift — Section II
+    /// lists heterogeneous hardware among straggler causes).
+    pub cpu_speed_spread: f64,
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            nodes: 5,
+            cores_per_node: 16,
+            executors_per_node: 2,
+            slots_per_node: 12,
+            disk_bw: 300e6,
+            net_bw: 125e6,
+            locality_wait: 3.0,
+            task_disk_rate: 40e6,
+            task_net_rate: 60e6,
+            noise: NoiseConfig::default(),
+            sampler: SamplerConfig::default(),
+            cpu_speed_spread: 0.06,
+            seed: 42,
+        }
+    }
+}
+
+/// One phase of a running task: which resource, how much work (core-seconds
+/// for CPU, bytes otherwise), and the task's desired rate on it.
+#[derive(Debug, Clone, Copy)]
+struct PhasePlan {
+    res: Res,
+    work: f64,
+    desired: f64,
+}
+
+#[derive(Debug)]
+struct Running {
+    spec: TaskSpec,
+    node: usize,
+    executor: usize,
+    slot: usize,
+    locality: Locality,
+    start: f64,
+    phases: Vec<PhasePlan>,
+    phase_idx: usize,
+    work_remaining: f64,
+    last_update: f64,
+    phase_start: f64,
+    /// Elapsed wall time of each completed phase.
+    phase_elapsed: Vec<f64>,
+    version: u64,
+}
+
+impl Running {
+    fn current(&self) -> Option<&PhasePlan> {
+        self.phases.get(self.phase_idx)
+    }
+
+    fn user_id(&self) -> u64 {
+        TASK_USER_BASE + self.spec.task_id
+    }
+}
+
+const TASK_USER_BASE: u64 = 2_000_000;
+const INJ_USER_BASE: u64 = 1_000_000;
+const NOISE_USER_BASE: u64 = 1_000;
+
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    PhaseDone { task: u64, version: u64 },
+    InjStart(usize),
+    InjEnd(usize),
+    NoiseTick,
+    SchedWake,
+}
+
+/// The engine. Construct with a config, then [`Engine::run`] a workload.
+pub struct Engine {
+    cfg: SimConfig,
+    rng: Pcg64,
+    /// Per-node compute speed factors (sampled once per engine).
+    node_speed: Vec<f64>,
+}
+
+impl Engine {
+    pub fn new(cfg: SimConfig) -> Self {
+        let mut rng = Pcg64::seeded(cfg.seed);
+        let node_speed = (0..cfg.nodes)
+            .map(|_| rng.normal_clamped(1.0, cfg.cpu_speed_spread, 0.75, 1.25))
+            .collect();
+        Engine { cfg, rng, node_speed }
+    }
+
+    /// Simulate `stages` sequentially under `plan`, producing a full trace.
+    /// `job_name`/`workload` label the trace.
+    pub fn run(
+        &mut self,
+        job_name: &str,
+        workload: &str,
+        stages: &[StageSpec],
+        plan: &InjectionPlan,
+    ) -> JobTrace {
+        let cfg = self.cfg.clone();
+        let mut queue: EventQueue<Ev> = EventQueue::new();
+        let mut nodes: Vec<NodeResources> = (0..cfg.nodes)
+            .map(|n| NodeResources::new(n, cfg.cores_per_node as f64, cfg.disk_bw, cfg.net_bw))
+            .collect();
+        let topo = Topology::new(cfg.nodes, cfg.slots_per_node, cfg.executors_per_node);
+        let mut scheduler = Scheduler::new(topo, cfg.locality_wait);
+        let mut running: HashMap<u64, Running> = HashMap::new();
+        let mut records: Vec<TaskRecord> = Vec::new();
+        let mut stage_records: Vec<StageRecord> = Vec::new();
+
+        // Register noise users (zero demand initially) and the first tick.
+        for n in 0..cfg.nodes {
+            for (ri, r) in [Res::Cpu, Res::Disk, Res::Net].into_iter().enumerate() {
+                nodes[n].get_mut(r).add_user(0.0, NOISE_USER_BASE + (n * 3 + ri) as u64, 0.5, 0.0);
+            }
+        }
+        queue.schedule(0.0, Ev::NoiseTick);
+
+        // Schedule injections.
+        for (i, inj) in plan.injections.iter().enumerate() {
+            queue.schedule(inj.t_start, Ev::InjStart(i));
+            queue.schedule(inj.t_end, Ev::InjEnd(i));
+        }
+
+        // Materialize and submit stage 0.
+        let mut next_task_id: u64 = 0;
+        let mut stage_cursor = 0usize;
+        let mut remaining_in_stage: usize;
+        {
+            let tasks = stages[0].materialize(
+                &mut self.rng,
+                0,
+                next_task_id,
+                cfg.nodes,
+                cfg.executors_per_node,
+            );
+            next_task_id += tasks.len() as u64;
+            remaining_in_stage = tasks.len();
+            stage_records.push(StageRecord {
+                stage_id: 0,
+                name: stages[0].name.clone(),
+                tasks: tasks.iter().map(|t| t.task_id).collect(),
+            });
+            scheduler.submit(tasks, 0.0);
+        }
+        queue.schedule(0.0, Ev::SchedWake);
+
+        let mut guard = 0u64;
+        let max_events = 200_000_000u64;
+        while let Some((now, ev)) = queue.pop() {
+            guard += 1;
+            assert!(guard < max_events, "event-budget exceeded: simulator wedged");
+            match ev {
+                Ev::NoiseTick => {
+                    for n in 0..cfg.nodes {
+                        let cpu_d = self.rng.range_f64(0.0, cfg.noise.cpu_max_cores);
+                        let disk_d = self.rng.range_f64(0.0, cfg.noise.disk_max_frac * cfg.disk_bw);
+                        let net_d = self.rng.range_f64(0.0, cfg.noise.net_max_frac * cfg.net_bw);
+                        for (ri, (r, d)) in
+                            [(Res::Cpu, cpu_d), (Res::Disk, disk_d), (Res::Net, net_d)]
+                                .into_iter()
+                                .enumerate()
+                        {
+                            let id = NOISE_USER_BASE + (n * 3 + ri) as u64;
+                            with_resource_change(
+                                &mut nodes,
+                                &mut running,
+                                &mut queue,
+                                n,
+                                r,
+                                now,
+                                |res| res.set_desired(now, id, d),
+                            );
+                        }
+                    }
+                    // Keep ticking while anything remains to simulate.
+                    if remaining_in_stage > 0
+                        || stage_cursor + 1 < stages.len()
+                        || !running.is_empty()
+                    {
+                        let jitter = self.rng.range_f64(0.8, 1.2);
+                        queue.schedule_in(cfg.noise.tick * jitter, Ev::NoiseTick);
+                    }
+                }
+                Ev::InjStart(i) => {
+                    let inj = &plan.injections[i];
+                    if inj.node >= cfg.nodes {
+                        continue;
+                    }
+                    let (r, w, d) = inj.intensity.demand(inj.kind, cfg.disk_bw, cfg.net_bw);
+                    let id = INJ_USER_BASE + i as u64;
+                    with_resource_change(&mut nodes, &mut running, &mut queue, inj.node, r, now, |res| {
+                        res.add_user(now, id, w, d)
+                    });
+                }
+                Ev::InjEnd(i) => {
+                    let inj = &plan.injections[i];
+                    if inj.node >= cfg.nodes {
+                        continue;
+                    }
+                    let (r, _, _) = inj.intensity.demand(inj.kind, cfg.disk_bw, cfg.net_bw);
+                    let id = INJ_USER_BASE + i as u64;
+                    with_resource_change(&mut nodes, &mut running, &mut queue, inj.node, r, now, |res| {
+                        res.remove_user(now, id)
+                    });
+                }
+                Ev::SchedWake => {
+                    self.dispatch(&mut scheduler, &mut nodes, &mut running, &mut queue, now);
+                }
+                Ev::PhaseDone { task, version } => {
+                    let stale = match running.get(&task) {
+                        Some(rt) => rt.version != version,
+                        None => true,
+                    };
+                    if stale {
+                        continue;
+                    }
+                    // Phase complete: advance peers, remove our user.
+                    let (node, res) = {
+                        let rt = running.get(&task).unwrap();
+                        let p = rt.current().unwrap();
+                        (rt.node, p.res)
+                    };
+                    let uid = running.get(&task).unwrap().user_id();
+                    with_resource_change(&mut nodes, &mut running, &mut queue, node, res, now, |r| {
+                        r.remove_user(now, uid)
+                    });
+                    let finished = {
+                        let rt = running.get_mut(&task).unwrap();
+                        rt.phase_elapsed.push(now - rt.phase_start);
+                        rt.phase_idx += 1;
+                        rt.current().is_none()
+                    };
+                    if finished {
+                        let rt = running.remove(&task).unwrap();
+                        scheduler.release(rt.node, rt.slot);
+                        records.push(finalize(&rt, now));
+                        remaining_in_stage -= 1;
+                        if remaining_in_stage == 0 && scheduler.pending_count() == 0 {
+                            stage_cursor += 1;
+                            if stage_cursor < stages.len() {
+                                let spec = &stages[stage_cursor];
+                                let tasks = spec.materialize(
+                                    &mut self.rng,
+                                    stage_cursor as u64,
+                                    next_task_id,
+                                    cfg.nodes,
+                                    cfg.executors_per_node,
+                                );
+                                next_task_id += tasks.len() as u64;
+                                remaining_in_stage = tasks.len();
+                                stage_records.push(StageRecord {
+                                    stage_id: stage_cursor as u64,
+                                    name: spec.name.clone(),
+                                    tasks: tasks.iter().map(|t| t.task_id).collect(),
+                                });
+                                scheduler.submit(tasks, now);
+                            }
+                        }
+                        self.dispatch(&mut scheduler, &mut nodes, &mut running, &mut queue, now);
+                    } else {
+                        // Start the next phase.
+                        start_phase(&mut nodes, &mut running, &mut queue, task, now);
+                    }
+                }
+            }
+            // Job complete?
+            if running.is_empty()
+                && scheduler.pending_count() == 0
+                && stage_cursor + 1 >= stages.len()
+                && remaining_in_stage == 0
+            {
+                break;
+            }
+        }
+
+        let makespan = records.iter().map(|t| t.finish).fold(0.0, f64::max);
+        // Sample past the makespan so edge detection has a tail window.
+        let horizon = makespan + 10.0;
+        let node_series = nodes
+            .iter()
+            .map(|n| sample_node(n, &cfg.sampler, horizon, &mut self.rng))
+            .collect();
+        records.sort_by_key(|t| t.task_id);
+
+        JobTrace {
+            job_name: job_name.to_string(),
+            workload: workload.to_string(),
+            cluster: ClusterInfo {
+                nodes: cfg.nodes,
+                cores_per_node: cfg.cores_per_node,
+                executors_per_node: cfg.executors_per_node,
+            },
+            stages: stage_records,
+            tasks: records,
+            node_series,
+            injections: plan.records(),
+        }
+    }
+
+    /// Ask the scheduler for assignments and start the dispatched tasks.
+    fn dispatch(
+        &mut self,
+        scheduler: &mut Scheduler,
+        nodes: &mut [NodeResources],
+        running: &mut HashMap<u64, Running>,
+        queue: &mut EventQueue<Ev>,
+        now: f64,
+    ) {
+        let assignments = scheduler.try_assign(now);
+        for a in assignments {
+            let rt = self.admit(a, now);
+            let id = rt.spec.task_id;
+            running.insert(id, rt);
+            start_phase(nodes, running, queue, id, now);
+        }
+        if let Some(t) = scheduler.next_locality_timeout(now) {
+            queue.schedule(t, Ev::SchedWake);
+        }
+    }
+
+    /// Build the runtime phase plan for an assignment.
+    fn admit(&mut self, a: Assignment, now: f64) -> Running {
+        let cfg = &self.cfg;
+        let spec = a.spec.clone();
+        let mut phases = Vec::with_capacity(5);
+        phases.push(PhasePlan { res: Res::Cpu, work: spec.deserialize_work, desired: 1.0 });
+        // Input phase: local HDFS reads hit the disk; degraded-locality HDFS
+        // reads and shuffle fetches cross the network. Shuffle reads pull
+        // (n-1)/n of their bytes from remote nodes; the local fraction is
+        // folded in (single-resource phases keep the fluid model simple).
+        let remote = matches!(a.locality, Locality::RackLocal | Locality::Any)
+            || spec.input_kind == InputKind::Shuffle;
+        let input_bytes = match spec.input_kind {
+            InputKind::Shuffle => {
+                spec.input_bytes * (cfg.nodes.max(2) - 1) as f64 / cfg.nodes.max(2) as f64
+            }
+            InputKind::Hdfs => spec.input_bytes,
+        };
+        if input_bytes > 0.0 {
+            if remote {
+                phases.push(PhasePlan { res: Res::Net, work: input_bytes, desired: cfg.task_net_rate });
+            } else {
+                phases.push(PhasePlan { res: Res::Disk, work: input_bytes, desired: cfg.task_disk_rate });
+            }
+        }
+        // Node heterogeneity: slower CPUs stretch compute work.
+        let speed = self.node_speed.get(a.node).copied().unwrap_or(1.0);
+        let compute = (spec.compute_work + spec.gc_work) / speed;
+        if compute > 0.0 {
+            phases.push(PhasePlan { res: Res::Cpu, work: compute, desired: 1.0 });
+        }
+        if spec.output_bytes() > 0.0 {
+            phases.push(PhasePlan {
+                res: Res::Disk,
+                work: spec.output_bytes(),
+                desired: cfg.task_disk_rate,
+            });
+        }
+        phases.push(PhasePlan { res: Res::Cpu, work: spec.serialize_work, desired: 1.0 });
+        Running {
+            spec,
+            node: a.node,
+            executor: a.executor,
+            slot: a.slot,
+            locality: a.locality,
+            start: now,
+            phases,
+            phase_idx: 0,
+            work_remaining: 0.0,
+            last_update: now,
+            phase_start: now,
+            phase_elapsed: Vec::with_capacity(5),
+            version: 0,
+        }
+    }
+}
+
+/// Register the current phase's user on its resource and schedule its
+/// completion. Must be called exactly once per phase start.
+fn start_phase(
+    nodes: &mut [NodeResources],
+    running: &mut HashMap<u64, Running>,
+    queue: &mut EventQueue<Ev>,
+    task: u64,
+    now: f64,
+) {
+    let (node, res, work, desired, uid) = {
+        let rt = running.get_mut(&task).unwrap();
+        let p = *rt.current().expect("start_phase past end");
+        rt.work_remaining = p.work;
+        rt.last_update = now;
+        rt.phase_start = now;
+        (rt.node, p.res, p.work, p.desired, rt.user_id())
+    };
+    let _ = work;
+    with_resource_change(nodes, running, queue, node, res, now, |r| {
+        r.add_user(now, uid, 1.0, desired)
+    });
+}
+
+/// The core fluid-model bookkeeping: advance all tasks currently in a phase
+/// on `(node, res)` at their *old* rates, apply the mutation (which
+/// rebalances), then re-schedule their completions at the *new* rates.
+fn with_resource_change<F: FnOnce(&mut super::resources::Resource)>(
+    nodes: &mut [NodeResources],
+    running: &mut HashMap<u64, Running>,
+    queue: &mut EventQueue<Ev>,
+    node: usize,
+    res: Res,
+    now: f64,
+    mutate: F,
+) {
+    // Collect affected tasks (current phase on this node+resource).
+    let affected: Vec<u64> = running
+        .values()
+        .filter(|rt| rt.node == node && rt.current().map(|p| p.res) == Some(res))
+        .map(|rt| rt.spec.task_id)
+        .collect();
+    // Advance at old rates.
+    {
+        let r = nodes[node].get(res);
+        for id in &affected {
+            let rt = running.get_mut(id).unwrap();
+            let rate = r.rate_of(rt.user_id());
+            rt.work_remaining = (rt.work_remaining - (now - rt.last_update) * rate).max(0.0);
+            rt.last_update = now;
+        }
+    }
+    mutate(nodes[node].get_mut(res));
+    // Re-schedule at new rates (including any task the mutation added).
+    let affected_after: Vec<u64> = running
+        .values()
+        .filter(|rt| rt.node == node && rt.current().map(|p| p.res) == Some(res))
+        .map(|rt| rt.spec.task_id)
+        .collect();
+    let r = nodes[node].get(res);
+    for id in affected_after {
+        let rt = running.get_mut(&id).unwrap();
+        let rate = r.rate_of(rt.user_id());
+        rt.version += 1;
+        if rate > 1e-12 {
+            let eta = now + rt.work_remaining / rate;
+            queue.schedule(eta, Ev::PhaseDone { task: id, version: rt.version });
+        }
+        // rate == 0: starved; a later rebalance will reschedule.
+    }
+}
+
+/// Build the final task record from runtime state.
+fn finalize(rt: &Running, finish: f64) -> TaskRecord {
+    // Map phase elapsed times back to the record's time fields. The phase
+    // list is [deser, (input)?, (compute)?, (output)?, ser].
+    let mut iter = rt.phases.iter().zip(&rt.phase_elapsed);
+    let mut deser = 0.0;
+    let mut ser = 0.0;
+    let mut compute_elapsed = 0.0;
+    let mut cpu_phases_seen = 0;
+    let total_cpu_phases =
+        rt.phases.iter().filter(|p| p.res == Res::Cpu).count();
+    for (p, &el) in iter.by_ref() {
+        match p.res {
+            Res::Cpu => {
+                cpu_phases_seen += 1;
+                if cpu_phases_seen == 1 {
+                    deser = el;
+                } else if cpu_phases_seen == total_cpu_phases {
+                    ser = el;
+                } else {
+                    compute_elapsed = el;
+                }
+            }
+            _ => {}
+        }
+    }
+    // GC wall time: the GC share of the (possibly dilated) compute phase.
+    let gc_frac = if rt.spec.compute_work + rt.spec.gc_work > 0.0 {
+        rt.spec.gc_work / (rt.spec.compute_work + rt.spec.gc_work)
+    } else {
+        0.0
+    };
+    let (bytes_read, shuffle_read) = match rt.spec.input_kind {
+        InputKind::Hdfs => (rt.spec.input_bytes, 0.0),
+        InputKind::Shuffle => (0.0, rt.spec.input_bytes),
+    };
+    TaskRecord {
+        task_id: rt.spec.task_id,
+        stage_id: rt.spec.stage_id,
+        node: rt.node,
+        executor: rt.executor,
+        start: rt.start,
+        finish,
+        locality: rt.locality,
+        bytes_read,
+        shuffle_read_bytes: shuffle_read,
+        shuffle_write_bytes: rt.spec.shuffle_write_bytes,
+        memory_bytes_spilled: rt.spec.memory_bytes_spilled,
+        disk_bytes_spilled: rt.spec.disk_bytes_spilled,
+        jvm_gc_time: compute_elapsed * gc_frac,
+        serialize_time: ser,
+        deserialize_time: deser,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::AnomalyKind;
+
+    fn small_stage(n: usize) -> StageSpec {
+        let mut s = StageSpec::base("map", n);
+        s.input_mean_bytes = 8e6;
+        s.compute_per_byte = 5e-8;
+        s.compute_base = 0.2;
+        s
+    }
+
+    #[test]
+    fn runs_to_completion_and_validates() {
+        let mut eng = Engine::new(SimConfig { seed: 1, ..Default::default() });
+        let trace = eng.run("job", "unit", &[small_stage(60)], &InjectionPlan::none());
+        assert_eq!(trace.tasks.len(), 60);
+        trace.validate().expect("trace invariants");
+        assert!(trace.makespan() > 0.0);
+        assert!(trace.node_series.iter().all(|s| !s.is_empty()));
+    }
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let run = |seed| {
+            let mut eng = Engine::new(SimConfig { seed, ..Default::default() });
+            eng.run("job", "unit", &[small_stage(40)], &InjectionPlan::none())
+        };
+        let a = run(7);
+        let b = run(7);
+        assert_eq!(a, b);
+        let c = run(8);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn two_stage_job_sequences_stages() {
+        let mut reduce = StageSpec::base("reduce", 20);
+        reduce.input_kind = InputKind::Shuffle;
+        reduce.input_mean_bytes = 4e6;
+        let mut eng = Engine::new(SimConfig { seed: 2, ..Default::default() });
+        let trace = eng.run("job", "unit", &[small_stage(40), reduce], &InjectionPlan::none());
+        assert_eq!(trace.stages.len(), 2);
+        assert_eq!(trace.tasks.len(), 60);
+        let s0_max = trace
+            .stage_tasks(0)
+            .iter()
+            .map(|t| t.finish)
+            .fold(0.0, f64::max);
+        let s1_min = trace
+            .stage_tasks(1)
+            .iter()
+            .map(|t| t.start)
+            .fold(f64::INFINITY, f64::min);
+        assert!(s1_min >= s0_max - 1e-9, "stage 1 must start after stage 0 completes");
+        // Shuffle-stage tasks populate shuffle_read_bytes, not bytes_read.
+        for t in trace.stage_tasks(1) {
+            assert_eq!(t.bytes_read, 0.0);
+            assert!(t.shuffle_read_bytes > 0.0);
+            assert_eq!(t.locality, Locality::NoPref);
+        }
+    }
+
+    #[test]
+    fn cpu_injection_slows_tasks_on_target_node() {
+        // Long CPU-heavy stage; inject a CPU AG on node 0 the whole time.
+        let mut stage = StageSpec::base("cpu", 100);
+        stage.input_mean_bytes = 1e6;
+        stage.compute_base = 2.0;
+        stage.compute_per_byte = 0.0;
+        let base_cfg = SimConfig { seed: 3, ..Default::default() };
+        let mut eng = Engine::new(base_cfg.clone());
+        let clean = eng.run("job", "unit", &[stage.clone()], &InjectionPlan::none());
+        let mut eng2 = Engine::new(base_cfg);
+        let plan = InjectionPlan {
+            injections: vec![super::super::anomaly::Injection {
+                kind: AnomalyKind::Cpu,
+                node: 0,
+                t_start: 0.0,
+                t_end: 1e4,
+                intensity: Default::default(),
+            }],
+        };
+        let hot = eng2.run("job", "unit", &[stage], &plan);
+        let mean_dur = |tr: &JobTrace, node: usize| {
+            let ds: Vec<f64> =
+                tr.tasks.iter().filter(|t| t.node == node).map(|t| t.duration()).collect();
+            crate::util::stats::mean(&ds)
+        };
+        // Node 0 tasks slow down substantially vs the clean run...
+        assert!(
+            mean_dur(&hot, 0) > 1.2 * mean_dur(&clean, 0),
+            "hot {} vs clean {}",
+            mean_dur(&hot, 0),
+            mean_dur(&clean, 0)
+        );
+        // ...and vs other nodes in the same run.
+        assert!(mean_dur(&hot, 0) > 1.15 * mean_dur(&hot, 2));
+        // CPU utilization on node 0 is elevated while the job runs (after
+        // the job drains, only the AG's 8/16 cores remain busy).
+        let busy_window = ((hot.makespan() * 0.6) as usize).max(3);
+        let hot_cpu = crate::util::stats::mean(
+            &hot.node_series[0].cpu[..busy_window.min(hot.node_series[0].cpu.len())],
+        );
+        assert!(hot_cpu > 0.75, "cpu util under AG = {hot_cpu}");
+    }
+
+    #[test]
+    fn io_injection_slows_disk_phases() {
+        let mut stage = StageSpec::base("io", 80);
+        stage.input_mean_bytes = 60e6; // disk-heavy
+        stage.compute_base = 0.1;
+        stage.compute_per_byte = 0.0;
+        let mk = |plan: &InjectionPlan| {
+            let mut eng = Engine::new(SimConfig { seed: 4, ..Default::default() });
+            eng.run("job", "unit", &[stage.clone()], plan)
+        };
+        let clean = mk(&InjectionPlan::none());
+        let plan = InjectionPlan {
+            injections: vec![super::super::anomaly::Injection {
+                kind: AnomalyKind::Io,
+                node: 1,
+                t_start: 0.0,
+                t_end: 1e4,
+                intensity: Default::default(),
+            }],
+        };
+        let hot = mk(&plan);
+        let mean_dur = |tr: &JobTrace, node: usize| {
+            let ds: Vec<f64> =
+                tr.tasks.iter().filter(|t| t.node == node).map(|t| t.duration()).collect();
+            crate::util::stats::mean(&ds)
+        };
+        assert!(mean_dur(&hot, 1) > 1.3 * mean_dur(&clean, 1));
+        let disk_util = crate::util::stats::mean(
+            &hot.node_series[1].disk[..20.min(hot.node_series[1].disk.len())],
+        );
+        assert!(disk_util > 0.9, "disk util under IO AG = {disk_util}");
+    }
+
+    #[test]
+    fn records_have_sane_fields() {
+        let mut eng = Engine::new(SimConfig { seed: 5, ..Default::default() });
+        let trace = eng.run("job", "unit", &[small_stage(50)], &InjectionPlan::none());
+        for t in &trace.tasks {
+            assert!(t.duration() > 0.0);
+            assert!(t.deserialize_time > 0.0);
+            assert!(t.serialize_time > 0.0);
+            assert!(t.jvm_gc_time >= 0.0);
+            assert!(t.jvm_gc_time < t.duration());
+            assert!(t.bytes_read > 0.0);
+            assert_eq!(t.shuffle_read_bytes, 0.0);
+            let span = t.deserialize_time + t.serialize_time + t.jvm_gc_time;
+            assert!(span <= t.duration() + 1e-6);
+        }
+    }
+
+    #[test]
+    fn makespan_increases_under_contention() {
+        // Fig. 7's premise: injected contention delays the job modestly.
+        let stage = small_stage(120);
+        let mk = |plan: &InjectionPlan| {
+            let mut eng = Engine::new(SimConfig { seed: 6, ..Default::default() });
+            eng.run("job", "unit", &[stage.clone()], plan).makespan()
+        };
+        let base = mk(&InjectionPlan::none());
+        let inj = InjectionPlan::intermittent(AnomalyKind::Io, 2, 10.0, 10.0, 1e4);
+        let hot = mk(&inj);
+        assert!(hot >= base * 0.99, "injection should not speed the job up: {hot} vs {base}");
+    }
+}

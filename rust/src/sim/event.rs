@@ -1,0 +1,156 @@
+//! Discrete-event machinery: a time-ordered event queue with deterministic
+//! tie-breaking (insertion sequence), the foundation of the fluid-flow
+//! cluster simulator in [`super::engine`].
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Heap entry: earliest time first; FIFO among equal times.
+struct Entry<E> {
+    time: f64,
+    seq: u64,
+    payload: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// A deterministic discrete-event queue.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    seq: u64,
+    now: f64,
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), seq: 0, now: 0.0 }
+    }
+
+    /// Current simulation time (the time of the last popped event).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Schedule `payload` at absolute time `time`. Scheduling in the past
+    /// clamps to `now` (fluid-model rate changes can produce tiny negative
+    /// deltas from floating-point error).
+    pub fn schedule(&mut self, time: f64, payload: E) {
+        let time = if time < self.now { self.now } else { time };
+        self.seq += 1;
+        self.heap.push(Entry { time, seq: self.seq, payload });
+    }
+
+    /// Schedule at `now + delay`.
+    pub fn schedule_in(&mut self, delay: f64, payload: E) {
+        self.schedule(self.now + delay.max(0.0), payload);
+    }
+
+    /// Pop the next event, advancing `now`.
+    pub fn pop(&mut self) -> Option<(f64, E)> {
+        self.heap.pop().map(|e| {
+            debug_assert!(e.time >= self.now - 1e-9);
+            self.now = self.now.max(e.time);
+            (self.now, e.payload)
+        })
+    }
+
+    /// Time of the next event without popping.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule(3.0, "c");
+        q.schedule(1.0, "a");
+        q.schedule(2.0, "b");
+        assert_eq!(q.pop().unwrap(), (1.0, "a"));
+        assert_eq!(q.pop().unwrap(), (2.0, "b"));
+        assert_eq!(q.pop().unwrap(), (3.0, "c"));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn fifo_among_ties() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, 1);
+        q.schedule(1.0, 2);
+        q.schedule(1.0, 3);
+        assert_eq!(q.pop().unwrap().1, 1);
+        assert_eq!(q.pop().unwrap().1, 2);
+        assert_eq!(q.pop().unwrap().1, 3);
+    }
+
+    #[test]
+    fn now_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.schedule(5.0, ());
+        q.schedule(2.0, ());
+        let (t1, _) = q.pop().unwrap();
+        let (t2, _) = q.pop().unwrap();
+        assert!(t1 <= t2);
+        assert_eq!(q.now(), 5.0);
+    }
+
+    #[test]
+    fn past_scheduling_clamps_to_now() {
+        let mut q = EventQueue::new();
+        q.schedule(10.0, "late");
+        q.pop();
+        q.schedule(1.0, "past"); // clamped to now=10
+        let (t, p) = q.pop().unwrap();
+        assert_eq!(t, 10.0);
+        assert_eq!(p, "past");
+    }
+
+    #[test]
+    fn schedule_in_uses_now() {
+        let mut q = EventQueue::new();
+        q.schedule(4.0, "first");
+        q.pop();
+        q.schedule_in(1.5, "second");
+        assert_eq!(q.pop().unwrap(), (5.5, "second"));
+    }
+}

@@ -1,0 +1,25 @@
+//! The cluster simulator substrate — the substitution for the paper's
+//! 6-node Spark testbed (see DESIGN.md §2).
+//!
+//! - [`event`] — deterministic discrete-event queue
+//! - [`resources`] — weighted max-min fair shared-resource model per node
+//! - [`task`] — task/stage specifications, skew distributions, GC profiles
+//! - [`scheduler`] — Spark-style delay scheduling with locality degradation
+//! - [`anomaly`] — CPU / I/O / network anomaly generators + schedules
+//! - [`sampler`] — 1 Hz mpstat/iostat/sar equivalents (+ Table VII overhead)
+//! - [`workloads`] — the 11 HiBench workload models of Table VI
+//! - [`engine`] — the fluid-flow simulation loop producing [`crate::trace::JobTrace`]s
+
+pub mod anomaly;
+pub mod engine;
+pub mod event;
+pub mod resources;
+pub mod sampler;
+pub mod scheduler;
+pub mod task;
+pub mod workloads;
+
+pub use anomaly::{AgIntensity, Injection, InjectionPlan};
+pub use engine::{Engine, NoiseConfig, SimConfig};
+pub use task::{GcProfile, InputKind, SizeDist, StageSpec, TaskSpec};
+pub use workloads::Workload;

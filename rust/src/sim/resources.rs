@@ -1,0 +1,340 @@
+//! Per-node shared-resource model with weighted max-min fair sharing.
+//!
+//! Each node owns three resources — CPU (capacity = cores), disk (bytes/s)
+//! and network (bytes/s). Active *users* (task phases, anomaly-generator hog
+//! processes, OS background noise) register a weight and a desired rate;
+//! the model computes each user's granted rate by weighted max-min fairness
+//! and the node's resulting utilization. Rates are piecewise-constant
+//! between simulator events; the utilization timeline is recorded on every
+//! change and later integrated into 1 Hz samples by [`super::sampler`].
+//!
+//! This is the substitution for the paper's real Xeon cluster: co-located
+//! load slows tasks through *exactly* the shared-capacity mechanism that
+//! makes the paper's hog processes create stragglers.
+
+use crate::trace::AnomalyKind;
+
+/// Resource dimension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Res {
+    Cpu,
+    Disk,
+    Net,
+}
+
+impl Res {
+    pub fn from_anomaly(kind: AnomalyKind) -> Res {
+        match kind {
+            AnomalyKind::Cpu => Res::Cpu,
+            AnomalyKind::Io => Res::Disk,
+            AnomalyKind::Network => Res::Net,
+        }
+    }
+}
+
+/// A registered consumer of one resource on one node.
+#[derive(Debug, Clone)]
+struct User {
+    id: u64,
+    weight: f64,
+    /// Max rate this user can consume (cores for CPU, bytes/s otherwise).
+    desired: f64,
+    /// Granted rate after the last rebalance.
+    rate: f64,
+}
+
+/// One (time, utilization) change-point; utilization holds until the next.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UtilPoint {
+    pub time: f64,
+    /// CPU/disk: fraction of capacity in [0,1]. Net: absolute bytes/s.
+    pub value: f64,
+}
+
+/// One resource on one node.
+#[derive(Debug, Clone)]
+pub struct Resource {
+    pub kind: Res,
+    pub capacity: f64,
+    users: Vec<User>,
+    /// Recorded piecewise-constant utilization timeline.
+    pub timeline: Vec<UtilPoint>,
+}
+
+impl Resource {
+    pub fn new(kind: Res, capacity: f64) -> Self {
+        assert!(capacity > 0.0);
+        Resource { kind, capacity, users: Vec::new(), timeline: vec![UtilPoint { time: 0.0, value: 0.0 }] }
+    }
+
+    /// Register a user; returns nothing — caller tracks ids. Rebalances.
+    pub fn add_user(&mut self, now: f64, id: u64, weight: f64, desired: f64) {
+        debug_assert!(weight > 0.0 && desired >= 0.0);
+        self.users.push(User { id, weight, desired, rate: 0.0 });
+        self.rebalance(now);
+    }
+
+    /// Remove a user by id (no-op if absent). Rebalances.
+    pub fn remove_user(&mut self, now: f64, id: u64) {
+        self.users.retain(|u| u.id != id);
+        self.rebalance(now);
+    }
+
+    /// Change a user's desired rate (e.g. noise fluctuation). Rebalances.
+    pub fn set_desired(&mut self, now: f64, id: u64, desired: f64) {
+        if let Some(u) = self.users.iter_mut().find(|u| u.id == id) {
+            u.desired = desired;
+            self.rebalance(now);
+        }
+    }
+
+    /// Granted rate for a user (0.0 if unknown).
+    pub fn rate_of(&self, id: u64) -> f64 {
+        self.users.iter().find(|u| u.id == id).map(|u| u.rate).unwrap_or(0.0)
+    }
+
+    /// Current total granted rate.
+    pub fn total_rate(&self) -> f64 {
+        self.users.iter().map(|u| u.rate).sum()
+    }
+
+    /// Current utilization: fraction of capacity for CPU/disk, absolute
+    /// bytes/s for network (Eq. 3 uses absolute traffic).
+    pub fn utilization(&self) -> f64 {
+        match self.kind {
+            Res::Net => self.total_rate(),
+            _ => (self.total_rate() / self.capacity).min(1.0),
+        }
+    }
+
+    /// Weighted max-min fair allocation:
+    /// repeatedly give each unfrozen user `capacity_left * w_i / W_unfrozen`,
+    /// freezing users whose desired rate is below their share.
+    fn rebalance(&mut self, now: f64) {
+        let n = self.users.len();
+        let mut frozen = vec![false; n];
+        let mut rates = vec![0.0f64; n];
+        let mut cap_left = self.capacity;
+        loop {
+            let active: Vec<usize> = (0..n).filter(|&i| !frozen[i]).collect();
+            if active.is_empty() || cap_left <= 1e-12 {
+                break;
+            }
+            let w_total: f64 = active.iter().map(|&i| self.users[i].weight).sum();
+            let mut any_frozen = false;
+            for &i in &active {
+                let share = cap_left * self.users[i].weight / w_total;
+                if self.users[i].desired <= share + 1e-12 {
+                    rates[i] = self.users[i].desired;
+                    frozen[i] = true;
+                    any_frozen = true;
+                }
+            }
+            if !any_frozen {
+                // All remaining users are bottlenecked: give exact shares.
+                for &i in &active {
+                    rates[i] = cap_left * self.users[i].weight / w_total;
+                    frozen[i] = true;
+                }
+                break;
+            }
+            cap_left = self.capacity - rates.iter().sum::<f64>();
+        }
+        for (i, u) in self.users.iter_mut().enumerate() {
+            u.rate = rates[i];
+        }
+        self.record(now);
+    }
+
+    fn record(&mut self, now: f64) {
+        let v = self.utilization();
+        match self.timeline.last_mut() {
+            Some(last) if (last.time - now).abs() < 1e-12 => last.value = v,
+            Some(last) if (last.value - v).abs() < 1e-15 => {} // no change
+            _ => self.timeline.push(UtilPoint { time: now, value: v }),
+        }
+    }
+
+    /// Integrate the piecewise-constant timeline into fixed-period buckets
+    /// covering [0, horizon). Bucket k = mean value over [k·p, (k+1)·p).
+    pub fn bucketize(&self, period: f64, horizon: f64) -> Vec<f64> {
+        let n = (horizon / period).ceil().max(0.0) as usize;
+        let mut out = vec![0.0f64; n];
+        if n == 0 {
+            return out;
+        }
+        // Walk segments [t_i, t_{i+1}) with value v_i.
+        for (i, pt) in self.timeline.iter().enumerate() {
+            let seg_start = pt.time;
+            let seg_end = self
+                .timeline
+                .get(i + 1)
+                .map(|p| p.time)
+                .unwrap_or(horizon)
+                .min(horizon);
+            if seg_end <= seg_start {
+                continue;
+            }
+            let first = (seg_start / period).floor() as usize;
+            let last = ((seg_end / period).ceil() as usize).min(n);
+            for b in first..last {
+                let b0 = b as f64 * period;
+                let b1 = b0 + period;
+                let overlap = (seg_end.min(b1) - seg_start.max(b0)).max(0.0);
+                out[b] += pt.value * overlap / period;
+            }
+        }
+        out
+    }
+}
+
+/// All three resources of one node.
+#[derive(Debug, Clone)]
+pub struct NodeResources {
+    pub node: usize,
+    pub cpu: Resource,
+    pub disk: Resource,
+    pub net: Resource,
+}
+
+impl NodeResources {
+    pub fn new(node: usize, cores: f64, disk_bw: f64, net_bw: f64) -> Self {
+        NodeResources {
+            node,
+            cpu: Resource::new(Res::Cpu, cores),
+            disk: Resource::new(Res::Disk, disk_bw),
+            net: Resource::new(Res::Net, net_bw),
+        }
+    }
+
+    pub fn get(&self, r: Res) -> &Resource {
+        match r {
+            Res::Cpu => &self.cpu,
+            Res::Disk => &self.disk,
+            Res::Net => &self.net,
+        }
+    }
+
+    pub fn get_mut(&mut self, r: Res) -> &mut Resource {
+        match r {
+            Res::Cpu => &mut self.cpu,
+            Res::Disk => &mut self.disk,
+            Res::Net => &mut self.net,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_user_gets_desired_when_undersubscribed() {
+        let mut r = Resource::new(Res::Disk, 100.0);
+        r.add_user(0.0, 1, 1.0, 30.0);
+        assert!((r.rate_of(1) - 30.0).abs() < 1e-9);
+        assert!((r.utilization() - 0.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn equal_weights_split_when_saturated() {
+        let mut r = Resource::new(Res::Disk, 100.0);
+        r.add_user(0.0, 1, 1.0, 100.0);
+        r.add_user(0.0, 2, 1.0, 100.0);
+        assert!((r.rate_of(1) - 50.0).abs() < 1e-9);
+        assert!((r.rate_of(2) - 50.0).abs() < 1e-9);
+        assert!((r.utilization() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weighted_shares() {
+        let mut r = Resource::new(Res::Disk, 90.0);
+        r.add_user(0.0, 1, 1.0, 1000.0);
+        r.add_user(0.0, 2, 2.0, 1000.0);
+        assert!((r.rate_of(1) - 30.0).abs() < 1e-9);
+        assert!((r.rate_of(2) - 60.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn maxmin_redistributes_slack() {
+        // User 1 wants only 10 of 100; user 2 gets the remaining 90.
+        let mut r = Resource::new(Res::Disk, 100.0);
+        r.add_user(0.0, 1, 1.0, 10.0);
+        r.add_user(0.0, 2, 1.0, 1000.0);
+        assert!((r.rate_of(1) - 10.0).abs() < 1e-9);
+        assert!((r.rate_of(2) - 90.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn remove_user_rebalances() {
+        let mut r = Resource::new(Res::Cpu, 16.0);
+        r.add_user(0.0, 1, 1.0, 16.0);
+        r.add_user(1.0, 2, 1.0, 16.0);
+        assert!((r.rate_of(1) - 8.0).abs() < 1e-9);
+        r.remove_user(2.0, 2);
+        assert!((r.rate_of(1) - 16.0).abs() < 1e-9);
+        assert_eq!(r.rate_of(2), 0.0);
+    }
+
+    #[test]
+    fn net_utilization_is_absolute() {
+        let mut r = Resource::new(Res::Net, 125e6);
+        r.add_user(0.0, 1, 1.0, 10e6);
+        assert!((r.utilization() - 10e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn timeline_records_changes() {
+        let mut r = Resource::new(Res::Cpu, 4.0);
+        r.add_user(1.0, 1, 1.0, 2.0); // util 0.5 at t=1
+        r.add_user(3.0, 2, 1.0, 2.0); // util 1.0 at t=3
+        r.remove_user(5.0, 1); // util 0.5 at t=5
+        let tl = &r.timeline;
+        assert_eq!(tl[0], UtilPoint { time: 0.0, value: 0.0 });
+        assert!(tl.contains(&UtilPoint { time: 1.0, value: 0.5 }));
+        assert!(tl.contains(&UtilPoint { time: 3.0, value: 1.0 }));
+        assert!(tl.contains(&UtilPoint { time: 5.0, value: 0.5 }));
+    }
+
+    #[test]
+    fn bucketize_integrates_exactly() {
+        let mut r = Resource::new(Res::Cpu, 1.0);
+        // util: 0.0 on [0,1), 1.0 on [1,2), 0.5 on [2,4)
+        r.add_user(1.0, 1, 1.0, 1.0);
+        r.set_desired(2.0, 1, 0.5);
+        let buckets = r.bucketize(1.0, 4.0);
+        assert_eq!(buckets.len(), 4);
+        assert!((buckets[0] - 0.0).abs() < 1e-9);
+        assert!((buckets[1] - 1.0).abs() < 1e-9);
+        assert!((buckets[2] - 0.5).abs() < 1e-9);
+        assert!((buckets[3] - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bucketize_partial_segment() {
+        let mut r = Resource::new(Res::Cpu, 1.0);
+        r.add_user(0.5, 1, 1.0, 1.0); // util 1.0 from t=0.5
+        let buckets = r.bucketize(1.0, 2.0);
+        assert!((buckets[0] - 0.5).abs() < 1e-9); // half the bucket at 1.0
+        assert!((buckets[1] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ag_hog_starves_task_share() {
+        // A task wanting 1 core competes with an 8-process CPU AG on a
+        // 16-core node that is also running 15 other tasks: demand 24 > 16.
+        let mut r = Resource::new(Res::Cpu, 16.0);
+        for i in 0..16 {
+            r.add_user(0.0, i, 1.0, 1.0);
+        }
+        // All fit exactly: each gets 1.0.
+        assert!((r.rate_of(0) - 1.0).abs() < 1e-9);
+        // AG arrives: 8 more single-core hogs.
+        for i in 100..108 {
+            r.add_user(1.0, i, 1.0, 1.0);
+        }
+        let rate = r.rate_of(0);
+        assert!(rate < 1.0 - 1e-9, "task should be slowed, rate={rate}");
+        assert!((r.utilization() - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,322 @@
+//! Locality-aware task scheduler — Spark's *delay scheduling*.
+//!
+//! Each node exposes one slot per core. HDFS-input tasks prefer the node
+//! holding their block: a free slot first serves tasks that are local to it
+//! (PROCESS_LOCAL if the executor matches, NODE_LOCAL otherwise). A pending
+//! task that has waited longer than `locality_wait` (Spark's
+//! `spark.locality.wait`, 3 s by default) degrades to RACK_LOCAL / ANY and
+//! accepts any slot. Shuffle-input tasks are NOPREF and schedule anywhere
+//! immediately — reducers read from all map outputs, so placement is moot.
+//!
+//! This reproduces the locality feature of Eq. 4 / Table I: stragglers that
+//! degrade to remote reads show `F_locality = 2` while their peers read
+//! locally, which is exactly the signal Eq. 7 votes on.
+
+use super::task::{InputKind, TaskSpec};
+use crate::trace::Locality;
+
+/// A task waiting for a slot.
+#[derive(Debug, Clone)]
+struct Pending {
+    spec: TaskSpec,
+    enqueued_at: f64,
+}
+
+/// A dispatch decision.
+#[derive(Debug, Clone)]
+pub struct Assignment {
+    pub spec: TaskSpec,
+    pub node: usize,
+    pub executor: usize,
+    pub slot: usize,
+    pub locality: Locality,
+}
+
+/// Cluster topology the scheduler needs.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub nodes: usize,
+    pub slots_per_node: usize,
+    pub executors_per_node: usize,
+    /// Node → rack id.
+    pub racks: Vec<usize>,
+}
+
+impl Topology {
+    /// Default: 4 nodes per rack.
+    pub fn new(nodes: usize, slots_per_node: usize, executors_per_node: usize) -> Self {
+        Topology {
+            nodes,
+            slots_per_node,
+            executors_per_node,
+            racks: (0..nodes).map(|n| n / 4).collect(),
+        }
+    }
+
+    fn executor_of_slot(&self, slot: usize) -> usize {
+        if self.slots_per_node == 0 {
+            return 0;
+        }
+        slot * self.executors_per_node / self.slots_per_node
+    }
+}
+
+/// The delay scheduler.
+pub struct Scheduler {
+    topo: Topology,
+    locality_wait: f64,
+    pending: Vec<Pending>,
+    /// `slots[node][slot]` = running task id or None.
+    slots: Vec<Vec<Option<u64>>>,
+}
+
+impl Scheduler {
+    pub fn new(topo: Topology, locality_wait: f64) -> Self {
+        let slots = (0..topo.nodes).map(|_| vec![None; topo.slots_per_node]).collect();
+        Scheduler { topo, locality_wait, pending: Vec::new(), slots }
+    }
+
+    /// Queue a stage's tasks.
+    pub fn submit(&mut self, tasks: Vec<TaskSpec>, now: f64) {
+        for spec in tasks {
+            self.pending.push(Pending { spec, enqueued_at: now });
+        }
+    }
+
+    pub fn pending_count(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn running_count(&self) -> usize {
+        self.slots.iter().flatten().filter(|s| s.is_some()).count()
+    }
+
+    /// Free the slot a task occupied.
+    pub fn release(&mut self, node: usize, slot: usize) {
+        debug_assert!(self.slots[node][slot].is_some());
+        self.slots[node][slot] = None;
+    }
+
+    /// Earliest future time a pending task's locality wait expires (the
+    /// engine schedules a wake-up then); None if no HDFS task is waiting.
+    pub fn next_locality_timeout(&self, now: f64) -> Option<f64> {
+        self.pending
+            .iter()
+            .filter(|p| p.spec.input_kind == InputKind::Hdfs)
+            .map(|p| p.enqueued_at + self.locality_wait)
+            .filter(|&t| t > now)
+            .fold(None, |acc: Option<f64>, t| Some(acc.map_or(t, |a| a.min(t))))
+    }
+
+    /// Fill free slots according to delay scheduling; returns dispatches.
+    pub fn try_assign(&mut self, now: f64) -> Vec<Assignment> {
+        let mut out = Vec::new();
+        // Iterate free slots in (node, slot) order for determinism.
+        for node in 0..self.topo.nodes {
+            for slot in 0..self.topo.slots_per_node {
+                if self.slots[node][slot].is_some() {
+                    continue;
+                }
+                if let Some((idx, locality)) = self.pick_for(node, slot, now) {
+                    let p = self.pending.remove(idx);
+                    self.slots[node][slot] = Some(p.spec.task_id);
+                    out.push(Assignment {
+                        executor: self.topo.executor_of_slot(slot),
+                        spec: p.spec,
+                        node,
+                        slot,
+                        locality,
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    /// Choose a pending task for a free slot on `node`, returning its index
+    /// in the pending list plus the locality level it would run at.
+    fn pick_for(&self, node: usize, slot: usize, now: f64) -> Option<(usize, Locality)> {
+        let executor = self.topo.executor_of_slot(slot);
+        // Tier 0: NOPREF (shuffle) tasks run anywhere, first-come.
+        // Tier 1: node-local HDFS tasks (process-local if executor matches).
+        // Tier 2: HDFS tasks whose locality wait expired → rack / any.
+        let mut nopref: Option<usize> = None;
+        let mut process_local: Option<usize> = None;
+        let mut node_local: Option<usize> = None;
+        let mut expired: Option<usize> = None;
+        for (i, p) in self.pending.iter().enumerate() {
+            match p.spec.input_kind {
+                InputKind::Shuffle => {
+                    if nopref.is_none() {
+                        nopref = Some(i);
+                    }
+                }
+                InputKind::Hdfs => {
+                    if p.spec.preferred_node == node {
+                        if p.spec.preferred_executor == executor {
+                            if process_local.is_none() {
+                                process_local = Some(i);
+                            }
+                        } else if node_local.is_none() {
+                            node_local = Some(i);
+                        }
+                    } else if now - p.enqueued_at >= self.locality_wait && expired.is_none() {
+                        expired = Some(i);
+                    }
+                }
+            }
+        }
+        if let Some(i) = process_local {
+            return Some((i, Locality::ProcessLocal));
+        }
+        if let Some(i) = node_local {
+            return Some((i, Locality::NodeLocal));
+        }
+        if let Some(i) = nopref {
+            return Some((i, Locality::NoPref));
+        }
+        if let Some(i) = expired {
+            let pref = self.pending[i].spec.preferred_node;
+            let loc = if self.topo.racks.get(pref) == self.topo.racks.get(node) {
+                Locality::RackLocal
+            } else {
+                Locality::Any
+            };
+            return Some((i, loc));
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::task::StageSpec;
+    use crate::util::rng::Pcg64;
+
+    fn specs(n: usize, input: InputKind, nodes: usize) -> Vec<TaskSpec> {
+        let mut rng = Pcg64::seeded(1);
+        let mut s = StageSpec::base("s", n);
+        s.input_kind = input;
+        s.materialize(&mut rng, 0, 0, nodes, 2)
+    }
+
+    fn sched(nodes: usize, slots: usize) -> Scheduler {
+        Scheduler::new(Topology::new(nodes, slots, 2), 3.0)
+    }
+
+    #[test]
+    fn local_tasks_get_node_or_process_locality() {
+        let mut s = sched(4, 2);
+        s.submit(specs(8, InputKind::Hdfs, 4), 0.0);
+        let assigns = s.try_assign(0.0);
+        assert_eq!(assigns.len(), 8); // 4 nodes × 2 slots
+        for a in &assigns {
+            assert_eq!(a.spec.preferred_node, a.node, "before timeout only local dispatch");
+            assert!(matches!(a.locality, Locality::ProcessLocal | Locality::NodeLocal));
+        }
+    }
+
+    #[test]
+    fn nonlocal_waits_until_timeout_then_degrades() {
+        let mut s = sched(2, 1);
+        // All tasks prefer node 0; node 1's slot must wait for the timeout.
+        let mut tasks = specs(2, InputKind::Hdfs, 2);
+        for t in &mut tasks {
+            t.preferred_node = 0;
+        }
+        s.submit(tasks, 0.0);
+        let assigns = s.try_assign(0.0);
+        // Only node 0 slot fills.
+        assert_eq!(assigns.len(), 1);
+        assert_eq!(assigns[0].node, 0);
+        assert_eq!(s.pending_count(), 1);
+        // Before timeout: still waiting.
+        assert_eq!(s.try_assign(2.9).len(), 0);
+        // After timeout: dispatched remotely with degraded locality.
+        let late = s.try_assign(3.1);
+        assert_eq!(late.len(), 1);
+        assert_eq!(late[0].node, 1);
+        assert!(matches!(late[0].locality, Locality::RackLocal | Locality::Any));
+    }
+
+    #[test]
+    fn rack_vs_any_locality() {
+        // 8 nodes → racks {0..3}=0, {4..7}=1.
+        let mut s = Scheduler::new(Topology::new(8, 1, 1), 0.0); // no wait
+        let mut tasks = specs(2, InputKind::Hdfs, 8);
+        tasks[0].preferred_node = 0;
+        tasks[1].preferred_node = 0;
+        s.submit(tasks, 0.0);
+        let assigns = s.try_assign(10.0);
+        let on_rack = assigns.iter().find(|a| a.node == 1).unwrap();
+        assert_eq!(on_rack.locality, Locality::RackLocal);
+        let off_rack = assigns.iter().find(|a| a.node >= 4);
+        if let Some(a) = off_rack {
+            assert_eq!(a.locality, Locality::Any);
+        }
+    }
+
+    #[test]
+    fn shuffle_tasks_are_nopref_and_immediate() {
+        let mut s = sched(2, 2);
+        s.submit(specs(4, InputKind::Shuffle, 2), 0.0);
+        let assigns = s.try_assign(0.0);
+        assert_eq!(assigns.len(), 4);
+        assert!(assigns.iter().all(|a| a.locality == Locality::NoPref));
+    }
+
+    #[test]
+    fn release_frees_slot_for_next_task() {
+        let mut s = sched(1, 1);
+        s.submit(specs(2, InputKind::Shuffle, 1), 0.0);
+        let a1 = s.try_assign(0.0);
+        assert_eq!(a1.len(), 1);
+        assert_eq!(s.try_assign(1.0).len(), 0); // slot busy
+        s.release(a1[0].node, a1[0].slot);
+        assert_eq!(s.try_assign(2.0).len(), 1);
+        assert_eq!(s.pending_count(), 0);
+        assert_eq!(s.running_count(), 1);
+    }
+
+    #[test]
+    fn next_locality_timeout_tracks_earliest_hdfs_task() {
+        let mut s = sched(2, 1);
+        let mut tasks = specs(2, InputKind::Hdfs, 2);
+        for t in &mut tasks {
+            t.preferred_node = 0;
+        }
+        s.submit(tasks, 1.0);
+        // One gets the node-0 slot; the other waits.
+        s.try_assign(1.0);
+        assert_eq!(s.next_locality_timeout(1.0), Some(4.0));
+        assert_eq!(s.next_locality_timeout(5.0), None);
+        // NOPREF tasks don't produce timeouts.
+        let mut s2 = sched(1, 1);
+        s2.submit(specs(3, InputKind::Shuffle, 1), 0.0);
+        s2.try_assign(0.0);
+        assert_eq!(s2.next_locality_timeout(0.0), None);
+    }
+
+    #[test]
+    fn all_tasks_eventually_dispatched() {
+        let mut s = sched(3, 2);
+        s.submit(specs(40, InputKind::Hdfs, 3), 0.0);
+        let mut done = 0;
+        let mut t = 0.0;
+        let mut running: Vec<(usize, usize)> = Vec::new();
+        while done < 40 {
+            for a in s.try_assign(t) {
+                running.push((a.node, a.slot));
+            }
+            // Finish everything running, advance past locality timeout.
+            for (n, sl) in running.drain(..) {
+                s.release(n, sl);
+                done += 1;
+            }
+            t += 4.0;
+            assert!(t < 400.0, "scheduler wedged");
+        }
+        assert_eq!(s.pending_count(), 0);
+    }
+}

@@ -1,0 +1,313 @@
+//! Task specifications and the phase model.
+//!
+//! A simulated task executes a sequence of *phases*, each drawing on one
+//! node resource, mirroring the lifecycle Spark reports metrics for:
+//!
+//! 1. **Deserialize** (CPU) — executor deserialization time
+//! 2. **Input** (disk if local, network if remote) — `bytes_read` or
+//!    `shuffle_read_bytes`
+//! 3. **Compute** (CPU) — the task function, extended by JVM GC pauses
+//! 4. **Output** (disk) — shuffle write + spills
+//! 5. **Serialize** (CPU) — result serialization
+//!
+//! Phase *work* is expressed in resource units (core-seconds for CPU,
+//! bytes for disk/net); elapsed time emerges from the granted rate under
+//! contention ([`super::resources`]). Data skew enters through per-task
+//! size distributions ([`SizeDist`]); GC tails through [`GcProfile`].
+
+use crate::util::rng::Pcg64;
+
+/// Per-task size multiplier distribution — the data-skew knob.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SizeDist {
+    /// Uniform multiplier in [lo, hi] around the mean.
+    Uniform { lo: f64, hi: f64 },
+    /// Log-normal multiplier: exp(N(0, sigma)), normalized to mean 1.
+    LogNormal { sigma: f64 },
+    /// Zipf partition skew: task k of n gets a share ∝ (rank+1)^-s,
+    /// normalized so the mean multiplier is 1. Rank is assigned by hashing
+    /// the task index, so skewed partitions land on arbitrary nodes.
+    Zipf { s: f64 },
+}
+
+impl SizeDist {
+    /// Draw the size multiplier for task `index` of `n` in a stage.
+    pub fn sample(&self, rng: &mut Pcg64, index: usize, n: usize) -> f64 {
+        match *self {
+            SizeDist::Uniform { lo, hi } => rng.range_f64(lo, hi),
+            SizeDist::LogNormal { sigma } => {
+                // E[exp(N(0, σ))] = exp(σ²/2); divide to normalize mean to 1.
+                rng.lognormal(0.0, sigma) / (sigma * sigma / 2.0).exp()
+            }
+            SizeDist::Zipf { s } => {
+                let n = n.max(1);
+                // Normalization: sum of (k+1)^-s over ranks.
+                let h: f64 = (0..n).map(|k| 1.0 / ((k + 1) as f64).powf(s)).sum();
+                // Deterministic rank *permutation*: rank of task i is the
+                // position of mix(i) among {mix(0), ..., mix(n-1)}. SplitMix64
+                // is a bijection, so distinct indices give distinct keys and
+                // the ranks form an exact permutation (mean multiplier is
+                // exactly 1). O(n) per task is negligible at stage sizes.
+                let key = mix(index as u64);
+                let rank = (0..n).filter(|&j| mix(j as u64) < key).count();
+                let share = 1.0 / ((rank + 1) as f64).powf(s) / h;
+                share * n as f64 // mean multiplier 1
+            }
+        }
+    }
+}
+
+/// SplitMix64 hash — gives a deterministic pseudo-permutation of ranks.
+fn mix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e3779b97f4a7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d049bb133111eb);
+    x ^ (x >> 31)
+}
+
+/// JVM garbage-collection profile: every task pays `base_frac` of its
+/// compute work in GC; with probability `tail_prob` it takes a pathological
+/// pause of `tail_frac` of compute work (heap pressure, full GC).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GcProfile {
+    pub base_frac: f64,
+    pub tail_prob: f64,
+    pub tail_frac: f64,
+}
+
+impl GcProfile {
+    pub const LIGHT: GcProfile = GcProfile { base_frac: 0.02, tail_prob: 0.005, tail_frac: 0.5 };
+    pub const HEAVY: GcProfile = GcProfile { base_frac: 0.06, tail_prob: 0.03, tail_frac: 1.0 };
+
+    pub fn sample(&self, rng: &mut Pcg64, compute_work: f64) -> f64 {
+        let mut gc = compute_work * self.base_frac * rng.range_f64(0.5, 1.5);
+        if rng.chance(self.tail_prob) {
+            gc += compute_work * self.tail_frac * rng.range_f64(0.5, 1.5);
+        }
+        gc
+    }
+}
+
+/// Where a stage's input comes from — determines both the feature column
+/// that carries the skew and the locality behaviour.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum InputKind {
+    /// Read from distributed storage: tasks have a preferred node (the block
+    /// location); `bytes_read` is populated.
+    Hdfs,
+    /// Read shuffled output of the previous stage: `shuffle_read_bytes` is
+    /// populated; most bytes cross the network regardless of placement.
+    Shuffle,
+}
+
+/// Fully materialized specification of one task, ready for the engine.
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    pub task_id: u64,
+    pub stage_id: u64,
+    /// Node index holding this task's input data (HDFS block / map outputs).
+    pub preferred_node: usize,
+    pub preferred_executor: usize,
+    pub input_kind: InputKind,
+    /// Input bytes (goes to `bytes_read` or `shuffle_read_bytes`).
+    pub input_bytes: f64,
+    /// Single-core compute work in core-seconds, *excluding* GC.
+    pub compute_work: f64,
+    /// GC core-seconds added to the compute phase.
+    pub gc_work: f64,
+    pub shuffle_write_bytes: f64,
+    pub memory_bytes_spilled: f64,
+    pub disk_bytes_spilled: f64,
+    pub serialize_work: f64,
+    pub deserialize_work: f64,
+}
+
+impl TaskSpec {
+    /// Disk bytes written during the output phase.
+    pub fn output_bytes(&self) -> f64 {
+        self.shuffle_write_bytes + self.disk_bytes_spilled
+    }
+}
+
+/// Specification of one stage of a workload.
+#[derive(Debug, Clone)]
+pub struct StageSpec {
+    pub name: String,
+    pub num_tasks: usize,
+    pub input_kind: InputKind,
+    /// Mean input bytes per task.
+    pub input_mean_bytes: f64,
+    pub input_dist: SizeDist,
+    /// Compute seconds per input byte (CPU intensity).
+    pub compute_per_byte: f64,
+    /// Fixed compute seconds independent of input size.
+    pub compute_base: f64,
+    pub compute_dist: SizeDist,
+    pub gc: GcProfile,
+    /// Mean shuffle-write bytes per task (0 for final stages).
+    pub shuffle_write_mean: f64,
+    pub shuffle_write_dist: SizeDist,
+    /// Probability a task spills (memory pressure); spills add disk writes
+    /// and memory-spill bytes proportional to input.
+    pub spill_prob: f64,
+}
+
+impl StageSpec {
+    /// A neutral stage used as the base for workload definitions.
+    pub fn base(name: &str, num_tasks: usize) -> StageSpec {
+        StageSpec {
+            name: name.to_string(),
+            num_tasks,
+            input_kind: InputKind::Hdfs,
+            input_mean_bytes: 32e6,
+            input_dist: SizeDist::Uniform { lo: 0.8, hi: 1.2 },
+            compute_per_byte: 2.0e-8,
+            compute_base: 0.3,
+            compute_dist: SizeDist::Uniform { lo: 0.9, hi: 1.1 },
+            gc: GcProfile::LIGHT,
+            shuffle_write_mean: 2e6,
+            shuffle_write_dist: SizeDist::Uniform { lo: 0.9, hi: 1.1 },
+            spill_prob: 0.01,
+        }
+    }
+
+    /// Materialize the stage's tasks, assigning preferred nodes round-robin
+    /// with a shuffled start (HDFS block placement) and sampling all sizes.
+    pub fn materialize(
+        &self,
+        rng: &mut Pcg64,
+        stage_id: u64,
+        first_task_id: u64,
+        nodes: usize,
+        executors_per_node: usize,
+    ) -> Vec<TaskSpec> {
+        let n = self.num_tasks;
+        let offset = rng.below(nodes.max(1) as u64) as usize;
+        (0..n)
+            .map(|i| {
+                let input_mult = self.input_dist.sample(rng, i, n);
+                let input_bytes = self.input_mean_bytes * input_mult;
+                let compute_mult = self.compute_dist.sample(rng, i, n);
+                let compute_work =
+                    (self.compute_base + self.compute_per_byte * input_bytes) * compute_mult;
+                let gc_work = self.gc.sample(rng, compute_work);
+                let sw = self.shuffle_write_mean
+                    * self.shuffle_write_dist.sample(rng, i, n);
+                let (mem_spill, disk_spill) = if rng.chance(self.spill_prob) {
+                    (input_bytes * rng.range_f64(0.2, 0.6), input_bytes * rng.range_f64(0.1, 0.3))
+                } else {
+                    (0.0, 0.0)
+                };
+                TaskSpec {
+                    task_id: first_task_id + i as u64,
+                    stage_id,
+                    preferred_node: (i + offset) % nodes.max(1),
+                    preferred_executor: rng.below(executors_per_node.max(1) as u64) as usize,
+                    input_kind: self.input_kind,
+                    input_bytes,
+                    compute_work,
+                    gc_work,
+                    shuffle_write_bytes: sw,
+                    memory_bytes_spilled: mem_spill,
+                    disk_bytes_spilled: disk_spill,
+                    serialize_work: rng.range_f64(0.005, 0.02),
+                    deserialize_work: rng.range_f64(0.01, 0.05),
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_dist_within_bounds() {
+        let mut rng = Pcg64::seeded(1);
+        let d = SizeDist::Uniform { lo: 0.5, hi: 1.5 };
+        for i in 0..1000 {
+            let m = d.sample(&mut rng, i, 1000);
+            assert!((0.5..1.5).contains(&m));
+        }
+    }
+
+    #[test]
+    fn lognormal_mean_near_one() {
+        let mut rng = Pcg64::seeded(2);
+        let d = SizeDist::LogNormal { sigma: 0.8 };
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|i| d.sample(&mut rng, i, n)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0).abs() < 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn zipf_mean_exactly_one_and_skewed() {
+        let mut rng = Pcg64::seeded(3);
+        let d = SizeDist::Zipf { s: 1.5 };
+        let n = 200;
+        let samples: Vec<f64> = (0..n).map(|i| d.sample(&mut rng, i, n)).collect();
+        let mean: f64 = samples.iter().sum::<f64>() / n as f64;
+        assert!((mean - 1.0).abs() < 1e-9, "zipf mean must be exactly 1, got {mean}");
+        let max = samples.iter().cloned().fold(0.0, f64::max);
+        assert!(max > 5.0, "zipf should produce a dominant partition, max={max}");
+        // Deterministic per (index, n): same index gives same multiplier.
+        let mut rng2 = Pcg64::seeded(99);
+        assert_eq!(d.sample(&mut rng2, 7, n), samples[7]);
+    }
+
+    #[test]
+    fn gc_profile_tail() {
+        let mut rng = Pcg64::seeded(4);
+        let gc = GcProfile { base_frac: 0.02, tail_prob: 0.5, tail_frac: 2.0 };
+        let n = 10_000;
+        let samples: Vec<f64> = (0..n).map(|_| gc.sample(&mut rng, 10.0)).collect();
+        let with_tail = samples.iter().filter(|&&g| g > 1.0).count();
+        // ~50% should include the tail pause (tail adds ≥ 10*2*0.5 = 10 ≥ 1).
+        assert!((with_tail as f64 / n as f64 - 0.5).abs() < 0.05);
+        assert!(samples.iter().all(|&g| g >= 0.0));
+    }
+
+    #[test]
+    fn materialize_covers_nodes_and_ids() {
+        let mut rng = Pcg64::seeded(5);
+        let spec = StageSpec::base("s", 50);
+        let tasks = spec.materialize(&mut rng, 3, 100, 5, 2);
+        assert_eq!(tasks.len(), 50);
+        assert_eq!(tasks[0].task_id, 100);
+        assert_eq!(tasks[49].task_id, 149);
+        assert!(tasks.iter().all(|t| t.stage_id == 3));
+        assert!(tasks.iter().all(|t| t.preferred_node < 5));
+        assert!(tasks.iter().all(|t| t.preferred_executor < 2));
+        // All 5 nodes are preferred by some task (round-robin).
+        for n in 0..5 {
+            assert!(tasks.iter().any(|t| t.preferred_node == n));
+        }
+    }
+
+    #[test]
+    fn materialize_positive_quantities() {
+        let mut rng = Pcg64::seeded(6);
+        let spec = StageSpec::base("s", 200);
+        for t in spec.materialize(&mut rng, 0, 0, 5, 2) {
+            assert!(t.input_bytes > 0.0);
+            assert!(t.compute_work > 0.0);
+            assert!(t.gc_work >= 0.0);
+            assert!(t.shuffle_write_bytes >= 0.0);
+            assert!(t.serialize_work > 0.0);
+            assert!(t.deserialize_work > 0.0);
+            assert!(t.output_bytes() >= t.shuffle_write_bytes);
+        }
+    }
+
+    #[test]
+    fn spill_probability_respected() {
+        let mut rng = Pcg64::seeded(7);
+        let mut spec = StageSpec::base("s", 2000);
+        spec.spill_prob = 0.25;
+        let tasks = spec.materialize(&mut rng, 0, 0, 5, 2);
+        let spilled = tasks.iter().filter(|t| t.disk_bytes_spilled > 0.0).count();
+        let frac = spilled as f64 / tasks.len() as f64;
+        assert!((frac - 0.25).abs() < 0.05, "spill frac={frac}");
+    }
+}

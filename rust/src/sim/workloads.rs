@@ -1,0 +1,401 @@
+//! HiBench-like workload models — the substitution for the paper's
+//! evaluation suite (Table VI). Each workload is a sequence of
+//! [`StageSpec`]s whose feature distributions encode the skew mechanism the
+//! paper attributes to it:
+//!
+//! - **Kmeans**: Zipf-skewed shuffle reads (uneven cluster centers).
+//! - **NaiveBayes**: mild shuffle skew confined to the label-probability
+//!   aggregation (a small fraction of tasks).
+//! - **LogisticRegression / SVM**: skewed `bytes_read` from Spark's SGD
+//!   sampling; SVM additionally fetches remotely (network pressure).
+//! - **PCA**: thousands of tiny tasks with broad unexplained variance.
+//! - **Sort**: I/O bound; **Terasort/Wordcount**: small micro jobs;
+//! - **Nweight**: CPU + network (graph traversal); **Aggregation**: SQL
+//!   shuffle; **Pagerank**: CPU-bound iterations.
+//!
+//! `scale` shrinks task counts for fast tests (1.0 = Table VI scale).
+
+use super::task::{GcProfile, InputKind, SizeDist, StageSpec};
+
+/// A named multi-stage workload.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: &'static str,
+    pub domain: &'static str,
+    pub stages: Vec<StageSpec>,
+}
+
+fn scaled(n: usize, scale: f64) -> usize {
+    ((n as f64 * scale).round() as usize).max(4)
+}
+
+/// The NaiveBayes "large" workload of the verification experiments
+/// (Section IV-B: 1M pages, 100 classes) — two map stages + an aggregate.
+pub fn naive_bayes(scale: f64) -> Workload {
+    // Sized so the scale-1.0 job spans ~60-90 s on the 5-slave testbed,
+    // matching the Figures 3–6 timelines (and long enough that the Table IV
+    // schedule overlaps real work).
+    // Natural baseline variance (the Fig. 3 no-AG run already shows ~2.4x
+    // stragglers): skewed page sizes and occasional full-GC pauses.
+    let mut tokenize = StageSpec::base("tokenize", scaled(500, scale));
+    tokenize.input_mean_bytes = 48e6;
+    tokenize.input_dist = SizeDist::LogNormal { sigma: 0.45 };
+    tokenize.compute_per_byte = 4.0e-8;
+    tokenize.compute_base = 0.4;
+    tokenize.gc = GcProfile { base_frac: 0.03, tail_prob: 0.015, tail_frac: 1.2 };
+    tokenize.shuffle_write_mean = 6e6;
+
+    let mut tf = StageSpec::base("term-frequency", scaled(400, scale));
+    tf.input_kind = InputKind::Shuffle;
+    tf.input_mean_bytes = 7e6;
+    tf.input_dist = SizeDist::LogNormal { sigma: 0.35 };
+    tf.compute_dist = SizeDist::LogNormal { sigma: 0.3 };
+    tf.compute_per_byte = 5.0e-8;
+    tf.compute_base = 0.35;
+    tf.gc = GcProfile { base_frac: 0.03, tail_prob: 0.015, tail_frac: 1.2 };
+    tf.shuffle_write_mean = 4e6;
+
+    let mut aggregate = StageSpec::base("aggregate-labels", scaled(200, scale));
+    aggregate.input_kind = InputKind::Shuffle;
+    aggregate.input_mean_bytes = 9e6;
+    // Mild skew: only the label-probability partition is hot.
+    aggregate.input_dist = SizeDist::Zipf { s: 0.7 };
+    aggregate.compute_per_byte = 3.0e-8;
+    aggregate.compute_base = 0.3;
+    aggregate.shuffle_write_mean = 0.0;
+    aggregate.gc = GcProfile::LIGHT;
+
+    Workload {
+        name: "NaiveBayes",
+        domain: "Machine Learning",
+        stages: vec![tokenize, tf, aggregate],
+    }
+}
+
+/// Kmeans: map + heavily skewed reduceByKey (uneven clustering centers).
+pub fn kmeans(scale: f64) -> Workload {
+    let mut assign = StageSpec::base("assign-centers", scaled(200, scale));
+    assign.input_mean_bytes = 32e6;
+    assign.compute_per_byte = 5.0e-8;
+    assign.compute_base = 0.5;
+    assign.shuffle_write_mean = 8e6;
+    assign.shuffle_write_dist = SizeDist::LogNormal { sigma: 0.2 };
+
+    let mut update = StageSpec::base("update-centers", scaled(120, scale));
+    update.input_kind = InputKind::Shuffle;
+    update.input_mean_bytes = 13e6;
+    // Strong Zipf: the disequilibrium of cluster centers (paper: 49
+    // shuffle-read stragglers).
+    update.input_dist = SizeDist::Zipf { s: 1.3 };
+    update.compute_per_byte = 6.0e-8;
+    update.compute_base = 0.25;
+    update.shuffle_write_mean = 0.5e6;
+    update.gc = GcProfile::HEAVY;
+    update.spill_prob = 0.05;
+
+    Workload { name: "Kmeans", domain: "Machine Learning", stages: vec![assign, update] }
+}
+
+/// Logistic Regression: SGD iterations with skewed input sampling.
+pub fn logistic_regression(scale: f64) -> Workload {
+    let mut stages = Vec::new();
+    for it in 0..4 {
+        let mut grad = StageSpec::base(
+            match it {
+                0 => "sgd-iter-0",
+                1 => "sgd-iter-1",
+                2 => "sgd-iter-2",
+                _ => "sgd-iter-3",
+            },
+            scaled(260, scale),
+        );
+        grad.input_mean_bytes = 24e6;
+        // Heavy bytes_read skew from SGD partition sampling (paper: 287
+        // bytes_read root causes).
+        grad.input_dist = SizeDist::LogNormal { sigma: 0.9 };
+        grad.compute_per_byte = 4.5e-8;
+        grad.compute_base = 0.3;
+        grad.shuffle_write_mean = 0.2e6;
+        grad.gc = GcProfile::LIGHT;
+        stages.push(grad);
+    }
+    Workload { name: "LogisticRegression", domain: "Machine Learning", stages }
+}
+
+/// PCA: thousands of tiny tasks; variance comes from everywhere and nowhere
+/// (the paper: 4107 stragglers, mostly unexplained).
+pub fn pca(scale: f64) -> Workload {
+    let mut stages = Vec::new();
+    for (i, name) in ["gramian", "eigen-prep", "project"].iter().enumerate() {
+        let mut s = StageSpec::base(name, scaled(900, scale));
+        s.input_mean_bytes = 2.5e6;
+        s.input_dist = SizeDist::LogNormal { sigma: 0.35 };
+        s.compute_per_byte = 6.0e-8;
+        s.compute_base = 0.08;
+        // Small tasks → scheduler/GC noise dominates; broad compute spread.
+        s.compute_dist = SizeDist::LogNormal { sigma: 0.5 };
+        s.gc = GcProfile { base_frac: 0.04, tail_prob: 0.01, tail_frac: 1.5 };
+        s.shuffle_write_mean = 0.4e6;
+        if i > 0 {
+            s.input_kind = InputKind::Shuffle;
+        }
+        stages.push(s);
+    }
+    Workload { name: "PCA", domain: "Machine Learning", stages }
+}
+
+/// SVM: SGD with skewed, often-remote reads (paper: 1634 bytes_read + 167
+/// network root causes).
+pub fn svm(scale: f64) -> Workload {
+    let mut stages = Vec::new();
+    for it in 0..3 {
+        let mut s = StageSpec::base(
+            match it {
+                0 => "svm-iter-0",
+                1 => "svm-iter-1",
+                _ => "svm-iter-2",
+            },
+            scaled(700, scale),
+        );
+        s.input_mean_bytes = 20e6;
+        s.input_dist = SizeDist::LogNormal { sigma: 1.0 };
+        s.compute_per_byte = 3.5e-8;
+        s.compute_base = 0.15;
+        s.compute_dist = SizeDist::LogNormal { sigma: 0.4 };
+        s.shuffle_write_mean = 0.3e6;
+        stages.push(s);
+    }
+    Workload { name: "SVM", domain: "Machine Learning", stages }
+}
+
+/// Sort: disk-bound shuffle (paper: I/O root causes).
+pub fn sort(scale: f64) -> Workload {
+    let mut map = StageSpec::base("sort-map", scaled(60, scale));
+    map.input_mean_bytes = 96e6; // heavy reads
+    map.input_dist = SizeDist::LogNormal { sigma: 0.25 };
+    map.compute_per_byte = 0.6e-8;
+    map.compute_base = 0.1;
+    map.shuffle_write_mean = 80e6; // heavy writes
+    map.spill_prob = 0.12;
+
+    let mut reduce = StageSpec::base("sort-reduce", scaled(40, scale));
+    reduce.input_kind = InputKind::Shuffle;
+    reduce.input_mean_bytes = 110e6;
+    reduce.input_dist = SizeDist::LogNormal { sigma: 0.3 };
+    reduce.compute_per_byte = 0.5e-8;
+    reduce.compute_base = 0.1;
+    reduce.shuffle_write_mean = 0.0;
+    reduce.spill_prob = 0.15;
+
+    Workload { name: "Sort", domain: "Micro", stages: vec![map, reduce] }
+}
+
+/// Terasort: tiny, well-balanced (paper: 2 stragglers, unexplained).
+pub fn terasort(scale: f64) -> Workload {
+    let mut map = StageSpec::base("tera-map", scaled(48, scale));
+    map.input_mean_bytes = 64e6;
+    map.input_dist = SizeDist::Uniform { lo: 0.97, hi: 1.03 };
+    map.compute_per_byte = 0.8e-8;
+    map.shuffle_write_mean = 48e6;
+    let mut reduce = StageSpec::base("tera-reduce", scaled(32, scale));
+    reduce.input_kind = InputKind::Shuffle;
+    reduce.input_mean_bytes = 72e6;
+    reduce.input_dist = SizeDist::Uniform { lo: 0.97, hi: 1.03 };
+    reduce.compute_per_byte = 0.7e-8;
+    reduce.shuffle_write_mean = 0.0;
+    Workload { name: "Terasort", domain: "Micro", stages: vec![map, reduce] }
+}
+
+/// Wordcount: compute-light map + tiny aggregate.
+pub fn wordcount(scale: f64) -> Workload {
+    let mut map = StageSpec::base("wc-map", scaled(72, scale));
+    map.input_mean_bytes = 64e6;
+    map.input_dist = SizeDist::LogNormal { sigma: 0.3 };
+    map.compute_per_byte = 1.5e-8;
+    map.gc = GcProfile { base_frac: 0.03, tail_prob: 0.01, tail_frac: 1.0 };
+    map.shuffle_write_mean = 1e6;
+    let mut reduce = StageSpec::base("wc-reduce", scaled(24, scale));
+    reduce.input_kind = InputKind::Shuffle;
+    reduce.input_mean_bytes = 3e6;
+    reduce.compute_per_byte = 2e-8;
+    reduce.shuffle_write_mean = 0.0;
+    Workload { name: "Wordcount", domain: "Micro", stages: vec![map, reduce] }
+}
+
+/// Nweight: graph traversal — CPU-heavy with remote edge fetches.
+pub fn nweight(scale: f64) -> Workload {
+    let mut stages = Vec::new();
+    for hop in 0..3 {
+        let mut s = StageSpec::base(
+            match hop {
+                0 => "hop-0",
+                1 => "hop-1",
+                _ => "hop-2",
+            },
+            scaled(90, scale),
+        );
+        s.input_kind = if hop == 0 { InputKind::Hdfs } else { InputKind::Shuffle };
+        s.input_mean_bytes = 18e6;
+        s.input_dist = SizeDist::LogNormal { sigma: 0.45 };
+        s.compute_per_byte = 9.0e-8; // CPU-heavy edge joins
+        s.compute_base = 0.6;
+        s.compute_dist = SizeDist::LogNormal { sigma: 0.3 };
+        s.shuffle_write_mean = 14e6;
+        s.gc = GcProfile::HEAVY;
+        stages.push(s);
+    }
+    Workload { name: "Nweight", domain: "Graph", stages }
+}
+
+/// Aggregation (SQL): scan + group-by.
+pub fn aggregation(scale: f64) -> Workload {
+    let mut scan = StageSpec::base("scan", scaled(80, scale));
+    scan.input_mean_bytes = 48e6;
+    scan.input_dist = SizeDist::LogNormal { sigma: 0.3 };
+    scan.compute_per_byte = 1.2e-8;
+    scan.gc = GcProfile { base_frac: 0.03, tail_prob: 0.012, tail_frac: 1.0 };
+    scan.shuffle_write_mean = 4e6;
+    let mut group = StageSpec::base("group-by", scaled(40, scale));
+    group.input_kind = InputKind::Shuffle;
+    group.input_mean_bytes = 8e6;
+    group.input_dist = SizeDist::LogNormal { sigma: 0.45 };
+    group.compute_per_byte = 2e-8;
+    group.shuffle_write_mean = 0.0;
+    Workload { name: "Aggregation", domain: "SQL", stages: vec![scan, group] }
+}
+
+/// Pagerank: CPU-bound iterations (paper: CPU root causes).
+pub fn pagerank(scale: f64) -> Workload {
+    let mut stages = Vec::new();
+    for it in 0..3 {
+        let mut s = StageSpec::base(
+            match it {
+                0 => "rank-iter-0",
+                1 => "rank-iter-1",
+                _ => "rank-iter-2",
+            },
+            scaled(80, scale),
+        );
+        s.input_kind = if it == 0 { InputKind::Hdfs } else { InputKind::Shuffle };
+        s.input_mean_bytes = 16e6;
+        s.compute_per_byte = 8.0e-8;
+        s.compute_base = 0.7;
+        s.compute_dist = SizeDist::LogNormal { sigma: 0.35 };
+        s.gc = GcProfile { base_frac: 0.03, tail_prob: 0.01, tail_frac: 1.0 };
+        s.shuffle_write_mean = 12e6;
+        stages.push(s);
+    }
+    Workload { name: "Pagerank", domain: "WebSearch", stages }
+}
+
+/// All Table VI workloads in the paper's row order.
+pub fn hibench_suite(scale: f64) -> Vec<Workload> {
+    vec![
+        kmeans(scale),
+        naive_bayes(scale),
+        logistic_regression(scale),
+        pca(scale),
+        svm(scale),
+        sort(scale),
+        terasort(scale),
+        wordcount(scale),
+        nweight(scale),
+        aggregation(scale),
+        pagerank(scale),
+    ]
+}
+
+/// Look up a workload by (case-insensitive) name.
+pub fn by_name(name: &str, scale: f64) -> Option<Workload> {
+    let lower = name.to_ascii_lowercase();
+    hibench_suite(scale).into_iter().find(|w| w.name.to_ascii_lowercase() == lower)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::anomaly::InjectionPlan;
+    use crate::sim::engine::{Engine, SimConfig};
+
+    #[test]
+    fn suite_has_eleven_workloads() {
+        let suite = hibench_suite(1.0);
+        assert_eq!(suite.len(), 11);
+        let names: Vec<_> = suite.iter().map(|w| w.name).collect();
+        for expected in [
+            "Kmeans",
+            "NaiveBayes",
+            "LogisticRegression",
+            "PCA",
+            "SVM",
+            "Sort",
+            "Terasort",
+            "Wordcount",
+            "Nweight",
+            "Aggregation",
+            "Pagerank",
+        ] {
+            assert!(names.contains(&expected), "missing {expected}");
+        }
+    }
+
+    #[test]
+    fn by_name_is_case_insensitive() {
+        assert!(by_name("kmeans", 0.1).is_some());
+        assert!(by_name("KMEANS", 0.1).is_some());
+        assert!(by_name("nope", 0.1).is_none());
+    }
+
+    #[test]
+    fn scale_shrinks_task_counts() {
+        let big = kmeans(1.0);
+        let small = kmeans(0.1);
+        assert!(small.stages[0].num_tasks < big.stages[0].num_tasks);
+        assert!(small.stages[0].num_tasks >= 4);
+    }
+
+    #[test]
+    fn every_workload_simulates_cleanly_at_small_scale() {
+        for w in hibench_suite(0.06) {
+            let mut eng = Engine::new(SimConfig { seed: 11, ..Default::default() });
+            let trace = eng.run("t", w.name, &w.stages, &InjectionPlan::none());
+            trace.validate().unwrap_or_else(|e| panic!("{}: {e}", w.name));
+            assert_eq!(
+                trace.tasks.len(),
+                w.stages.iter().map(|s| s.num_tasks).sum::<usize>(),
+                "{} task count",
+                w.name
+            );
+        }
+    }
+
+    #[test]
+    fn kmeans_reduce_has_shuffle_skew() {
+        let w = kmeans(0.3);
+        let mut eng = Engine::new(SimConfig { seed: 12, ..Default::default() });
+        let trace = eng.run("t", w.name, &w.stages, &InjectionPlan::none());
+        let reduce: Vec<f64> = trace
+            .stage_tasks(1)
+            .iter()
+            .map(|t| t.shuffle_read_bytes)
+            .collect();
+        let max = reduce.iter().cloned().fold(0.0, f64::max);
+        let mean = crate::util::stats::mean(&reduce);
+        assert!(max > 3.0 * mean, "kmeans shuffle skew: max {max} mean {mean}");
+    }
+
+    #[test]
+    fn sort_is_disk_heavy() {
+        let w = sort(0.3);
+        let mut eng = Engine::new(SimConfig { seed: 13, ..Default::default() });
+        let trace = eng.run("t", w.name, &w.stages, &InjectionPlan::none());
+        // Disk utilization should be substantial during the run.
+        let busy: f64 = trace
+            .node_series
+            .iter()
+            .map(|s| crate::util::stats::mean(&s.disk))
+            .sum::<f64>()
+            / trace.node_series.len() as f64;
+        assert!(busy > 0.07, "sort disk util {busy}");
+    }
+}

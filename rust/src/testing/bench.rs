@@ -1,0 +1,192 @@
+//! Criterion-like micro/macro benchmark harness (no `criterion` in the
+//! offline registry). Each `cargo bench` target is a `harness = false`
+//! binary built on this module: warmup, fixed sample count, mean / p50 /
+//! p95 / p99 and throughput reporting, plus a `--quick` mode used in CI.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's collected samples (seconds per iteration).
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>,
+    /// Optional items-per-iteration for throughput reporting.
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> f64 {
+        crate::util::stats::mean(&self.samples)
+    }
+
+    pub fn p(&self, q: f64) -> f64 {
+        crate::util::stats::quantile(&self.samples, q)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        crate::util::stats::stddev(&self.samples)
+    }
+
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter.map(|n| n / self.mean())
+    }
+
+    pub fn summary_line(&self) -> String {
+        let tp = match self.throughput() {
+            Some(t) if t >= 1e6 => format!("  {:>8.2} Mitem/s", t / 1e6),
+            Some(t) if t >= 1e3 => format!("  {:>8.2} Kitem/s", t / 1e3),
+            Some(t) => format!("  {:>8.2} item/s", t),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} mean {:>10}  p50 {:>10}  p99 {:>10}  (±{:>9}){}",
+            self.name,
+            fmt_dur(self.mean()),
+            fmt_dur(self.p(0.5)),
+            fmt_dur(self.p(0.99)),
+            fmt_dur(self.stddev()),
+            tp
+        )
+    }
+}
+
+/// Pretty duration from seconds.
+pub fn fmt_dur(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{:.3} s", secs)
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone)]
+pub struct Bench {
+    pub warmup: Duration,
+    pub samples: usize,
+    pub quick: bool,
+    results: Vec<BenchResult>,
+}
+
+impl Bench {
+    /// Standard config; `quick=true` (from `--quick` or `BIGROOTS_BENCH_QUICK=1`)
+    /// trims warmup and sample counts so the full suite runs in seconds.
+    pub fn new() -> Self {
+        let quick = std::env::args().any(|a| a == "--quick")
+            || std::env::var("BIGROOTS_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+        Bench {
+            warmup: if quick { Duration::from_millis(50) } else { Duration::from_millis(300) },
+            samples: if quick { 10 } else { 30 },
+            quick,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` repeatedly; `items` is the per-iteration workload size used
+    /// for throughput lines (pass 0 to omit).
+    pub fn run<F: FnMut()>(&mut self, name: &str, items: f64, mut f: F) -> &BenchResult {
+        // Warmup until the budget is consumed (at least one call).
+        let start = Instant::now();
+        loop {
+            f();
+            if start.elapsed() >= self.warmup {
+                break;
+            }
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            samples,
+            items_per_iter: if items > 0.0 { Some(items) } else { None },
+        };
+        println!("{}", res.summary_line());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// Record an externally-measured scalar (e.g. an accuracy metric or a
+    /// one-shot wall time) so it appears in the report stream.
+    pub fn record(&mut self, name: &str, value_secs: f64) {
+        let res = BenchResult {
+            name: name.to_string(),
+            samples: vec![value_secs],
+            items_per_iter: None,
+        };
+        println!("{}", res.summary_line());
+        self.results.push(res);
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value (stable-Rust
+/// equivalent of `std::hint::black_box` for older toolchains; we just call
+/// the real one — kept as a seam for tests).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_samples_and_stats() {
+        let mut b = Bench {
+            warmup: Duration::from_millis(1),
+            samples: 5,
+            quick: true,
+            results: Vec::new(),
+        };
+        let mut acc = 0u64;
+        b.run("spin", 100.0, || {
+            for i in 0..100u64 {
+                acc = black_box(acc.wrapping_add(i));
+            }
+        });
+        let r = &b.results()[0];
+        assert_eq!(r.samples.len(), 5);
+        assert!(r.mean() > 0.0);
+        assert!(r.throughput().unwrap() > 0.0);
+        assert!(r.summary_line().contains("spin"));
+    }
+
+    #[test]
+    fn fmt_dur_scales() {
+        assert!(fmt_dur(2.0).ends_with(" s"));
+        assert!(fmt_dur(2e-3).ends_with(" ms"));
+        assert!(fmt_dur(2e-6).ends_with(" µs"));
+        assert!(fmt_dur(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn record_scalar() {
+        let mut b = Bench {
+            warmup: Duration::from_millis(1),
+            samples: 1,
+            quick: true,
+            results: Vec::new(),
+        };
+        b.record("metric", 0.5);
+        assert_eq!(b.results().len(), 1);
+        assert_eq!(b.results()[0].mean(), 0.5);
+    }
+}

@@ -1,0 +1,5 @@
+//! Test & benchmark infrastructure: a criterion-like bench harness and a
+//! mini property-based testing framework (see module docs).
+
+pub mod bench;
+pub mod proptest;

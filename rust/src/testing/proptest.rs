@@ -1,0 +1,274 @@
+//! Mini property-based testing framework (no `proptest`/`quickcheck` in the
+//! offline registry). Provides value generators over a seeded [`Pcg64`],
+//! a runner that executes a property over many random cases, and greedy
+//! input shrinking for failing cases.
+//!
+//! Used by the L3 tests for coordinator invariants: scheduler routing,
+//! straggler-detection monotonicity, rule idempotence, codec roundtrips.
+
+use crate::util::rng::Pcg64;
+
+/// A generator produces a random value and can propose "smaller" variants
+/// of a failing value for shrinking.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value;
+    /// Candidate shrinks, roughly ordered most-aggressive first.
+    fn shrink(&self, value: &Self::Value) -> Vec<Self::Value> {
+        let _ = value;
+        Vec::new()
+    }
+}
+
+/// Uniform u64 in [lo, hi].
+pub struct U64Range(pub u64, pub u64);
+
+impl Gen for U64Range {
+    type Value = u64;
+    fn generate(&self, rng: &mut Pcg64) -> u64 {
+        rng.range_u64(self.0, self.1)
+    }
+    fn shrink(&self, v: &u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (*v - self.0) / 2);
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Uniform f64 in [lo, hi).
+pub struct F64Range(pub f64, pub f64);
+
+impl Gen for F64Range {
+    type Value = f64;
+    fn generate(&self, rng: &mut Pcg64) -> f64 {
+        rng.range_f64(self.0, self.1)
+    }
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        let mut out = Vec::new();
+        let anchor = self.0;
+        if (*v - anchor).abs() > 1e-9 {
+            out.push(anchor);
+            out.push(anchor + (*v - anchor) / 2.0);
+        }
+        out
+    }
+}
+
+/// Vec of T with length in [min_len, max_len].
+pub struct VecOf<G: Gen> {
+    pub inner: G,
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+impl<G: Gen> Gen for VecOf<G> {
+    type Value = Vec<G::Value>;
+    fn generate(&self, rng: &mut Pcg64) -> Vec<G::Value> {
+        let len = rng.range_u64(self.min_len as u64, self.max_len as u64) as usize;
+        (0..len).map(|_| self.inner.generate(rng)).collect()
+    }
+    fn shrink(&self, v: &Vec<G::Value>) -> Vec<Vec<G::Value>> {
+        let mut out = Vec::new();
+        // Shrink length first: halves, then drop one element at a time.
+        if v.len() > self.min_len {
+            let half = self.min_len.max(v.len() / 2);
+            out.push(v[..half].to_vec());
+            let mut minus1 = v.clone();
+            minus1.pop();
+            out.push(minus1);
+        }
+        // Then shrink individual elements (first few positions only — keeps
+        // the shrink tree small).
+        for i in 0..v.len().min(4) {
+            for cand in self.inner.shrink(&v[i]) {
+                let mut w = v.clone();
+                w[i] = cand;
+                out.push(w);
+            }
+        }
+        out
+    }
+}
+
+/// Pair generator.
+pub struct PairOf<A: Gen, B: Gen>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for PairOf<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+/// Result of a property check.
+#[derive(Debug)]
+pub enum PropResult<V> {
+    Ok { cases: usize },
+    Failed { original: V, shrunk: V, message: String, cases: usize },
+}
+
+/// Run `prop` over `cases` generated inputs. On failure, greedily shrink.
+/// Properties return `Result<(), String>` so failures carry a message.
+pub fn check<G, F>(seed: u64, cases: usize, gen: &G, mut prop: F) -> PropResult<G::Value>
+where
+    G: Gen,
+    F: FnMut(&G::Value) -> Result<(), String>,
+{
+    let mut rng = Pcg64::new(seed, 0x70726f70); // "prop"
+    for case in 0..cases {
+        let value = gen.generate(&mut rng);
+        if let Err(msg) = prop(&value) {
+            // Greedy shrink: repeatedly take the first failing candidate.
+            let mut current = value.clone();
+            let mut current_msg = msg;
+            let mut budget = 200usize;
+            'outer: while budget > 0 {
+                for cand in gen.shrink(&current) {
+                    budget -= 1;
+                    if let Err(m) = prop(&cand) {
+                        current = cand;
+                        current_msg = m;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            return PropResult::Failed {
+                original: value,
+                shrunk: current,
+                message: current_msg,
+                cases: case + 1,
+            };
+        }
+    }
+    PropResult::Ok { cases }
+}
+
+/// Assert a property holds; panics with the shrunk counterexample otherwise.
+/// This is the entry point tests use:
+///
+/// ```ignore
+/// assert_prop(42, 200, &VecOf { inner: F64Range(0.0, 1e6), min_len: 0, max_len: 64 },
+///     |xs| if ok(xs) { Ok(()) } else { Err("bad".into()) });
+/// ```
+pub fn assert_prop<G, F>(seed: u64, cases: usize, gen: &G, prop: F)
+where
+    G: Gen,
+    F: FnMut(&G::Value) -> Result<(), String>,
+{
+    match check(seed, cases, gen, prop) {
+        PropResult::Ok { .. } => {}
+        PropResult::Failed { original, shrunk, message, cases } => {
+            panic!(
+                "property failed after {cases} cases: {message}\n  original: {original:?}\n  shrunk:   {shrunk:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let r = check(1, 50, &U64Range(0, 100), |&x| {
+            if x <= 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+        match r {
+            PropResult::Ok { cases } => assert_eq!(cases, 50),
+            _ => panic!("should pass"),
+        }
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_boundary() {
+        // Fails for x >= 10; shrinking should land exactly on 10.
+        let r = check(7, 500, &U64Range(0, 1000), |&x| {
+            if x < 10 {
+                Ok(())
+            } else {
+                Err(format!("{x} >= 10"))
+            }
+        });
+        match r {
+            PropResult::Failed { shrunk, .. } => assert_eq!(shrunk, 10),
+            _ => panic!("should fail"),
+        }
+    }
+
+    #[test]
+    fn vec_shrinking_reduces_length() {
+        let gen = VecOf { inner: U64Range(0, 9), min_len: 0, max_len: 50 };
+        // Property: no vec contains a 7. Shrunk counterexample should be a
+        // short vector still containing a 7.
+        let r = check(3, 500, &gen, |v| {
+            if v.contains(&7) {
+                Err("has 7".into())
+            } else {
+                Ok(())
+            }
+        });
+        match r {
+            PropResult::Failed { shrunk, .. } => {
+                assert!(shrunk.contains(&7));
+                assert!(shrunk.len() <= 8, "shrunk too long: {shrunk:?}");
+            }
+            _ => panic!("should fail (7 appears w.h.p. in 500 cases)"),
+        }
+    }
+
+    #[test]
+    fn pair_generator_shrinks_both_sides() {
+        let gen = PairOf(U64Range(0, 100), F64Range(0.0, 1.0));
+        let r = check(5, 300, &gen, |(a, b)| {
+            if *a >= 50 && *b >= 0.0 {
+                Err("a big".into())
+            } else {
+                Ok(())
+            }
+        });
+        match r {
+            PropResult::Failed { shrunk, .. } => assert_eq!(shrunk.0, 50),
+            _ => panic!("should fail"),
+        }
+    }
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let gen = U64Range(0, 1_000_000);
+        let mut seen1 = Vec::new();
+        let mut seen2 = Vec::new();
+        let _ = check(99, 20, &gen, |&x| {
+            seen1.push(x);
+            Ok(())
+        });
+        let _ = check(99, 20, &gen, |&x| {
+            seen2.push(x);
+            Ok(())
+        });
+        assert_eq!(seen1, seen2);
+    }
+}

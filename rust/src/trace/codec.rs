@@ -1,0 +1,375 @@
+//! JSON codec for [`JobTrace`] — the offline-log workflow of the paper:
+//! the simulator (or a converter from real Spark event logs) writes a trace
+//! file, the analyzer reads it back. Round-trip is exact for all fields
+//! (f64 values serialize with shortest-roundtrip formatting).
+
+use super::model::*;
+use crate::util::json::{Json, JsonError};
+
+const FORMAT_VERSION: u64 = 1;
+
+/// Encode a trace to a JSON value.
+pub fn encode(trace: &JobTrace) -> Json {
+    let mut root = Json::obj();
+    root.set("version", FORMAT_VERSION.into());
+    root.set("job_name", trace.job_name.as_str().into());
+    root.set("workload", trace.workload.as_str().into());
+    let mut cluster = Json::obj();
+    cluster.set("nodes", trace.cluster.nodes.into());
+    cluster.set("cores_per_node", trace.cluster.cores_per_node.into());
+    cluster.set("executors_per_node", trace.cluster.executors_per_node.into());
+    root.set("cluster", cluster);
+
+    root.set(
+        "stages",
+        Json::Arr(
+            trace
+                .stages
+                .iter()
+                .map(|s| {
+                    let mut o = Json::obj();
+                    o.set("stage_id", s.stage_id.into());
+                    o.set("name", s.name.as_str().into());
+                    o.set("tasks", s.tasks.clone().into());
+                    o
+                })
+                .collect(),
+        ),
+    );
+
+    root.set(
+        "tasks",
+        Json::Arr(
+            trace
+                .tasks
+                .iter()
+                .map(|t| {
+                    let mut o = Json::obj();
+                    o.set("task_id", t.task_id.into());
+                    o.set("stage_id", t.stage_id.into());
+                    o.set("node", t.node.into());
+                    o.set("executor", t.executor.into());
+                    o.set("start", t.start.into());
+                    o.set("finish", t.finish.into());
+                    o.set("locality", t.locality.as_str().into());
+                    o.set("bytes_read", t.bytes_read.into());
+                    o.set("shuffle_read_bytes", t.shuffle_read_bytes.into());
+                    o.set("shuffle_write_bytes", t.shuffle_write_bytes.into());
+                    o.set("memory_bytes_spilled", t.memory_bytes_spilled.into());
+                    o.set("disk_bytes_spilled", t.disk_bytes_spilled.into());
+                    o.set("jvm_gc_time", t.jvm_gc_time.into());
+                    o.set("serialize_time", t.serialize_time.into());
+                    o.set("deserialize_time", t.deserialize_time.into());
+                    o
+                })
+                .collect(),
+        ),
+    );
+
+    root.set(
+        "node_series",
+        Json::Arr(
+            trace
+                .node_series
+                .iter()
+                .map(|s| {
+                    let mut o = Json::obj();
+                    o.set("node", s.node.into());
+                    o.set("period", s.period.into());
+                    o.set("cpu", s.cpu.clone().into());
+                    o.set("disk", s.disk.clone().into());
+                    o.set("net_bytes", s.net_bytes.clone().into());
+                    o
+                })
+                .collect(),
+        ),
+    );
+
+    root.set(
+        "injections",
+        Json::Arr(
+            trace
+                .injections
+                .iter()
+                .map(|i| {
+                    let mut o = Json::obj();
+                    o.set("node", i.node.into());
+                    o.set("kind", i.kind.as_str().into());
+                    o.set("t_start", i.t_start.into());
+                    o.set("t_end", i.t_end.into());
+                    o
+                })
+                .collect(),
+        ),
+    );
+    root
+}
+
+fn bad(msg: &str) -> JsonError {
+    JsonError { offset: 0, message: msg.to_string() }
+}
+
+fn f64_arr(j: &Json, key: &str) -> Result<Vec<f64>, JsonError> {
+    j.req_arr(key)?
+        .iter()
+        .map(|v| v.as_f64().ok_or_else(|| bad(&format!("{key}: non-number element"))))
+        .collect()
+}
+
+/// Decode a trace from a JSON value, validating structure.
+pub fn decode(j: &Json) -> Result<JobTrace, JsonError> {
+    let version = j.req_u64("version")?;
+    if version != FORMAT_VERSION {
+        return Err(bad(&format!("unsupported trace version {version}")));
+    }
+    let cluster_j = j.get("cluster");
+    let cluster = ClusterInfo {
+        nodes: cluster_j.req_usize("nodes")?,
+        cores_per_node: cluster_j.req_usize("cores_per_node")?,
+        executors_per_node: cluster_j.req_usize("executors_per_node")?,
+    };
+
+    let stages = j
+        .req_arr("stages")?
+        .iter()
+        .map(|s| {
+            Ok(StageRecord {
+                stage_id: s.req_u64("stage_id")?,
+                name: s.req_str("name")?.to_string(),
+                tasks: s
+                    .req_arr("tasks")?
+                    .iter()
+                    .map(|t| t.as_u64().ok_or_else(|| bad("stage.tasks: non-integer")))
+                    .collect::<Result<_, _>>()?,
+            })
+        })
+        .collect::<Result<Vec<_>, JsonError>>()?;
+
+    let tasks = j
+        .req_arr("tasks")?
+        .iter()
+        .map(|t| {
+            Ok(TaskRecord {
+                task_id: t.req_u64("task_id")?,
+                stage_id: t.req_u64("stage_id")?,
+                node: t.req_usize("node")?,
+                executor: t.req_usize("executor")?,
+                start: t.req_f64("start")?,
+                finish: t.req_f64("finish")?,
+                locality: Locality::from_str(t.req_str("locality")?)
+                    .ok_or_else(|| bad("bad locality"))?,
+                bytes_read: t.req_f64("bytes_read")?,
+                shuffle_read_bytes: t.req_f64("shuffle_read_bytes")?,
+                shuffle_write_bytes: t.req_f64("shuffle_write_bytes")?,
+                memory_bytes_spilled: t.req_f64("memory_bytes_spilled")?,
+                disk_bytes_spilled: t.req_f64("disk_bytes_spilled")?,
+                jvm_gc_time: t.req_f64("jvm_gc_time")?,
+                serialize_time: t.req_f64("serialize_time")?,
+                deserialize_time: t.req_f64("deserialize_time")?,
+            })
+        })
+        .collect::<Result<Vec<_>, JsonError>>()?;
+
+    let node_series = j
+        .req_arr("node_series")?
+        .iter()
+        .map(|s| {
+            Ok(NodeSeries {
+                node: s.req_usize("node")?,
+                period: s.req_f64("period")?,
+                cpu: f64_arr(s, "cpu")?,
+                disk: f64_arr(s, "disk")?,
+                net_bytes: f64_arr(s, "net_bytes")?,
+            })
+        })
+        .collect::<Result<Vec<_>, JsonError>>()?;
+
+    let injections = j
+        .req_arr("injections")?
+        .iter()
+        .map(|i| {
+            Ok(InjectionRecord {
+                node: i.req_usize("node")?,
+                kind: AnomalyKind::from_str(i.req_str("kind")?)
+                    .ok_or_else(|| bad("bad anomaly kind"))?,
+                t_start: i.req_f64("t_start")?,
+                t_end: i.req_f64("t_end")?,
+            })
+        })
+        .collect::<Result<Vec<_>, JsonError>>()?;
+
+    let trace = JobTrace {
+        job_name: j.req_str("job_name")?.to_string(),
+        workload: j.req_str("workload")?.to_string(),
+        cluster,
+        stages,
+        tasks,
+        node_series,
+        injections,
+    };
+    trace.validate().map_err(|e| bad(&e))?;
+    Ok(trace)
+}
+
+/// Write a trace to a file (pretty JSON).
+pub fn save(trace: &JobTrace, path: &str) -> anyhow::Result<()> {
+    std::fs::write(path, encode(trace).to_pretty())?;
+    Ok(())
+}
+
+/// Read a trace from a file.
+pub fn load(path: &str) -> anyhow::Result<JobTrace> {
+    let text = std::fs::read_to_string(path)?;
+    let j = Json::parse(&text)?;
+    Ok(decode(&j)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> JobTrace {
+        JobTrace {
+            job_name: "naivebayes-large".into(),
+            workload: "NaiveBayes".into(),
+            cluster: ClusterInfo { nodes: 2, cores_per_node: 16, executors_per_node: 2 },
+            stages: vec![
+                StageRecord { stage_id: 0, name: "map".into(), tasks: vec![0, 1] },
+                StageRecord { stage_id: 1, name: "reduce".into(), tasks: vec![2] },
+            ],
+            tasks: vec![
+                TaskRecord {
+                    task_id: 0,
+                    stage_id: 0,
+                    node: 0,
+                    executor: 1,
+                    start: 0.0,
+                    finish: 2.25,
+                    locality: Locality::ProcessLocal,
+                    bytes_read: 1048576.0,
+                    shuffle_read_bytes: 0.0,
+                    shuffle_write_bytes: 2048.5,
+                    memory_bytes_spilled: 0.0,
+                    disk_bytes_spilled: 0.0,
+                    jvm_gc_time: 0.125,
+                    serialize_time: 0.011,
+                    deserialize_time: 0.041,
+                },
+                TaskRecord {
+                    task_id: 1,
+                    stage_id: 0,
+                    node: 1,
+                    executor: 0,
+                    start: 0.1,
+                    finish: 5.5,
+                    locality: Locality::Any,
+                    bytes_read: 2097152.0,
+                    shuffle_read_bytes: 0.0,
+                    shuffle_write_bytes: 4096.0,
+                    memory_bytes_spilled: 1024.0,
+                    disk_bytes_spilled: 512.0,
+                    jvm_gc_time: 1.5,
+                    serialize_time: 0.02,
+                    deserialize_time: 0.03,
+                },
+                TaskRecord {
+                    task_id: 2,
+                    stage_id: 1,
+                    node: 0,
+                    executor: 0,
+                    start: 6.0,
+                    finish: 8.0,
+                    locality: Locality::NodeLocal,
+                    bytes_read: 0.0,
+                    shuffle_read_bytes: 6144.5,
+                    shuffle_write_bytes: 0.0,
+                    memory_bytes_spilled: 0.0,
+                    disk_bytes_spilled: 0.0,
+                    jvm_gc_time: 0.0,
+                    serialize_time: 0.001,
+                    deserialize_time: 0.002,
+                },
+            ],
+            node_series: vec![
+                NodeSeries {
+                    node: 0,
+                    period: 1.0,
+                    cpu: vec![0.25, 0.5, 0.75],
+                    disk: vec![0.0, 0.125, 0.5],
+                    net_bytes: vec![1000.0, 2000.5, 0.0],
+                },
+                NodeSeries {
+                    node: 1,
+                    period: 1.0,
+                    cpu: vec![0.9, 0.95, 1.0],
+                    disk: vec![0.1, 0.1, 0.1],
+                    net_bytes: vec![0.0, 0.0, 0.0],
+                },
+            ],
+            injections: vec![InjectionRecord {
+                node: 1,
+                kind: AnomalyKind::Io,
+                t_start: 1.25,
+                t_end: 4.75,
+            }],
+        }
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let t = sample();
+        let j = encode(&t);
+        let back = decode(&j).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn roundtrip_through_text() {
+        let t = sample();
+        let text = encode(&t).to_pretty();
+        let back = decode(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let t = sample();
+        let path = std::env::temp_dir().join("bigroots_codec_test.json");
+        let path = path.to_str().unwrap();
+        save(&t, path).unwrap();
+        let back = load(path).unwrap();
+        assert_eq!(t, back);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let mut j = encode(&sample());
+        j.set("version", 999u64.into());
+        assert!(decode(&j).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_locality_and_kind() {
+        let t = sample();
+        let text = encode(&t).to_string().replace("PROCESS_LOCAL", "WAT");
+        assert!(decode(&Json::parse(&text).unwrap()).is_err());
+        let text = encode(&t).to_string().replace("\"IO\"", "\"XYZ\"");
+        assert!(decode(&Json::parse(&text).unwrap()).is_err());
+    }
+
+    #[test]
+    fn rejects_structurally_invalid() {
+        // Validation runs after decoding: a task on an unknown node fails.
+        let mut t = sample();
+        t.tasks[0].node = 5;
+        let j = encode(&t);
+        assert!(decode(&j).is_err());
+    }
+
+    #[test]
+    fn missing_field_is_error() {
+        let j = Json::parse(r#"{"version":1,"job_name":"x"}"#).unwrap();
+        assert!(decode(&j).is_err());
+    }
+}

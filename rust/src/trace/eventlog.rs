@@ -1,0 +1,431 @@
+//! Spark-style streaming event log: newline-delimited JSON events emitted
+//! *while a job runs* (task start / task end / resource sample / injection),
+//! consumed by the streaming coordinator (`coordinator::streaming`).
+//!
+//! This mirrors how the paper's scheduler "periodically collects information
+//! from Spark and AG log files" — the analyzer can follow an event stream
+//! instead of waiting for the full offline trace.
+
+use super::model::*;
+use crate::util::json::{Json, JsonError};
+
+/// One line of the event log.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// Job metadata — first line of every log.
+    JobStart { job_name: String, workload: String, cluster: ClusterInfo },
+    StageSubmitted { stage_id: u64, name: String, num_tasks: usize },
+    TaskStart { task_id: u64, stage_id: u64, node: usize, executor: usize, time: f64, locality: Locality },
+    /// Task completion with the full metric set (Spark reports metrics on
+    /// completion, not incrementally).
+    TaskEnd(TaskRecord),
+    /// One 1 Hz sample from a node's mpstat/iostat/sar equivalent.
+    ResourceSample { node: usize, time: f64, cpu: f64, disk: f64, net_bytes: f64 },
+    /// Anomaly-generator activity (ground truth channel, separate log file
+    /// in the paper; merged into one stream here with its own event type).
+    Injection(InjectionRecord),
+    JobEnd { time: f64 },
+}
+
+impl Event {
+    pub fn encode(&self) -> Json {
+        let mut o = Json::obj();
+        match self {
+            Event::JobStart { job_name, workload, cluster } => {
+                o.set("event", "job_start".into());
+                o.set("job_name", job_name.as_str().into());
+                o.set("workload", workload.as_str().into());
+                o.set("nodes", cluster.nodes.into());
+                o.set("cores_per_node", cluster.cores_per_node.into());
+                o.set("executors_per_node", cluster.executors_per_node.into());
+            }
+            Event::StageSubmitted { stage_id, name, num_tasks } => {
+                o.set("event", "stage_submitted".into());
+                o.set("stage_id", (*stage_id).into());
+                o.set("name", name.as_str().into());
+                o.set("num_tasks", (*num_tasks).into());
+            }
+            Event::TaskStart { task_id, stage_id, node, executor, time, locality } => {
+                o.set("event", "task_start".into());
+                o.set("task_id", (*task_id).into());
+                o.set("stage_id", (*stage_id).into());
+                o.set("node", (*node).into());
+                o.set("executor", (*executor).into());
+                o.set("time", (*time).into());
+                o.set("locality", locality.as_str().into());
+            }
+            Event::TaskEnd(t) => {
+                o.set("event", "task_end".into());
+                o.set("task_id", t.task_id.into());
+                o.set("stage_id", t.stage_id.into());
+                o.set("node", t.node.into());
+                o.set("executor", t.executor.into());
+                o.set("start", t.start.into());
+                o.set("finish", t.finish.into());
+                o.set("locality", t.locality.as_str().into());
+                o.set("bytes_read", t.bytes_read.into());
+                o.set("shuffle_read_bytes", t.shuffle_read_bytes.into());
+                o.set("shuffle_write_bytes", t.shuffle_write_bytes.into());
+                o.set("memory_bytes_spilled", t.memory_bytes_spilled.into());
+                o.set("disk_bytes_spilled", t.disk_bytes_spilled.into());
+                o.set("jvm_gc_time", t.jvm_gc_time.into());
+                o.set("serialize_time", t.serialize_time.into());
+                o.set("deserialize_time", t.deserialize_time.into());
+            }
+            Event::ResourceSample { node, time, cpu, disk, net_bytes } => {
+                o.set("event", "resource_sample".into());
+                o.set("node", (*node).into());
+                o.set("time", (*time).into());
+                o.set("cpu", (*cpu).into());
+                o.set("disk", (*disk).into());
+                o.set("net_bytes", (*net_bytes).into());
+            }
+            Event::Injection(i) => {
+                o.set("event", "injection".into());
+                o.set("node", i.node.into());
+                o.set("kind", i.kind.as_str().into());
+                o.set("t_start", i.t_start.into());
+                o.set("t_end", i.t_end.into());
+            }
+            Event::JobEnd { time } => {
+                o.set("event", "job_end".into());
+                o.set("time", (*time).into());
+            }
+        }
+        o
+    }
+
+    pub fn decode(j: &Json) -> Result<Event, JsonError> {
+        let bad = |m: &str| JsonError { offset: 0, message: m.to_string() };
+        Ok(match j.req_str("event")? {
+            "job_start" => Event::JobStart {
+                job_name: j.req_str("job_name")?.to_string(),
+                workload: j.req_str("workload")?.to_string(),
+                cluster: ClusterInfo {
+                    nodes: j.req_usize("nodes")?,
+                    cores_per_node: j.req_usize("cores_per_node")?,
+                    executors_per_node: j.req_usize("executors_per_node")?,
+                },
+            },
+            "stage_submitted" => Event::StageSubmitted {
+                stage_id: j.req_u64("stage_id")?,
+                name: j.req_str("name")?.to_string(),
+                num_tasks: j.req_usize("num_tasks")?,
+            },
+            "task_start" => Event::TaskStart {
+                task_id: j.req_u64("task_id")?,
+                stage_id: j.req_u64("stage_id")?,
+                node: j.req_usize("node")?,
+                executor: j.req_usize("executor")?,
+                time: j.req_f64("time")?,
+                locality: Locality::from_str(j.req_str("locality")?)
+                    .ok_or_else(|| bad("bad locality"))?,
+            },
+            "task_end" => Event::TaskEnd(TaskRecord {
+                task_id: j.req_u64("task_id")?,
+                stage_id: j.req_u64("stage_id")?,
+                node: j.req_usize("node")?,
+                executor: j.req_usize("executor")?,
+                start: j.req_f64("start")?,
+                finish: j.req_f64("finish")?,
+                locality: Locality::from_str(j.req_str("locality")?)
+                    .ok_or_else(|| bad("bad locality"))?,
+                bytes_read: j.req_f64("bytes_read")?,
+                shuffle_read_bytes: j.req_f64("shuffle_read_bytes")?,
+                shuffle_write_bytes: j.req_f64("shuffle_write_bytes")?,
+                memory_bytes_spilled: j.req_f64("memory_bytes_spilled")?,
+                disk_bytes_spilled: j.req_f64("disk_bytes_spilled")?,
+                jvm_gc_time: j.req_f64("jvm_gc_time")?,
+                serialize_time: j.req_f64("serialize_time")?,
+                deserialize_time: j.req_f64("deserialize_time")?,
+            }),
+            "resource_sample" => Event::ResourceSample {
+                node: j.req_usize("node")?,
+                time: j.req_f64("time")?,
+                cpu: j.req_f64("cpu")?,
+                disk: j.req_f64("disk")?,
+                net_bytes: j.req_f64("net_bytes")?,
+            },
+            "injection" => Event::Injection(InjectionRecord {
+                node: j.req_usize("node")?,
+                kind: AnomalyKind::from_str(j.req_str("kind")?)
+                    .ok_or_else(|| bad("bad anomaly kind"))?,
+                t_start: j.req_f64("t_start")?,
+                t_end: j.req_f64("t_end")?,
+            }),
+            "job_end" => Event::JobEnd { time: j.req_f64("time")? },
+            other => return Err(bad(&format!("unknown event '{other}'"))),
+        })
+    }
+}
+
+/// Serialize a trace to an event-log stream, ordered by time (job start,
+/// then interleaved stage/task/sample/injection events, then job end).
+pub fn trace_to_events(trace: &JobTrace) -> Vec<Event> {
+    let mut events: Vec<(f64, u8, Event)> = Vec::new();
+    events.push((
+        -1.0,
+        0,
+        Event::JobStart {
+            job_name: trace.job_name.clone(),
+            workload: trace.workload.clone(),
+            cluster: trace.cluster.clone(),
+        },
+    ));
+    for s in &trace.stages {
+        let t0 = s
+            .tasks
+            .iter()
+            .filter_map(|tid| trace.tasks.iter().find(|t| t.task_id == *tid))
+            .map(|t| t.start)
+            .fold(f64::INFINITY, f64::min);
+        let t0 = if t0.is_finite() { t0 } else { 0.0 };
+        events.push((
+            t0,
+            1,
+            Event::StageSubmitted {
+                stage_id: s.stage_id,
+                name: s.name.clone(),
+                num_tasks: s.tasks.len(),
+            },
+        ));
+    }
+    for t in &trace.tasks {
+        events.push((
+            t.start,
+            2,
+            Event::TaskStart {
+                task_id: t.task_id,
+                stage_id: t.stage_id,
+                node: t.node,
+                executor: t.executor,
+                time: t.start,
+                locality: t.locality,
+            },
+        ));
+        events.push((t.finish, 3, Event::TaskEnd(t.clone())));
+    }
+    for s in &trace.node_series {
+        for (i, ((&cpu, &disk), &net)) in
+            s.cpu.iter().zip(&s.disk).zip(&s.net_bytes).enumerate()
+        {
+            let time = i as f64 * s.period;
+            events.push((
+                time,
+                2,
+                Event::ResourceSample { node: s.node, time, cpu, disk, net_bytes: net },
+            ));
+        }
+    }
+    for i in &trace.injections {
+        events.push((i.t_start, 2, Event::Injection(i.clone())));
+    }
+    events.push((trace.makespan(), 9, Event::JobEnd { time: trace.makespan() }));
+    events.sort_by(|a, b| (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap());
+    events.into_iter().map(|(_, _, e)| e).collect()
+}
+
+/// Write events as newline-delimited JSON.
+pub fn write_events(events: &[Event], path: &str) -> anyhow::Result<()> {
+    let mut out = String::new();
+    for e in events {
+        out.push_str(&e.encode().to_string());
+        out.push('\n');
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+/// Parse newline-delimited JSON events (skipping blank lines).
+pub fn parse_events(text: &str) -> Result<Vec<Event>, JsonError> {
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| Event::decode(&Json::parse(l)?))
+        .collect()
+}
+
+/// Rebuild a full [`JobTrace`] from an event stream — the inverse of
+/// [`trace_to_events`]. Used by the streaming coordinator when asked to
+/// persist what it saw.
+pub fn events_to_trace(events: &[Event]) -> Result<JobTrace, String> {
+    let mut job_name = String::new();
+    let mut workload = String::new();
+    let mut cluster: Option<ClusterInfo> = None;
+    let mut stages: Vec<StageRecord> = Vec::new();
+    let mut tasks: Vec<TaskRecord> = Vec::new();
+    let mut samples: Vec<(usize, f64, f64, f64, f64)> = Vec::new();
+    let mut injections: Vec<InjectionRecord> = Vec::new();
+
+    for e in events {
+        match e {
+            Event::JobStart { job_name: jn, workload: w, cluster: c } => {
+                job_name = jn.clone();
+                workload = w.clone();
+                cluster = Some(c.clone());
+            }
+            Event::StageSubmitted { stage_id, name, .. } => {
+                if !stages.iter().any(|s| s.stage_id == *stage_id) {
+                    stages.push(StageRecord {
+                        stage_id: *stage_id,
+                        name: name.clone(),
+                        tasks: Vec::new(),
+                    });
+                }
+            }
+            Event::TaskEnd(t) => tasks.push(t.clone()),
+            Event::ResourceSample { node, time, cpu, disk, net_bytes } => {
+                samples.push((*node, *time, *cpu, *disk, *net_bytes));
+            }
+            Event::Injection(i) => injections.push(i.clone()),
+            Event::TaskStart { .. } | Event::JobEnd { .. } => {}
+        }
+    }
+    let cluster = cluster.ok_or("missing job_start event")?;
+    // Attach tasks to stages.
+    tasks.sort_by_key(|t| t.task_id);
+    for t in &tasks {
+        let stage = stages
+            .iter_mut()
+            .find(|s| s.stage_id == t.stage_id)
+            .ok_or_else(|| format!("task {} references unknown stage {}", t.task_id, t.stage_id))?;
+        stage.tasks.push(t.task_id);
+    }
+    // Rebuild node series on a 1-second grid.
+    let period = 1.0;
+    let mut node_series: Vec<NodeSeries> =
+        (0..cluster.nodes).map(|n| NodeSeries::empty(n, period)).collect();
+    samples.sort_by(|a, b| (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap());
+    for (node, _time, cpu, disk, net) in samples {
+        if node >= node_series.len() {
+            return Err(format!("sample for unknown node {node}"));
+        }
+        node_series[node].cpu.push(cpu);
+        node_series[node].disk.push(disk);
+        node_series[node].net_bytes.push(net);
+    }
+    let trace = JobTrace { job_name, workload, cluster, stages, tasks, node_series, injections };
+    trace.validate()?;
+    Ok(trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_trace() -> JobTrace {
+        // Reuse the codec test fixture shape.
+        let j = super::super::codec::encode(&fixture());
+        super::super::codec::decode(&j).unwrap()
+    }
+
+    fn fixture() -> JobTrace {
+        JobTrace {
+            job_name: "j".into(),
+            workload: "w".into(),
+            cluster: ClusterInfo { nodes: 2, cores_per_node: 4, executors_per_node: 1 },
+            stages: vec![StageRecord { stage_id: 0, name: "s".into(), tasks: vec![0, 1] }],
+            tasks: vec![
+                TaskRecord {
+                    task_id: 0,
+                    stage_id: 0,
+                    node: 0,
+                    executor: 0,
+                    start: 0.0,
+                    finish: 1.0,
+                    locality: Locality::NodeLocal,
+                    bytes_read: 10.0,
+                    shuffle_read_bytes: 1.0,
+                    shuffle_write_bytes: 2.0,
+                    memory_bytes_spilled: 0.0,
+                    disk_bytes_spilled: 0.0,
+                    jvm_gc_time: 0.1,
+                    serialize_time: 0.01,
+                    deserialize_time: 0.02,
+                },
+                TaskRecord {
+                    task_id: 1,
+                    stage_id: 0,
+                    node: 1,
+                    executor: 0,
+                    start: 0.5,
+                    finish: 2.5,
+                    locality: Locality::Any,
+                    bytes_read: 20.0,
+                    shuffle_read_bytes: 3.0,
+                    shuffle_write_bytes: 4.0,
+                    memory_bytes_spilled: 5.0,
+                    disk_bytes_spilled: 6.0,
+                    jvm_gc_time: 0.2,
+                    serialize_time: 0.03,
+                    deserialize_time: 0.04,
+                },
+            ],
+            node_series: vec![
+                NodeSeries { node: 0, period: 1.0, cpu: vec![0.1, 0.2], disk: vec![0.3, 0.4], net_bytes: vec![5.0, 6.0] },
+                NodeSeries { node: 1, period: 1.0, cpu: vec![0.5, 0.6], disk: vec![0.7, 0.8], net_bytes: vec![7.0, 8.0] },
+            ],
+            injections: vec![InjectionRecord { node: 0, kind: AnomalyKind::Cpu, t_start: 0.2, t_end: 0.9 }],
+        }
+    }
+
+    #[test]
+    fn event_encode_decode_roundtrip() {
+        let t = sample_trace();
+        for e in trace_to_events(&t) {
+            let back = Event::decode(&e.encode()).unwrap();
+            assert_eq!(e, back);
+        }
+    }
+
+    #[test]
+    fn trace_events_trace_roundtrip() {
+        let t = sample_trace();
+        let events = trace_to_events(&t);
+        let back = events_to_trace(&events).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn ndjson_roundtrip() {
+        let t = sample_trace();
+        let events = trace_to_events(&t);
+        let text: String =
+            events.iter().map(|e| e.encode().to_string() + "\n").collect();
+        let parsed = parse_events(&text).unwrap();
+        assert_eq!(events, parsed);
+    }
+
+    #[test]
+    fn events_are_time_ordered() {
+        let t = sample_trace();
+        let events = trace_to_events(&t);
+        assert!(matches!(events.first(), Some(Event::JobStart { .. })));
+        assert!(matches!(events.last(), Some(Event::JobEnd { .. })));
+        // TaskEnd for task 0 (finish=1.0) precedes TaskEnd for task 1 (2.5).
+        let pos0 = events
+            .iter()
+            .position(|e| matches!(e, Event::TaskEnd(t) if t.task_id == 0))
+            .unwrap();
+        let pos1 = events
+            .iter()
+            .position(|e| matches!(e, Event::TaskEnd(t) if t.task_id == 1))
+            .unwrap();
+        assert!(pos0 < pos1);
+    }
+
+    #[test]
+    fn missing_job_start_is_error() {
+        let t = sample_trace();
+        let events: Vec<Event> = trace_to_events(&t)
+            .into_iter()
+            .filter(|e| !matches!(e, Event::JobStart { .. }))
+            .collect();
+        assert!(events_to_trace(&events).is_err());
+    }
+
+    #[test]
+    fn unknown_event_rejected() {
+        let j = Json::parse(r#"{"event":"wat"}"#).unwrap();
+        assert!(Event::decode(&j).is_err());
+    }
+}

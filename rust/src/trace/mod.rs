@@ -1,0 +1,17 @@
+//! Trace model and codecs: the interchange between the cluster (simulated
+//! or real) and the BigRoots analyzer.
+//!
+//! - [`model`] — in-memory structures: tasks, stages, node resource series,
+//!   anomaly ground truth.
+//! - [`codec`] — whole-trace JSON file format (offline analysis workflow).
+//! - [`eventlog`] — Spark-style newline-delimited event stream (streaming
+//!   analysis workflow).
+
+pub mod codec;
+pub mod eventlog;
+pub mod model;
+
+pub use model::{
+    AnomalyKind, ClusterInfo, InjectionRecord, JobTrace, Locality, NodeSeries, StageRecord,
+    TaskRecord,
+};

@@ -1,0 +1,404 @@
+//! The trace data model — the interchange between the cluster (simulated or
+//! real) and the analyzer. It mirrors what the paper collects: per-task
+//! framework metrics from Spark event logs plus per-node 1 Hz resource
+//! utilization series from mpstat/iostat/sar.
+
+/// Task data locality, Table I of the paper. `NoPref` means location makes
+/// no difference (e.g. reading from a database).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Locality {
+    ProcessLocal,
+    NodeLocal,
+    RackLocal,
+    Any,
+    NoPref,
+}
+
+impl Locality {
+    /// Numeric encoding of Eq. 4: PROCESS_LOCAL → 0, NODE_LOCAL → 1,
+    /// otherwise → 2.
+    pub fn numeric(self) -> f64 {
+        match self {
+            Locality::ProcessLocal => 0.0,
+            Locality::NodeLocal => 1.0,
+            _ => 2.0,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Locality::ProcessLocal => "PROCESS_LOCAL",
+            Locality::NodeLocal => "NODE_LOCAL",
+            Locality::RackLocal => "RACK_LOCAL",
+            Locality::Any => "ANY",
+            Locality::NoPref => "NOPREF",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<Locality> {
+        Some(match s {
+            "PROCESS_LOCAL" => Locality::ProcessLocal,
+            "NODE_LOCAL" => Locality::NodeLocal,
+            "RACK_LOCAL" => Locality::RackLocal,
+            "ANY" => Locality::Any,
+            "NOPREF" => Locality::NoPref,
+            _ => return None,
+        })
+    }
+}
+
+/// One completed task: identity, placement, timing, and the framework
+/// metrics Spark reports per task (Table II numerators).
+///
+/// All times are in seconds of trace time; byte quantities in bytes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskRecord {
+    pub task_id: u64,
+    pub stage_id: u64,
+    /// Index of the node the task ran on.
+    pub node: usize,
+    /// Executor slot within the node (for intra-process locality).
+    pub executor: usize,
+    pub start: f64,
+    pub finish: f64,
+    pub locality: Locality,
+    /// Input bytes read (from HDFS or cache).
+    pub bytes_read: f64,
+    pub shuffle_read_bytes: f64,
+    pub shuffle_write_bytes: f64,
+    pub memory_bytes_spilled: f64,
+    pub disk_bytes_spilled: f64,
+    /// Time spent in JVM garbage collection during the task (s).
+    pub jvm_gc_time: f64,
+    /// Result serialization time (s).
+    pub serialize_time: f64,
+    /// Executor deserialization time (s).
+    pub deserialize_time: f64,
+}
+
+impl TaskRecord {
+    pub fn duration(&self) -> f64 {
+        (self.finish - self.start).max(0.0)
+    }
+}
+
+/// A stage groups tasks that run the same function over different partitions;
+/// the straggler definition (1.5× median) is evaluated within a stage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageRecord {
+    pub stage_id: u64,
+    pub name: String,
+    /// Task ids belonging to this stage (into `JobTrace::tasks`).
+    pub tasks: Vec<u64>,
+}
+
+/// Per-node 1 Hz resource utilization series — the simulated mpstat
+/// (`cpu`), iostat (`disk`) and sar (`net_bytes`) outputs.
+///
+/// `cpu[t]` and `disk[t]` are utilizations in [0, 1] for the window
+/// [t·period, (t+1)·period); `net_bytes[t]` is bytes sent+received in that
+/// window (Eq. 3 sums absolute traffic, not a utilization ratio).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeSeries {
+    pub node: usize,
+    /// Sampling period in seconds (1.0 in the paper).
+    pub period: f64,
+    pub cpu: Vec<f64>,
+    pub disk: Vec<f64>,
+    pub net_bytes: Vec<f64>,
+}
+
+impl NodeSeries {
+    pub fn empty(node: usize, period: f64) -> Self {
+        NodeSeries { node, period, cpu: Vec::new(), disk: Vec::new(), net_bytes: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cpu.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cpu.is_empty()
+    }
+
+    /// Mean of a series slice over the time window [t0, t1), clamped to the
+    /// recorded range; returns 0.0 for empty/degenerate windows.
+    pub fn window_mean(series: &[f64], period: f64, t0: f64, t1: f64) -> f64 {
+        if series.is_empty() || t1 <= t0 {
+            return 0.0;
+        }
+        let i0 = ((t0 / period).floor().max(0.0) as usize).min(series.len().saturating_sub(1));
+        let i1 = ((t1 / period).ceil().max(1.0) as usize).min(series.len());
+        if i0 >= i1 {
+            return 0.0;
+        }
+        series[i0..i1].iter().sum::<f64>() / (i1 - i0) as f64
+    }
+}
+
+/// The kind of resource anomaly injected (Anomaly Generator type).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AnomalyKind {
+    Cpu,
+    Io,
+    Network,
+}
+
+impl AnomalyKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            AnomalyKind::Cpu => "CPU",
+            AnomalyKind::Io => "IO",
+            AnomalyKind::Network => "NETWORK",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<AnomalyKind> {
+        Some(match s {
+            "CPU" => AnomalyKind::Cpu,
+            "IO" => AnomalyKind::Io,
+            "NETWORK" => AnomalyKind::Network,
+            _ => return None,
+        })
+    }
+
+    pub fn all() -> [AnomalyKind; 3] {
+        [AnomalyKind::Cpu, AnomalyKind::Io, AnomalyKind::Network]
+    }
+}
+
+/// Ground-truth record of one injected anomaly window — what the AG did.
+/// The scorer uses these to label features TP/FP/TN/FN (Section IV.B).
+#[derive(Debug, Clone, PartialEq)]
+pub struct InjectionRecord {
+    pub node: usize,
+    pub kind: AnomalyKind,
+    pub t_start: f64,
+    pub t_end: f64,
+}
+
+impl InjectionRecord {
+    /// Does this injection window overlap a task's execution on its node?
+    pub fn affects(&self, task: &TaskRecord) -> bool {
+        task.node == self.node && self.t_start < task.finish && self.t_end > task.start
+    }
+
+    /// Fraction of the task's duration covered by the injection window.
+    pub fn coverage(&self, task: &TaskRecord) -> f64 {
+        if task.node != self.node {
+            return 0.0;
+        }
+        let lo = self.t_start.max(task.start);
+        let hi = self.t_end.min(task.finish);
+        let d = task.duration();
+        if d <= 0.0 {
+            return 0.0;
+        }
+        ((hi - lo) / d).clamp(0.0, 1.0)
+    }
+}
+
+/// Static cluster description embedded in the trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterInfo {
+    pub nodes: usize,
+    pub cores_per_node: usize,
+    pub executors_per_node: usize,
+}
+
+/// A complete job trace: everything the offline analyzer consumes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobTrace {
+    pub job_name: String,
+    pub workload: String,
+    pub cluster: ClusterInfo,
+    pub stages: Vec<StageRecord>,
+    pub tasks: Vec<TaskRecord>,
+    pub node_series: Vec<NodeSeries>,
+    /// Ground-truth anomaly injections (empty for real/un-injected traces).
+    pub injections: Vec<InjectionRecord>,
+}
+
+impl JobTrace {
+    /// Tasks belonging to stage `stage_id`, in task-id order.
+    pub fn stage_tasks(&self, stage_id: u64) -> Vec<&TaskRecord> {
+        self.tasks.iter().filter(|t| t.stage_id == stage_id).collect()
+    }
+
+    /// Total trace makespan (latest finish).
+    pub fn makespan(&self) -> f64 {
+        self.tasks.iter().map(|t| t.finish).fold(0.0, f64::max)
+    }
+
+    /// The resource series for a node (panics on bad index — construction
+    /// invariant, traces always carry one series per node).
+    pub fn series(&self, node: usize) -> &NodeSeries {
+        &self.node_series[node]
+    }
+
+    /// Basic structural invariants — used by proptest and after decoding.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.node_series.len() != self.cluster.nodes {
+            return Err(format!(
+                "node_series {} != cluster.nodes {}",
+                self.node_series.len(),
+                self.cluster.nodes
+            ));
+        }
+        let mut stage_task_count = 0usize;
+        for s in &self.stages {
+            stage_task_count += s.tasks.len();
+            for tid in &s.tasks {
+                let t = self
+                    .tasks
+                    .iter()
+                    .find(|t| t.task_id == *tid)
+                    .ok_or_else(|| format!("stage {} references missing task {}", s.stage_id, tid))?;
+                if t.stage_id != s.stage_id {
+                    return Err(format!("task {} stage mismatch", tid));
+                }
+            }
+        }
+        if stage_task_count != self.tasks.len() {
+            return Err(format!(
+                "stages cover {} tasks but trace has {}",
+                stage_task_count,
+                self.tasks.len()
+            ));
+        }
+        for t in &self.tasks {
+            if t.finish < t.start {
+                return Err(format!("task {} finish < start", t.task_id));
+            }
+            if t.node >= self.cluster.nodes {
+                return Err(format!("task {} on unknown node {}", t.task_id, t.node));
+            }
+        }
+        for i in &self.injections {
+            if i.node >= self.cluster.nodes {
+                return Err(format!("injection on unknown node {}", i.node));
+            }
+            if i.t_end < i.t_start {
+                return Err("injection window inverted".to_string());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub fn tiny_trace() -> JobTrace {
+        let mk = |task_id, stage_id, node, start, finish| TaskRecord {
+            task_id,
+            stage_id,
+            node,
+            executor: 0,
+            start,
+            finish,
+            locality: Locality::NodeLocal,
+            bytes_read: 100.0,
+            shuffle_read_bytes: 10.0,
+            shuffle_write_bytes: 5.0,
+            memory_bytes_spilled: 0.0,
+            disk_bytes_spilled: 0.0,
+            jvm_gc_time: 0.1,
+            serialize_time: 0.01,
+            deserialize_time: 0.02,
+        };
+        JobTrace {
+            job_name: "test".into(),
+            workload: "unit".into(),
+            cluster: ClusterInfo { nodes: 2, cores_per_node: 4, executors_per_node: 1 },
+            stages: vec![StageRecord { stage_id: 0, name: "s0".into(), tasks: vec![0, 1, 2] }],
+            tasks: vec![mk(0, 0, 0, 0.0, 1.0), mk(1, 0, 0, 0.0, 1.1), mk(2, 0, 1, 0.0, 3.0)],
+            node_series: vec![
+                NodeSeries { node: 0, period: 1.0, cpu: vec![0.5; 5], disk: vec![0.1; 5], net_bytes: vec![100.0; 5] },
+                NodeSeries { node: 1, period: 1.0, cpu: vec![0.9; 5], disk: vec![0.2; 5], net_bytes: vec![50.0; 5] },
+            ],
+            injections: vec![InjectionRecord {
+                node: 1,
+                kind: AnomalyKind::Cpu,
+                t_start: 0.5,
+                t_end: 2.5,
+            }],
+        }
+    }
+
+    #[test]
+    fn locality_numeric_eq4() {
+        assert_eq!(Locality::ProcessLocal.numeric(), 0.0);
+        assert_eq!(Locality::NodeLocal.numeric(), 1.0);
+        assert_eq!(Locality::RackLocal.numeric(), 2.0);
+        assert_eq!(Locality::Any.numeric(), 2.0);
+        assert_eq!(Locality::NoPref.numeric(), 2.0);
+    }
+
+    #[test]
+    fn locality_string_roundtrip() {
+        for l in [
+            Locality::ProcessLocal,
+            Locality::NodeLocal,
+            Locality::RackLocal,
+            Locality::Any,
+            Locality::NoPref,
+        ] {
+            assert_eq!(Locality::from_str(l.as_str()), Some(l));
+        }
+        assert_eq!(Locality::from_str("bogus"), None);
+    }
+
+    #[test]
+    fn injection_affects_and_coverage() {
+        let t = tiny_trace();
+        let inj = &t.injections[0];
+        assert!(!inj.affects(&t.tasks[0])); // wrong node
+        assert!(inj.affects(&t.tasks[2]));
+        // task2: [0,3], injection [0.5,2.5] → coverage 2/3
+        assert!((inj.coverage(&t.tasks[2]) - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(inj.coverage(&t.tasks[0]), 0.0);
+    }
+
+    #[test]
+    fn window_mean_clamps() {
+        let s = [1.0, 2.0, 3.0, 4.0];
+        assert!((NodeSeries::window_mean(&s, 1.0, 0.0, 2.0) - 1.5).abs() < 1e-12);
+        assert!((NodeSeries::window_mean(&s, 1.0, 3.0, 100.0) - 4.0).abs() < 1e-12);
+        assert_eq!(NodeSeries::window_mean(&s, 1.0, 2.0, 2.0), 0.0);
+        assert_eq!(NodeSeries::window_mean(&[], 1.0, 0.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn validate_accepts_wellformed() {
+        assert!(tiny_trace().validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_broken() {
+        let mut t = tiny_trace();
+        t.tasks[0].stage_id = 99;
+        assert!(t.validate().is_err());
+
+        let mut t = tiny_trace();
+        t.tasks[1].finish = -1.0;
+        assert!(t.validate().is_err());
+
+        let mut t = tiny_trace();
+        t.node_series.pop();
+        assert!(t.validate().is_err());
+
+        let mut t = tiny_trace();
+        t.injections[0].node = 10;
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn makespan_and_stage_tasks() {
+        let t = tiny_trace();
+        assert_eq!(t.makespan(), 3.0);
+        assert_eq!(t.stage_tasks(0).len(), 3);
+        assert_eq!(t.stage_tasks(1).len(), 0);
+    }
+}

@@ -1,0 +1,299 @@
+//! Tiny declarative CLI argument parser (no `clap` in the offline registry).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments and
+//! subcommands, with generated `--help` text. Used by `main.rs`, the examples
+//! and every bench binary (all benches accept `--quick` / `--out`).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Declared option.
+#[derive(Debug, Clone)]
+struct OptSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    takes_value: bool,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Command definition: options + flags + help, optionally with subcommands.
+pub struct Command {
+    name: String,
+    about: String,
+    opts: Vec<OptSpec>,
+    subcommands: Vec<Command>,
+}
+
+impl Command {
+    pub fn new(name: &str, about: &str) -> Self {
+        Command {
+            name: name.to_string(),
+            about: about.to_string(),
+            opts: Vec::new(),
+            subcommands: Vec::new(),
+        }
+    }
+
+    /// Add a `--name <value>` option with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            takes_value: true,
+        });
+        self
+    }
+
+    /// Add a required `--name <value>` option (no default).
+    pub fn opt_req(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            takes_value: true,
+        });
+        self
+    }
+
+    /// Add a boolean `--name` flag.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            takes_value: false,
+        });
+        self
+    }
+
+    pub fn subcommand(mut self, cmd: Command) -> Self {
+        self.subcommands.push(cmd);
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n", self.name, self.about);
+        if !self.subcommands.is_empty() {
+            let _ = writeln!(s, "SUBCOMMANDS:");
+            for sc in &self.subcommands {
+                let _ = writeln!(s, "  {:<22} {}", sc.name, sc.about);
+            }
+            let _ = writeln!(s);
+        }
+        if !self.opts.is_empty() {
+            let _ = writeln!(s, "OPTIONS:");
+            for o in &self.opts {
+                let left = if o.takes_value {
+                    match &o.default {
+                        Some(d) => format!("--{} <v> [{}]", o.name, d),
+                        None => format!("--{} <v> (required)", o.name),
+                    }
+                } else {
+                    format!("--{}", o.name)
+                };
+                let _ = writeln!(s, "  {:<28} {}", left, o.help);
+            }
+        }
+        let _ = writeln!(s, "  {:<28} {}", "--help", "print this help");
+        s
+    }
+
+    /// Parse argv (without the program name). Returns
+    /// `(subcommand_name_or_empty, Args)` or a user-facing error string.
+    pub fn parse(&self, argv: &[String]) -> Result<(String, Args), String> {
+        // Subcommand dispatch: first non-flag token that names one.
+        if !self.subcommands.is_empty() {
+            if let Some(first) = argv.first() {
+                if first == "--help" || first == "-h" {
+                    return Err(self.help_text());
+                }
+                if let Some(sc) = self.subcommands.iter().find(|c| &c.name == first) {
+                    let (_, args) = sc.parse(&argv[1..])?;
+                    return Ok((sc.name.clone(), args));
+                }
+                return Err(format!(
+                    "unknown subcommand '{}'\n\n{}",
+                    first,
+                    self.help_text()
+                ));
+            }
+            return Err(self.help_text());
+        }
+        let mut args = Args::default();
+        // Apply defaults first.
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                args.values.insert(o.name.clone(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(self.help_text());
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (key, inline) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option '--{key}'\n\n{}", self.help_text()))?;
+                if spec.takes_value {
+                    let val = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("option '--{key}' needs a value"))?
+                        }
+                    };
+                    args.values.insert(key, val);
+                } else {
+                    if inline.is_some() {
+                        return Err(format!("flag '--{key}' takes no value"));
+                    }
+                    args.flags.insert(key, true);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        // Check required options.
+        for o in &self.opts {
+            if o.takes_value && o.default.is_none() && !args.values.contains_key(&o.name) {
+                return Err(format!("missing required option '--{}'", o.name));
+            }
+        }
+        Ok((String::new(), args))
+    }
+
+    /// Parse std::env::args(); on error/help, print and exit.
+    pub fn parse_env(&self) -> (String, Args) {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse(&argv) {
+            Ok(r) => r,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(if msg.contains("OPTIONS:") { 0 } else { 2 });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let cmd = Command::new("t", "test").opt("seed", "42", "rng seed").flag("quick", "fast");
+        let (_, a) = cmd.parse(&argv(&[])).unwrap();
+        assert_eq!(a.get_u64("seed", 0), 42);
+        assert!(!a.flag("quick"));
+        let (_, a) = cmd.parse(&argv(&["--seed", "7", "--quick"])).unwrap();
+        assert_eq!(a.get_u64("seed", 0), 7);
+        assert!(a.flag("quick"));
+    }
+
+    #[test]
+    fn equals_syntax_and_positional() {
+        let cmd = Command::new("t", "test").opt("out", "-", "path");
+        let (_, a) = cmd.parse(&argv(&["--out=x.json", "pos1", "pos2"])).unwrap();
+        assert_eq!(a.get("out"), Some("x.json"));
+        assert_eq!(a.positional(), &["pos1".to_string(), "pos2".to_string()]);
+    }
+
+    #[test]
+    fn required_option_enforced() {
+        let cmd = Command::new("t", "test").opt_req("input", "trace path");
+        assert!(cmd.parse(&argv(&[])).is_err());
+        let (_, a) = cmd.parse(&argv(&["--input", "f"])).unwrap();
+        assert_eq!(a.get("input"), Some("f"));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let cmd = Command::new("t", "test");
+        assert!(cmd.parse(&argv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn subcommand_dispatch() {
+        let cmd = Command::new("root", "r")
+            .subcommand(Command::new("simulate", "run sim").opt("seed", "1", "seed"))
+            .subcommand(Command::new("analyze", "run analysis").opt_req("input", "path"));
+        let (name, a) = cmd.parse(&argv(&["simulate", "--seed", "9"])).unwrap();
+        assert_eq!(name, "simulate");
+        assert_eq!(a.get_u64("seed", 0), 9);
+        assert!(cmd.parse(&argv(&["bogus"])).is_err());
+        assert!(cmd.parse(&argv(&[])).is_err());
+    }
+
+    #[test]
+    fn help_is_generated() {
+        let cmd = Command::new("t", "test tool").opt("x", "1", "an x").flag("v", "verbose");
+        let err = cmd.parse(&argv(&["--help"])).unwrap_err();
+        assert!(err.contains("test tool"));
+        assert!(err.contains("--x"));
+        assert!(err.contains("verbose"));
+    }
+
+    #[test]
+    fn numeric_helpers() {
+        let cmd = Command::new("t", "test").opt("p", "0.5", "prob");
+        let (_, a) = cmd.parse(&argv(&["--p", "0.25"])).unwrap();
+        assert_eq!(a.get_f64("p", 0.0), 0.25);
+        assert_eq!(a.get_f64("missing", 1.5), 1.5);
+        assert_eq!(a.get_usize("p", 3), 3); // "0.25" not usize → default
+    }
+}

@@ -1,0 +1,10 @@
+//! Hand-rolled substrates: the offline crate registry lacks `serde`, `clap`,
+//! `rand`, `rayon`/`tokio` and `criterion`, so the pieces the system needs
+//! are implemented (and tested) here from scratch.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod threadpool;

@@ -1,0 +1,319 @@
+//! Deterministic pseudo-random number generation and distributions.
+//!
+//! The offline crate registry has no `rand` crate, so we implement a small,
+//! well-tested PCG-XSH-RR 64/32 generator plus the distributions the cluster
+//! simulator needs (uniform, normal, log-normal, exponential, Zipf, Pareto).
+//! Everything is seeded and fully deterministic: the same seed reproduces the
+//! same cluster trace bit-for-bit, which the experiment harness relies on.
+
+/// PCG-XSH-RR 64/32: 64-bit state LCG with a 32-bit xorshift-rotate output.
+///
+/// Reference: O'Neill, "PCG: A Family of Simple Fast Space-Efficient
+/// Statistically Good Algorithms for Random Number Generation" (2014).
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg64 {
+    /// Create a generator from a seed and a stream id. Different streams with
+    /// the same seed are statistically independent.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg64 { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Convenience constructor using stream 0.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0xda3e39cb94b95bdb)
+    }
+
+    /// Derive an independent child generator (e.g. one per node / per task)
+    /// without correlating with the parent's future output.
+    pub fn fork(&mut self, salt: u64) -> Pcg64 {
+        let s = self.next_u64() ^ salt.wrapping_mul(0x9e3779b97f4a7c15);
+        Pcg64::new(s, salt | 1)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 random bits / 2^53
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in [lo, hi).
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n) using Lemire's unbiased method.
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "below(0)");
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Bernoulli trial with probability `p`.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box-Muller (polar form rejected for determinism
+    /// simplicity; basic form uses exactly two uniforms per pair).
+    pub fn normal(&mut self) -> f64 {
+        // Cache the second value of each Box-Muller pair? Keep stateless for
+        // reproducibility across forks; two uniforms per sample is fine here.
+        let u1 = self.f64().max(f64::MIN_POSITIVE);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Normal with mean/std.
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Truncated normal: resample (up to 64 tries) until within [lo, hi],
+    /// then clamp. Used for task-duration noise which must stay positive.
+    pub fn normal_clamped(&mut self, mean: f64, std: f64, lo: f64, hi: f64) -> f64 {
+        for _ in 0..64 {
+            let x = self.normal_ms(mean, std);
+            if x >= lo && x <= hi {
+                return x;
+            }
+        }
+        mean.clamp(lo, hi)
+    }
+
+    /// Log-normal with underlying normal(mu, sigma).
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        self.normal_ms(mu, sigma).exp()
+    }
+
+    /// Exponential with rate lambda (mean 1/lambda).
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        -self.f64().max(f64::MIN_POSITIVE).ln() / lambda
+    }
+
+    /// Pareto with scale x_m and shape alpha: heavy-tailed sizes.
+    pub fn pareto(&mut self, x_m: f64, alpha: f64) -> f64 {
+        x_m / self.f64().max(f64::MIN_POSITIVE).powf(1.0 / alpha)
+    }
+
+    /// Zipf-distributed rank in [0, n): rank k has weight (k+1)^-s.
+    /// Uses inverse-CDF over precomputed weights for small n, rejection for
+    /// large n (Devroye). The simulator uses this for key-skew (data skew in
+    /// shuffle partitions — the mechanism behind Kmeans/NaiveBayes stragglers).
+    pub fn zipf(&mut self, n: u64, s: f64) -> u64 {
+        assert!(n > 0);
+        if n <= 1024 {
+            // Exact inverse-CDF.
+            let mut total = 0.0;
+            for k in 0..n {
+                total += 1.0 / ((k + 1) as f64).powf(s);
+            }
+            let mut target = self.f64() * total;
+            for k in 0..n {
+                target -= 1.0 / ((k + 1) as f64).powf(s);
+                if target <= 0.0 {
+                    return k;
+                }
+            }
+            n - 1
+        } else {
+            // Rejection sampling (Devroye, Non-Uniform Random Variate
+            // Generation, X.6.1), valid for s > 1 and decent for s near 1.
+            let s = s.max(1.001);
+            let b = 2f64.powf(s - 1.0);
+            loop {
+                let u = self.f64().max(f64::MIN_POSITIVE);
+                let v = self.f64();
+                let x = u.powf(-1.0 / (s - 1.0)).floor();
+                let t = (1.0 + 1.0 / x).powf(s - 1.0);
+                if x <= n as f64 && v * x * (t - 1.0) / (b - 1.0) <= t / b {
+                    return (x as u64) - 1;
+                }
+            }
+        }
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a uniformly random element index.
+    pub fn pick(&mut self, len: usize) -> usize {
+        self.below(len as u64) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Pcg64::seeded(42);
+        let mut b = Pcg64::seeded(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::seeded(1);
+        let mut b = Pcg64::seeded(2);
+        let same = (0..100).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 3);
+    }
+
+    #[test]
+    fn fork_is_independent_of_parent_future() {
+        let mut a = Pcg64::seeded(7);
+        let mut child = a.fork(1);
+        let c1: Vec<u64> = (0..10).map(|_| child.next_u64()).collect();
+        // Re-derive the same fork from a fresh parent: identical child stream.
+        let mut a2 = Pcg64::seeded(7);
+        let mut child2 = a2.fork(1);
+        let c2: Vec<u64> = (0..10).map(|_| child2.next_u64()).collect();
+        assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg64::seeded(3);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_unbiased_small_range() {
+        let mut r = Pcg64::seeded(11);
+        let mut counts = [0usize; 5];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[r.below(5) as usize] += 1;
+        }
+        for &c in &counts {
+            let p = c as f64 / n as f64;
+            assert!((p - 0.2).abs() < 0.01, "p={p}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::seeded(5);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Pcg64::seeded(6);
+        let n = 100_000;
+        let mean = (0..n).map(|_| r.exponential(2.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn zipf_rank_frequencies_decrease() {
+        let mut r = Pcg64::seeded(8);
+        let mut counts = [0usize; 10];
+        for _ in 0..50_000 {
+            counts[r.zipf(10, 1.2) as usize] += 1;
+        }
+        // Rank 0 strictly most frequent; generally decreasing.
+        assert!(counts[0] > counts[1]);
+        assert!(counts[1] > counts[4]);
+        assert!(counts[4] > counts[9]);
+    }
+
+    #[test]
+    fn zipf_large_n_in_range() {
+        let mut r = Pcg64::seeded(9);
+        for _ in 0..10_000 {
+            let k = r.zipf(100_000, 1.3);
+            assert!(k < 100_000);
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::seeded(10);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn normal_clamped_respects_bounds() {
+        let mut r = Pcg64::seeded(12);
+        for _ in 0..1000 {
+            let x = r.normal_clamped(1.0, 5.0, 0.1, 2.0);
+            assert!((0.1..=2.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn pareto_heavy_tail() {
+        let mut r = Pcg64::seeded(13);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.pareto(1.0, 2.0)).collect();
+        assert!(xs.iter().all(|&x| x >= 1.0));
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        assert!((mean - 2.0).abs() < 0.1, "mean={mean}"); // E = a*xm/(a-1) = 2
+    }
+}

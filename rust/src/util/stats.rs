@@ -1,0 +1,244 @@
+//! Descriptive statistics used across the analyzer, the native stats
+//! fallback and the benchmark harness: mean, variance, median, quantiles
+//! (linear interpolation, matching numpy's default), Pearson correlation,
+//! trapezoidal AUC.
+
+/// Arithmetic mean; 0.0 for empty input (the analyzer treats empty peer sets
+/// as "no evidence", which the rules handle explicitly).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Quantile with linear interpolation between order statistics, identical to
+/// `numpy.quantile(xs, q)` — the L1 Pallas kernel and ref.py implement the
+/// same definition so all three paths agree bit-for-bit (up to f32 rounding).
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut sorted: Vec<f64> = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    quantile_sorted(&sorted, q)
+}
+
+/// Quantile on pre-sorted data (ascending).
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    quantile(xs, 0.5)
+}
+
+/// Pearson correlation coefficient of two equal-length samples.
+/// Returns 0.0 when either side is constant (undefined correlation) — the
+/// PCC baseline treats "no variance" as "no linear relationship", which
+/// matches how the paper's baseline behaves on constant features.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len(), "pearson: length mismatch");
+    let n = xs.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut cov = 0.0;
+    let mut vx = 0.0;
+    let mut vy = 0.0;
+    for i in 0..n {
+        let dx = xs[i] - mx;
+        let dy = ys[i] - my;
+        cov += dx * dy;
+        vx += dx * dx;
+        vy += dy * dy;
+    }
+    if vx <= 0.0 || vy <= 0.0 {
+        return 0.0;
+    }
+    cov / (vx.sqrt() * vy.sqrt())
+}
+
+/// Area under a curve given (x, y) points, by trapezoid rule after sorting
+/// by x. Used for ROC AUC (x = FPR, y = TPR). Duplicated x values keep the
+/// max y (the standard staircase-upper envelope used for ROC from a
+/// threshold grid).
+pub fn auc(points: &[(f64, f64)]) -> f64 {
+    let mut pts: Vec<(f64, f64)> = points.to_vec();
+    // Anchor at (0,0) and (1,1) like a standard ROC sweep.
+    pts.push((0.0, 0.0));
+    pts.push((1.0, 1.0));
+    pts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // Collapse duplicate x to max y.
+    let mut env: Vec<(f64, f64)> = Vec::with_capacity(pts.len());
+    for (x, y) in pts {
+        match env.last_mut() {
+            Some((lx, ly)) if (*lx - x).abs() < 1e-12 => *ly = ly.max(y),
+            _ => env.push((x, y)),
+        }
+    }
+    // Monotone upper envelope in y (ROC convex-ish staircase): running max.
+    let mut run = 0.0f64;
+    for p in env.iter_mut() {
+        run = run.max(p.1);
+        p.1 = run;
+    }
+    let mut area = 0.0;
+    for w in env.windows(2) {
+        let (x0, y0) = w[0];
+        let (x1, y1) = w[1];
+        area += (x1 - x0) * (y0 + y1) / 2.0;
+    }
+    area
+}
+
+/// Welford online mean/variance accumulator — used by the streaming
+/// coordinator and the Table VII overhead sampler.
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_variance_basic() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((variance(&xs) - 1.25).abs() < 1e-12);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn quantile_matches_numpy_convention() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert_eq!(quantile(&xs, 0.5), 2.5);
+        assert!((quantile(&xs, 0.25) - 1.75).abs() < 1e-12);
+        // unsorted input is sorted internally
+        assert_eq!(quantile(&[4.0, 1.0, 3.0, 2.0], 0.5), 2.5);
+    }
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[5.0, 1.0, 3.0]), 3.0);
+        assert_eq!(median(&[1.0, 2.0, 3.0, 10.0]), 2.5);
+    }
+
+    #[test]
+    fn pearson_perfect_and_inverse() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+        let inv = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&xs, &inv) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_constant_is_zero() {
+        assert_eq!(pearson(&[1.0, 1.0, 1.0], &[1.0, 2.0, 3.0]), 0.0);
+        assert_eq!(pearson(&[1.0], &[2.0]), 0.0);
+    }
+
+    #[test]
+    fn pearson_uncorrelated_near_zero() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let ys = [1.0, -1.0, 1.0, -1.0, 1.0, -1.0, 1.0, -1.0];
+        // Exact value here is -4/sqrt(42*8) ≈ -0.218 — weak correlation.
+        assert!(pearson(&xs, &ys).abs() < 0.25);
+    }
+
+    #[test]
+    fn auc_diagonal_is_half() {
+        let pts = [(0.25, 0.25), (0.5, 0.5), (0.75, 0.75)];
+        assert!((auc(&pts) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn auc_perfect_is_one() {
+        let pts = [(0.0, 1.0)];
+        assert!((auc(&pts) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn auc_empty_anchored() {
+        assert!((auc(&[]) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((w.variance() - variance(&xs)).abs() < 1e-12);
+        assert_eq!(w.count(), 8);
+    }
+}

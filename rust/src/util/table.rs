@@ -1,0 +1,172 @@
+//! ASCII table rendering for reports and bench output, matching the paper's
+//! table layouts (Table III, V, VI, VII) so the bench output reads directly
+//! against the paper.
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple text table builder.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str) -> Self {
+        Table { title: title.to_string(), ..Default::default() }
+    }
+
+    pub fn header(mut self, cols: &[&str]) -> Self {
+        self.header = cols.iter().map(|s| s.to_string()).collect();
+        self.aligns = vec![Align::Left; self.header.len()];
+        self
+    }
+
+    pub fn aligns(mut self, aligns: &[Align]) -> Self {
+        assert_eq!(aligns.len(), self.header.len());
+        self.aligns = aligns.to_vec();
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
+        self.row(cells.iter().map(|s| s.to_string()).collect())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                let cell = &cells[i];
+                match self.aligns[i] {
+                    Align::Left => s.push_str(&format!(" {:<w$} |", cell, w = widths[i])),
+                    Align::Right => s.push_str(&format!(" {:>w$} |", cell, w = widths[i])),
+                }
+            }
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("{}\n", self.title));
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+
+    /// Emit as CSV (for plotting figure data externally).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(&self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a float with fixed decimals, trimming "-0.00" to "0.00".
+pub fn fnum(x: f64, decimals: usize) -> String {
+    let s = format!("{:.*}", decimals, x);
+    if s.starts_with('-') && s[1..].chars().all(|c| c == '0' || c == '.') {
+        s[1..].to_string()
+    } else {
+        s
+    }
+}
+
+/// Format a ratio as a percentage string.
+pub fn pct(x: f64) -> String {
+    format!("{}%", fnum(100.0 * x, 2))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("Demo")
+            .header(&["name", "value"])
+            .aligns(&[Align::Left, Align::Right]);
+        t.row_strs(&["alpha", "1"]);
+        t.row_strs(&["b", "12345"]);
+        let s = t.render();
+        assert!(s.contains("Demo"));
+        assert!(s.contains("| alpha |     1 |"));
+        assert!(s.contains("| b     | 12345 |"));
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("").header(&["a", "b"]);
+        t.row_strs(&["x,y", "q\"z"]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"q\"\"z\""));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new("").header(&["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+
+    #[test]
+    fn fnum_and_pct() {
+        assert_eq!(fnum(1.23456, 2), "1.23");
+        assert_eq!(fnum(-0.0001, 2), "0.00");
+        assert_eq!(pct(0.1234), "12.34%");
+    }
+}

@@ -1,0 +1,157 @@
+//! A small fixed-size thread pool (no `tokio`/`rayon` offline). Used by the
+//! experiment harness to run repeated simulations in parallel (Fig. 7's ten
+//! repetitions, Fig. 8's threshold grid) and by the streaming coordinator.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// Fixed-size worker pool. Jobs are closures; results flow back through
+/// whatever channel the caller closes over (see [`ThreadPool::map`]).
+pub struct ThreadPool {
+    tx: Sender<Msg>,
+    shared_rx: Arc<Mutex<Receiver<Msg>>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Create a pool with `n` workers (min 1).
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let (tx, rx) = channel::<Msg>();
+        let shared_rx = Arc::new(Mutex::new(rx));
+        let mut workers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let rx = Arc::clone(&shared_rx);
+            workers.push(std::thread::spawn(move || loop {
+                let msg = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                match msg {
+                    Ok(Msg::Run(job)) => {
+                        // Isolate panics so one bad job doesn't poison the pool;
+                        // map() detects missing results and repanics in the caller.
+                        let _ = catch_unwind(AssertUnwindSafe(job));
+                    }
+                    Ok(Msg::Shutdown) | Err(_) => break,
+                }
+            }));
+        }
+        ThreadPool { tx, shared_rx, workers }
+    }
+
+    /// Pool sized to available parallelism.
+    pub fn default_size() -> Self {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Self::new(n)
+    }
+
+    /// Submit a fire-and-forget job.
+    pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx.send(Msg::Run(Box::new(f))).expect("pool shut down");
+    }
+
+    /// Run `f` over all items in parallel, preserving input order in the
+    /// returned Vec. Panics if any job panicked.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let (rtx, rrx) = channel::<(usize, R)>();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let rtx = rtx.clone();
+            self.spawn(move || {
+                let r = f(item);
+                let _ = rtx.send((i, r));
+            });
+        }
+        drop(rtx);
+        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            match rrx.recv() {
+                Ok((i, r)) => slots[i] = Some(r),
+                Err(_) => break, // a job panicked; detected below
+            }
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("a pooled job panicked"))
+            .collect()
+    }
+
+    fn join(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        let _ = &self.shared_rx; // keep receiver alive until workers joined
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.join();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool.map((0..100u64).collect(), |x| x * x);
+        assert_eq!(out, (0..100u64).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn spawn_runs_jobs() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..50 {
+            let c = Arc::clone(&counter);
+            pool.spawn(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join on drop
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn single_worker_is_serial_but_complete() {
+        let pool = ThreadPool::new(1);
+        let out = pool.map(vec![1, 2, 3], |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "pooled job panicked")]
+    fn panicking_job_detected() {
+        let pool = ThreadPool::new(2);
+        let _ = pool.map(vec![0, 1, 2], |x| {
+            if x == 1 {
+                panic!("boom");
+            }
+            x
+        });
+    }
+}

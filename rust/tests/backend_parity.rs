@@ -1,0 +1,125 @@
+//! Native-vs-XLA backend parity: the AOT-compiled artifact must agree with
+//! the pure-rust stats path on real simulated stages, and the full BigRoots
+//! pipeline must reach identical conclusions through either backend.
+//!
+//! Requires `make artifacts` (skips gracefully when absent so plain
+//! `cargo test` works from a clean checkout).
+
+use bigroots::analysis::bigroots::{analyze_stage_with_stats, BigRootsConfig};
+use bigroots::analysis::features::{extract_all, FeatureKind};
+use bigroots::analysis::stats::{compute_native, StatsBackend, GRID_Q};
+use bigroots::runtime::XlaBackend;
+use bigroots::sim::{workloads, Engine, InjectionPlan, SimConfig};
+use bigroots::trace::AnomalyKind;
+
+fn open_backend() -> Option<XlaBackend> {
+    let dir = XlaBackend::default_dir();
+    if !std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(XlaBackend::open(&dir).expect("artifacts present but unloadable"))
+}
+
+fn assert_close(a: f64, b: f64, rel: f64, abs: f64, what: &str) {
+    let tol = abs + rel * a.abs().max(b.abs());
+    assert!((a - b).abs() <= tol, "{what}: native {a} vs xla {b}");
+}
+
+#[test]
+fn stage_stats_parity_on_simulated_workload() {
+    let Some(mut xla) = open_backend() else { return };
+    let w = workloads::kmeans(0.25);
+    let mut eng = Engine::new(SimConfig { seed: 77, ..Default::default() });
+    let plan = InjectionPlan::intermittent(AnomalyKind::Io, 2, 12.0, 8.0, 150.0);
+    let trace = eng.run("parity", w.name, &w.stages, &plan);
+
+    for sf in extract_all(&trace, 3.0) {
+        let native = compute_native(&sf);
+        let xla_stats = xla.stage_stats(&sf);
+        assert_eq!(native.count, xla_stats.count);
+        assert_eq!(native.nodes, xla_stats.nodes);
+        assert_eq!(native.node_count, xla_stats.node_count);
+        for k in 0..FeatureKind::COUNT {
+            assert_close(native.col_mean[k], xla_stats.col_mean[k], 1e-3, 1e-5, "col_mean");
+            assert_close(native.col_sum[k], xla_stats.col_sum[k], 1e-3, 1e-4, "col_sum");
+            assert_close(native.col_std[k], xla_stats.col_std[k], 5e-3, 1e-4, "col_std");
+            assert_close(native.pearson[k], xla_stats.pearson[k], 5e-3, 5e-3, "pearson");
+            for q in 0..GRID_Q {
+                assert_close(
+                    native.quantiles[q * FeatureKind::COUNT + k],
+                    xla_stats.quantiles[q * FeatureKind::COUNT + k],
+                    2e-3,
+                    1e-4,
+                    "quantile",
+                );
+            }
+        }
+        for s in 0..native.nodes.len() {
+            for k in 0..FeatureKind::COUNT {
+                assert_close(
+                    native.node_sum[s * FeatureKind::COUNT + k],
+                    xla_stats.node_sum[s * FeatureKind::COUNT + k],
+                    1e-3,
+                    1e-4,
+                    "node_sum",
+                );
+            }
+        }
+    }
+    assert!(xla.xla_count > 0, "no stage actually ran on the XLA path");
+    assert_eq!(xla.fallback_count, 0);
+}
+
+#[test]
+fn full_pipeline_same_conclusions_via_either_backend() {
+    let Some(mut xla) = open_backend() else { return };
+    // CPU-injection verification run (the Section IV-B experiment shape).
+    let w = workloads::naive_bayes(0.5);
+    let mut eng = Engine::new(SimConfig { seed: 78, ..Default::default() });
+    let plan = InjectionPlan::intermittent(AnomalyKind::Cpu, 1, 15.0, 10.0, 200.0);
+    let trace = eng.run("parity2", w.name, &w.stages, &plan);
+    let cfg = BigRootsConfig::default();
+
+    for sf in extract_all(&trace, cfg.edge_width) {
+        let native_stats = compute_native(&sf);
+        let xla_stats = xla.stage_stats(&sf);
+        let a_native = analyze_stage_with_stats(&sf, &native_stats, &cfg);
+        let a_xla = analyze_stage_with_stats(&sf, &xla_stats, &cfg);
+        assert_eq!(a_native.stragglers.rows, a_xla.stragglers.rows);
+        let causes = |a: &bigroots::analysis::StageAnalysis| {
+            let mut v: Vec<(usize, FeatureKind)> =
+                a.causes.iter().map(|c| (c.row, c.kind)).collect();
+            v.sort_by_key(|&(r, k)| (r, k.index()));
+            v
+        };
+        // Thresholds sit on continuous statistics; f32-vs-f64 can flip a
+        // borderline case, so require near-identical (allow ≤1 differing
+        // cause per stage, and log it).
+        let cn = causes(&a_native);
+        let cx = causes(&a_xla);
+        let diff = cn.iter().filter(|c| !cx.contains(c)).count()
+            + cx.iter().filter(|c| !cn.contains(c)).count();
+        assert!(diff <= 1, "backend conclusions diverged: {cn:?} vs {cx:?}");
+    }
+}
+
+#[test]
+fn oversized_stage_falls_back_to_native() {
+    let Some(mut xla) = open_backend() else { return };
+    // 3000 tasks exceeds the largest bucket (2048): must fall back, and the
+    // result must equal the native computation exactly.
+    let w = {
+        let mut s = bigroots::sim::StageSpec::base("big", 3000);
+        s.input_mean_bytes = 1e6;
+        s.compute_base = 0.05;
+        s.compute_per_byte = 0.0;
+        vec![s]
+    };
+    let mut eng = Engine::new(SimConfig { seed: 79, ..Default::default() });
+    let trace = eng.run("big", "big", &w, &InjectionPlan::none());
+    let sf = extract_all(&trace, 3.0).remove(0);
+    let stats = xla.stage_stats(&sf);
+    assert_eq!(xla.fallback_count, 1);
+    assert_eq!(stats, compute_native(&sf));
+}

@@ -1,0 +1,301 @@
+//! Property-based tests on coordinator invariants, using the in-tree
+//! mini-proptest framework (`bigroots::testing::proptest`): routing,
+//! straggler detection, rule monotonicity/idempotence, codec roundtrips,
+//! scheduler conservation.
+
+use bigroots::analysis::bigroots::{analyze_stage_with_stats, BigRootsConfig};
+use bigroots::analysis::features::{extract_all, FeatureKind, StageFeatures};
+use bigroots::analysis::stats::compute_native;
+use bigroots::analysis::straggler;
+use bigroots::sim::scheduler::{Scheduler, Topology};
+use bigroots::sim::task::{InputKind, StageSpec};
+use bigroots::sim::{Engine, InjectionPlan, SimConfig};
+use bigroots::testing::proptest::{assert_prop, F64Range, Gen, PairOf, U64Range, VecOf};
+use bigroots::trace::codec;
+use bigroots::util::rng::Pcg64;
+
+/// Build a StageFeatures fixture from raw durations (other columns zero).
+fn sf_from_durations(durations: &[f64]) -> StageFeatures {
+    let n = durations.len();
+    StageFeatures {
+        stage_id: 0,
+        task_ids: (0..n as u64).collect(),
+        nodes: (0..n).map(|i| i % 5).collect(),
+        durations: durations.to_vec(),
+        matrix: vec![0.0; n * FeatureKind::COUNT],
+        head_means: vec![0.0; n * 3],
+        tail_means: vec![0.0; n * 3],
+    }
+}
+
+#[test]
+fn prop_straggler_set_is_exactly_threshold_exceeders() {
+    let gen = VecOf { inner: F64Range(0.01, 100.0), min_len: 1, max_len: 200 };
+    assert_prop(101, 150, &gen, |durs| {
+        let sf = sf_from_durations(durs);
+        let s = straggler::detect(&sf, 1.5);
+        for (i, &d) in durs.iter().enumerate() {
+            let should = d > s.threshold;
+            if should != s.is_straggler(i) {
+                return Err(format!("row {i}: dur {d} vs threshold {}", s.threshold));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_straggler_count_monotone_in_ratio() {
+    let gen = PairOf(
+        VecOf { inner: F64Range(0.01, 50.0), min_len: 2, max_len: 100 },
+        F64Range(1.0, 4.0),
+    );
+    assert_prop(102, 150, &gen, |(durs, ratio)| {
+        let sf = sf_from_durations(durs);
+        let lo = straggler::detect(&sf, *ratio);
+        let hi = straggler::detect(&sf, ratio + 0.5);
+        if hi.rows.iter().all(|r| lo.rows.contains(r)) {
+            Ok(())
+        } else {
+            Err("higher ratio found a straggler the lower ratio missed".into())
+        }
+    });
+}
+
+#[test]
+fn prop_rules_idempotent_and_causes_subset_of_stragglers() {
+    // Random small simulated stages: analysis is deterministic and causes
+    // only attach to stragglers.
+    let gen = PairOf(U64Range(0, 10_000), U64Range(8, 60));
+    assert_prop(103, 20, &gen, |&(seed, ntasks)| {
+        let mut spec = StageSpec::base("p", ntasks as usize);
+        spec.input_mean_bytes = 6e6;
+        let mut eng = Engine::new(SimConfig { seed, ..Default::default() });
+        let trace = eng.run("p", "p", &[spec], &InjectionPlan::none());
+        let sf = extract_all(&trace, 3.0).remove(0);
+        let stats = compute_native(&sf);
+        let cfg = BigRootsConfig::default();
+        let a1 = analyze_stage_with_stats(&sf, &stats, &cfg);
+        let a2 = analyze_stage_with_stats(&sf, &stats, &cfg);
+        if a1.stragglers.rows != a2.stragglers.rows || a1.causes.len() != a2.causes.len() {
+            return Err("analysis not deterministic".into());
+        }
+        for c in &a1.causes {
+            if !a1.stragglers.is_straggler(c.row) {
+                return Err(format!("cause on non-straggler row {}", c.row));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lambda_q_monotone_on_real_stages() {
+    let gen = U64Range(0, 5_000);
+    assert_prop(104, 12, &gen, |&seed| {
+        let mut spec = StageSpec::base("p", 40);
+        spec.input_dist = bigroots::sim::SizeDist::LogNormal { sigma: 0.6 };
+        let mut eng = Engine::new(SimConfig { seed, ..Default::default() });
+        let trace = eng.run("p", "p", &[spec], &InjectionPlan::none());
+        let sf = extract_all(&trace, 3.0).remove(0);
+        let stats = compute_native(&sf);
+        let mut prev = usize::MAX;
+        for lq in [0.1, 0.5, 0.9] {
+            let cfg = BigRootsConfig { lambda_q: lq, ..Default::default() };
+            let n = analyze_stage_with_stats(&sf, &stats, &cfg).causes.len();
+            if n > prev {
+                return Err(format!("λ_q={lq} found MORE causes ({n} > {prev})"));
+            }
+            prev = n;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_codec_roundtrip_arbitrary_simulated_traces() {
+    let gen = PairOf(U64Range(0, 100_000), U64Range(5, 40));
+    assert_prop(105, 15, &gen, |&(seed, ntasks)| {
+        let mut spec = StageSpec::base("c", ntasks as usize);
+        spec.spill_prob = 0.3;
+        let mut eng = Engine::new(SimConfig { seed, ..Default::default() });
+        let mut rng = Pcg64::seeded(seed);
+        let plan = InjectionPlan::random_multi_node(&mut rng, &[0, 1, 2, 3, 4], 3, (5.0, 10.0), 60.0);
+        let trace = eng.run("c", "c", &[spec], &plan);
+        let json = codec::encode(&trace);
+        let back = codec::decode(&json).map_err(|e| e.to_string())?;
+        if back == trace {
+            Ok(())
+        } else {
+            Err("codec roundtrip mismatch".into())
+        }
+    });
+}
+
+#[test]
+fn prop_scheduler_conserves_tasks_and_slots() {
+    // Random submission patterns: every task is dispatched exactly once,
+    // never two tasks in one slot, locality only degrades after the wait.
+    let gen = PairOf(U64Range(0, 10_000), U64Range(1, 80));
+    assert_prop(106, 40, &gen, |&(seed, n)| {
+        let mut rng = Pcg64::seeded(seed);
+        let mut spec = StageSpec::base("s", n as usize);
+        if rng.chance(0.5) {
+            spec.input_kind = InputKind::Shuffle;
+        }
+        let tasks = spec.materialize(&mut rng, 0, 0, 4, 2);
+        let mut sched = Scheduler::new(Topology::new(4, 3, 2), 3.0);
+        sched.submit(tasks, 0.0);
+        let mut dispatched = std::collections::HashSet::new();
+        let mut now = 0.0;
+        let mut running: Vec<(usize, usize, u64)> = Vec::new();
+        let mut iterations = 0;
+        while dispatched.len() < n as usize {
+            iterations += 1;
+            if iterations > 1000 {
+                return Err("scheduler wedged".into());
+            }
+            for a in sched.try_assign(now) {
+                // Slot not already occupied by an undischarged task.
+                if running.iter().any(|&(nd, sl, _)| nd == a.node && sl == a.slot) {
+                    return Err(format!("double-booked slot ({}, {})", a.node, a.slot));
+                }
+                if !dispatched.insert(a.spec.task_id) {
+                    return Err(format!("task {} dispatched twice", a.spec.task_id));
+                }
+                // Local dispatch before timeout must match preference.
+                if a.spec.input_kind == InputKind::Hdfs
+                    && now < 3.0
+                    && a.spec.preferred_node != a.node
+                {
+                    return Err("non-local dispatch before locality wait".into());
+                }
+                running.push((a.node, a.slot, a.spec.task_id));
+            }
+            // Complete everything running.
+            for (nd, sl, _) in running.drain(..) {
+                sched.release(nd, sl);
+            }
+            now += 1.7;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_trace_invariants_hold_for_all_workload_sims() {
+    let gen = PairOf(U64Range(0, 1_000), U64Range(0, 10));
+    assert_prop(107, 12, &gen, |&(seed, widx)| {
+        let suite = bigroots::sim::workloads::hibench_suite(0.05);
+        let w = &suite[(widx as usize) % suite.len()];
+        let mut eng = Engine::new(SimConfig { seed, ..Default::default() });
+        let trace = eng.run("w", w.name, &w.stages, &InjectionPlan::none());
+        trace.validate()?;
+        // Samples cover the makespan (+ tail margin for edge windows).
+        for s in &trace.node_series {
+            if (s.len() as f64) * s.period < trace.makespan() {
+                return Err(format!("node {} series shorter than makespan", s.node));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fair_share_conserves_capacity_and_respects_demands() {
+    // Weighted max-min fairness invariants: no user exceeds its desired
+    // rate, the total never exceeds capacity, and capacity is exhausted
+    // whenever aggregate demand exceeds it (work-conserving).
+    use bigroots::sim::resources::{Res, Resource};
+    let gen = VecOf {
+        inner: PairOf(F64Range(0.1, 8.0), F64Range(0.0, 200.0)),
+        min_len: 1,
+        max_len: 24,
+    };
+    assert_prop(108, 200, &gen, |users| {
+        let capacity = 100.0;
+        let mut r = Resource::new(Res::Disk, capacity);
+        for (i, &(w, d)) in users.iter().enumerate() {
+            r.add_user(i as f64, i as u64, w, d);
+        }
+        let total: f64 = (0..users.len()).map(|i| r.rate_of(i as u64)).sum();
+        if total > capacity + 1e-6 {
+            return Err(format!("total rate {total} exceeds capacity"));
+        }
+        for (i, &(_, d)) in users.iter().enumerate() {
+            let got = r.rate_of(i as u64);
+            if got > d + 1e-6 {
+                return Err(format!("user {i} granted {got} above desired {d}"));
+            }
+        }
+        let demand: f64 = users.iter().map(|&(_, d)| d).sum();
+        if demand >= capacity && total < capacity - 1e-6 {
+            return Err(format!(
+                "not work-conserving: demand {demand} but total {total} < {capacity}"
+            ));
+        }
+        if demand < capacity && (total - demand).abs() > 1e-6 {
+            return Err(format!(
+                "undersubscribed: everyone should get desired ({total} vs {demand})"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bucketized_series_preserves_integral() {
+    // Sampling (bucketize) must preserve the utilization integral: the sum
+    // of bucket means × period equals the exact timeline integral.
+    use bigroots::sim::resources::{Res, Resource};
+    let gen = VecOf {
+        inner: PairOf(F64Range(0.0, 50.0), F64Range(0.0, 1.0)),
+        min_len: 1,
+        max_len: 30,
+    };
+    assert_prop(109, 150, &gen, |events| {
+        let mut r = Resource::new(Res::Cpu, 1.0);
+        // One user whose desired rate changes at sorted random times.
+        let mut times: Vec<(f64, f64)> = events.clone();
+        times.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        r.add_user(0.0, 1, 1.0, 0.0);
+        for &(t, d) in &times {
+            r.set_desired(t, 1, d);
+        }
+        let horizon = 60.0;
+        let buckets = r.bucketize(1.0, horizon);
+        let sampled: f64 = buckets.iter().sum::<f64>() * 1.0;
+        // Exact integral from the recorded timeline.
+        let tl = &r.timeline;
+        let mut exact = 0.0;
+        for (i, p) in tl.iter().enumerate() {
+            let end = tl.get(i + 1).map(|q| q.time).unwrap_or(horizon).min(horizon);
+            if end > p.time {
+                exact += p.value * (end - p.time);
+            }
+        }
+        if (sampled - exact).abs() > 1e-6 * exact.max(1.0) {
+            return Err(format!("integral drift: sampled {sampled} vs exact {exact}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_eventlog_roundtrip_for_simulated_traces() {
+    // trace → events → trace is the identity for any simulated workload.
+    let gen = PairOf(U64Range(0, 50_000), U64Range(4, 30));
+    assert_prop(110, 12, &gen, |&(seed, n)| {
+        let mut spec = StageSpec::base("e", n as usize);
+        spec.input_kind = if seed % 2 == 0 { InputKind::Hdfs } else { InputKind::Shuffle };
+        let mut eng = Engine::new(SimConfig { seed, ..Default::default() });
+        let trace = eng.run("e", "e", &[spec], &InjectionPlan::none());
+        let events = bigroots::trace::eventlog::trace_to_events(&trace);
+        let back = bigroots::trace::eventlog::events_to_trace(&events)?;
+        if back == trace {
+            Ok(())
+        } else {
+            Err("eventlog roundtrip mismatch".into())
+        }
+    });
+}

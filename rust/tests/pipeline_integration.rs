@@ -1,0 +1,135 @@
+//! Integration: the full offline workflow across modules — simulate →
+//! save trace → load → analyze → report — plus the streaming path and the
+//! experiment drivers at small scale.
+
+use bigroots::analysis::report::render_table6;
+use bigroots::coordinator::experiments::{self, AgSetting};
+use bigroots::coordinator::{ExperimentConfig, Pipeline, StreamAnalyzer};
+use bigroots::sim::{workloads, Engine, InjectionPlan, SimConfig};
+use bigroots::trace::{codec, eventlog, AnomalyKind};
+
+#[test]
+fn simulate_save_load_analyze_roundtrip() {
+    let w = workloads::wordcount(0.4);
+    let mut eng = Engine::new(SimConfig { seed: 61, ..Default::default() });
+    let trace = eng.run("it", w.name, &w.stages, &InjectionPlan::none());
+
+    let path = std::env::temp_dir().join("bigroots_it_trace.json");
+    let path = path.to_str().unwrap();
+    codec::save(&trace, path).unwrap();
+    let loaded = codec::load(path).unwrap();
+    assert_eq!(trace, loaded);
+    let _ = std::fs::remove_file(path);
+
+    let mut p = Pipeline::native();
+    let a = p.analyze(&loaded, w.domain);
+    assert_eq!(a.per_stage.len(), loaded.stages.len());
+    // Every annotation references a real task and a real straggler.
+    for ann in &a.annotations {
+        let t = loaded.tasks.iter().find(|t| t.task_id == ann.task_id).unwrap();
+        assert!(t.duration() > 0.0);
+        assert!(ann.scale > 1.5);
+    }
+}
+
+#[test]
+fn offline_and_streaming_agree_on_conclusions() {
+    let w = workloads::aggregation(0.5);
+    let mut eng = Engine::new(SimConfig { seed: 62, ..Default::default() });
+    let plan = InjectionPlan::intermittent(AnomalyKind::Cpu, 3, 10.0, 15.0, 200.0);
+    let trace = eng.run("it2", w.name, &w.stages, &plan);
+
+    let mut offline = Pipeline::native();
+    let off = offline.analyze(&trace, w.domain);
+
+    let mut stream =
+        StreamAnalyzer::new(Box::new(bigroots::analysis::NativeBackend), Default::default());
+    for e in eventlog::trace_to_events(&trace) {
+        stream.feed(&e);
+    }
+    assert_eq!(stream.results.len(), off.per_stage.len());
+    for (s, (_, o)) in stream.results.iter().zip(&off.per_stage) {
+        assert_eq!(s.stragglers.rows, o.stragglers.rows, "straggler sets must agree");
+        // Resource features may differ slightly (the stream has fewer tail
+        // samples for edge windows at stage completion); framework causes
+        // must be identical.
+        let fw = |a: &bigroots::analysis::StageAnalysis| {
+            let mut v: Vec<_> = a
+                .causes
+                .iter()
+                .filter(|c| {
+                    !matches!(
+                        c.kind.category(),
+                        bigroots::analysis::FeatureCategory::Resource
+                    )
+                })
+                .map(|c| (c.row, c.kind))
+                .collect();
+            v.sort_by_key(|&(r, k)| (r, k.index()));
+            v
+        };
+        assert_eq!(fw(s), fw(o));
+    }
+}
+
+#[test]
+fn event_log_file_roundtrip_through_cli_layers() {
+    let w = workloads::terasort(0.4);
+    let mut eng = Engine::new(SimConfig { seed: 63, ..Default::default() });
+    let trace = eng.run("it3", w.name, &w.stages, &InjectionPlan::none());
+    let events = eventlog::trace_to_events(&trace);
+    let path = std::env::temp_dir().join("bigroots_it_events.ndjson");
+    let path = path.to_str().unwrap();
+    eventlog::write_events(&events, path).unwrap();
+    let text = std::fs::read_to_string(path).unwrap();
+    let parsed = eventlog::parse_events(&text).unwrap();
+    assert_eq!(events, parsed);
+    let rebuilt = eventlog::events_to_trace(&parsed).unwrap();
+    assert_eq!(trace, rebuilt);
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn experiment_config_end_to_end() {
+    let cfg = ExperimentConfig::from_json(
+        r#"{
+            "workload": "Sort", "scale": 0.3, "seed": 9,
+            "injection": {"type": "intermittent", "kind": "io", "node": 2, "horizon": 120}
+        }"#,
+    )
+    .unwrap();
+    let w = workloads::by_name(&cfg.workload, cfg.scale).unwrap();
+    let plan = cfg.injection.plan(cfg.seed, cfg.sim.nodes);
+    assert!(!plan.injections.is_empty());
+    let mut eng = Engine::new(cfg.sim.clone());
+    let trace = eng.run("cfg", w.name, &w.stages, &plan);
+    trace.validate().unwrap();
+    let mut p = Pipeline::native();
+    p.bigroots = cfg.bigroots;
+    let a = p.analyze(&trace, w.domain);
+    assert_eq!(a.per_stage.len(), trace.stages.len());
+}
+
+#[test]
+fn table_drivers_small_scale_smoke() {
+    // Each driver at tiny scale: exercises the full experiment plumbing.
+    let t3 = experiments::table3(1, 0.25, 71);
+    assert_eq!(t3.len(), 3);
+    let t5 = experiments::table5(0.4, 71);
+    let total = t5.bigroots.tp + t5.bigroots.tn + t5.bigroots.fp + t5.bigroots.fn_;
+    assert!(total > 0);
+    let t6 = experiments::table6(0.06, 71);
+    assert_eq!(t6.len(), 11);
+    assert!(render_table6(&t6).contains("Kmeans"));
+    let f7 = experiments::fig7(2, 0.25, 71);
+    assert_eq!(f7.len(), 5);
+    let f9 = experiments::fig9(AgSetting::Single(AnomalyKind::Io), 1, 0.25, 71);
+    assert!(f9.with_edge.fpr() <= f9.without_edge.fpr() + 1e-12);
+}
+
+#[test]
+fn deterministic_experiments() {
+    let a = experiments::run_verification_job(AgSetting::Mixed, 5, 0.3);
+    let b = experiments::run_verification_job(AgSetting::Mixed, 5, 0.3);
+    assert_eq!(a, b);
+}

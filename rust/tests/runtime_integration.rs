@@ -1,0 +1,152 @@
+//! Integration: the PJRT runtime against the real AOT artifacts — loading,
+//! shape validation, the edge-means module, and repeated execution
+//! (compile-once semantics). Skips gracefully when `make artifacts` has
+//! not run.
+
+use bigroots::runtime::{Manifest, PjrtRuntime, XlaBackend};
+
+fn artifacts_dir() -> Option<String> {
+    let dir = XlaBackend::default_dir();
+    if std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn manifest_describes_artifacts_on_disk() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    assert_eq!(m.num_features, 12);
+    assert_eq!(m.grid_q, 21);
+    assert!(!m.buckets.is_empty());
+    for b in &m.buckets {
+        for kind in ["stage_stats", "edge_means"] {
+            let p = format!("{dir}/{kind}_t{b}.hlo.txt");
+            assert!(std::path::Path::new(&p).exists(), "missing {p}");
+        }
+    }
+}
+
+#[test]
+fn stage_stats_artifact_loads_and_runs_raw() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let bucket = *m.buckets.iter().min().unwrap();
+    let rt = PjrtRuntime::cpu().unwrap();
+    let module = rt.load_hlo_text(&format!("{dir}/stage_stats_t{bucket}.hlo.txt")).unwrap();
+
+    let f = m.num_features;
+    let t = bucket;
+    // Two valid rows: x = 1.0 everywhere, durations 2 and 4, nodes 0 and 1.
+    let mut x = vec![0f32; t * f];
+    for k in 0..f {
+        x[k] = 1.0;
+        x[f + k] = 3.0;
+    }
+    let mut dur = vec![0f32; t];
+    dur[0] = 2.0;
+    dur[1] = 4.0;
+    let mut mask = vec![0f32; t];
+    mask[0] = 1.0;
+    mask[1] = 1.0;
+    let mut onehot = vec![0f32; m.max_nodes * t];
+    onehot[0] = 1.0; // node 0, task 0
+    onehot[t + 1] = 1.0; // node 1, task 1
+    // Presorted columns (v2 artifact interface): {1, 3} ascending, padding
+    // filled with the column max.
+    let mut x_sorted = vec![3.0f32; t * f];
+    for k in 0..f {
+        x_sorted[k] = 1.0;
+    }
+
+    let out = module
+        .run_f32(&[
+            (&x, &[t as i64, f as i64]),
+            (&x_sorted, &[t as i64, f as i64]),
+            (&dur, &[t as i64]),
+            (&mask, &[t as i64]),
+            (&onehot, &[m.max_nodes as i64, t as i64]),
+        ])
+        .unwrap();
+    assert_eq!(out.len(), 6);
+    let col = &out[0];
+    assert!((col[0] - 4.0).abs() < 1e-5, "col_sum[0] = 1 + 3");
+    assert!((col[f] - 10.0).abs() < 1e-5, "col_sumsq[0] = 1 + 9");
+    assert!((col[2 * f] - 14.0).abs() < 1e-5, "dot_dur[0] = 1*2 + 3*4");
+    let dur_stats = &out[1];
+    assert!((dur_stats[2] - 2.0).abs() < 1e-6, "count");
+    // Quantiles of {1, 3}: q0 = 1, q1 = 3, median 2.
+    let quants = &out[4];
+    assert!((quants[0] - 1.0).abs() < 1e-5);
+    assert!((quants[(m.grid_q - 1) * f] - 3.0).abs() < 1e-5);
+    assert!((quants[(m.grid_q / 2) * f] - 2.0).abs() < 1e-5);
+    // Pearson of identical-ordering pairs = 1.
+    let pearson = &out[5];
+    assert!((pearson[0] - 1.0).abs() < 1e-4);
+}
+
+#[test]
+fn edge_means_artifact_computes_window_means() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let bucket = *m.buckets.iter().min().unwrap();
+    let rt = PjrtRuntime::cpu().unwrap();
+    let module = rt.load_hlo_text(&format!("{dir}/edge_means_t{bucket}.hlo.txt")).unwrap();
+    let w = m.edge_window;
+    let cw = 3 * w;
+    let mut head = vec![0f32; bucket * cw];
+    let tail = vec![0.25f32; bucket * cw];
+    // Row 0: cpu window = [1..w], disk = 2s, net = 3s.
+    for i in 0..w {
+        head[i] = (i + 1) as f32;
+        head[w + i] = 2.0;
+        head[2 * w + i] = 3.0;
+    }
+    let out = module
+        .run_f32(&[
+            (&head, &[bucket as i64, cw as i64]),
+            (&tail, &[bucket as i64, cw as i64]),
+        ])
+        .unwrap();
+    assert_eq!(out.len(), 2);
+    let hmean = &out[0];
+    let expected_cpu = (1..=w).sum::<usize>() as f32 / w as f32;
+    assert!((hmean[0] - expected_cpu).abs() < 1e-5);
+    assert!((hmean[1] - 2.0).abs() < 1e-6);
+    assert!((hmean[2] - 3.0).abs() < 1e-6);
+    assert!((out[1][0] - 0.25).abs() < 1e-6);
+}
+
+#[test]
+fn backend_compiles_once_and_reuses_modules() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut backend = XlaBackend::open(&dir).unwrap();
+    let mut spec = bigroots::sim::StageSpec::base("r", 50);
+    spec.input_mean_bytes = 2e6;
+    let mut eng = bigroots::sim::Engine::new(bigroots::sim::SimConfig {
+        seed: 91,
+        ..Default::default()
+    });
+    let trace = eng.run("r", "r", &[spec], &bigroots::sim::InjectionPlan::none());
+    let sf = bigroots::analysis::extract_all(&trace, 3.0).remove(0);
+    use bigroots::analysis::StatsBackend;
+    let t0 = std::time::Instant::now();
+    let first = backend.stage_stats(&sf);
+    let cold = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    for _ in 0..5 {
+        let again = backend.stage_stats(&sf);
+        assert_eq!(first, again, "XLA backend must be deterministic");
+    }
+    let warm_each = t1.elapsed() / 5;
+    assert_eq!(backend.xla_count, 6);
+    // Warm calls must not recompile: at least ~2x faster than the cold call
+    // (in practice compile dominates; this guards the cache).
+    assert!(
+        warm_each < cold,
+        "warm {warm_each:?} should undercut cold {cold:?} (module cache broken?)"
+    );
+}
