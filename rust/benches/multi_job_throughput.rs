@@ -1,0 +1,61 @@
+//! Bench: multi-job streaming service throughput — events/sec through the
+//! full ingest → demux → watermark → batched-analysis path, for 1 vs 8
+//! concurrently interleaved jobs and for different worker counts. Event
+//! streams are pre-generated; the timed region is the service alone.
+//!
+//! Run: `cargo bench --bench multi_job_throughput [-- --quick]`
+
+use bigroots::coordinator::{AnalysisService, ServiceConfig};
+use bigroots::sim::multi::{interleaved_workload, round_robin_specs};
+use bigroots::testing::bench::{black_box, Bench};
+use bigroots::trace::eventlog::TaggedEvent;
+
+fn serve(events: &[TaggedEvent], shards: usize, workers: usize, batch: usize) -> usize {
+    let mut svc = AnalysisService::new(ServiceConfig {
+        shards,
+        workers,
+        batch_size: batch,
+        ..Default::default()
+    });
+    svc.feed_all(events);
+    let report = svc.finish();
+    report.total_stages()
+}
+
+fn main() {
+    let mut bench = Bench::new();
+    let scale = if bench.quick { 0.08 } else { 0.15 };
+
+    // --- fixtures: interleaved event streams ------------------------------
+    let (_, one_job) = interleaved_workload(&round_robin_specs(1, scale, 17));
+    let (_, eight_jobs) = interleaved_workload(&round_robin_specs(8, scale, 17));
+    println!(
+        "(streams: 1 job = {} events, 8 jobs = {} events, scale {scale})",
+        one_job.len(),
+        eight_jobs.len()
+    );
+
+    // --- 1 vs 8 jobs at the default service shape -------------------------
+    bench.run("service/jobs=1/workers=4", one_job.len() as f64, || {
+        black_box(serve(&one_job, 4, 4, 8));
+    });
+    bench.run("service/jobs=8/workers=4", eight_jobs.len() as f64, || {
+        black_box(serve(&eight_jobs, 4, 4, 8));
+    });
+
+    // --- worker scaling at 8 jobs -----------------------------------------
+    for workers in [1usize, 2, 8] {
+        let name = format!("service/jobs=8/workers={workers}");
+        bench.run(&name, eight_jobs.len() as f64, || {
+            black_box(serve(&eight_jobs, 4, workers, 8));
+        });
+    }
+
+    // --- batching effect ---------------------------------------------------
+    for batch in [1usize, 32] {
+        let name = format!("service/jobs=8/batch={batch}");
+        bench.run(&name, eight_jobs.len() as f64, || {
+            black_box(serve(&eight_jobs, 4, 4, batch));
+        });
+    }
+}

@@ -82,7 +82,7 @@ pub enum PeerEvidence {
 }
 
 /// One identified root cause: feature `kind` explains straggler `row`.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RootCause {
     pub row: usize,
     pub task_id: u64,
@@ -94,8 +94,10 @@ pub struct RootCause {
     pub peer: PeerEvidence,
 }
 
-/// Analysis result of one stage.
-#[derive(Debug, Clone)]
+/// Analysis result of one stage. `PartialEq` supports the streaming-vs-
+/// batch parity tests: two analyses are equal only when every straggler
+/// row, cause, threshold and evidence value matches bit-for-bit.
+#[derive(Debug, Clone, PartialEq)]
 pub struct StageAnalysis {
     pub stage_id: u64,
     pub stragglers: StragglerSet,

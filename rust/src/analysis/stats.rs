@@ -100,6 +100,16 @@ impl StageStats {
 /// Implemented natively below and by the XLA runtime.
 pub trait StatsBackend {
     fn stage_stats(&mut self, sf: &StageFeatures) -> StageStats;
+
+    /// Compute stats for a batch of ready stages in one dispatch. Backends
+    /// with per-call overhead (device transfer, artifact selection) can
+    /// override this to amortize it; the default just loops. The streaming
+    /// [`crate::coordinator::service::AnalysisService`] and the offline
+    /// pipeline both route through this entry point.
+    fn stage_stats_batch(&mut self, sfs: &[&StageFeatures]) -> Vec<StageStats> {
+        sfs.iter().map(|sf| self.stage_stats(sf)).collect()
+    }
+
     /// Human-readable backend name (for reports / perf logs).
     fn name(&self) -> &'static str;
 }

@@ -2,7 +2,12 @@
 //! the workflows a user actually runs.
 //!
 //! - [`pipeline`] — the offline analysis pipeline (Fig. 1 of the paper)
-//! - [`streaming`] — event-stream analysis (stage-complete granularity)
+//! - [`streaming`] — event-stream analysis (stage-complete granularity):
+//!   the per-job [`streaming::JobState`] accumulator and the single-job
+//!   [`StreamAnalyzer`]
+//! - [`service`] — the sharded, concurrent multi-job [`AnalysisService`]
+//!   (interleaved ingest, worker pool, batched backend dispatch,
+//!   backpressure, metrics)
 //! - [`experiments`] — one driver per paper table/figure (shared by
 //!   benches and examples)
 //! - [`config`] — declarative experiment configuration files
@@ -10,9 +15,11 @@
 pub mod config;
 pub mod experiments;
 pub mod pipeline;
+pub mod service;
 pub mod streaming;
 
 pub use config::{ExperimentConfig, InjectionSpec};
 pub use experiments::AgSetting;
 pub use pipeline::{JobAnalysis, Pipeline};
+pub use service::{AnalysisService, ServiceConfig, ServiceMetrics, ServiceReport};
 pub use streaming::StreamAnalyzer;

@@ -53,13 +53,19 @@ impl Pipeline {
         Self::new(Box::new(crate::analysis::stats::NativeBackend))
     }
 
-    /// Analyze a complete trace.
+    /// Analyze a complete trace. All stages go to the backend as one
+    /// batched dispatch ([`StatsBackend::stage_stats_batch`]) — the same
+    /// amortized entry point the streaming service uses — and one stats
+    /// pass per stage serves both analyzers.
     pub fn analyze(&mut self, trace: &JobTrace, domain: &str) -> JobAnalysis {
+        let features = extract_all(trace, self.bigroots.edge_width);
+        let refs: Vec<&_> = features.iter().collect();
+        let stats = self.backend.stage_stats_batch(&refs);
+        // A short stats vec would silently drop stages via zip below.
+        assert_eq!(stats.len(), features.len(), "backend returned wrong batch size");
         let mut per_stage = Vec::new();
         let mut pcc_per_stage = Vec::new();
-        for sf in extract_all(trace, self.bigroots.edge_width) {
-            // One stats pass serves both analyzers.
-            let stats = self.backend.stage_stats(&sf);
+        for (sf, stats) in features.into_iter().zip(stats) {
             let a = analyze_stage_with_stats(&sf, &stats, &self.bigroots);
             if let Some(pcfg) = &self.pcc {
                 pcc_per_stage.push(pcc::analyze_stage_with_stats(&sf, &stats, pcfg));

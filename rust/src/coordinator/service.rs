@@ -1,0 +1,524 @@
+//! The multi-job concurrent streaming analysis service.
+//!
+//! [`AnalysisService`] is the front-end a busy cluster talks to: a single
+//! interleaved event stream carrying many jobs' events (tagged with
+//! [`crate::trace::eventlog::TaggedEvent`]) is demultiplexed onto per-job
+//! [`JobState`] accumulators grouped into **shards**, stage analyses are
+//! **batched** and dispatched to a [`ThreadPool`] of workers that each own
+//! a [`StatsBackend`], and the ingest path applies **backpressure** when
+//! the workers fall behind.
+//!
+//! Determinism guarantee: a job's analyses depend only on that job's event
+//! subsequence. Cross-job interleaving, shard count, worker count and batch
+//! size change throughput, never results — per-job outputs are reassembled
+//! by emission sequence number. In deferred-watermark mode (always on
+//! here), each per-stage [`StageAnalysis`] is bit-identical to what the
+//! offline batch [`crate::coordinator::Pipeline`] produces for that job's
+//! whole trace; `rust/tests/coordinator_props.rs` and
+//! `rust/tests/service_integration.rs` assert both properties.
+//!
+//! ```text
+//!   tagged events ──demux──▶ shard 0 [job 3, job 6, …]  ─┐ ready stages
+//!                            shard 1 [job 1, job 4, …]  ─┤──▶ batch ──▶ pool
+//!                            shard 2 [job 2, job 5, …]  ─┘      │  workers run
+//!                                                               ▼  stats+rules
+//!                            per-job results ◀─── channel ◀── batches
+//! ```
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::analysis::bigroots::{analyze_stage_with_stats, BigRootsConfig, StageAnalysis};
+use crate::analysis::features::StageFeatures;
+use crate::analysis::stats::{NativeBackend, StatsBackend};
+use crate::coordinator::streaming::JobState;
+use crate::trace::eventlog::{Event, TaggedEvent};
+use crate::util::threadpool::ThreadPool;
+
+/// Service tuning knobs. Correctness is independent of all of them.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Number of job shards (metric granularity + demux fan-out).
+    pub shards: usize,
+    /// Worker threads; each owns one stats backend.
+    pub workers: usize,
+    /// Ready stages accumulated before a batch is dispatched.
+    pub batch_size: usize,
+    /// Backpressure threshold: ingest blocks (draining results) while this
+    /// many batches are queued or running on the pool.
+    pub max_in_flight_batches: usize,
+    /// Analyzer thresholds (paper defaults).
+    pub bigroots: BigRootsConfig,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            shards: 4,
+            workers: 4,
+            batch_size: 8,
+            max_in_flight_batches: 8,
+            bigroots: BigRootsConfig::default(),
+        }
+    }
+}
+
+/// One frozen stage analysis request, routed to a worker.
+struct AnalysisRequest {
+    job_id: u64,
+    seq: u64,
+    features: StageFeatures,
+}
+
+/// Per-shard ingest state and counters.
+struct Shard {
+    jobs: HashMap<u64, JobState>,
+    events: usize,
+    stages_ready: usize,
+    stages_analyzed: usize,
+}
+
+impl Shard {
+    fn new() -> Self {
+        Shard { jobs: HashMap::new(), events: 0, stages_ready: 0, stages_analyzed: 0 }
+    }
+}
+
+/// Snapshot of service health — per-job and per-shard throughput counters
+/// plus the current queue depth.
+#[derive(Debug, Clone)]
+pub struct ServiceMetrics {
+    pub events_total: usize,
+    pub jobs_seen: usize,
+    pub stages_analyzed: usize,
+    pub batches_dispatched: usize,
+    pub batches_completed: usize,
+    /// Ready stages waiting for the next batch + batches on the pool.
+    pub queue_depth: usize,
+    pub per_shard: Vec<ShardMetrics>,
+    /// (job id, events ingested) sorted by job id.
+    pub per_job_events: Vec<(u64, usize)>,
+    pub elapsed_secs: f64,
+    /// Ingest throughput since service start.
+    pub events_per_sec: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ShardMetrics {
+    pub shard: usize,
+    pub jobs: usize,
+    pub events: usize,
+    pub stages_ready: usize,
+    pub stages_analyzed: usize,
+}
+
+/// Final output of a service run.
+#[derive(Debug)]
+pub struct ServiceReport {
+    /// Per-job analyses in stage-emission order, sorted by job id.
+    pub per_job: Vec<(u64, Vec<StageAnalysis>)>,
+    /// Jobs with stages that never completed (truncated streams).
+    pub incomplete: Vec<(u64, Vec<u64>)>,
+    pub metrics: ServiceMetrics,
+}
+
+impl ServiceReport {
+    /// Analyses for one job, if it was seen.
+    pub fn job(&self, job_id: u64) -> Option<&[StageAnalysis]> {
+        self.per_job
+            .iter()
+            .find(|(id, _)| *id == job_id)
+            .map(|(_, v)| v.as_slice())
+    }
+
+    pub fn total_stages(&self) -> usize {
+        self.per_job.iter().map(|(_, v)| v.len()).sum()
+    }
+
+    pub fn total_stragglers(&self) -> usize {
+        self.per_job
+            .iter()
+            .flat_map(|(_, v)| v.iter())
+            .map(|a| a.stragglers.rows.len())
+            .sum()
+    }
+}
+
+type BatchResult = Vec<(u64, u64, StageAnalysis)>;
+
+/// The concurrent multi-job streaming analyzer. See module docs.
+pub struct AnalysisService {
+    cfg: ServiceConfig,
+    pool: ThreadPool,
+    /// One backend per worker thread, checked out for a batch's duration.
+    backends: Arc<Mutex<Vec<Box<dyn StatsBackend + Send>>>>,
+    shards: Vec<Shard>,
+    pending: Vec<AnalysisRequest>,
+    results_tx: Sender<BatchResult>,
+    results_rx: Receiver<BatchResult>,
+    collected: HashMap<u64, Vec<(u64, StageAnalysis)>>,
+    dispatched_batches: usize,
+    completed_batches: usize,
+    events_total: usize,
+    started: Instant,
+}
+
+impl AnalysisService {
+    /// Service with one [`NativeBackend`] per worker.
+    pub fn new(cfg: ServiceConfig) -> Self {
+        let backends: Vec<Box<dyn StatsBackend + Send>> = (0..cfg.workers.max(1))
+            .map(|_| Box::new(NativeBackend) as Box<dyn StatsBackend + Send>)
+            .collect();
+        Self::with_backends(cfg, backends)
+    }
+
+    /// Service over caller-supplied backends (one per worker; the worker
+    /// count follows the backend count). An empty list gets one
+    /// [`NativeBackend`] — a worker must never find the pool empty.
+    pub fn with_backends(
+        mut cfg: ServiceConfig,
+        mut backends: Vec<Box<dyn StatsBackend + Send>>,
+    ) -> Self {
+        if backends.is_empty() {
+            backends.push(Box::new(NativeBackend));
+        }
+        cfg.workers = backends.len();
+        cfg.shards = cfg.shards.max(1);
+        cfg.batch_size = cfg.batch_size.max(1);
+        cfg.max_in_flight_batches = cfg.max_in_flight_batches.max(1);
+        let (results_tx, results_rx) = channel();
+        let shards = (0..cfg.shards).map(|_| Shard::new()).collect();
+        AnalysisService {
+            pool: ThreadPool::new(cfg.workers),
+            backends: Arc::new(Mutex::new(backends)),
+            cfg,
+            shards,
+            pending: Vec::new(),
+            results_tx,
+            results_rx,
+            collected: HashMap::new(),
+            dispatched_batches: 0,
+            completed_batches: 0,
+            events_total: 0,
+            started: Instant::now(),
+        }
+    }
+
+    fn shard_of(&self, job_id: u64) -> usize {
+        (job_id % self.cfg.shards as u64) as usize
+    }
+
+    /// Ingest one tagged event. Blocks (draining results) when the worker
+    /// pool is more than `max_in_flight_batches` behind — that is the
+    /// backpressure contract: `feed` returning means the event is accepted
+    /// and the queue is within bounds.
+    pub fn feed(&mut self, event: &TaggedEvent) {
+        self.feed_job(event.job_id, &event.event);
+    }
+
+    /// Ingest one event for an explicit job id.
+    pub fn feed_job(&mut self, job_id: u64, event: &Event) {
+        self.events_total += 1;
+        let edge_width = self.cfg.bigroots.edge_width;
+        let shard_idx = self.shard_of(job_id);
+        let ready = {
+            let shard = &mut self.shards[shard_idx];
+            shard.events += 1;
+            let state = shard
+                .jobs
+                .entry(job_id)
+                .or_insert_with(|| JobState::new_deferred(edge_width));
+            let ready = state.feed(event);
+            shard.stages_ready += ready.len();
+            ready
+        };
+        for r in ready {
+            self.pending.push(AnalysisRequest { job_id, seq: r.seq, features: r.features });
+        }
+        if self.pending.len() >= self.cfg.batch_size {
+            self.dispatch_pending();
+        }
+        self.drain_nonblocking();
+    }
+
+    /// Ingest a whole slice of tagged events.
+    pub fn feed_all(&mut self, events: &[TaggedEvent]) {
+        for e in events {
+            self.feed(e);
+        }
+    }
+
+    /// Batches dispatched but not yet returned by the workers.
+    pub fn in_flight_batches(&self) -> usize {
+        self.dispatched_batches.saturating_sub(self.completed_batches)
+    }
+
+    /// Ready-but-undispatched stages plus in-flight batches — the signal
+    /// `feed` compares against the backpressure threshold.
+    pub fn queue_depth(&self) -> usize {
+        self.pending.len() + self.pool.in_flight()
+    }
+
+    fn dispatch_pending(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        // Backpressure: wait for workers before queueing yet another batch.
+        // A drain timeout (lost/stuck batch) breaks out rather than
+        // livelocking ingest; the shortfall surfaces in the final report.
+        while self.in_flight_batches() >= self.cfg.max_in_flight_batches {
+            if !self.drain_one_blocking() {
+                break;
+            }
+        }
+        let batch = std::mem::take(&mut self.pending);
+        let backends = Arc::clone(&self.backends);
+        let tx = self.results_tx.clone();
+        let cfg = self.cfg.bigroots;
+        self.dispatched_batches += 1;
+        self.pool.spawn(move || {
+            // At most `workers` jobs run concurrently (one per pool thread),
+            // so a backend is always available here.
+            let mut backend =
+                backends.lock().unwrap().pop().expect("one stats backend per worker");
+            let refs: Vec<&StageFeatures> = batch.iter().map(|r| &r.features).collect();
+            let stats = backend.stage_stats_batch(&refs);
+            // A short stats vec would silently drop stages via zip below.
+            assert_eq!(stats.len(), batch.len(), "backend returned wrong batch size");
+            let out: BatchResult = batch
+                .iter()
+                .zip(stats.iter())
+                .map(|(r, st)| {
+                    (r.job_id, r.seq, analyze_stage_with_stats(&r.features, st, &cfg))
+                })
+                .collect();
+            backends.lock().unwrap().push(backend);
+            let _ = tx.send(out);
+        });
+    }
+
+    fn absorb(&mut self, batch: BatchResult) {
+        self.completed_batches += 1;
+        for (job_id, seq, analysis) in batch {
+            let shard_idx = self.shard_of(job_id);
+            self.shards[shard_idx].stages_analyzed += 1;
+            self.collected.entry(job_id).or_default().push((seq, analysis));
+        }
+    }
+
+    fn drain_nonblocking(&mut self) {
+        while let Ok(b) = self.results_rx.try_recv() {
+            self.absorb(b);
+        }
+    }
+
+    /// Wait for one batch result; false on timeout (a lost or very slow
+    /// batch). The completed counter only ever moves in `absorb`, so a
+    /// slow batch that arrives *after* a timeout is still counted exactly
+    /// once — callers just stop waiting on it.
+    fn drain_one_blocking(&mut self) -> bool {
+        if self.in_flight_batches() == 0 {
+            return false;
+        }
+        // A worker panic would lose its batch and leave the counter stuck;
+        // the (generous) timeout turns that bug into a visible shortfall
+        // instead of a deadlocked ingest thread.
+        match self.results_rx.recv_timeout(std::time::Duration::from_secs(60)) {
+            Ok(b) => {
+                self.absorb(b);
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Current health snapshot.
+    pub fn metrics(&self) -> ServiceMetrics {
+        let elapsed = self.started.elapsed().as_secs_f64();
+        let mut per_job_events: Vec<(u64, usize)> = self
+            .shards
+            .iter()
+            .flat_map(|s| s.jobs.iter().map(|(id, st)| (*id, st.events_seen)))
+            .collect();
+        per_job_events.sort_by_key(|(id, _)| *id);
+        ServiceMetrics {
+            events_total: self.events_total,
+            jobs_seen: per_job_events.len(),
+            stages_analyzed: self.shards.iter().map(|s| s.stages_analyzed).sum(),
+            batches_dispatched: self.dispatched_batches,
+            batches_completed: self.completed_batches,
+            queue_depth: self.queue_depth(),
+            per_shard: self
+                .shards
+                .iter()
+                .enumerate()
+                .map(|(i, s)| ShardMetrics {
+                    shard: i,
+                    jobs: s.jobs.len(),
+                    events: s.events,
+                    stages_ready: s.stages_ready,
+                    stages_analyzed: s.stages_analyzed,
+                })
+                .collect(),
+            per_job_events,
+            elapsed_secs: elapsed,
+            events_per_sec: if elapsed > 0.0 { self.events_total as f64 / elapsed } else { 0.0 },
+        }
+    }
+
+    /// End of stream: flush every job's held stages, dispatch the remaining
+    /// partial batch, wait for all workers, and assemble the report.
+    pub fn finish(mut self) -> ServiceReport {
+        for shard_idx in 0..self.shards.len() {
+            let flushed: Vec<AnalysisRequest> = {
+                let shard = &mut self.shards[shard_idx];
+                let mut job_ids: Vec<u64> = shard.jobs.keys().copied().collect();
+                job_ids.sort_unstable();
+                let mut out = Vec::new();
+                for job_id in job_ids {
+                    let state = shard.jobs.get_mut(&job_id).unwrap();
+                    for r in state.flush() {
+                        out.push(AnalysisRequest { job_id, seq: r.seq, features: r.features });
+                    }
+                }
+                shard.stages_ready += out.len();
+                out
+            };
+            self.pending.extend(flushed);
+        }
+        self.dispatch_pending();
+        while self.in_flight_batches() > 0 {
+            match self.results_rx.recv_timeout(std::time::Duration::from_secs(60)) {
+                Ok(b) => self.absorb(b),
+                Err(_) => break,
+            }
+        }
+
+        let mut per_job: Vec<(u64, Vec<StageAnalysis>)> = Vec::new();
+        let mut job_ids: Vec<u64> = self.collected.keys().copied().collect();
+        job_ids.sort_unstable();
+        for job_id in job_ids {
+            let mut rows = self.collected.remove(&job_id).unwrap();
+            rows.sort_by_key(|(seq, _)| *seq);
+            per_job.push((job_id, rows.into_iter().map(|(_, a)| a).collect()));
+        }
+
+        let mut incomplete: Vec<(u64, Vec<u64>)> = Vec::new();
+        for shard in &self.shards {
+            for (job_id, state) in &shard.jobs {
+                let inc = state.incomplete_stages();
+                if !inc.is_empty() {
+                    incomplete.push((*job_id, inc));
+                }
+            }
+        }
+        incomplete.sort_by_key(|(id, _)| *id);
+
+        let metrics = self.metrics();
+        ServiceReport { per_job, incomplete, metrics }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pipeline::Pipeline;
+    use crate::sim::{workloads, Engine, InjectionPlan, SimConfig};
+    use crate::trace::eventlog::interleave_jobs;
+    use crate::trace::JobTrace;
+
+    fn job(seed: u64, scale: f64) -> JobTrace {
+        let w = workloads::wordcount(scale);
+        let mut eng = Engine::new(SimConfig { seed, ..Default::default() });
+        eng.run("svc-test", w.name, &w.stages, &InjectionPlan::none())
+    }
+
+    #[test]
+    fn two_jobs_interleaved_match_batch() {
+        let a = job(71, 0.3);
+        let b = job(72, 0.3);
+        let events = interleave_jobs(&[(1, &a), (2, &b)]);
+        let mut svc = AnalysisService::new(ServiceConfig {
+            shards: 2,
+            workers: 2,
+            batch_size: 2,
+            ..Default::default()
+        });
+        svc.feed_all(&events);
+        let report = svc.finish();
+        assert_eq!(report.per_job.len(), 2);
+        for (jid, trace) in [(1u64, &a), (2u64, &b)] {
+            let got = report.job(jid).unwrap();
+            let mut p = Pipeline::native();
+            let want = p.analyze(trace, "t");
+            assert_eq!(got.len(), want.per_stage.len());
+            for (g, (_, w)) in got.iter().zip(&want.per_stage) {
+                assert_eq!(g, w);
+            }
+        }
+        assert!(report.incomplete.is_empty());
+        assert_eq!(report.metrics.events_total, events.len());
+        assert_eq!(report.metrics.jobs_seen, 2);
+        assert_eq!(report.metrics.stages_analyzed, report.total_stages());
+    }
+
+    #[test]
+    fn single_worker_single_shard_same_results() {
+        let a = job(73, 0.25);
+        let events = interleave_jobs(&[(5, &a)]);
+        let mut svc = AnalysisService::new(ServiceConfig {
+            shards: 1,
+            workers: 1,
+            batch_size: 1,
+            max_in_flight_batches: 1,
+            ..Default::default()
+        });
+        svc.feed_all(&events);
+        let report = svc.finish();
+        let mut p = Pipeline::native();
+        let want = p.analyze(&a, "t");
+        let got = report.job(5).unwrap();
+        assert_eq!(got.len(), want.per_stage.len());
+        for (g, (_, w)) in got.iter().zip(&want.per_stage) {
+            assert_eq!(g, w);
+        }
+    }
+
+    #[test]
+    fn truncated_multi_job_stream_reports_incomplete() {
+        let a = job(74, 0.3);
+        let b = job(75, 0.3);
+        let events = interleave_jobs(&[(1, &a), (2, &b)]);
+        let cut = events.len() / 3;
+        let mut svc = AnalysisService::new(ServiceConfig::default());
+        svc.feed_all(&events[..cut]);
+        let report = svc.finish();
+        let analyzed = report.total_stages();
+        let incomplete: usize = report.incomplete.iter().map(|(_, v)| v.len()).sum();
+        assert!(analyzed + incomplete > 0);
+        assert_eq!(report.metrics.events_total, cut);
+    }
+
+    #[test]
+    fn metrics_track_shard_routing() {
+        let a = job(76, 0.25);
+        let b = job(77, 0.25);
+        let events = interleave_jobs(&[(0, &a), (1, &b)]);
+        let mut svc = AnalysisService::new(ServiceConfig {
+            shards: 2,
+            ..Default::default()
+        });
+        svc.feed_all(&events);
+        let m = svc.metrics();
+        // Job 0 → shard 0, job 1 → shard 1.
+        assert_eq!(m.per_shard.len(), 2);
+        assert_eq!(m.per_shard[0].jobs, 1);
+        assert_eq!(m.per_shard[1].jobs, 1);
+        assert_eq!(m.per_shard[0].events + m.per_shard[1].events, events.len());
+        assert_eq!(m.per_job_events.len(), 2);
+        let report = svc.finish();
+        assert_eq!(report.metrics.stages_analyzed, report.total_stages());
+    }
+}

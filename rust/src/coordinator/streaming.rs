@@ -4,14 +4,49 @@
 //! per-stage state, and run the BigRoots analysis the moment a stage
 //! completes (all of its announced tasks ended).
 //!
-//! The synchronous [`StreamAnalyzer`] is the core; [`analyze_stream_threaded`]
-//! wraps it with a reader thread + channel for file-tail style use.
+//! The module is layered:
+//!
+//! - [`JobState`] — the pure per-job accumulator: feeds on events, decides
+//!   when a stage's analysis inputs are frozen, and emits [`ReadyStage`]
+//!   feature matrices. It owns no backend and does no math, which is what
+//!   lets the multi-job [`crate::coordinator::service::AnalysisService`]
+//!   hold thousands of them and farm the analyses out to worker threads.
+//! - [`StreamAnalyzer`] — the single-job convenience wrapper: one backend,
+//!   analyses run inline as stages become ready.
+//! - [`analyze_stream_threaded`] — a reader thread + channel for file-tail
+//!   style use.
+//!
+//! ### Edge-window watermark
+//!
+//! A stage's features include head/tail resource-window means that extend
+//! `edge_width` seconds past each task's finish. An analyzer that fires at
+//! the completing `TaskEnd` has not yet seen the samples inside the last
+//! tasks' tail windows, so its resource features can differ from a
+//! whole-trace batch analysis. [`JobState`] therefore supports two modes:
+//!
+//! - **immediate** (the classic [`StreamAnalyzer`] behavior): analyze at
+//!   the completing `TaskEnd`; durations/stragglers are exact, tail-window
+//!   features are best-effort.
+//! - **deferred** ([`JobState::new_deferred`], used by the service): hold a
+//!   completed stage until every node's 1 Hz sample watermark passes
+//!   `completion + edge_width` (or the job ends). Analyses are then
+//!   *bit-identical* to the offline batch pipeline — the parity property
+//!   tests in `rust/tests/coordinator_props.rs` assert exactly that.
+//!
+//! The watermark counts samples per node against a dense 1-second grid —
+//! exactly how both the simulator and the trace reconstruction
+//! ([`crate::trace::eventlog::events_to_trace`]) lay series out. External
+//! logs with sample gaps degrade gracefully: the watermark stays behind,
+//! the stage defers to [`JobState::flush`], and the analysis still equals
+//! the batch analysis of the *stream-implied* trace (the parity guarantee
+//! is always relative to what the stream carried, never to an original
+//! the analyzer has not seen).
 
 use std::collections::HashMap;
 use std::sync::mpsc::channel;
 
 use crate::analysis::bigroots::{analyze_stage_with_stats, BigRootsConfig, StageAnalysis};
-use crate::analysis::features::extract_stage;
+use crate::analysis::features::{extract_stage, StageFeatures};
 use crate::analysis::stats::StatsBackend;
 use crate::trace::eventlog::Event;
 use crate::trace::{ClusterInfo, JobTrace, NodeSeries, StageRecord, TaskRecord};
@@ -22,49 +57,84 @@ struct StageState {
     name: String,
     announced_tasks: usize,
     completed: Vec<TaskRecord>,
+    /// Latest finish time among completed tasks.
+    last_finish: f64,
     analyzed: bool,
 }
 
-/// The streaming analyzer: feed events, collect completed-stage analyses.
-pub struct StreamAnalyzer {
-    cfg: BigRootsConfig,
-    backend: Box<dyn StatsBackend>,
+/// A stage whose analysis inputs are frozen, emitted by [`JobState::feed`].
+/// The features carry everything the analyzer needs; `seq` is the per-job
+/// emission order (stable across re-runs, used to reassemble results that
+/// return out of order from worker threads).
+#[derive(Debug, Clone)]
+pub struct ReadyStage {
+    pub stage_id: u64,
+    pub seq: u64,
+    pub features: StageFeatures,
+}
+
+/// The per-job event accumulator. See the module docs for the two modes.
+pub struct JobState {
+    edge_width: f64,
+    /// Deferred mode: hold completed stages for the sample watermark.
+    hold_for_edge_windows: bool,
     cluster: Option<ClusterInfo>,
     job_name: String,
     workload: String,
     stages: HashMap<u64, StageState>,
-    samples: Vec<(usize, f64, f64, f64, f64)>,
-    /// Completed per-stage analyses, in completion order.
-    pub results: Vec<StageAnalysis>,
-    /// Events consumed.
+    /// Per-node samples kept in time order: (time, cpu, disk, net_bytes).
+    /// The stream is already time-sorted, so ingest is an append; emission
+    /// copies a per-node run with no sort (the old path cloned and sorted
+    /// the whole sample set per stage).
+    samples_by_node: Vec<Vec<(f64, f64, f64, f64)>>,
+    /// Completed stages awaiting their watermark, in completion order.
+    held: Vec<u64>,
+    next_seq: u64,
+    /// Events consumed by this job.
     pub events_seen: usize,
+    /// True once a `JobEnd` event arrived.
+    pub ended: bool,
 }
 
-impl StreamAnalyzer {
-    pub fn new(backend: Box<dyn StatsBackend>, cfg: BigRootsConfig) -> Self {
-        StreamAnalyzer {
-            cfg,
-            backend,
+impl JobState {
+    /// Immediate mode: stages emit at their completing `TaskEnd`.
+    pub fn new(edge_width: f64) -> Self {
+        Self::with_mode(edge_width, false)
+    }
+
+    /// Deferred mode: stages emit once the sample watermark passes
+    /// `completion + edge_width`, making analyses bit-identical to batch.
+    pub fn new_deferred(edge_width: f64) -> Self {
+        Self::with_mode(edge_width, true)
+    }
+
+    fn with_mode(edge_width: f64, hold_for_edge_windows: bool) -> Self {
+        JobState {
+            edge_width,
+            hold_for_edge_windows,
             cluster: None,
             job_name: String::new(),
             workload: String::new(),
             stages: HashMap::new(),
-            samples: Vec::new(),
-            results: Vec::new(),
+            samples_by_node: Vec::new(),
+            held: Vec::new(),
+            next_seq: 0,
             events_seen: 0,
+            ended: false,
         }
     }
 
-    /// Feed one event; returns the stage id if this event completed a stage
-    /// (its analysis has been appended to `results`).
-    pub fn feed(&mut self, event: &Event) -> Option<u64> {
+    /// Feed one event; returns the stages whose analysis inputs froze as a
+    /// consequence (several may release at once when a sample advances the
+    /// watermark past multiple held stages).
+    pub fn feed(&mut self, event: &Event) -> Vec<ReadyStage> {
         self.events_seen += 1;
         match event {
             Event::JobStart { job_name, workload, cluster } => {
                 self.job_name = job_name.clone();
                 self.workload = workload.clone();
                 self.cluster = Some(cluster.clone());
-                None
+                Vec::new()
             }
             Event::StageSubmitted { stage_id, name, num_tasks } => {
                 self.stages.insert(
@@ -73,38 +143,116 @@ impl StreamAnalyzer {
                         name: name.clone(),
                         announced_tasks: *num_tasks,
                         completed: Vec::new(),
+                        last_finish: 0.0,
                         analyzed: false,
                     },
                 );
-                None
+                Vec::new()
             }
             Event::ResourceSample { node, time, cpu, disk, net_bytes } => {
-                self.samples.push((*node, *time, *cpu, *disk, *net_bytes));
-                None
+                if *node >= self.samples_by_node.len() {
+                    self.samples_by_node.resize_with(node + 1, Vec::new);
+                }
+                let series = &mut self.samples_by_node[*node];
+                let sample = (*time, *cpu, *disk, *net_bytes);
+                let out_of_order = series.last().map_or(false, |last| last.0 > *time);
+                if out_of_order {
+                    // Insert after any equal times, matching the stable
+                    // (node, time) sort this replaces.
+                    let idx = series.partition_point(|s| s.0 <= *time);
+                    series.insert(idx, sample);
+                } else {
+                    series.push(sample);
+                }
+                self.release_watermarked()
             }
             Event::TaskEnd(t) => {
                 let stage_id = t.stage_id;
-                let ready = {
-                    let st = self.stages.get_mut(&stage_id)?;
-                    st.completed.push(t.clone());
-                    !st.analyzed && st.completed.len() >= st.announced_tasks
+                let Some(st) = self.stages.get_mut(&stage_id) else {
+                    return Vec::new();
                 };
-                if ready {
-                    self.analyze_stage(stage_id);
-                    Some(stage_id)
+                st.last_finish = st.last_finish.max(t.finish);
+                st.completed.push(t.clone());
+                let complete = !st.analyzed && st.completed.len() >= st.announced_tasks;
+                if !complete {
+                    return Vec::new();
+                }
+                if self.hold_for_edge_windows {
+                    let t_need = self.stages[&stage_id].last_finish + self.edge_width;
+                    if self.watermark_reached(t_need) {
+                        self.emit(stage_id).into_iter().collect()
+                    } else {
+                        self.held.push(stage_id);
+                        Vec::new()
+                    }
                 } else {
-                    None
+                    self.emit(stage_id).into_iter().collect()
                 }
             }
-            Event::TaskStart { .. } | Event::Injection(_) | Event::JobEnd { .. } => None,
+            Event::JobEnd { .. } => {
+                // Do NOT flush here: trailing resource samples (the ones
+                // inside the last stages' tail edge windows) sort *after*
+                // `JobEnd` in the time-ordered stream. Held stages release
+                // via the watermark or an explicit [`JobState::flush`].
+                self.ended = true;
+                Vec::new()
+            }
+            Event::TaskStart { .. } | Event::Injection(_) => Vec::new(),
         }
     }
 
-    /// Build a point-in-time trace view for one completed stage and run the
-    /// analysis on it.
-    fn analyze_stage(&mut self, stage_id: u64) {
-        let Some(cluster) = self.cluster.clone() else { return };
+    /// Emit every held stage regardless of watermark — the stream is over,
+    /// no more samples will arrive. Idempotent.
+    pub fn flush(&mut self) -> Vec<ReadyStage> {
+        let held = std::mem::take(&mut self.held);
+        held.into_iter().filter_map(|sid| self.emit(sid)).collect()
+    }
+
+    /// Have all cluster nodes delivered samples covering `[0, t_need)`?
+    fn watermark_reached(&self, t_need: f64) -> bool {
+        let Some(cluster) = &self.cluster else { return false };
+        (0..cluster.nodes).all(|n| {
+            let count = self.samples_by_node.get(n).map(|s| s.len()).unwrap_or(0);
+            // Samples land on a 1-period grid: `count` samples cover
+            // [0, count * period). The stream view is rebuilt on the same
+            // grid, so this is exactly the prefix length the windows need.
+            count as f64 * 1.0 >= t_need
+        })
+    }
+
+    /// Release held stages whose watermark has now passed, in completion
+    /// order.
+    fn release_watermarked(&mut self) -> Vec<ReadyStage> {
+        if self.held.is_empty() {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        let mut still_held = Vec::new();
+        let held = std::mem::take(&mut self.held);
+        for sid in held {
+            let t_need = self.stages[&sid].last_finish + self.edge_width;
+            if self.watermark_reached(t_need) {
+                if let Some(r) = self.emit(sid) {
+                    out.push(r);
+                }
+            } else {
+                still_held.push(sid);
+            }
+        }
+        self.held = still_held;
+        out
+    }
+
+    /// Build a point-in-time trace view for one completed stage and extract
+    /// its feature matrix. Returns `None` before `JobStart` (no cluster
+    /// info — the stage stays un-analyzed, mirroring the original
+    /// single-job analyzer).
+    fn emit(&mut self, stage_id: u64) -> Option<ReadyStage> {
+        let cluster = self.cluster.clone()?;
         let st = self.stages.get_mut(&stage_id).unwrap();
+        if st.analyzed {
+            return None;
+        }
         st.analyzed = true;
         let mut tasks = st.completed.clone();
         tasks.sort_by_key(|t| t.task_id);
@@ -113,16 +261,22 @@ impl StreamAnalyzer {
             name: st.name.clone(),
             tasks: tasks.iter().map(|t| t.task_id).collect(),
         };
-        // Node series from the samples seen so far (1 Hz grid).
+        // Node series from the samples seen so far (1 Hz grid) — a
+        // straight per-node copy, since ingest keeps each node's samples
+        // in time order.
         let mut node_series: Vec<NodeSeries> =
             (0..cluster.nodes).map(|n| NodeSeries::empty(n, 1.0)).collect();
-        let mut ordered = self.samples.clone();
-        ordered.sort_by(|a, b| (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap());
-        for (node, _t, cpu, disk, net) in ordered {
+        for (node, series) in self.samples_by_node.iter().enumerate() {
             if node < node_series.len() {
-                node_series[node].cpu.push(cpu);
-                node_series[node].disk.push(disk);
-                node_series[node].net_bytes.push(net);
+                let ns = &mut node_series[node];
+                ns.cpu.reserve(series.len());
+                ns.disk.reserve(series.len());
+                ns.net_bytes.reserve(series.len());
+                for &(_t, cpu, disk, net) in series {
+                    ns.cpu.push(cpu);
+                    ns.disk.push(disk);
+                    ns.net_bytes.push(net);
+                }
             }
         }
         let view = JobTrace {
@@ -134,12 +288,14 @@ impl StreamAnalyzer {
             node_series,
             injections: vec![],
         };
-        let sf = extract_stage(&view, stage_id, self.cfg.edge_width);
-        let stats = self.backend.stage_stats(&sf);
-        self.results.push(analyze_stage_with_stats(&sf, &stats, &self.cfg));
+        let features = extract_stage(&view, stage_id, self.edge_width);
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        Some(ReadyStage { stage_id, seq, features })
     }
 
-    /// Stages announced but not yet complete (e.g. stream truncated).
+    /// Stages announced but not yet analyzed (incomplete, or complete and
+    /// still held for their watermark).
     pub fn incomplete_stages(&self) -> Vec<u64> {
         let mut v: Vec<u64> = self
             .stages
@@ -149,6 +305,77 @@ impl StreamAnalyzer {
             .collect();
         v.sort();
         v
+    }
+}
+
+/// The streaming analyzer: feed events, collect completed-stage analyses.
+pub struct StreamAnalyzer {
+    cfg: BigRootsConfig,
+    backend: Box<dyn StatsBackend>,
+    state: JobState,
+    /// Completed per-stage analyses, in completion order.
+    pub results: Vec<StageAnalysis>,
+    /// Events consumed.
+    pub events_seen: usize,
+}
+
+impl StreamAnalyzer {
+    /// Immediate-mode analyzer (analyses fire at the completing `TaskEnd`).
+    pub fn new(backend: Box<dyn StatsBackend>, cfg: BigRootsConfig) -> Self {
+        StreamAnalyzer {
+            state: JobState::new(cfg.edge_width),
+            cfg,
+            backend,
+            results: Vec::new(),
+            events_seen: 0,
+        }
+    }
+
+    /// Deferred-mode analyzer: waits for the edge-window sample watermark,
+    /// so results match the offline batch pipeline bit-for-bit. Call
+    /// [`StreamAnalyzer::finish`] after the last event.
+    pub fn new_deferred(backend: Box<dyn StatsBackend>, cfg: BigRootsConfig) -> Self {
+        StreamAnalyzer {
+            state: JobState::new_deferred(cfg.edge_width),
+            cfg,
+            backend,
+            results: Vec::new(),
+            events_seen: 0,
+        }
+    }
+
+    /// Analyze freshly frozen stages and append to `results`; returns the
+    /// last stage id analyzed.
+    fn absorb_ready(&mut self, ready: Vec<ReadyStage>) -> Option<u64> {
+        let mut last = None;
+        for r in ready {
+            let stats = self.backend.stage_stats(&r.features);
+            self.results.push(analyze_stage_with_stats(&r.features, &stats, &self.cfg));
+            last = Some(r.stage_id);
+        }
+        last
+    }
+
+    /// Feed one event; returns the id of the last stage this event caused
+    /// to be analyzed (its analysis has been appended to `results`).
+    pub fn feed(&mut self, event: &Event) -> Option<u64> {
+        self.events_seen += 1;
+        let ready = self.state.feed(event);
+        self.absorb_ready(ready)
+    }
+
+    /// Flush stages still held for their watermark (deferred mode after a
+    /// truncated stream). Returns how many analyses were appended.
+    pub fn finish(&mut self) -> usize {
+        let ready = self.state.flush();
+        let n = ready.len();
+        self.absorb_ready(ready);
+        n
+    }
+
+    /// Stages announced but not yet complete (e.g. stream truncated).
+    pub fn incomplete_stages(&self) -> Vec<u64> {
+        self.state.incomplete_stages()
     }
 }
 
@@ -229,6 +456,27 @@ mod tests {
         let off = offline.analyze(&t, "ml");
         for (stream_a, (_, off_a)) in an.results.iter().zip(&off.per_stage) {
             assert_eq!(stream_a.stragglers.rows, off_a.stragglers.rows);
+        }
+    }
+
+    #[test]
+    fn deferred_stream_matches_offline_bit_for_bit() {
+        // Deferred mode holds each completed stage for its edge-window
+        // sample watermark, so the full analyses — not just straggler
+        // sets — equal the batch pipeline's.
+        let t = trace();
+        let events = trace_to_events(&t);
+        let mut an =
+            StreamAnalyzer::new_deferred(Box::new(NativeBackend), BigRootsConfig::default());
+        for e in &events {
+            an.feed(e);
+        }
+        an.finish();
+        let mut offline = Pipeline::native();
+        let off = offline.analyze(&t, "ml");
+        assert_eq!(an.results.len(), off.per_stage.len());
+        for (stream_a, (_, off_a)) in an.results.iter().zip(&off.per_stage) {
+            assert_eq!(stream_a, off_a);
         }
     }
 

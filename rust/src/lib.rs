@@ -9,6 +9,25 @@
 //!   BigRoots analyzer and PCC baseline ([`analysis`]), a PJRT runtime that
 //!   executes the AOT-compiled stats kernel ([`runtime`]), and the pipeline
 //!   that ties them together ([`coordinator`]).
+//!
+//! Two analysis front-ends share the analyzer core:
+//!
+//! - the offline batch [`coordinator::Pipeline`] (whole trace in, report
+//!   out), and
+//! - the **multi-job streaming [`coordinator::AnalysisService`]**: an
+//!   interleaved, job-tagged event stream
+//!   ([`trace::eventlog::TaggedEvent`]) is demultiplexed onto per-job
+//!   [`coordinator::streaming::JobState`] accumulators grouped into
+//!   shards; stage analyses are batched onto a
+//!   [`util::threadpool::ThreadPool`] of workers (one
+//!   [`analysis::stats::StatsBackend`] each, dispatched through
+//!   `stage_stats_batch`), with backpressure on ingest and per-job /
+//!   per-shard throughput metrics. A per-node sample watermark defers each
+//!   stage until its edge windows are covered, so streaming results are
+//!   bit-identical to the batch pipeline — the parity, determinism and
+//!   interleaving-invariance tests live in `rust/tests/`.
+//!   `bigroots serve` and `examples/multi_job_service.rs` drive it;
+//!   [`sim::multi`] generates interleaved multi-job traffic.
 //! - **L2 (python/compile/model.py)** — the batched per-stage feature
 //!   statistics graph in JAX, lowered once to HLO text.
 //! - **L1 (python/compile/kernels/)** — Pallas kernels for the fused

@@ -46,6 +46,17 @@ fn main() {
                 .opt_req("input", "event log path"),
         )
         .subcommand(
+            Command::new("serve", "multi-job concurrent analysis of an interleaved event stream")
+                .opt("input", "", "job-tagged ndjson event log (omit to simulate --jobs jobs)")
+                .opt("jobs", "8", "jobs to simulate when no --input is given")
+                .opt("scale", "0.3", "workload scale for simulated jobs")
+                .opt("seed", "42", "base seed for simulated jobs")
+                .opt("shards", "4", "job shards")
+                .opt("workers", "4", "analysis worker threads")
+                .opt("batch", "8", "ready stages per backend dispatch")
+                .flag("metrics", "print per-shard metrics"),
+        )
+        .subcommand(
             Command::new("verify", "Table III: single-AG verification vs PCC")
                 .opt("reps", "10", "repetitions per AG kind")
                 .opt("scale", "1.0", "workload scale")
@@ -78,6 +89,7 @@ fn main() {
         "simulate" => cmd_simulate(&args),
         "analyze" => cmd_analyze(&args),
         "stream" => cmd_stream(&args),
+        "serve" => cmd_serve(&args),
         "verify" => cmd_verify(&args),
         "multi" => cmd_multi(&args),
         "hibench" => cmd_hibench(&args),
@@ -271,6 +283,90 @@ fn cmd_stream(args: &bigroots::util::cli::Args) -> i32 {
             1
         }
     }
+}
+
+fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
+    use bigroots::coordinator::{AnalysisService, ServiceConfig};
+    use bigroots::sim::multi;
+    use bigroots::trace::eventlog::parse_tagged_events;
+
+    let cfg = ServiceConfig {
+        shards: args.get_usize("shards", 4),
+        workers: args.get_usize("workers", 4),
+        batch_size: args.get_usize("batch", 8),
+        ..Default::default()
+    };
+    let input = args.get_or("input", "");
+    let events = if input.is_empty() {
+        let n = args.get_usize("jobs", 8);
+        let scale = args.get_f64("scale", 0.3);
+        let seed = args.get_u64("seed", 42);
+        println!("simulating {n} jobs (scale {scale}, seed {seed})…");
+        let specs = multi::round_robin_specs(n, scale, seed);
+        let (_, events) = multi::interleaved_workload(&specs);
+        events
+    } else {
+        let text = match std::fs::read_to_string(&input) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("reading {input}: {e}");
+                return 1;
+            }
+        };
+        match parse_tagged_events(&text) {
+            Ok(ev) => ev,
+            Err(e) => {
+                eprintln!("parsing {input}: {e}");
+                return 1;
+            }
+        }
+    };
+
+    let mut svc = AnalysisService::new(cfg);
+    svc.feed_all(&events);
+    let report = svc.finish();
+
+    let mut t = Table::new("Per-job streaming analysis")
+        .header(&["job", "stages", "stragglers", "causes"])
+        .aligns(&[Align::Right, Align::Right, Align::Right, Align::Right]);
+    for (job_id, analyses) in &report.per_job {
+        t.row(vec![
+            job_id.to_string(),
+            analyses.len().to_string(),
+            analyses.iter().map(|a| a.stragglers.rows.len()).sum::<usize>().to_string(),
+            analyses.iter().map(|a| a.causes.len()).sum::<usize>().to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    let m = &report.metrics;
+    println!(
+        "{} events over {} jobs in {:.3}s — {:.0} events/s, {} stages analyzed, {} batches",
+        m.events_total,
+        m.jobs_seen,
+        m.elapsed_secs,
+        m.events_per_sec,
+        m.stages_analyzed,
+        m.batches_dispatched
+    );
+    if args.flag("metrics") {
+        let mut t = Table::new("Per-shard metrics")
+            .header(&["shard", "jobs", "events", "ready", "analyzed"])
+            .aligns(&[Align::Right, Align::Right, Align::Right, Align::Right, Align::Right]);
+        for s in &m.per_shard {
+            t.row(vec![
+                s.shard.to_string(),
+                s.jobs.to_string(),
+                s.events.to_string(),
+                s.stages_ready.to_string(),
+                s.stages_analyzed.to_string(),
+            ]);
+        }
+        print!("{}", t.render());
+    }
+    for (job_id, stages) in &report.incomplete {
+        println!("job {job_id}: incomplete stages at stream end: {stages:?}");
+    }
+    0
 }
 
 fn cmd_verify(args: &bigroots::util::cli::Args) -> i32 {

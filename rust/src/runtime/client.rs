@@ -5,10 +5,21 @@
 //! /opt/xla-example/README.md): jax ≥ 0.5's serialized protos use 64-bit
 //! instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids.
+//!
+//! The real implementation needs the `xla` crate, which is not in the
+//! offline registry; it is compiled only with the `pjrt` cargo feature.
+//! Without it, the stub below presents the same API but fails to open a
+//! client, so [`crate::runtime::auto_backend`] degrades to the native
+//! stats backend and everything else keeps working.
 
-use anyhow::{Context, Result};
+use anyhow::Result;
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+#[cfg(not(feature = "pjrt"))]
+use anyhow::anyhow;
 
 /// A compiled artifact ready to execute.
+#[cfg(feature = "pjrt")]
 pub struct CompiledModule {
     exe: xla::PjRtLoadedExecutable,
     client: xla::PjRtClient,
@@ -16,10 +27,12 @@ pub struct CompiledModule {
 }
 
 /// The PJRT client plus a cache of compiled modules.
+#[cfg(feature = "pjrt")]
 pub struct PjrtRuntime {
     client: xla::PjRtClient,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtRuntime {
     /// Create a CPU PJRT client.
     pub fn cpu() -> Result<Self> {
@@ -44,6 +57,7 @@ impl PjrtRuntime {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl CompiledModule {
     /// Execute with f32 inputs; each input is (data, dims). The module was
     /// lowered with `return_tuple=True`, so the single output literal is a
@@ -75,6 +89,41 @@ impl CompiledModule {
     }
 }
 
+/// Stub: a compiled artifact (never constructed without the `pjrt` feature).
+#[cfg(not(feature = "pjrt"))]
+pub struct CompiledModule {
+    pub name: String,
+}
+
+/// Stub PJRT client — [`PjrtRuntime::cpu`] always fails, so callers fall
+/// back to the native backend.
+#[cfg(not(feature = "pjrt"))]
+pub struct PjrtRuntime {
+    _private: (),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl PjrtRuntime {
+    pub fn cpu() -> Result<Self> {
+        Err(anyhow!("built without the `pjrt` feature; XLA execution unavailable"))
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn load_hlo_text(&self, path: &str) -> Result<CompiledModule> {
+        Err(anyhow!("built without the `pjrt` feature; cannot load {path}"))
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl CompiledModule {
+    pub fn run_f32(&self, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        Err(anyhow!("built without the `pjrt` feature; cannot execute {}", self.name))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     // PJRT-dependent tests live in rust/tests/runtime_integration.rs so
@@ -82,10 +131,18 @@ mod tests {
     // only checks error paths that need no artifacts.
     use super::*;
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn missing_artifact_is_error() {
         let rt = PjrtRuntime::cpu().expect("CPU PJRT client");
         assert!(rt.load_hlo_text("/nonexistent/file.hlo.txt").is_err());
         assert!(!rt.platform().is_empty());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_client_reports_unavailable() {
+        let err = PjrtRuntime::cpu().err().expect("stub must not construct");
+        assert!(format!("{err:#}").contains("pjrt"));
     }
 }

@@ -13,6 +13,7 @@
 pub mod anomaly;
 pub mod engine;
 pub mod event;
+pub mod multi;
 pub mod resources;
 pub mod sampler;
 pub mod scheduler;

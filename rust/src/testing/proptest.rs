@@ -115,6 +115,28 @@ impl<A: Gen, B: Gen> Gen for PairOf<A, B> {
     }
 }
 
+/// Triple generator — used by the multi-job service properties, whose
+/// cases are (seed, job-count, task-count)-shaped.
+pub struct TripleOf<A: Gen, B: Gen, C: Gen>(pub A, pub B, pub C);
+
+impl<A: Gen, B: Gen, C: Gen> Gen for TripleOf<A, B, C> {
+    type Value = (A::Value, B::Value, C::Value);
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng), self.2.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone(), v.2.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b, v.2.clone())));
+        out.extend(self.2.shrink(&v.2).into_iter().map(|c| (v.0.clone(), v.1.clone(), c)));
+        out
+    }
+}
+
 /// Result of a property check.
 #[derive(Debug)]
 pub enum PropResult<V> {
@@ -252,6 +274,25 @@ mod tests {
         });
         match r {
             PropResult::Failed { shrunk, .. } => assert_eq!(shrunk.0, 50),
+            _ => panic!("should fail"),
+        }
+    }
+
+    #[test]
+    fn triple_generator_shrinks_each_side() {
+        let gen = TripleOf(U64Range(0, 100), U64Range(0, 100), F64Range(0.0, 1.0));
+        let r = check(11, 300, &gen, |(a, b, _c)| {
+            if *a >= 40 && *b >= 10 {
+                Err("both big".into())
+            } else {
+                Ok(())
+            }
+        });
+        match r {
+            PropResult::Failed { shrunk, .. } => {
+                assert_eq!(shrunk.0, 40);
+                assert_eq!(shrunk.1, 10);
+            }
             _ => panic!("should fail"),
         }
     }

@@ -159,9 +159,36 @@ impl Event {
     }
 }
 
-/// Serialize a trace to an event-log stream, ordered by time (job start,
-/// then interleaved stage/task/sample/injection events, then job end).
-pub fn trace_to_events(trace: &JobTrace) -> Vec<Event> {
+/// An [`Event`] tagged with the job it belongs to — one line of a
+/// *multi-job* event log, where streams from many concurrent jobs are
+/// interleaved into a single file (the paper's scheduler watches one log
+/// per application; a busy cluster produces many at once). The JSON form
+/// is the plain event object with an extra `"job"` field, so a single-job
+/// consumer that ignores unknown fields still parses each line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaggedEvent {
+    pub job_id: u64,
+    pub event: Event,
+}
+
+impl TaggedEvent {
+    pub fn encode(&self) -> Json {
+        let mut o = self.event.encode();
+        o.set("job", self.job_id.into());
+        o
+    }
+
+    pub fn decode(j: &Json) -> Result<TaggedEvent, JsonError> {
+        Ok(TaggedEvent { job_id: j.req_u64("job")?, event: Event::decode(j)? })
+    }
+}
+
+/// Serialize a trace to the time-keyed event list: `(time, tiebreak,
+/// event)` triples, sorted. The tiebreak keeps job start first, stage
+/// submission before its tasks, and job end last within one instant.
+/// [`trace_to_events`] strips the keys; [`interleave_jobs`] merges the
+/// keyed streams of many jobs.
+pub fn trace_to_keyed_events(trace: &JobTrace) -> Vec<(f64, u8, Event)> {
     let mut events: Vec<(f64, u8, Event)> = Vec::new();
     events.push((
         -1.0,
@@ -222,7 +249,33 @@ pub fn trace_to_events(trace: &JobTrace) -> Vec<Event> {
     }
     events.push((trace.makespan(), 9, Event::JobEnd { time: trace.makespan() }));
     events.sort_by(|a, b| (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap());
-    events.into_iter().map(|(_, _, e)| e).collect()
+    events
+}
+
+/// Serialize a trace to an event-log stream, ordered by time (job start,
+/// then interleaved stage/task/sample/injection events, then job end).
+pub fn trace_to_events(trace: &JobTrace) -> Vec<Event> {
+    trace_to_keyed_events(trace).into_iter().map(|(_, _, e)| e).collect()
+}
+
+/// Merge the event streams of several jobs into one interleaved, job-tagged
+/// stream ordered by event time. Within a job the relative event order is
+/// exactly that of [`trace_to_events`]; across jobs, ties break by job id
+/// then original position, so the result is deterministic.
+pub fn interleave_jobs(jobs: &[(u64, &JobTrace)]) -> Vec<TaggedEvent> {
+    let mut keyed: Vec<(f64, u8, u64, usize, Event)> = Vec::new();
+    for (job_id, trace) in jobs {
+        for (pos, (t, tie, e)) in trace_to_keyed_events(trace).into_iter().enumerate() {
+            keyed.push((t, tie, *job_id, pos, e));
+        }
+    }
+    keyed.sort_by(|a, b| {
+        (a.0, a.1, a.2, a.3).partial_cmp(&(b.0, b.1, b.2, b.3)).unwrap()
+    });
+    keyed
+        .into_iter()
+        .map(|(_, _, job_id, _, event)| TaggedEvent { job_id, event })
+        .collect()
 }
 
 /// Write events as newline-delimited JSON.
@@ -242,6 +295,62 @@ pub fn parse_events(text: &str) -> Result<Vec<Event>, JsonError> {
         .filter(|l| !l.trim().is_empty())
         .map(|l| Event::decode(&Json::parse(l)?))
         .collect()
+}
+
+/// Write job-tagged events as newline-delimited JSON.
+pub fn write_tagged_events(events: &[TaggedEvent], path: &str) -> anyhow::Result<()> {
+    let mut out = String::new();
+    for e in events {
+        out.push_str(&e.encode().to_string());
+        out.push('\n');
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+/// Parse a newline-delimited multi-job event log. A fully *untagged* log
+/// (no `"job"` fields anywhere) is assigned to job 0, so single-job logs
+/// remain valid input for the multi-job service. Mixing tagged and
+/// untagged lines is ambiguous — untagged lines would silently merge into
+/// a real job 0 — and is rejected.
+pub fn parse_tagged_events(text: &str) -> Result<Vec<TaggedEvent>, JsonError> {
+    let mut saw_tagged = false;
+    let mut saw_untagged = false;
+    let mut out = Vec::new();
+    for l in text.lines().filter(|l| !l.trim().is_empty()) {
+        let j = Json::parse(l)?;
+        let has_job = j.as_obj().map(|m| m.contains_key("job")).unwrap_or(false);
+        if has_job {
+            saw_tagged = true;
+            out.push(TaggedEvent::decode(&j)?);
+        } else {
+            saw_untagged = true;
+            out.push(TaggedEvent { job_id: 0, event: Event::decode(&j)? });
+        }
+        if saw_tagged && saw_untagged {
+            return Err(JsonError {
+                offset: 0,
+                message: "mixed tagged and untagged event lines: tag every line with \
+                          \"job\" or none"
+                    .to_string(),
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// Split an interleaved stream into per-job event sequences, preserving
+/// each job's internal order. Jobs are returned sorted by id.
+pub fn demux_jobs(events: &[TaggedEvent]) -> Vec<(u64, Vec<Event>)> {
+    let mut per_job: Vec<(u64, Vec<Event>)> = Vec::new();
+    for e in events {
+        match per_job.iter().position(|(id, _)| *id == e.job_id) {
+            Some(idx) => per_job[idx].1.push(e.event.clone()),
+            None => per_job.push((e.job_id, vec![e.event.clone()])),
+        }
+    }
+    per_job.sort_by_key(|(id, _)| *id);
+    per_job
 }
 
 /// Rebuild a full [`JobTrace`] from an event stream — the inverse of
@@ -427,5 +536,59 @@ mod tests {
     fn unknown_event_rejected() {
         let j = Json::parse(r#"{"event":"wat"}"#).unwrap();
         assert!(Event::decode(&j).is_err());
+    }
+
+    #[test]
+    fn tagged_event_roundtrip() {
+        let t = sample_trace();
+        for e in trace_to_events(&t) {
+            let tagged = TaggedEvent { job_id: 7, event: e };
+            let back = TaggedEvent::decode(&tagged.encode()).unwrap();
+            assert_eq!(tagged, back);
+        }
+    }
+
+    #[test]
+    fn interleave_preserves_per_job_order_and_demuxes() {
+        let a = sample_trace();
+        let mut b = sample_trace();
+        b.job_name = "j2".into();
+        let merged = interleave_jobs(&[(1, &a), (2, &b)]);
+        assert_eq!(merged.len(), trace_to_events(&a).len() + trace_to_events(&b).len());
+        let per_job = demux_jobs(&merged);
+        assert_eq!(per_job.len(), 2);
+        assert_eq!(per_job[0].0, 1);
+        assert_eq!(per_job[0].1, trace_to_events(&a));
+        assert_eq!(per_job[1].1, trace_to_events(&b));
+        // Each per-job stream rebuilds its trace.
+        assert_eq!(events_to_trace(&per_job[0].1).unwrap(), a);
+        assert_eq!(events_to_trace(&per_job[1].1).unwrap(), b);
+    }
+
+    #[test]
+    fn tagged_ndjson_roundtrip_and_untagged_default() {
+        let t = sample_trace();
+        let merged = interleave_jobs(&[(3, &t), (9, &t)]);
+        let text: String = merged.iter().map(|e| e.encode().to_string() + "\n").collect();
+        let parsed = parse_tagged_events(&text).unwrap();
+        assert_eq!(merged, parsed);
+        // An untagged single-job log parses with job id 0.
+        let plain: String =
+            trace_to_events(&t).iter().map(|e| e.encode().to_string() + "\n").collect();
+        let parsed = parse_tagged_events(&plain).unwrap();
+        assert!(parsed.iter().all(|e| e.job_id == 0));
+        assert_eq!(parsed.len(), trace_to_events(&t).len());
+    }
+
+    #[test]
+    fn mixed_tagged_and_untagged_log_rejected() {
+        let t = sample_trace();
+        let tagged = interleave_jobs(&[(0, &t)]);
+        let mut text: String =
+            tagged.iter().map(|e| e.encode().to_string() + "\n").collect();
+        // Append one untagged line: ambiguous with the real job 0 above.
+        text.push_str(&trace_to_events(&t)[0].encode().to_string());
+        text.push('\n');
+        assert!(parse_tagged_events(&text).is_err());
     }
 }

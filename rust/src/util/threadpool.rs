@@ -3,6 +3,7 @@
 //! repetitions, Fig. 8's threshold grid) and by the streaming coordinator.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -14,12 +15,28 @@ enum Msg {
     Shutdown,
 }
 
+/// Decrements a counter on drop — survives job panics (the unwind drops it).
+struct Decrement(Arc<AtomicUsize>);
+
+impl Drop for Decrement {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
 /// Fixed-size worker pool. Jobs are closures; results flow back through
 /// whatever channel the caller closes over (see [`ThreadPool::map`]).
+///
+/// The pool tracks its queue depth ([`ThreadPool::in_flight`]) — the number
+/// of jobs submitted but not yet finished — which the streaming
+/// [`crate::coordinator::service::AnalysisService`] uses for backpressure
+/// and metrics.
 pub struct ThreadPool {
     tx: Sender<Msg>,
     shared_rx: Arc<Mutex<Receiver<Msg>>>,
     workers: Vec<JoinHandle<()>>,
+    in_flight: Arc<AtomicUsize>,
+    size: usize,
 }
 
 impl ThreadPool {
@@ -46,7 +63,7 @@ impl ThreadPool {
                 }
             }));
         }
-        ThreadPool { tx, shared_rx, workers }
+        ThreadPool { tx, shared_rx, workers, in_flight: Arc::new(AtomicUsize::new(0)), size: n }
     }
 
     /// Pool sized to available parallelism.
@@ -55,9 +72,27 @@ impl ThreadPool {
         Self::new(n)
     }
 
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Jobs submitted but not yet finished (queued + running). This is the
+    /// pool's queue-depth signal for backpressure decisions.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::SeqCst)
+    }
+
     /// Submit a fire-and-forget job.
     pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.tx.send(Msg::Run(Box::new(f))).expect("pool shut down");
+        self.in_flight.fetch_add(1, Ordering::SeqCst);
+        let guard = Decrement(Arc::clone(&self.in_flight));
+        self.tx
+            .send(Msg::Run(Box::new(move || {
+                let _guard = guard;
+                f();
+            })))
+            .expect("pool shut down");
     }
 
     /// Run `f` over all items in parallel, preserving input order in the
@@ -141,6 +176,39 @@ mod tests {
         let pool = ThreadPool::new(1);
         let out = pool.map(vec![1, 2, 3], |x| x + 1);
         assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn in_flight_returns_to_zero() {
+        let pool = ThreadPool::new(2);
+        assert_eq!(pool.size(), 2);
+        assert_eq!(pool.in_flight(), 0);
+        let out = pool.map((0..32u64).collect(), |x| x + 1);
+        assert_eq!(out.len(), 32);
+        // map() waits for every result, but the guard decrement can race
+        // the result send by a hair; wait briefly.
+        for _ in 0..500 {
+            if pool.in_flight() == 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(pool.in_flight(), 0);
+    }
+
+    #[test]
+    fn in_flight_counts_panicking_jobs_down() {
+        let pool = ThreadPool::new(1);
+        pool.spawn(|| panic!("boom"));
+        for _ in 0..500 {
+            if pool.in_flight() == 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(pool.in_flight(), 0);
+        // Pool still usable after a panicked job.
+        assert_eq!(pool.map(vec![1, 2], |x| x * 2), vec![2, 4]);
     }
 
     #[test]

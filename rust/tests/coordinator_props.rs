@@ -10,7 +10,7 @@ use bigroots::analysis::straggler;
 use bigroots::sim::scheduler::{Scheduler, Topology};
 use bigroots::sim::task::{InputKind, StageSpec};
 use bigroots::sim::{Engine, InjectionPlan, SimConfig};
-use bigroots::testing::proptest::{assert_prop, F64Range, Gen, PairOf, U64Range, VecOf};
+use bigroots::testing::proptest::{assert_prop, F64Range, Gen, PairOf, TripleOf, U64Range, VecOf};
 use bigroots::trace::codec;
 use bigroots::util::rng::Pcg64;
 
@@ -276,6 +276,91 @@ fn prop_bucketized_series_preserves_integral() {
         }
         if (sampled - exact).abs() > 1e-6 * exact.max(1.0) {
             return Err(format!("integral drift: sampled {sampled} vs exact {exact}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_deferred_stream_equals_batch_analysis() {
+    // Streaming-vs-batch parity: for any simulated trace, the deferred
+    // (watermarked) StreamAnalyzer's per-stage results equal whole-trace
+    // analyze_stage_with_stats output bit-for-bit.
+    use bigroots::coordinator::StreamAnalyzer;
+    use bigroots::trace::eventlog::trace_to_events;
+    let gen = PairOf(U64Range(0, 50_000), U64Range(6, 40));
+    assert_prop(111, 10, &gen, |&(seed, ntasks)| {
+        let mut spec = StageSpec::base("p", ntasks as usize);
+        spec.input_mean_bytes = 5e6;
+        spec.spill_prob = 0.2;
+        let mut eng = Engine::new(SimConfig { seed, ..Default::default() });
+        let trace = eng.run("p", "p", &[spec], &InjectionPlan::none());
+        let mut an = StreamAnalyzer::new_deferred(
+            Box::new(bigroots::analysis::stats::NativeBackend),
+            BigRootsConfig::default(),
+        );
+        for e in &trace_to_events(&trace) {
+            an.feed(e);
+        }
+        an.finish();
+        let cfg = BigRootsConfig::default();
+        let sfs = extract_all(&trace, cfg.edge_width);
+        if an.results.len() != sfs.len() {
+            return Err(format!("analyzed {} of {} stages", an.results.len(), sfs.len()));
+        }
+        for (got, sf) in an.results.iter().zip(&sfs) {
+            let want = analyze_stage_with_stats(sf, &compute_native(sf), &cfg);
+            if *got != want {
+                return Err(format!("stage {} stream != batch", sf.stage_id));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_service_results_equal_batch_for_interleaved_jobs() {
+    // Multi-job parity: interleave N independent jobs into one tagged
+    // stream; the concurrent service must produce, for every job, exactly
+    // the per-stage analyses the offline batch path computes — regardless
+    // of shard count, worker count and batch size (varied with the seed).
+    use bigroots::coordinator::{AnalysisService, ServiceConfig};
+    use bigroots::trace::eventlog::interleave_jobs;
+    use bigroots::trace::JobTrace;
+    let gen = TripleOf(U64Range(0, 10_000), U64Range(2, 5), U64Range(6, 32));
+    assert_prop(112, 6, &gen, |&(seed, njobs, ntasks)| {
+        let mut traces: Vec<(u64, JobTrace)> = Vec::new();
+        for j in 0..njobs {
+            let mut spec = StageSpec::base("s", ntasks as usize);
+            spec.spill_prob = 0.2;
+            let job_seed = seed ^ (j.wrapping_mul(7919));
+            let mut eng = Engine::new(SimConfig { seed: job_seed, ..Default::default() });
+            let name = format!("job{j}");
+            traces.push((j, eng.run(&name, "p", &[spec], &InjectionPlan::none())));
+        }
+        let refs: Vec<(u64, &JobTrace)> = traces.iter().map(|(id, t)| (*id, t)).collect();
+        let events = interleave_jobs(&refs);
+        let mut svc = AnalysisService::new(ServiceConfig {
+            shards: 1 + (seed % 3) as usize,
+            workers: 1 + (seed % 4) as usize,
+            batch_size: 1 + (seed % 5) as usize,
+            ..Default::default()
+        });
+        svc.feed_all(&events);
+        let report = svc.finish();
+        let cfg = BigRootsConfig::default();
+        for (jid, trace) in &traces {
+            let got = report.job(*jid).ok_or_else(|| format!("job {jid} missing"))?;
+            let sfs = extract_all(trace, cfg.edge_width);
+            if got.len() != sfs.len() {
+                return Err(format!("job {jid}: {} of {} stages", got.len(), sfs.len()));
+            }
+            for (g, sf) in got.iter().zip(&sfs) {
+                let want = analyze_stage_with_stats(sf, &compute_native(sf), &cfg);
+                if *g != want {
+                    return Err(format!("job {jid} stage {}: service != batch", sf.stage_id));
+                }
+            }
         }
         Ok(())
     });

@@ -1,0 +1,112 @@
+//! Golden-fixture round-trips: small checked-in traces and event logs in
+//! the on-disk formats. These pin the wire formats — if `codec` or
+//! `eventlog` change incompatibly, these fail before any consumer does.
+
+use bigroots::coordinator::{AnalysisService, Pipeline, ServiceConfig};
+use bigroots::trace::eventlog::{demux_jobs, events_to_trace, parse_tagged_events, Event};
+use bigroots::trace::{codec, AnomalyKind, Locality};
+use bigroots::util::json::Json;
+
+fn fixture_path(name: &str) -> String {
+    format!("{}/tests/fixtures/{}", env!("CARGO_MANIFEST_DIR"), name)
+}
+
+#[test]
+fn trace_fixture_decodes_to_known_values() {
+    let trace = codec::load(&fixture_path("trace_small.json")).unwrap();
+    assert_eq!(trace.job_name, "golden-small");
+    assert_eq!(trace.workload, "WordCount");
+    assert_eq!(trace.cluster.nodes, 2);
+    assert_eq!(trace.cluster.cores_per_node, 4);
+    assert_eq!(trace.stages.len(), 2);
+    assert_eq!(trace.stages[0].tasks, vec![0, 1]);
+    assert_eq!(trace.tasks.len(), 3);
+    assert_eq!(trace.tasks[0].locality, Locality::ProcessLocal);
+    assert_eq!(trace.tasks[1].finish, 4.5);
+    assert_eq!(trace.tasks[2].shuffle_read_bytes, 6144.0);
+    assert_eq!(trace.makespan(), 6.0);
+    assert_eq!(trace.node_series.len(), 2);
+    assert_eq!(trace.node_series[0].cpu.len(), 8);
+    assert_eq!(trace.node_series[0].net_bytes[1], 2000.5);
+    assert_eq!(trace.injections.len(), 1);
+    assert_eq!(trace.injections[0].kind, AnomalyKind::Cpu);
+    assert!(trace.validate().is_ok());
+}
+
+#[test]
+fn trace_fixture_reencode_roundtrip_is_stable() {
+    let text = std::fs::read_to_string(fixture_path("trace_small.json")).unwrap();
+    let decoded = codec::decode(&Json::parse(&text).unwrap()).unwrap();
+    // decode → encode → decode is the identity…
+    let re = codec::decode(&codec::encode(&decoded)).unwrap();
+    assert_eq!(decoded, re);
+    // …and the re-encoded *text* parses to the same value too (shortest-
+    // roundtrip float formatting).
+    let text2 = codec::encode(&decoded).to_pretty();
+    let re2 = codec::decode(&Json::parse(&text2).unwrap()).unwrap();
+    assert_eq!(decoded, re2);
+}
+
+#[test]
+fn interleaved_event_fixture_parses_and_demuxes() {
+    let text = std::fs::read_to_string(fixture_path("events_interleaved.ndjson")).unwrap();
+    let events = parse_tagged_events(&text).unwrap();
+    assert_eq!(events.len(), 23);
+    let per_job = demux_jobs(&events);
+    assert_eq!(per_job.len(), 2);
+    assert_eq!(per_job[0].0, 1);
+    assert_eq!(per_job[1].0, 2);
+
+    let alpha = events_to_trace(&per_job[0].1).unwrap();
+    assert_eq!(alpha.job_name, "alpha");
+    assert_eq!(alpha.cluster.nodes, 2);
+    assert_eq!(alpha.tasks.len(), 2);
+    assert_eq!(alpha.makespan(), 3.0);
+    assert_eq!(alpha.node_series[0].cpu.len(), 4);
+    assert_eq!(alpha.node_series[1].cpu.len(), 4);
+
+    let beta = events_to_trace(&per_job[1].1).unwrap();
+    assert_eq!(beta.job_name, "beta");
+    assert_eq!(beta.cluster.nodes, 1);
+    assert_eq!(beta.tasks.len(), 1);
+    assert_eq!(beta.workload, "Sort");
+}
+
+#[test]
+fn interleaved_event_fixture_reencode_roundtrip() {
+    let text = std::fs::read_to_string(fixture_path("events_interleaved.ndjson")).unwrap();
+    let events = parse_tagged_events(&text).unwrap();
+    for e in &events {
+        // Tagged encode/decode is the identity…
+        let back = bigroots::trace::eventlog::TaggedEvent::decode(&e.encode()).unwrap();
+        assert_eq!(*e, back);
+        // …and the untagged event also survives alone.
+        let plain = Event::decode(&e.event.encode()).unwrap();
+        assert_eq!(e.event, plain);
+    }
+}
+
+#[test]
+fn service_on_fixture_matches_batch_on_rebuilt_traces() {
+    let text = std::fs::read_to_string(fixture_path("events_interleaved.ndjson")).unwrap();
+    let events = parse_tagged_events(&text).unwrap();
+    let mut svc = AnalysisService::new(ServiceConfig {
+        shards: 2,
+        workers: 2,
+        batch_size: 1,
+        ..Default::default()
+    });
+    svc.feed_all(&events);
+    let report = svc.finish();
+    assert_eq!(report.per_job.len(), 2);
+    for (job_id, job_events) in demux_jobs(&events) {
+        let trace = events_to_trace(&job_events).unwrap();
+        let mut p = Pipeline::native();
+        let want = p.analyze(&trace, "golden");
+        let got = report.job(job_id).unwrap();
+        assert_eq!(got.len(), want.per_stage.len());
+        for (g, (_, w)) in got.iter().zip(&want.per_stage) {
+            assert_eq!(g, w, "job {job_id} stage {}", g.stage_id);
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! Integration: the multi-job concurrent AnalysisService — cross-job
+//! interleaving invariance, the ≥8-job parity acceptance scenario,
+//! backpressure bounds, and metrics accounting.
+
+use bigroots::coordinator::{AnalysisService, Pipeline, ServiceConfig, ServiceReport};
+use bigroots::sim::multi::{
+    interleaved_workload, round_robin_specs, shuffle_preserving_job_order,
+};
+use bigroots::trace::eventlog::TaggedEvent;
+use bigroots::util::rng::Pcg64;
+
+fn run_service(events: &[TaggedEvent], cfg: ServiceConfig) -> ServiceReport {
+    let mut svc = AnalysisService::new(cfg);
+    svc.feed_all(events);
+    svc.finish()
+}
+
+/// Strip the report down to the comparable analysis payload.
+fn payload(r: &ServiceReport) -> Vec<(u64, usize, Vec<u64>)> {
+    r.per_job
+        .iter()
+        .map(|(id, analyses)| {
+            (*id, analyses.len(), analyses.iter().map(|a| a.stage_id).collect())
+        })
+        .collect()
+}
+
+#[test]
+fn eight_jobs_interleaved_match_single_job_batch_analysis() {
+    // The acceptance scenario: ≥8 concurrently interleaved jobs, per-stage
+    // results identical to each job's single-job batch analysis.
+    let specs = round_robin_specs(8, 0.12, 424242);
+    let (traces, events) = interleaved_workload(&specs);
+    assert_eq!(traces.len(), 8);
+    let report = run_service(
+        &events,
+        ServiceConfig { shards: 3, workers: 4, batch_size: 4, ..Default::default() },
+    );
+    assert_eq!(report.per_job.len(), 8);
+    assert!(report.incomplete.is_empty());
+    for (job_id, trace) in &traces {
+        let got = report.job(*job_id).expect("job analyzed");
+        let mut p = Pipeline::native();
+        let want = p.analyze(trace, "svc");
+        assert_eq!(got.len(), want.per_stage.len(), "job {job_id} stage count");
+        for (g, (_, w)) in got.iter().zip(&want.per_stage) {
+            assert_eq!(g, w, "job {job_id} stage {} differs from batch", g.stage_id);
+        }
+    }
+}
+
+#[test]
+fn cross_job_shuffles_yield_identical_results() {
+    // Any cross-job arrival order (per-job order preserved) must produce
+    // the same per-job analyses — full structural equality, not just
+    // counts.
+    let specs = round_robin_specs(5, 0.1, 777);
+    let (_, events) = interleaved_workload(&specs);
+    let baseline = run_service(&events, ServiceConfig::default());
+    for shuffle_seed in [1u64, 2, 3] {
+        let mut rng = Pcg64::seeded(shuffle_seed);
+        let shuffled = shuffle_preserving_job_order(&events, &mut rng);
+        // Vary service shape along with the order: results must not care.
+        let cfg = ServiceConfig {
+            shards: 1 + shuffle_seed as usize,
+            workers: 1 + (shuffle_seed as usize % 3),
+            batch_size: 1 + 2 * shuffle_seed as usize,
+            ..Default::default()
+        };
+        let report = run_service(&shuffled, cfg);
+        assert_eq!(payload(&report), payload(&baseline));
+        for (job_id, analyses) in &report.per_job {
+            let base = baseline.job(*job_id).unwrap();
+            assert_eq!(analyses.as_slice(), base, "job {job_id} differs under shuffle");
+        }
+    }
+}
+
+#[test]
+fn backpressure_bounds_queue_depth() {
+    let specs = round_robin_specs(6, 0.1, 31);
+    let (_, events) = interleaved_workload(&specs);
+    let cfg = ServiceConfig {
+        shards: 2,
+        workers: 2,
+        batch_size: 1,
+        max_in_flight_batches: 2,
+        ..Default::default()
+    };
+    let mut svc = AnalysisService::new(cfg);
+    let mut max_in_flight = 0usize;
+    for e in &events {
+        svc.feed(e);
+        max_in_flight = max_in_flight.max(svc.in_flight_batches());
+    }
+    // feed() may admit up to the threshold plus the batch it just queued.
+    assert!(
+        max_in_flight <= 3,
+        "in-flight batches reached {max_in_flight}, backpressure threshold 2"
+    );
+    let report = svc.finish();
+    assert!(report.total_stages() > 0);
+}
+
+#[test]
+fn metrics_account_for_every_event_and_stage() {
+    let specs = round_robin_specs(4, 0.1, 59);
+    let (traces, events) = interleaved_workload(&specs);
+    let report = run_service(&events, ServiceConfig::default());
+    let m = &report.metrics;
+    assert_eq!(m.events_total, events.len());
+    assert_eq!(m.jobs_seen, 4);
+    let shard_events: usize = m.per_shard.iter().map(|s| s.events).sum();
+    assert_eq!(shard_events, events.len());
+    let job_events: usize = m.per_job_events.iter().map(|(_, n)| n).sum();
+    assert_eq!(job_events, events.len());
+    assert_eq!(m.stages_analyzed, report.total_stages());
+    let total_stages: usize = traces.iter().map(|(_, t)| t.stages.len()).sum();
+    assert_eq!(report.total_stages(), total_stages);
+    assert_eq!(m.batches_completed, m.batches_dispatched);
+    assert!(m.events_per_sec > 0.0);
+}
+
+#[test]
+fn tagged_stream_survives_ndjson_roundtrip_through_service() {
+    // Serialize the interleaved stream to ndjson, parse it back, and run
+    // the service on the parsed copy: numeric fields round-trip exactly
+    // (shortest-roundtrip float formatting), so results match in full.
+    use bigroots::trace::eventlog::parse_tagged_events;
+    let specs = round_robin_specs(3, 0.1, 91);
+    let (_, events) = interleaved_workload(&specs);
+    let text: String = events.iter().map(|e| e.encode().to_string() + "\n").collect();
+    let parsed = parse_tagged_events(&text).unwrap();
+    assert_eq!(events, parsed);
+    let a = run_service(&events, ServiceConfig::default());
+    let b = run_service(&parsed, ServiceConfig::default());
+    for (job_id, analyses) in &a.per_job {
+        assert_eq!(analyses.as_slice(), b.job(*job_id).unwrap());
+    }
+}

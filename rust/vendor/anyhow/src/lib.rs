@@ -1,0 +1,179 @@
+//! Offline shim for the subset of the `anyhow` API this workspace uses:
+//! [`Error`], [`Result`], the [`anyhow!`] macro, and the [`Context`]
+//! extension trait. The container build has no access to crates.io, so the
+//! crate graph must be self-contained; this shim keeps call sites
+//! source-compatible with the real `anyhow` (swap the path dependency for
+//! the registry crate and nothing else changes).
+//!
+//! Semantics preserved:
+//! - `Display` prints the outermost message only.
+//! - Alternate `Display` (`{:#}`) prints the whole context chain,
+//!   colon-separated, outermost first.
+//! - `?` converts any `std::error::Error + Send + Sync + 'static` into
+//!   [`Error`], capturing its source chain as strings.
+
+use std::fmt;
+
+/// A string-backed error with an optional chain of causes.
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Construct from anything printable (the `anyhow!` macro target).
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string(), cause: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context(self, ctx: impl fmt::Display) -> Error {
+        Error { msg: ctx.to_string(), cause: Some(Box::new(self)) }
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> Vec<&str> {
+        let mut out = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            out.push(e.msg.as_str());
+            cur = e.cause.as_deref();
+        }
+        out
+    }
+
+    /// The innermost error message.
+    pub fn root_cause(&self) -> &str {
+        self.chain().last().copied().unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if f.alternate() {
+            let mut cur = self.cause.as_deref();
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = e.cause.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:#}", self)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msgs = vec![e.to_string()];
+        let mut cur: Option<&(dyn std::error::Error + 'static)> = e.source();
+        while let Some(c) = cur {
+            msgs.push(c.to_string());
+            cur = c.source();
+        }
+        let mut err: Option<Error> = None;
+        for m in msgs.into_iter().rev() {
+            err = Some(Error { msg: m, cause: err.map(Box::new) });
+        }
+        err.expect("at least one message")
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attaching extension for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or a printable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_prints_outermost_only() {
+        let e: Error = Error::from(io_err()).context("reading file");
+        assert_eq!(format!("{e}"), "reading file");
+    }
+
+    #[test]
+    fn alternate_display_prints_chain() {
+        let e: Error = Error::from(io_err()).context("reading file");
+        assert_eq!(format!("{e:#}"), "reading file: gone");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(format!("{:#}", f().unwrap_err()), "gone");
+    }
+
+    #[test]
+    fn context_trait_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("ctx").unwrap_err();
+        assert_eq!(e.chain(), vec!["ctx", "gone"]);
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(format!("{e}"), "missing 7");
+    }
+
+    #[test]
+    fn anyhow_macro_forms() {
+        let a = anyhow!("plain");
+        assert_eq!(format!("{a}"), "plain");
+        let n = 3;
+        let b = anyhow!("got {}", n);
+        assert_eq!(format!("{b}"), "got 3");
+        let c = anyhow!(String::from("owned"));
+        assert_eq!(format!("{c}"), "owned");
+    }
+}
