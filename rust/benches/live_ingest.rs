@@ -1,0 +1,81 @@
+//! Bench: shard-parallel live ingest vs single-threaded demux.
+//!
+//! The PR-2 `AnalysisService` demuxes on the caller's thread — per-event
+//! `JobState` accumulation, watermark bookkeeping and feature extraction
+//! are serial, and only the stats math runs on the pool. The live
+//! server's shard workers own that whole path. This bench pushes the same
+//! pre-generated 8-job interleaved stream through both and reports
+//! events/sec, then appends the numbers to `BENCH_multi_job.json` at the
+//! repo root so the trajectory is tracked across PRs.
+//!
+//! Run: `cargo bench --bench live_ingest [-- --quick]`
+
+use bigroots::coordinator::{AnalysisService, ServiceConfig};
+use bigroots::live::{LiveConfig, LiveServer};
+use bigroots::sim::multi::{interleaved_workload, round_robin_specs};
+use bigroots::testing::bench::{black_box, Bench};
+use bigroots::trace::eventlog::TaggedEvent;
+
+fn service_run(events: &[TaggedEvent], workers: usize) -> usize {
+    let mut svc = AnalysisService::new(ServiceConfig {
+        shards: 4,
+        workers,
+        batch_size: 8,
+        ..Default::default()
+    });
+    svc.feed_all(events);
+    svc.finish().total_stages()
+}
+
+fn live_run(events: &[TaggedEvent], shards: usize) -> usize {
+    let mut server = LiveServer::new(LiveConfig { shards, ..Default::default() });
+    server.feed_all(events);
+    server.finish().total_stages()
+}
+
+fn main() {
+    let mut bench = Bench::new();
+    let scale = if bench.quick { 0.08 } else { 0.15 };
+
+    let (_, eight_jobs) = interleaved_workload(&round_robin_specs(8, scale, 17));
+    println!("(stream: 8 jobs = {} events, scale {scale})", eight_jobs.len());
+    let n = eight_jobs.len() as f64;
+
+    // Sanity: both paths analyze the same number of stages.
+    let want = service_run(&eight_jobs, 4);
+    assert_eq!(live_run(&eight_jobs, 4), want, "stage-count parity");
+
+    // --- baseline: single-threaded demux (pooled stats) --------------------
+    bench.run("ingest/service-demux/workers=4", n, || {
+        black_box(service_run(&eight_jobs, 4));
+    });
+
+    // --- shard-parallel live ingest ----------------------------------------
+    for shards in [1usize, 2, 4, 8] {
+        let name = format!("ingest/live/shards={shards}");
+        bench.run(&name, n, || {
+            black_box(live_run(&eight_jobs, shards));
+        });
+    }
+
+    // --- headline comparison ------------------------------------------------
+    let results = bench.results();
+    let service_tp = results[0].throughput().unwrap_or(0.0);
+    let live4_tp = results
+        .iter()
+        .find(|r| r.name == "ingest/live/shards=4")
+        .and_then(|r| r.throughput())
+        .unwrap_or(0.0);
+    if service_tp > 0.0 {
+        println!(
+            "\nshard-parallel (4 shards) vs single-threaded demux: {:.2}x events/sec",
+            live4_tp / service_tp
+        );
+    }
+
+    let json_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_multi_job.json");
+    match bench.write_json(json_path, "live_ingest") {
+        Ok(()) => println!("(wrote {json_path})"),
+        Err(e) => eprintln!("(bench json write failed: {e})"),
+    }
+}

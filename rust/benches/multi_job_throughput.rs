@@ -58,4 +58,11 @@ fn main() {
             black_box(serve(&eight_jobs, 4, 4, batch));
         });
     }
+
+    // --- machine-readable trajectory ---------------------------------------
+    let json_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_multi_job.json");
+    match bench.write_json(json_path, "multi_job_throughput") {
+        Ok(()) => println!("(wrote {json_path})"),
+        Err(e) => eprintln!("(bench json write failed: {e})"),
+    }
 }

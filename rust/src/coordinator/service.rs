@@ -119,6 +119,9 @@ pub struct ShardMetrics {
 pub struct ServiceReport {
     /// Per-job analyses in stage-emission order, sorted by job id.
     pub per_job: Vec<(u64, Vec<StageAnalysis>)>,
+    /// job id → index into `per_job`, built once in `finish()` so lookups
+    /// stay O(1) at high job counts.
+    job_index: HashMap<u64, usize>,
     /// Jobs with stages that never completed (truncated streams).
     pub incomplete: Vec<(u64, Vec<u64>)>,
     pub metrics: ServiceMetrics,
@@ -127,10 +130,7 @@ pub struct ServiceReport {
 impl ServiceReport {
     /// Analyses for one job, if it was seen.
     pub fn job(&self, job_id: u64) -> Option<&[StageAnalysis]> {
-        self.per_job
-            .iter()
-            .find(|(id, _)| *id == job_id)
-            .map(|(_, v)| v.as_slice())
+        self.job_index.get(&job_id).map(|&i| self.per_job[i].1.as_slice())
     }
 
     pub fn total_stages(&self) -> usize {
@@ -404,6 +404,8 @@ impl AnalysisService {
             rows.sort_by_key(|(seq, _)| *seq);
             per_job.push((job_id, rows.into_iter().map(|(_, a)| a).collect()));
         }
+        let job_index: HashMap<u64, usize> =
+            per_job.iter().enumerate().map(|(i, (id, _))| (*id, i)).collect();
 
         let mut incomplete: Vec<(u64, Vec<u64>)> = Vec::new();
         for shard in &self.shards {
@@ -417,7 +419,33 @@ impl AnalysisService {
         incomplete.sort_by_key(|(id, _)| *id);
 
         let metrics = self.metrics();
-        ServiceReport { per_job, incomplete, metrics }
+        ServiceReport { per_job, job_index, incomplete, metrics }
+    }
+
+    /// Lifecycle hook: flush and drop one job's accumulator. Its held
+    /// stages are dispatched like normal ready stages (results already
+    /// collected stay collected); the `JobState` itself is freed, so a
+    /// later event with the same job id starts a *fresh* job. Returns
+    /// false if the job has no resident state. The long-running
+    /// [`crate::live`] server builds its eviction GC on this contract.
+    pub fn evict_job(&mut self, job_id: u64) -> bool {
+        let shard_idx = self.shard_of(job_id);
+        let flushed = {
+            let shard = &mut self.shards[shard_idx];
+            let Some(mut state) = shard.jobs.remove(&job_id) else {
+                return false;
+            };
+            let flushed = state.flush();
+            shard.stages_ready += flushed.len();
+            flushed
+        };
+        for r in flushed {
+            self.pending.push(AnalysisRequest { job_id, seq: r.seq, features: r.features });
+        }
+        if self.pending.len() >= self.cfg.batch_size {
+            self.dispatch_pending();
+        }
+        true
     }
 }
 
@@ -499,6 +527,41 @@ mod tests {
         let incomplete: usize = report.incomplete.iter().map(|(_, v)| v.len()).sum();
         assert!(analyzed + incomplete > 0);
         assert_eq!(report.metrics.events_total, cut);
+    }
+
+    #[test]
+    fn evict_job_flushes_and_forgets_state() {
+        let a = job(78, 0.25);
+        let events = interleave_jobs(&[(4, &a)]);
+        let mut svc = AnalysisService::new(ServiceConfig::default());
+        svc.feed_all(&events);
+        assert!(!svc.evict_job(99), "unknown job id");
+        assert!(svc.evict_job(4));
+        assert!(!svc.evict_job(4), "state already freed");
+        let report = svc.finish();
+        // Results collected before the eviction survive it, and the job's
+        // state is gone from the resident metrics.
+        let mut p = Pipeline::native();
+        let want = p.analyze(&a, "t");
+        assert_eq!(report.job(4).unwrap().len(), want.per_stage.len());
+        assert_eq!(report.metrics.jobs_seen, 0);
+    }
+
+    #[test]
+    fn report_job_lookup_uses_index() {
+        let a = job(79, 0.2);
+        let b = job(80, 0.2);
+        let events = interleave_jobs(&[(10, &a), (20, &b)]);
+        let mut svc = AnalysisService::new(ServiceConfig::default());
+        svc.feed_all(&events);
+        let report = svc.finish();
+        assert!(report.job(10).is_some());
+        assert!(report.job(20).is_some());
+        assert!(report.job(15).is_none());
+        // The index agrees with a linear scan.
+        for (id, rows) in &report.per_job {
+            assert_eq!(report.job(*id).unwrap().len(), rows.len());
+        }
     }
 
     #[test]

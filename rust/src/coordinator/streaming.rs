@@ -94,6 +94,9 @@ pub struct JobState {
     pub events_seen: usize,
     /// True once a `JobEnd` event arrived.
     pub ended: bool,
+    /// Timestamp of the `JobEnd` event, once it arrived — the anchor for
+    /// the live lifecycle manager's quiescence window.
+    pub end_time: Option<f64>,
 }
 
 impl JobState {
@@ -121,6 +124,7 @@ impl JobState {
             next_seq: 0,
             events_seen: 0,
             ended: false,
+            end_time: None,
         }
     }
 
@@ -189,12 +193,13 @@ impl JobState {
                     self.emit(stage_id).into_iter().collect()
                 }
             }
-            Event::JobEnd { .. } => {
+            Event::JobEnd { time } => {
                 // Do NOT flush here: trailing resource samples (the ones
                 // inside the last stages' tail edge windows) sort *after*
                 // `JobEnd` in the time-ordered stream. Held stages release
                 // via the watermark or an explicit [`JobState::flush`].
                 self.ended = true;
+                self.end_time = Some(*time);
                 Vec::new()
             }
             Event::TaskStart { .. } | Event::Injection(_) => Vec::new(),

@@ -26,8 +26,21 @@
 //!   stage until its edge windows are covered, so streaming results are
 //!   bit-identical to the batch pipeline — the parity, determinism and
 //!   interleaving-invariance tests live in `rust/tests/`.
-//!   `bigroots serve` and `examples/multi_job_service.rs` drive it;
-//!   [`sim::multi`] generates interleaved multi-job traffic.
+//!   `examples/multi_job_service.rs` drives it; [`sim::multi`] generates
+//!   interleaved multi-job traffic.
+//! - the **live multi-tenant server [`live::LiveServer`]** (sources →
+//!   sharded ingest → lifecycle GC → fleet registry): pluggable
+//!   transports ([`live::source`] — NDJSON file tail with rotation
+//!   detection, TCP listener, stdin) feed one worker thread per shard
+//!   over bounded queues ([`util::queue`], per-shard backpressure);
+//!   a job lifecycle manager ([`live::lifecycle`]) flushes and evicts
+//!   `JobState` after `JobEnd` plus a quiescence window (bounded memory
+//!   on unbounded streams, revived job ids are fresh incarnations); and
+//!   a cross-job [`live::registry::FleetRegistry`] folds every completed
+//!   stage into P² quantile sketches and root-cause incidence counters,
+//!   answering fleet queries and flagging stages anomalous versus the
+//!   fleet baseline. `bigroots serve --tail/--listen/--stdin` and
+//!   `examples/live_tail.rs` drive it end to end.
 //! - **L2 (python/compile/model.py)** — the batched per-stage feature
 //!   statistics graph in JAX, lowered once to HLO text.
 //! - **L1 (python/compile/kernels/)** — Pallas kernels for the fused
@@ -41,6 +54,7 @@
 
 pub mod analysis;
 pub mod coordinator;
+pub mod live;
 pub mod runtime;
 pub mod sim;
 pub mod testing;

@@ -1,0 +1,595 @@
+//! Shard-parallel live ingest — the long-running, multi-tenant analysis
+//! server.
+//!
+//! The PR-2 [`crate::coordinator::service::AnalysisService`] demuxes on
+//! the caller's thread: every `JobState::feed`, watermark check and
+//! feature extraction runs single-threaded, and only the stats math fans
+//! out to the pool. [`LiveServer`] moves the whole per-shard pipeline —
+//! demux, accumulation, stage freezing, feature extraction, stats and
+//! rule evaluation — onto one dedicated worker thread per shard, fed
+//! through a *bounded* queue ([`crate::util::queue`]):
+//!
+//! ```text
+//!  source ─feed─▶ router ──▶ [queue 0] ─▶ shard 0: JobState GC + analyze ─┐
+//!                 (batches)  [queue 1] ─▶ shard 1:        "              ─┤─▶ collector
+//!                            [queue 2] ─▶ shard 2:        "              ─┘   (fleet
+//!                                                                            registry,
+//!                                                             per-job results, verdicts)
+//! ```
+//!
+//! - **Backpressure**: `feed` blocks once the slowest shard's queue is
+//!   full — the transport naturally throttles to analysis speed, and
+//!   buffered memory is `shards × queue_capacity × ingest_batch` events
+//!   at most.
+//! - **Lifecycle GC**: each shard runs a [`Lifecycle`] that evicts
+//!   `JobState`s after `JobEnd` (drain or quiescence; see
+//!   [`crate::live::lifecycle`]), so resident state is bounded by the
+//!   number of *concurrently running* jobs, not jobs ever seen.
+//! - **Fleet registry**: the collector folds every completed stage into a
+//!   [`FleetRegistry`] and attaches the second-pass fleet verdict to each
+//!   job as it retires.
+//!
+//! Determinism: a job's events all hash to one shard and stay in order,
+//! so per-job analyses are bit-identical to the offline batch pipeline —
+//! the same guarantee the PR-2 service makes, now with parallel demux
+//! (`rust/tests/live_integration.rs` asserts it through a byte-level file
+//! tail).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::analysis::bigroots::{analyze_stage_with_stats, BigRootsConfig, StageAnalysis};
+use crate::analysis::stats::{NativeBackend, StatsBackend};
+use crate::live::lifecycle::{Lifecycle, LifecycleConfig};
+use crate::live::registry::{FleetFlag, FleetRegistry, FleetReport};
+use crate::trace::eventlog::TaggedEvent;
+use crate::util::queue::{bounded, BoundedSender};
+
+/// Live server tuning knobs. Correctness is independent of all of them.
+#[derive(Debug, Clone)]
+pub struct LiveConfig {
+    /// Shard worker threads (each owns its jobs' state and a backend).
+    pub shards: usize,
+    /// Events buffered per shard before a queue send (amortizes the
+    /// queue's lock).
+    pub ingest_batch: usize,
+    /// Per-shard queue capacity in batches — the backpressure bound.
+    pub queue_capacity: usize,
+    /// Job eviction policy.
+    pub lifecycle: LifecycleConfig,
+    /// Analyzer thresholds (paper defaults).
+    pub bigroots: BigRootsConfig,
+    /// Fleet-verdict cold-start guard (min observations per baseline).
+    pub fleet_min_samples: usize,
+}
+
+impl Default for LiveConfig {
+    fn default() -> Self {
+        LiveConfig {
+            shards: 4,
+            ingest_batch: 64,
+            queue_capacity: 8,
+            lifecycle: LifecycleConfig::default(),
+            bigroots: BigRootsConfig::default(),
+            fleet_min_samples: 64,
+        }
+    }
+}
+
+/// Per-shard counters, written by the worker, read by anyone.
+#[derive(Default)]
+struct ShardStats {
+    events: AtomicUsize,
+    stages: AtomicUsize,
+    resident: AtomicUsize,
+    resident_high: AtomicUsize,
+    evicted: AtomicUsize,
+    dropped: AtomicUsize,
+}
+
+/// What a shard worker sends the collector.
+enum LiveMsg {
+    Stage {
+        job_id: u64,
+        incarnation: u32,
+        seq: u64,
+        features: crate::analysis::features::StageFeatures,
+        analysis: StageAnalysis,
+    },
+    Evicted {
+        job_id: u64,
+        incarnation: u32,
+        ended: bool,
+        incomplete: Vec<u64>,
+        /// Evicted while the stream was still flowing (vs end-of-stream).
+        live: bool,
+    },
+}
+
+/// One fully retired job.
+#[derive(Debug)]
+pub struct CompletedJob {
+    pub job_id: u64,
+    pub incarnation: u32,
+    /// A `JobEnd` was seen.
+    pub ended: bool,
+    /// Evicted by the lifecycle GC mid-stream (vs flushed at stream end).
+    pub evicted_live: bool,
+    /// Per-stage analyses in stage-emission order — bit-identical to the
+    /// offline batch pipeline for complete jobs.
+    pub analyses: Vec<StageAnalysis>,
+    /// Second-pass flags versus the fleet baseline at retirement time.
+    pub fleet_flags: Vec<FleetFlag>,
+    /// Announced stages that never completed.
+    pub incomplete: Vec<u64>,
+}
+
+/// Snapshot of live-server throughput and GC behavior.
+#[derive(Debug, Clone)]
+pub struct LiveMetrics {
+    pub events_total: usize,
+    pub jobs_completed: usize,
+    pub evictions_live: usize,
+    pub stages_analyzed: usize,
+    /// Sum of per-shard resident high-water marks — the peak number of
+    /// `JobState`s held at once (upper bound across shards).
+    pub resident_high_water: usize,
+    pub resident_now: usize,
+    /// Stray post-eviction events dropped.
+    pub events_dropped: usize,
+    pub per_shard: Vec<LiveShardMetrics>,
+    pub elapsed_secs: f64,
+    pub events_per_sec: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct LiveShardMetrics {
+    pub shard: usize,
+    pub events: usize,
+    pub stages: usize,
+    pub resident: usize,
+    pub resident_high: usize,
+    pub evicted: usize,
+}
+
+/// Final output of a live run. Jobs already taken with
+/// [`LiveServer::drain_completed`] are *not* repeated here.
+#[derive(Debug)]
+pub struct LiveReport {
+    /// Retired jobs sorted by (job id, incarnation).
+    pub jobs: Vec<CompletedJob>,
+    pub fleet: FleetReport,
+    pub metrics: LiveMetrics,
+}
+
+impl LiveReport {
+    /// First incarnation of a job id, if it retired in this report.
+    /// `jobs` is sorted by (job id, incarnation), so this is a binary
+    /// search — no linear scan at high job counts (the same contract
+    /// [`crate::coordinator::service::ServiceReport::job`] keeps via its
+    /// index).
+    pub fn job(&self, job_id: u64) -> Option<&CompletedJob> {
+        let i = self.jobs.partition_point(|j| j.job_id < job_id);
+        self.jobs.get(i).filter(|j| j.job_id == job_id)
+    }
+
+    pub fn total_stages(&self) -> usize {
+        self.jobs.iter().map(|j| j.analyses.len()).sum()
+    }
+
+    pub fn total_stragglers(&self) -> usize {
+        self.jobs
+            .iter()
+            .flat_map(|j| j.analyses.iter())
+            .map(|a| a.stragglers.rows.len())
+            .sum()
+    }
+}
+
+/// The long-running shard-parallel analysis server. See module docs.
+pub struct LiveServer {
+    cfg: LiveConfig,
+    senders: Vec<BoundedSender<Vec<TaggedEvent>>>,
+    pending: Vec<Vec<TaggedEvent>>,
+    workers: Vec<JoinHandle<()>>,
+    results_rx: Receiver<LiveMsg>,
+    stats: Vec<Arc<ShardStats>>,
+    registry: FleetRegistry,
+    /// (job id, incarnation) → collected (seq, analysis, fleet flags).
+    collected: HashMap<(u64, u32), Vec<(u64, StageAnalysis, Vec<FleetFlag>)>>,
+    completed: Vec<CompletedJob>,
+    jobs_completed: usize,
+    evictions_live: usize,
+    events_total: usize,
+    started: Instant,
+}
+
+impl LiveServer {
+    pub fn new(mut cfg: LiveConfig) -> Self {
+        cfg.shards = cfg.shards.max(1);
+        cfg.ingest_batch = cfg.ingest_batch.max(1);
+        cfg.queue_capacity = cfg.queue_capacity.max(1);
+        let (results_tx, results_rx) = channel::<LiveMsg>();
+        let mut senders = Vec::with_capacity(cfg.shards);
+        let mut workers = Vec::with_capacity(cfg.shards);
+        let mut stats = Vec::with_capacity(cfg.shards);
+        for _ in 0..cfg.shards {
+            let (tx, rx) = bounded::<Vec<TaggedEvent>>(cfg.queue_capacity);
+            let shard_stats = Arc::new(ShardStats::default());
+            let worker_stats = Arc::clone(&shard_stats);
+            let worker_tx = results_tx.clone();
+            let bigroots = cfg.bigroots;
+            let lifecycle = cfg.lifecycle.clone();
+            workers.push(std::thread::spawn(move || {
+                shard_worker(rx, worker_tx, worker_stats, bigroots, lifecycle);
+            }));
+            senders.push(tx);
+            stats.push(shard_stats);
+        }
+        // The workers hold the only result senders: when they exit, the
+        // collector sees the channel disconnect and knows the drain is
+        // complete.
+        drop(results_tx);
+        let pending = (0..cfg.shards).map(|_| Vec::new()).collect();
+        LiveServer {
+            registry: FleetRegistry::new(cfg.fleet_min_samples),
+            cfg,
+            senders,
+            pending,
+            workers,
+            results_rx,
+            stats,
+            collected: HashMap::new(),
+            completed: Vec::new(),
+            jobs_completed: 0,
+            evictions_live: 0,
+            events_total: 0,
+            started: Instant::now(),
+        }
+    }
+
+    fn shard_of(&self, job_id: u64) -> usize {
+        (job_id % self.cfg.shards as u64) as usize
+    }
+
+    /// Ingest one event. Blocks when the target shard's queue is full —
+    /// that is the backpressure contract.
+    pub fn feed(&mut self, event: TaggedEvent) {
+        self.events_total += 1;
+        let shard = self.shard_of(event.job_id);
+        self.pending[shard].push(event);
+        if self.pending[shard].len() >= self.cfg.ingest_batch {
+            let batch = std::mem::take(&mut self.pending[shard]);
+            if self.senders[shard].send(batch).is_err() {
+                panic!("live shard {shard} worker died");
+            }
+        }
+        self.drain_results();
+    }
+
+    /// Ingest a slice (events are cloned into the shard queues).
+    pub fn feed_all(&mut self, events: &[TaggedEvent]) {
+        for e in events {
+            self.feed(e.clone());
+        }
+    }
+
+    /// Push partially-filled ingest batches through and absorb any ready
+    /// results. Call when the source is idle so analyses don't wait for a
+    /// batch to fill.
+    pub fn pump(&mut self) {
+        self.flush_pending();
+        self.drain_results();
+    }
+
+    fn flush_pending(&mut self) {
+        for shard in 0..self.cfg.shards {
+            if !self.pending[shard].is_empty() {
+                let batch = std::mem::take(&mut self.pending[shard]);
+                if self.senders[shard].send(batch).is_err() {
+                    panic!("live shard {shard} worker died");
+                }
+            }
+        }
+    }
+
+    /// Retired jobs since the last call (print verdicts incrementally).
+    pub fn drain_completed(&mut self) -> Vec<CompletedJob> {
+        self.drain_results();
+        std::mem::take(&mut self.completed)
+    }
+
+    /// Events accepted so far.
+    pub fn events_total(&self) -> usize {
+        self.events_total
+    }
+
+    /// Read-only fleet registry access (snapshot queries mid-run).
+    pub fn registry(&self) -> &FleetRegistry {
+        &self.registry
+    }
+
+    fn drain_results(&mut self) {
+        while let Ok(msg) = self.results_rx.try_recv() {
+            self.absorb(msg);
+        }
+    }
+
+    fn absorb(&mut self, msg: LiveMsg) {
+        match msg {
+            LiveMsg::Stage { job_id, incarnation, seq, features, analysis } => {
+                // Second verdict pass against the baseline *before* this
+                // stage joins it (no self-comparison), then fold.
+                let flags = self.registry.fleet_verdict(&features, &analysis);
+                self.registry.fold_stage(&features, &analysis);
+                self.collected
+                    .entry((job_id, incarnation))
+                    .or_default()
+                    .push((seq, analysis, flags));
+            }
+            LiveMsg::Evicted { job_id, incarnation, ended, incomplete, live } => {
+                let mut rows =
+                    self.collected.remove(&(job_id, incarnation)).unwrap_or_default();
+                rows.sort_by_key(|(seq, _, _)| *seq);
+                let mut analyses = Vec::with_capacity(rows.len());
+                let mut fleet_flags = Vec::new();
+                for (_, a, flags) in rows {
+                    analyses.push(a);
+                    fleet_flags.extend(flags);
+                }
+                if ended {
+                    self.registry.job_completed();
+                }
+                self.jobs_completed += 1;
+                if live {
+                    self.evictions_live += 1;
+                }
+                self.completed.push(CompletedJob {
+                    job_id,
+                    incarnation,
+                    ended,
+                    evicted_live: live,
+                    analyses,
+                    fleet_flags,
+                    incomplete,
+                });
+            }
+        }
+    }
+
+    /// Current health snapshot.
+    pub fn metrics(&self) -> LiveMetrics {
+        let elapsed = self.started.elapsed().as_secs_f64();
+        let per_shard: Vec<LiveShardMetrics> = self
+            .stats
+            .iter()
+            .enumerate()
+            .map(|(i, s)| LiveShardMetrics {
+                shard: i,
+                events: s.events.load(Ordering::Relaxed),
+                stages: s.stages.load(Ordering::Relaxed),
+                resident: s.resident.load(Ordering::Relaxed),
+                resident_high: s.resident_high.load(Ordering::Relaxed),
+                evicted: s.evicted.load(Ordering::Relaxed),
+            })
+            .collect();
+        LiveMetrics {
+            events_total: self.events_total,
+            jobs_completed: self.jobs_completed,
+            evictions_live: self.evictions_live,
+            stages_analyzed: per_shard.iter().map(|s| s.stages).sum(),
+            resident_high_water: per_shard.iter().map(|s| s.resident_high).sum(),
+            resident_now: per_shard.iter().map(|s| s.resident).sum(),
+            events_dropped: self
+                .stats
+                .iter()
+                .map(|s| s.dropped.load(Ordering::Relaxed))
+                .sum(),
+            per_shard,
+            elapsed_secs: elapsed,
+            events_per_sec: if elapsed > 0.0 {
+                self.events_total as f64 / elapsed
+            } else {
+                0.0
+            },
+        }
+    }
+
+    /// End of stream: flush the ingest buffers, retire every resident
+    /// job, wait for the shard workers, and assemble the report.
+    pub fn finish(mut self) -> LiveReport {
+        self.flush_pending();
+        // Dropping the queue senders closes the shards' input; each
+        // worker drains its queue, retires its jobs and exits.
+        self.senders.clear();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        // All result senders are gone now — drain to disconnect.
+        while let Ok(msg) = self.results_rx.recv() {
+            self.absorb(msg);
+        }
+        let metrics = self.metrics();
+        let mut jobs = std::mem::take(&mut self.completed);
+        jobs.sort_by_key(|j| (j.job_id, j.incarnation));
+        LiveReport { jobs, fleet: self.registry.report(), metrics }
+    }
+}
+
+/// One shard's worker loop: demux → lifecycle → analyze → report.
+fn shard_worker(
+    rx: crate::util::queue::BoundedReceiver<Vec<TaggedEvent>>,
+    tx: Sender<LiveMsg>,
+    stats: Arc<ShardStats>,
+    bigroots: BigRootsConfig,
+    lifecycle_cfg: LifecycleConfig,
+) {
+    let mut backend = NativeBackend;
+    let mut lc = Lifecycle::new(lifecycle_cfg, bigroots.edge_width);
+    let analyze_and_send =
+        |job_id: u64,
+         incarnation: u32,
+         ready: Vec<crate::coordinator::streaming::ReadyStage>,
+         backend: &mut NativeBackend,
+         stats: &ShardStats,
+         tx: &Sender<LiveMsg>| {
+            for r in ready {
+                let st = backend.stage_stats(&r.features);
+                let analysis = analyze_stage_with_stats(&r.features, &st, &bigroots);
+                stats.stages.fetch_add(1, Ordering::Relaxed);
+                let _ = tx.send(LiveMsg::Stage {
+                    job_id,
+                    incarnation,
+                    seq: r.seq,
+                    features: r.features,
+                    analysis,
+                });
+            }
+        };
+    while let Some(batch) = rx.recv() {
+        for ev in batch {
+            stats.events.fetch_add(1, Ordering::Relaxed);
+            let job_id = ev.job_id;
+            if let Some((incarnation, ready)) = lc.feed(&ev) {
+                if !ready.is_empty() {
+                    analyze_and_send(job_id, incarnation, ready, &mut backend, &stats, &tx);
+                }
+            }
+            for e in lc.take_evictions() {
+                analyze_and_send(e.job_id, e.incarnation, e.flushed, &mut backend, &stats, &tx);
+                let _ = tx.send(LiveMsg::Evicted {
+                    job_id: e.job_id,
+                    incarnation: e.incarnation,
+                    ended: e.ended,
+                    incomplete: e.incomplete,
+                    live: true,
+                });
+            }
+        }
+        stats.resident.store(lc.resident(), Ordering::Relaxed);
+        stats.resident_high.store(lc.resident_high(), Ordering::Relaxed);
+        stats.evicted.store(lc.evicted_total(), Ordering::Relaxed);
+        stats.dropped.store(lc.dropped(), Ordering::Relaxed);
+    }
+    // Input closed: retire everything still resident.
+    for e in lc.drain_all() {
+        analyze_and_send(e.job_id, e.incarnation, e.flushed, &mut backend, &stats, &tx);
+        let _ = tx.send(LiveMsg::Evicted {
+            job_id: e.job_id,
+            incarnation: e.incarnation,
+            ended: e.ended,
+            incomplete: e.incomplete,
+            live: false,
+        });
+    }
+    stats.resident.store(lc.resident(), Ordering::Relaxed);
+    stats.resident_high.store(lc.resident_high(), Ordering::Relaxed);
+    stats.evicted.store(lc.evicted_total(), Ordering::Relaxed);
+    stats.dropped.store(lc.dropped(), Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Pipeline;
+    use crate::sim::multi::{interleaved_workload, round_robin_specs};
+
+    fn run_live(events: &[TaggedEvent], cfg: LiveConfig) -> LiveReport {
+        let mut server = LiveServer::new(cfg);
+        server.feed_all(events);
+        server.finish()
+    }
+
+    #[test]
+    fn interleaved_jobs_match_batch_bit_for_bit() {
+        let specs = round_robin_specs(4, 0.12, 909);
+        let (traces, events) = interleaved_workload(&specs);
+        let report = run_live(
+            &events,
+            LiveConfig { shards: 3, ingest_batch: 16, ..Default::default() },
+        );
+        assert_eq!(report.jobs.len(), 4);
+        for (job_id, trace) in &traces {
+            let got = report.job(*job_id).expect("job retired");
+            assert!(got.ended);
+            assert!(got.incomplete.is_empty());
+            let mut p = Pipeline::native();
+            let want = p.analyze(trace, "live");
+            assert_eq!(got.analyses.len(), want.per_stage.len());
+            for (g, (_, w)) in got.analyses.iter().zip(&want.per_stage) {
+                assert_eq!(g, w, "job {job_id} stage {}", g.stage_id);
+            }
+        }
+        assert_eq!(report.metrics.events_total, events.len());
+        assert_eq!(report.metrics.stages_analyzed, report.total_stages());
+        assert_eq!(report.fleet.stages, report.total_stages());
+        assert_eq!(report.fleet.jobs_completed, 4);
+    }
+
+    #[test]
+    fn shard_count_does_not_change_results() {
+        let specs = round_robin_specs(5, 0.1, 333);
+        let (_, events) = interleaved_workload(&specs);
+        let base = run_live(&events, LiveConfig { shards: 1, ..Default::default() });
+        for shards in [2usize, 4, 8] {
+            let other = run_live(
+                &events,
+                LiveConfig { shards, ingest_batch: 5, ..Default::default() },
+            );
+            assert_eq!(base.jobs.len(), other.jobs.len());
+            for (a, b) in base.jobs.iter().zip(&other.jobs) {
+                assert_eq!(a.job_id, b.job_id);
+                assert_eq!(a.analyses, b.analyses, "shards={shards}");
+            }
+        }
+    }
+
+    #[test]
+    fn drain_completed_hands_jobs_over_once() {
+        let specs = round_robin_specs(3, 0.1, 555);
+        let (_, events) = interleaved_workload(&specs);
+        let mut server = LiveServer::new(LiveConfig {
+            shards: 2,
+            ingest_batch: 8,
+            ..Default::default()
+        });
+        let mut drained = Vec::new();
+        for e in &events {
+            server.feed(e.clone());
+            drained.extend(server.drain_completed());
+        }
+        server.pump();
+        let report = server.finish();
+        let total = drained.len() + report.jobs.len();
+        assert_eq!(total, 3, "every job retires exactly once");
+    }
+
+    #[test]
+    fn fleet_registry_accumulates_across_jobs() {
+        let specs = round_robin_specs(6, 0.1, 202);
+        let (_, events) = interleaved_workload(&specs);
+        let report = run_live(
+            &events,
+            LiveConfig { fleet_min_samples: 8, ..Default::default() },
+        );
+        assert_eq!(report.fleet.jobs_completed, 6);
+        assert!(report.fleet.tasks > 0);
+        assert!(report.fleet.straggler_rate() >= 0.0);
+        // The incidence counters agree exactly with the per-job analyses.
+        let want_causes: usize = report
+            .jobs
+            .iter()
+            .flat_map(|j| j.analyses.iter())
+            .map(|a| a.causes.len())
+            .sum();
+        let got_causes: usize =
+            report.fleet.cause_incidence.iter().map(|(_, n)| n).sum();
+        assert_eq!(got_causes, want_causes);
+        let want_stragglers: usize = report.total_stragglers();
+        assert_eq!(report.fleet.straggler_tasks, want_stragglers);
+    }
+}

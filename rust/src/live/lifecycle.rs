@@ -1,0 +1,466 @@
+//! Job lifecycle GC — what lets a shard hold an *unbounded* stream of
+//! jobs in *bounded* memory.
+//!
+//! Each shard owns one [`Lifecycle`]: a map of resident
+//! [`JobState`] accumulators plus the eviction policy that retires them.
+//! A job is evicted when either
+//!
+//! - **drained**: its `JobEnd` arrived and every announced stage has been
+//!   analyzed (the watermark released the last held stage) — nothing the
+//!   job can still send would change any result, or
+//! - **quiesced**: its `JobEnd` arrived and the job's own event-time
+//!   watermark advanced `evict_after` seconds past the end time without
+//!   draining (a truncated job that will never complete its stages) — the
+//!   remaining held stages are force-flushed so the job still reports, or
+//! - **orphaned**: no `JobEnd` ever came and the job received none of the
+//!   shard's last `orphan_events` accepted events (its tenant crashed) —
+//!   the fallback that keeps memory bounded even for jobs that never end.
+//!
+//! The quiescence window is floored at the analyzer's edge width: a
+//! healthy job's trailing resource samples (the ones its last stages'
+//! tail windows need) arrive within `edge_width` seconds of `JobEnd`, so
+//! eviction can never race the samples that bit-identical parity needs.
+//!
+//! **Revival**: each job id carries an incarnation counter. After
+//! eviction, stray trailing events of the dead incarnation (resource
+//! samples, late task ends) are dropped; only a fresh `JobStart` opens a
+//! new incarnation, which is a completely fresh job — nothing of the old
+//! state survives. The counter map is the only per-retired-job residue
+//! (a dozen bytes per distinct job id ever seen).
+
+use std::collections::HashMap;
+
+use crate::coordinator::streaming::{JobState, ReadyStage};
+use crate::trace::eventlog::{Event, TaggedEvent};
+
+/// Eviction policy knobs.
+#[derive(Debug, Clone)]
+pub struct LifecycleConfig {
+    /// Seconds of event-time quiescence after `JobEnd` before a
+    /// non-drained job is force-flushed and evicted. Floored at the
+    /// analyzer's edge width (see module docs).
+    pub evict_after: f64,
+    /// Run the eviction scan every this many events (the drain check is
+    /// O(resident ended jobs)).
+    pub scan_every: usize,
+    /// Crashed-tenant fallback: force-flush and evict any job — `JobEnd`
+    /// or not — that received none of the shard's last `orphan_events`
+    /// accepted events. Counted in events rather than time so streams
+    /// that restart the clock per job can't trip it. This is what keeps
+    /// memory bounded when a tenant dies mid-job and its `JobEnd` never
+    /// arrives. 0 disables.
+    pub orphan_events: usize,
+}
+
+impl Default for LifecycleConfig {
+    fn default() -> Self {
+        LifecycleConfig { evict_after: 5.0, scan_every: 64, orphan_events: 100_000 }
+    }
+}
+
+/// One resident job.
+struct JobSlot {
+    state: JobState,
+    incarnation: u32,
+    /// Max event time seen for this job (its private watermark — streams
+    /// that restart the clock per job must not share one).
+    watermark: f64,
+    /// Shard event counter at this job's last accepted event (orphan GC).
+    last_seen: u64,
+}
+
+/// A retired job, ready to report.
+pub struct EvictedJob {
+    pub job_id: u64,
+    pub incarnation: u32,
+    /// A `JobEnd` was seen (false only for end-of-stream drains).
+    pub ended: bool,
+    /// Stages force-flushed at eviction — analyze these before reporting.
+    pub flushed: Vec<ReadyStage>,
+    /// Announced stages that never completed.
+    pub incomplete: Vec<u64>,
+    /// Events this job consumed.
+    pub events_seen: usize,
+}
+
+/// Per-shard job table + eviction policy. See module docs.
+pub struct Lifecycle {
+    cfg: LifecycleConfig,
+    edge_width: f64,
+    jobs: HashMap<u64, JobSlot>,
+    /// Next incarnation per job id; presence marks "was evicted before".
+    incarnations: HashMap<u64, u32>,
+    /// Ids with `JobEnd` seen, pending eviction.
+    ended: Vec<u64>,
+    /// Accepted events, ever (drives the orphan-GC silence window).
+    events_total: u64,
+    events_since_scan: usize,
+    evictions: Vec<EvictedJob>,
+    resident_high: usize,
+    evicted_total: usize,
+    /// Stray post-eviction events dropped.
+    dropped: usize,
+}
+
+impl Lifecycle {
+    pub fn new(cfg: LifecycleConfig, edge_width: f64) -> Self {
+        Lifecycle {
+            cfg,
+            edge_width,
+            jobs: HashMap::new(),
+            incarnations: HashMap::new(),
+            ended: Vec::new(),
+            events_total: 0,
+            events_since_scan: 0,
+            evictions: Vec::new(),
+            resident_high: 0,
+            evicted_total: 0,
+            dropped: 0,
+        }
+    }
+
+    /// Feed one event. Returns `(incarnation, ready stages)` when the
+    /// event was accepted, `None` when it was a stray trailing event of an
+    /// evicted incarnation.
+    pub fn feed(&mut self, ev: &TaggedEvent) -> Option<(u32, Vec<ReadyStage>)> {
+        let job_id = ev.job_id;
+        // A fresh `JobStart` for a resident-but-*ended* job is a revival
+        // racing the eviction scan: retire the old incarnation right now
+        // so the new job starts clean regardless of scan cadence. (A
+        // `JobStart` for a job that has NOT ended is a tenant-side id
+        // collision and keeps the merge semantics of the batch service.)
+        if matches!(ev.event, Event::JobStart { .. })
+            && self.jobs.get(&job_id).map_or(false, |s| s.state.ended)
+        {
+            self.evict(job_id);
+            self.ended.retain(|id| *id != job_id);
+        }
+        if !self.jobs.contains_key(&job_id) {
+            // Previously-evicted id: only a fresh JobStart revives it.
+            let was_evicted = self.incarnations.contains_key(&job_id);
+            if was_evicted && !matches!(ev.event, Event::JobStart { .. }) {
+                self.dropped += 1;
+                return None;
+            }
+            let incarnation = self.incarnations.get(&job_id).copied().unwrap_or(0);
+            self.jobs.insert(
+                job_id,
+                JobSlot {
+                    state: JobState::new_deferred(self.edge_width),
+                    incarnation,
+                    watermark: f64::NEG_INFINITY,
+                    last_seen: 0,
+                },
+            );
+            self.resident_high = self.resident_high.max(self.jobs.len());
+        }
+        self.events_total += 1;
+        let events_total = self.events_total;
+        let slot = self.jobs.get_mut(&job_id).unwrap();
+        slot.last_seen = events_total;
+        if let Some(t) = ev.event.time() {
+            slot.watermark = slot.watermark.max(t);
+        }
+        let ready = slot.state.feed(&ev.event);
+        let incarnation = slot.incarnation;
+        if matches!(ev.event, Event::JobEnd { .. }) && !self.ended.contains(&job_id) {
+            self.ended.push(job_id);
+        }
+        self.events_since_scan += 1;
+        if self.events_since_scan >= self.cfg.scan_every.max(1) {
+            self.events_since_scan = 0;
+            self.scan();
+        }
+        Some((incarnation, ready))
+    }
+
+    /// Evict every ended job that is drained or quiesced, plus orphans.
+    fn scan(&mut self) {
+        let quiesce = self.cfg.evict_after.max(self.edge_width);
+        let pending = std::mem::take(&mut self.ended);
+        for job_id in pending {
+            let evict = match self.jobs.get(&job_id) {
+                None => false, // already gone (shouldn't happen)
+                Some(slot) => {
+                    let drained = slot.state.incomplete_stages().is_empty();
+                    let end_t = slot.state.end_time.unwrap_or(slot.watermark);
+                    drained || slot.watermark >= end_t + quiesce
+                }
+            };
+            if evict {
+                self.evict(job_id);
+            } else {
+                self.ended.push(job_id);
+            }
+        }
+        // Orphan GC: any job silent for the shard's last `orphan_events`
+        // accepted events is dead (its tenant crashed, or its stream was
+        // cut) — force-flush and retire it, `JobEnd` or not.
+        if self.cfg.orphan_events > 0 {
+            let cutoff = self.events_total.saturating_sub(self.cfg.orphan_events as u64);
+            if cutoff > 0 {
+                let orphans: Vec<u64> = self
+                    .jobs
+                    .iter()
+                    .filter(|(_, s)| s.last_seen <= cutoff)
+                    .map(|(id, _)| *id)
+                    .collect();
+                for id in orphans {
+                    self.ended.retain(|j| *j != id);
+                    self.evict(id);
+                }
+            }
+        }
+    }
+
+    /// Unconditionally retire one resident job.
+    fn evict(&mut self, job_id: u64) {
+        let Some(mut slot) = self.jobs.remove(&job_id) else { return };
+        let flushed = slot.state.flush();
+        let incomplete = slot.state.incomplete_stages();
+        self.incarnations.insert(job_id, slot.incarnation + 1);
+        self.evicted_total += 1;
+        self.evictions.push(EvictedJob {
+            job_id,
+            incarnation: slot.incarnation,
+            ended: slot.state.ended,
+            flushed,
+            incomplete,
+            events_seen: slot.state.events_seen,
+        });
+    }
+
+    /// Take the evictions recorded since the last call.
+    pub fn take_evictions(&mut self) -> Vec<EvictedJob> {
+        std::mem::take(&mut self.evictions)
+    }
+
+    /// End of stream: retire every resident job, in job-id order.
+    pub fn drain_all(&mut self) -> Vec<EvictedJob> {
+        let mut ids: Vec<u64> = self.jobs.keys().copied().collect();
+        ids.sort_unstable();
+        for id in ids {
+            self.evict(id);
+        }
+        self.ended.clear();
+        self.take_evictions()
+    }
+
+    /// Currently resident jobs.
+    pub fn resident(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Is this job id currently resident?
+    pub fn is_resident(&self, job_id: u64) -> bool {
+        self.jobs.contains_key(&job_id)
+    }
+
+    /// High-water mark of resident jobs.
+    pub fn resident_high(&self) -> usize {
+        self.resident_high
+    }
+
+    /// Jobs evicted so far (including end-of-stream drains).
+    pub fn evicted_total(&self) -> usize {
+        self.evicted_total
+    }
+
+    /// Stray post-eviction events dropped.
+    pub fn dropped(&self) -> usize {
+        self.dropped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{workloads, Engine, InjectionPlan, SimConfig};
+    use crate::trace::eventlog::interleave_jobs;
+    use crate::trace::JobTrace;
+
+    fn trace(seed: u64) -> JobTrace {
+        let w = workloads::wordcount(0.2);
+        let mut eng = Engine::new(SimConfig { seed, ..Default::default() });
+        eng.run("lc-test", w.name, &w.stages, &InjectionPlan::none())
+    }
+
+    fn feed_all(lc: &mut Lifecycle, events: &[crate::trace::eventlog::TaggedEvent]) -> usize {
+        let mut ready = 0;
+        for e in events {
+            if let Some((_, r)) = lc.feed(e) {
+                ready += r.len();
+            }
+        }
+        ready
+    }
+
+    #[test]
+    fn complete_job_evicts_after_drain() {
+        let t = trace(1);
+        let events = interleave_jobs(&[(7, &t)]);
+        let mut lc = Lifecycle::new(
+            LifecycleConfig { evict_after: 1.0, scan_every: 8, ..Default::default() },
+            3.0,
+        );
+        let ready = feed_all(&mut lc, &events);
+        assert_eq!(ready, t.stages.len(), "all stages released by the watermark");
+        // Trailing samples extend ~10s past JobEnd, so the drain rule has
+        // fired within the stream.
+        let evictions = lc.take_evictions();
+        assert_eq!(evictions.len(), 1);
+        assert_eq!(evictions[0].job_id, 7);
+        assert_eq!(evictions[0].incarnation, 0);
+        assert!(evictions[0].ended);
+        assert!(evictions[0].flushed.is_empty());
+        assert!(evictions[0].incomplete.is_empty());
+        assert_eq!(lc.resident(), 0);
+        assert_eq!(lc.evicted_total(), 1);
+    }
+
+    #[test]
+    fn stray_samples_after_eviction_are_dropped() {
+        let t = trace(2);
+        let events = interleave_jobs(&[(3, &t)]);
+        let mut lc = Lifecycle::new(
+            LifecycleConfig { evict_after: 0.5, scan_every: 4, ..Default::default() },
+            3.0,
+        );
+        // Feed everything except the last few trailing samples.
+        let cut = events.len() - 3;
+        feed_all(&mut lc, &events[..cut]);
+        if lc.resident() > 0 {
+            // Force the eviction point before the strays.
+            lc.drain_all();
+        } else {
+            lc.take_evictions();
+        }
+        let before = lc.dropped();
+        feed_all(&mut lc, &events[cut..]);
+        assert_eq!(lc.resident(), 0, "strays must not resurrect the job");
+        assert!(lc.dropped() >= before + 3);
+    }
+
+    #[test]
+    fn revived_job_id_is_a_fresh_incarnation() {
+        let a = trace(3);
+        let b = trace(4);
+        let mut stream = interleave_jobs(&[(9, &a)]);
+        stream.extend(interleave_jobs(&[(9, &b)]));
+        let mut lc = Lifecycle::new(
+            LifecycleConfig { evict_after: 1.0, scan_every: 4, ..Default::default() },
+            3.0,
+        );
+        let ready = feed_all(&mut lc, &stream);
+        let mut evictions = lc.take_evictions();
+        evictions.extend(lc.drain_all());
+        assert_eq!(evictions.len(), 2);
+        assert_eq!(evictions[0].incarnation, 0);
+        assert_eq!(evictions[1].incarnation, 1);
+        assert_eq!(ready, a.stages.len() + b.stages.len());
+        // Each incarnation consumed at most its own stream (strays of the
+        // first may be dropped between eviction and the revival).
+        assert!(evictions[1].events_seen <= interleave_jobs(&[(9, &b)]).len());
+    }
+
+    #[test]
+    fn truncated_job_quiesces_out() {
+        let t = trace(5);
+        let full = interleave_jobs(&[(1, &t)]);
+        // Drop every TaskEnd so no stage ever completes, keeping JobEnd
+        // and the trailing samples that advance the watermark past it.
+        let events: Vec<_> = full
+            .iter()
+            .filter(|e| !matches!(e.event, Event::TaskEnd(_)))
+            .cloned()
+            .collect();
+        let mut lc = Lifecycle::new(
+            LifecycleConfig { evict_after: 2.0, scan_every: 4, ..Default::default() },
+            3.0,
+        );
+        feed_all(&mut lc, &events);
+        let evictions = lc.take_evictions();
+        assert_eq!(evictions.len(), 1, "quiescence rule must fire inside the stream");
+        assert!(evictions[0].ended);
+        assert!(!evictions[0].incomplete.is_empty());
+        assert_eq!(lc.resident(), 0);
+    }
+
+    #[test]
+    fn orphaned_job_without_jobend_is_garbage_collected() {
+        // Job 1's tenant crashes mid-job (stream cut, no JobEnd); job 2's
+        // traffic keeps flowing on the same shard. The orphan fallback
+        // must retire job 1 while the stream is still live.
+        let a = trace(6);
+        let b = trace(7);
+        let a_events = interleave_jobs(&[(1, &a)]);
+        let cut = a_events.len() / 2;
+        let mut lc = Lifecycle::new(
+            LifecycleConfig { evict_after: 1.0, scan_every: 8, orphan_events: 64 },
+            3.0,
+        );
+        feed_all(&mut lc, &a_events[..cut]);
+        assert_eq!(lc.resident(), 1);
+        feed_all(&mut lc, &interleave_jobs(&[(2, &b)]));
+        let evictions = lc.take_evictions();
+        assert!(
+            evictions.iter().any(|e| e.job_id == 1 && !e.ended),
+            "crashed job must be orphan-GC'd mid-stream"
+        );
+        assert!(!lc.is_resident(1));
+    }
+
+    #[test]
+    fn jobstart_for_resident_ended_job_revives_immediately() {
+        // Revival must not depend on the scan cadence: a JobStart arriving
+        // while the ended predecessor is still resident retires it on the
+        // spot instead of merging the two jobs' state.
+        let a = trace(8);
+        let b = trace(9);
+        let mut stream = interleave_jobs(&[(4, &a)]);
+        stream.extend(interleave_jobs(&[(4, &b)]));
+        // A scan interval far larger than either stream: the scan-based
+        // eviction can never fire between the two jobs.
+        let mut lc = Lifecycle::new(
+            LifecycleConfig {
+                evict_after: 1.0,
+                scan_every: 1_000_000,
+                orphan_events: 0,
+            },
+            3.0,
+        );
+        let ready = feed_all(&mut lc, &stream);
+        let mut evictions = lc.take_evictions();
+        evictions.extend(lc.drain_all());
+        assert_eq!(evictions.len(), 2);
+        assert_eq!(evictions[0].incarnation, 0);
+        assert!(evictions[0].ended);
+        assert_eq!(evictions[1].incarnation, 1);
+        assert_eq!(ready, a.stages.len() + b.stages.len());
+    }
+
+    #[test]
+    fn sequential_jobs_stay_bounded() {
+        let mut stream = Vec::new();
+        let mut stage_total = 0;
+        for i in 0..6u64 {
+            let t = trace(10 + i);
+            stage_total += t.stages.len();
+            stream.extend(interleave_jobs(&[(i, &t)]));
+        }
+        let mut lc = Lifecycle::new(
+            LifecycleConfig { evict_after: 1.0, scan_every: 8, ..Default::default() },
+            3.0,
+        );
+        let ready = feed_all(&mut lc, &stream);
+        let mut evictions = lc.take_evictions();
+        evictions.extend(lc.drain_all());
+        assert_eq!(evictions.len(), 6);
+        assert_eq!(ready, stage_total);
+        assert!(
+            lc.resident_high() <= 2,
+            "resident high-water {} on a sequential stream",
+            lc.resident_high()
+        );
+    }
+}

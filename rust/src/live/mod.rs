@@ -1,0 +1,40 @@
+//! The live multi-tenant ingest subsystem: a long-running analysis
+//! *server* on top of the per-job streaming analyzer.
+//!
+//! Four layers, composed left to right:
+//!
+//! ```text
+//!  sources ──▶ sharded ingest ──▶ job lifecycle GC ──▶ fleet registry
+//!  (source)      (ingest)           (lifecycle)          (registry)
+//! ```
+//!
+//! - [`source`] — pluggable transports ([`source::EventSource`]): tail a
+//!   growing NDJSON file with rotation detection, accept line-delimited
+//!   TCP clients, read stdin, or replay memory;
+//! - [`ingest`] — [`ingest::LiveServer`]: one worker thread per shard
+//!   behind a bounded queue (per-shard backpressure), each running demux,
+//!   watermark accounting, feature extraction and the BigRoots rules for
+//!   its slice of the job population;
+//! - [`lifecycle`] — [`lifecycle::Lifecycle`]: flush-and-evict `JobState`
+//!   after `JobEnd` plus a quiescence window, with incarnation counters
+//!   so a revived job id is a fresh job — bounded memory on unbounded
+//!   streams;
+//! - [`registry`] — [`registry::FleetRegistry`]: cross-job per-feature
+//!   quantile sketches (P²) and root-cause incidence counters, fleet
+//!   snapshot queries, and a second verdict pass that flags stages
+//!   anomalous versus the *fleet* baseline, not just their own stage
+//!   median.
+//!
+//! `bigroots serve --tail/--listen` and `examples/live_tail.rs` drive the
+//! subsystem end to end; `rust/tests/live_integration.rs` pins the
+//! batch-parity, eviction and revival contracts.
+
+pub mod ingest;
+pub mod lifecycle;
+pub mod registry;
+pub mod source;
+
+pub use ingest::{CompletedJob, LiveConfig, LiveMetrics, LiveReport, LiveServer};
+pub use lifecycle::{Lifecycle, LifecycleConfig};
+pub use registry::{FleetFlag, FleetRegistry, FleetReport, QuantileSketch};
+pub use source::{EventSource, MemorySource, SourcePoll, StdinSource, TailSource, TcpSource};

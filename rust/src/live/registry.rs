@@ -1,0 +1,566 @@
+//! The cross-job fleet baseline registry.
+//!
+//! Every per-job analysis the paper (and the PR-2 service) produces
+//! compares a straggler against *its own stage's* peers — the stage median
+//! is the whole universe. HybridTune-style diagnosis sharpens that by
+//! asking the fleet: is this value unusual *for this cluster*, across all
+//! jobs and tenants ever seen? [`FleetRegistry`] is the persistent store
+//! that makes the question answerable on unbounded streams:
+//!
+//! - per-feature **streaming quantile sketches** ([`QuantileSketch`], P²
+//!   markers — O(1) memory per feature, no samples retained) over every
+//!   task value and, separately, over straggler values only;
+//! - per-root-cause **incidence counters** (how often each feature kind
+//!   explains a straggler, fleet-wide), plus the shuffle-heavy × GC
+//!   cross-tab behind the canonical query *"what fraction of
+//!   shuffle-heavy stragglers are GC-dominated?"*;
+//! - a **second verdict pass** ([`FleetRegistry::fleet_verdict`]): after
+//!   the per-stage rules ran, flag straggler features that clear the fleet
+//!   P95 even though their own stage's peer tests stayed quiet — the
+//!   fleet-anomalous-but-locally-camouflaged case (e.g. a whole stage
+//!   running on a degraded node, where every peer is equally slow).
+//!
+//! Folds are commutative counters and sketches, so the registry tolerates
+//! the nondeterministic cross-shard arrival order of the live server; the
+//! sketch estimates (not the counters) may differ across runs at the P²
+//! approximation level.
+
+use crate::analysis::bigroots::StageAnalysis;
+use crate::analysis::features::{FeatureCategory, FeatureKind, StageFeatures};
+use crate::util::stats::{median, P2Quantile, Welford};
+use crate::util::table::{fnum, pct, Align, Table};
+
+/// Streaming distribution summary: count/min/max/mean exactly, p50/p90/p95
+/// via P² markers. Constant memory.
+#[derive(Debug, Clone)]
+pub struct QuantileSketch {
+    count: usize,
+    min: f64,
+    max: f64,
+    mean: Welford,
+    p50: P2Quantile,
+    p90: P2Quantile,
+    p95: P2Quantile,
+}
+
+impl QuantileSketch {
+    pub fn new() -> Self {
+        QuantileSketch {
+            count: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            mean: Welford::new(),
+            p50: P2Quantile::new(0.5),
+            p90: P2Quantile::new(0.9),
+            p95: P2Quantile::new(0.95),
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.count += 1;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        self.mean.push(x);
+        self.p50.push(x);
+        self.p90.push(x);
+        self.p95.push(x);
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.min }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.max }
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean.mean()
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.p50.value()
+    }
+
+    pub fn p90(&self) -> f64 {
+        self.p90.value()
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.p95.value()
+    }
+}
+
+impl Default for QuantileSketch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Fleet-wide distribution state for one feature.
+#[derive(Debug, Clone)]
+pub struct FeatureBaseline {
+    pub kind: FeatureKind,
+    /// Every task value seen fleet-wide.
+    pub all: QuantileSketch,
+    /// Straggler task values only.
+    pub stragglers: QuantileSketch,
+    /// Times this feature was identified as a root cause.
+    pub cause_count: usize,
+}
+
+/// One fleet-baseline flag from the second verdict pass: the stage's own
+/// peer rules stayed quiet on this (straggler, feature) pair, but the
+/// value clears the fleet P95.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetFlag {
+    pub row: usize,
+    pub task_id: u64,
+    pub kind: FeatureKind,
+    pub value: f64,
+    pub fleet_p95: f64,
+}
+
+/// Cross-job accumulator. See module docs.
+#[derive(Debug, Clone)]
+pub struct FleetRegistry {
+    /// A baseline must hold at least this many observations before the
+    /// fleet verdict pass trusts it (cold-start guard).
+    min_samples: usize,
+    jobs_completed: usize,
+    stages: usize,
+    tasks: usize,
+    straggler_tasks: usize,
+    features: Vec<FeatureBaseline>,
+    /// Distribution of per-stage median task durations.
+    stage_medians: QuantileSketch,
+    /// Stragglers whose shuffle-read exceeded their stage median.
+    shuffle_heavy: usize,
+    /// …of those, how many had a JVM-GC root cause.
+    shuffle_heavy_gc: usize,
+}
+
+impl FleetRegistry {
+    pub fn new(min_samples: usize) -> Self {
+        FleetRegistry {
+            min_samples: min_samples.max(1),
+            jobs_completed: 0,
+            stages: 0,
+            tasks: 0,
+            straggler_tasks: 0,
+            features: FeatureKind::ALL
+                .iter()
+                .map(|&kind| FeatureBaseline {
+                    kind,
+                    all: QuantileSketch::new(),
+                    stragglers: QuantileSketch::new(),
+                    cause_count: 0,
+                })
+                .collect(),
+            stage_medians: QuantileSketch::new(),
+            shuffle_heavy: 0,
+            shuffle_heavy_gc: 0,
+        }
+    }
+
+    /// Fold one completed stage into the fleet state.
+    pub fn fold_stage(&mut self, sf: &StageFeatures, analysis: &StageAnalysis) {
+        self.stages += 1;
+        self.tasks += sf.num_tasks();
+        self.straggler_tasks += analysis.stragglers.rows.len();
+        self.stage_medians.push(analysis.stragglers.median);
+        for baseline in &mut self.features {
+            let col = sf.column(baseline.kind);
+            for &v in &col {
+                baseline.all.push(v);
+            }
+            for &row in &analysis.stragglers.rows {
+                baseline.stragglers.push(col[row]);
+            }
+        }
+        for cause in &analysis.causes {
+            self.features[cause.kind.index()].cause_count += 1;
+        }
+        // Shuffle-heavy × GC cross-tab over this stage's stragglers.
+        let shuffle_col = sf.column(FeatureKind::ShuffleReadBytes);
+        let shuffle_median = median(&shuffle_col);
+        for &row in &analysis.stragglers.rows {
+            if shuffle_col[row] > shuffle_median && shuffle_col[row] > 0.0 {
+                self.shuffle_heavy += 1;
+                if analysis
+                    .causes
+                    .iter()
+                    .any(|c| c.row == row && c.kind == FeatureKind::JvmGcTime)
+                {
+                    self.shuffle_heavy_gc += 1;
+                }
+            }
+        }
+    }
+
+    /// Mark one job fully analyzed (lifecycle eviction or stream end).
+    pub fn job_completed(&mut self) {
+        self.jobs_completed += 1;
+    }
+
+    /// Second verdict pass: straggler features that clear the fleet P95
+    /// while the stage's own analysis did *not* list them as a cause.
+    /// Discrete features (locality) have no meaningful fleet quantile and
+    /// are skipped; baselines below `min_samples` observations are too
+    /// cold to trust and stay silent.
+    pub fn fleet_verdict(&self, sf: &StageFeatures, analysis: &StageAnalysis) -> Vec<FleetFlag> {
+        let mut flags = Vec::new();
+        for &row in &analysis.stragglers.rows {
+            for baseline in &self.features {
+                if baseline.kind.category() == FeatureCategory::Discrete {
+                    continue;
+                }
+                if baseline.all.count() < self.min_samples {
+                    continue;
+                }
+                let value = sf.get(row, baseline.kind);
+                let p95 = baseline.all.p95();
+                if value <= p95 {
+                    continue;
+                }
+                let already =
+                    analysis.causes.iter().any(|c| c.row == row && c.kind == baseline.kind);
+                if already {
+                    continue;
+                }
+                flags.push(FleetFlag {
+                    row,
+                    task_id: sf.task_ids[row],
+                    kind: baseline.kind,
+                    value,
+                    fleet_p95: p95,
+                });
+            }
+        }
+        flags
+    }
+
+    /// Is this stage slow versus the fleet, not just internally skewed?
+    /// Returns `(stage median, fleet p95 of stage medians)` when the
+    /// stage's median task duration clears the fleet P95.
+    pub fn stage_anomalous(&self, analysis: &StageAnalysis) -> Option<(f64, f64)> {
+        if self.stage_medians.count() < self.min_samples {
+            return None;
+        }
+        let p95 = self.stage_medians.p95();
+        if analysis.stragglers.median > p95 {
+            Some((analysis.stragglers.median, p95))
+        } else {
+            None
+        }
+    }
+
+    pub fn stages_folded(&self) -> usize {
+        self.stages
+    }
+
+    /// Point-in-time snapshot for printing and queries.
+    pub fn report(&self) -> FleetReport {
+        let mut cause_incidence: Vec<(FeatureKind, usize)> = self
+            .features
+            .iter()
+            .filter(|b| b.cause_count > 0)
+            .map(|b| (b.kind, b.cause_count))
+            .collect();
+        cause_incidence.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.index().cmp(&b.0.index())));
+        FleetReport {
+            jobs_completed: self.jobs_completed,
+            stages: self.stages,
+            tasks: self.tasks,
+            straggler_tasks: self.straggler_tasks,
+            cause_incidence,
+            baselines: self
+                .features
+                .iter()
+                .map(|b| FeatureSnapshot {
+                    kind: b.kind,
+                    count: b.all.count(),
+                    p50: b.all.p50(),
+                    p95: b.all.p95(),
+                    straggler_p50: b.stragglers.p50(),
+                    cause_count: b.cause_count,
+                })
+                .collect(),
+            stage_median_p50: self.stage_medians.p50(),
+            stage_median_p95: self.stage_medians.p95(),
+            shuffle_heavy: self.shuffle_heavy,
+            shuffle_heavy_gc: self.shuffle_heavy_gc,
+        }
+    }
+}
+
+impl Default for FleetRegistry {
+    /// 64-observation cold-start guard before fleet verdicts fire.
+    fn default() -> Self {
+        Self::new(64)
+    }
+}
+
+/// Per-feature slice of a [`FleetReport`].
+#[derive(Debug, Clone)]
+pub struct FeatureSnapshot {
+    pub kind: FeatureKind,
+    pub count: usize,
+    pub p50: f64,
+    pub p95: f64,
+    pub straggler_p50: f64,
+    pub cause_count: usize,
+}
+
+/// Queryable point-in-time snapshot of the fleet baseline.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub jobs_completed: usize,
+    pub stages: usize,
+    pub tasks: usize,
+    pub straggler_tasks: usize,
+    /// (feature, cause count), most frequent first.
+    pub cause_incidence: Vec<(FeatureKind, usize)>,
+    pub baselines: Vec<FeatureSnapshot>,
+    pub stage_median_p50: f64,
+    pub stage_median_p95: f64,
+    pub shuffle_heavy: usize,
+    pub shuffle_heavy_gc: usize,
+}
+
+impl FleetReport {
+    /// Fleet-wide straggler rate (straggler tasks / all tasks).
+    pub fn straggler_rate(&self) -> f64 {
+        if self.tasks == 0 {
+            0.0
+        } else {
+            self.straggler_tasks as f64 / self.tasks as f64
+        }
+    }
+
+    /// The canonical query: of stragglers whose shuffle-read exceeded
+    /// their stage median, what fraction carried a JVM-GC root cause?
+    pub fn shuffle_heavy_gc_fraction(&self) -> f64 {
+        if self.shuffle_heavy == 0 {
+            0.0
+        } else {
+            self.shuffle_heavy_gc as f64 / self.shuffle_heavy as f64
+        }
+    }
+
+    /// Fraction of all identified root causes attributed to `kind`.
+    pub fn cause_fraction(&self, kind: FeatureKind) -> f64 {
+        let total: usize = self.cause_incidence.iter().map(|(_, n)| n).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let mine = self
+            .cause_incidence
+            .iter()
+            .find(|(k, _)| *k == kind)
+            .map(|(_, n)| *n)
+            .unwrap_or(0);
+        mine as f64 / total as f64
+    }
+
+    /// Render the snapshot as printable tables.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "fleet baseline: {} jobs, {} stages, {} tasks, {} stragglers ({}), \
+             stage-median p50 {}s / p95 {}s\n",
+            self.jobs_completed,
+            self.stages,
+            self.tasks,
+            self.straggler_tasks,
+            pct(self.straggler_rate()),
+            fnum(self.stage_median_p50, 2),
+            fnum(self.stage_median_p95, 2),
+        );
+        if self.shuffle_heavy > 0 {
+            out.push_str(&format!(
+                "shuffle-heavy stragglers: {} — GC-dominated: {} ({})\n",
+                self.shuffle_heavy,
+                self.shuffle_heavy_gc,
+                pct(self.shuffle_heavy_gc_fraction()),
+            ));
+        }
+        if !self.cause_incidence.is_empty() {
+            let mut t = Table::new("Fleet root-cause incidence")
+                .header(&["feature", "causes", "share"])
+                .aligns(&[Align::Left, Align::Right, Align::Right]);
+            for (kind, n) in &self.cause_incidence {
+                t.row(vec![
+                    kind.name().to_string(),
+                    n.to_string(),
+                    pct(self.cause_fraction(*kind)),
+                ]);
+            }
+            out.push_str(&t.render());
+        }
+        let mut t = Table::new("Fleet feature baselines (all tasks)")
+            .header(&["feature", "n", "p50", "p95", "straggler p50"])
+            .aligns(&[Align::Left, Align::Right, Align::Right, Align::Right, Align::Right]);
+        for b in &self.baselines {
+            if b.count == 0 {
+                continue;
+            }
+            t.row(vec![
+                b.kind.name().to_string(),
+                b.count.to_string(),
+                fnum(b.p50, 3),
+                fnum(b.p95, 3),
+                fnum(b.straggler_p50, 3),
+            ]);
+        }
+        out.push_str(&t.render());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::bigroots::{analyze_stage, BigRootsConfig};
+    use crate::analysis::features::extract_all;
+    use crate::analysis::stats::NativeBackend;
+    use crate::sim::{workloads, Engine, InjectionPlan, SimConfig};
+    use crate::trace::{AnomalyKind, JobTrace};
+
+    fn trace(seed: u64, inject: bool) -> JobTrace {
+        let w = workloads::wordcount(0.25);
+        let mut eng = Engine::new(SimConfig { seed, ..Default::default() });
+        let plan = if inject {
+            InjectionPlan::intermittent(AnomalyKind::Cpu, 1, 15.0, 10.0, 300.0)
+        } else {
+            InjectionPlan::none()
+        };
+        eng.run("fleet-test", w.name, &w.stages, &plan)
+    }
+
+    fn fold_trace(reg: &mut FleetRegistry, t: &JobTrace) {
+        let cfg = BigRootsConfig::default();
+        let mut backend = NativeBackend;
+        for sf in extract_all(t, cfg.edge_width) {
+            let a = analyze_stage(&sf, &mut backend, &cfg);
+            reg.fold_stage(&sf, &a);
+        }
+        reg.job_completed();
+    }
+
+    #[test]
+    fn fold_counts_are_exact() {
+        let t = trace(11, true);
+        let mut reg = FleetRegistry::new(8);
+        fold_trace(&mut reg, &t);
+        let r = reg.report();
+        assert_eq!(r.jobs_completed, 1);
+        assert_eq!(r.stages, t.stages.len());
+        assert_eq!(r.tasks, t.tasks.len());
+        // Every feature baseline saw exactly one value per task.
+        for b in &r.baselines {
+            assert_eq!(b.count, t.tasks.len(), "{}", b.kind.name());
+        }
+        assert!(r.straggler_rate() >= 0.0 && r.straggler_rate() <= 1.0);
+    }
+
+    #[test]
+    fn cause_incidence_matches_analyses() {
+        let t = trace(12, true);
+        let cfg = BigRootsConfig::default();
+        let mut backend = NativeBackend;
+        let mut reg = FleetRegistry::new(8);
+        let mut want_total = 0usize;
+        for sf in extract_all(&t, cfg.edge_width) {
+            let a = analyze_stage(&sf, &mut backend, &cfg);
+            want_total += a.causes.len();
+            reg.fold_stage(&sf, &a);
+        }
+        let r = reg.report();
+        let got_total: usize = r.cause_incidence.iter().map(|(_, n)| n).sum();
+        assert_eq!(got_total, want_total);
+        // Fractions sum to 1 when any causes exist.
+        if want_total > 0 {
+            let sum: f64 =
+                FeatureKind::ALL.iter().map(|&k| r.cause_fraction(k)).sum();
+            assert!((sum - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn fleet_verdict_flags_outlier_against_warm_baseline() {
+        // Warm the registry on clean jobs, then ask for a verdict on an
+        // analysis whose straggler has an absurd feature value: the fleet
+        // pass must flag it even where the per-stage rules stayed quiet.
+        let mut reg = FleetRegistry::new(8);
+        for seed in 0..4 {
+            fold_trace(&mut reg, &trace(20 + seed, false));
+        }
+        let t = trace(30, false);
+        let cfg = BigRootsConfig::default();
+        let mut backend = NativeBackend;
+        let mut sf_list = extract_all(&t, cfg.edge_width);
+        let sf = &mut sf_list[0];
+        let a = {
+            let mut a = analyze_stage(sf, &mut backend, &cfg);
+            if a.stragglers.rows.is_empty() {
+                // Force one straggler row so the verdict pass has a target.
+                a.stragglers.rows.push(0);
+            }
+            a
+        };
+        let row = a.stragglers.rows[0];
+        // Blow up the straggler's bytes_read far past any fleet value.
+        let idx = row * FeatureKind::COUNT + FeatureKind::BytesRead.index();
+        sf.matrix[idx] = 1e15;
+        let flags = reg.fleet_verdict(sf, &a);
+        assert!(
+            flags.iter().any(|f| f.row == row && f.kind == FeatureKind::BytesRead),
+            "expected a bytes_read fleet flag, got {flags:?}"
+        );
+        for f in &flags {
+            assert!(f.value > f.fleet_p95);
+        }
+    }
+
+    #[test]
+    fn cold_registry_stays_silent() {
+        let t = trace(40, true);
+        let cfg = BigRootsConfig::default();
+        let mut backend = NativeBackend;
+        let reg = FleetRegistry::new(1_000_000);
+        for sf in extract_all(&t, cfg.edge_width) {
+            let a = analyze_stage(&sf, &mut backend, &cfg);
+            assert!(reg.fleet_verdict(&sf, &a).is_empty());
+            assert!(reg.stage_anomalous(&a).is_none());
+        }
+    }
+
+    #[test]
+    fn sketch_tracks_distribution() {
+        let mut s = QuantileSketch::new();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.min(), 0.0);
+        for i in 0..1000 {
+            s.push(i as f64);
+        }
+        assert_eq!(s.count(), 1000);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 999.0);
+        assert!((s.mean() - 499.5).abs() < 1e-9);
+        assert!((s.p50() - 499.5).abs() < 25.0);
+        assert!((s.p95() - 949.0).abs() < 25.0);
+    }
+
+    #[test]
+    fn render_snapshot_is_printable() {
+        let mut reg = FleetRegistry::new(8);
+        fold_trace(&mut reg, &trace(50, true));
+        let text = reg.report().render();
+        assert!(text.contains("fleet baseline"));
+        assert!(text.contains("Fleet feature baselines"));
+    }
+}

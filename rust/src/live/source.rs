@@ -1,0 +1,599 @@
+//! Pluggable event transports for the live server: where the NDJSON
+//! stream comes *from*. Every source speaks the same poll-based protocol
+//! ([`EventSource`]) and parses through the incremental
+//! [`NdjsonTail`] reader, so partial lines, slow writers and reconnects
+//! are handled once.
+//!
+//! - [`TailSource`] — follow a growing log file (`tail -F` semantics:
+//!   survives the file not existing yet, truncation, and rotation — the
+//!   replaced file is detected by inode change or length shrink and read
+//!   from the top);
+//! - [`TcpSource`] — accept line-delimited events on a TCP socket, any
+//!   number of concurrent client connections, each its own parse scope;
+//! - [`StdinSource`] — read the process's stdin (pipe `bigroots simulate`
+//!   output straight in);
+//! - [`MemorySource`] — replay a pre-built event vector in chunks (tests,
+//!   benches, and the batch path of `bigroots serve`).
+
+use std::collections::VecDeque;
+use std::io::Read;
+use std::net::{TcpListener, TcpStream};
+
+use crate::trace::eventlog::{NdjsonTail, TaggedEvent};
+
+/// One poll's outcome.
+#[derive(Debug)]
+pub enum SourcePoll {
+    /// Complete events arrived.
+    Events(Vec<TaggedEvent>),
+    /// Nothing available right now; the caller may sleep briefly and
+    /// retry.
+    Idle,
+    /// The stream is over (EOF, all clients gone, vector exhausted).
+    End,
+}
+
+/// A pollable event transport. Implementations never block: a poll
+/// returns whatever is available and `Idle` otherwise, so one driver
+/// thread can multiplex source, server pump and snapshot printing.
+pub trait EventSource {
+    fn poll(&mut self) -> Result<SourcePoll, String>;
+
+    /// Human-readable description for logs.
+    fn describe(&self) -> String;
+}
+
+// ---------------------------------------------------------------------------
+// File tailing
+
+#[cfg(unix)]
+fn file_id(meta: &std::fs::Metadata) -> u64 {
+    use std::os::unix::fs::MetadataExt;
+    meta.ino()
+}
+
+#[cfg(not(unix))]
+fn file_id(_meta: &std::fs::Metadata) -> u64 {
+    0
+}
+
+/// Follow a growing NDJSON event log. See module docs for the rotation
+/// contract.
+pub struct TailSource {
+    path: String,
+    file: Option<std::fs::File>,
+    /// Inode (unix) of the open file, for rotation detection.
+    ino: u64,
+    /// Bytes consumed from the current file.
+    offset: u64,
+    parser: NdjsonTail,
+    /// Files seen (1 + rotations).
+    generations: usize,
+}
+
+impl TailSource {
+    pub fn new(path: &str) -> Self {
+        TailSource {
+            path: path.to_string(),
+            file: None,
+            ino: 0,
+            offset: 0,
+            parser: NdjsonTail::new(),
+            generations: 0,
+        }
+    }
+
+    /// Files opened so far (1 + detected rotations).
+    pub fn generations(&self) -> usize {
+        self.generations
+    }
+
+    fn start_over(&mut self) {
+        self.file = None;
+        self.ino = 0;
+        self.offset = 0;
+        self.parser.reset();
+    }
+}
+
+impl EventSource for TailSource {
+    fn poll(&mut self) -> Result<SourcePoll, String> {
+        let meta = match std::fs::metadata(&self.path) {
+            Ok(m) => m,
+            Err(_) => {
+                // Not there (yet, or mid-rotation): wait for it.
+                if self.file.is_some() {
+                    self.start_over();
+                }
+                return Ok(SourcePoll::Idle);
+            }
+        };
+        // Rotation: a different file sits at the path, or the one we're
+        // reading shrank under us. Start from the top of the new file.
+        if self.file.is_some() && (file_id(&meta) != self.ino || meta.len() < self.offset) {
+            self.start_over();
+        }
+        if self.file.is_none() {
+            match std::fs::File::open(&self.path) {
+                Ok(f) => {
+                    self.ino = file_id(&meta);
+                    self.file = Some(f);
+                    self.generations += 1;
+                }
+                Err(_) => return Ok(SourcePoll::Idle),
+            }
+        }
+        let file = self.file.as_mut().unwrap();
+        let mut events = Vec::new();
+        let mut chunk = [0u8; 64 * 1024];
+        loop {
+            match file.read(&mut chunk) {
+                Ok(0) => break,
+                Ok(n) => {
+                    self.offset += n as u64;
+                    events.extend(
+                        self.parser
+                            .feed(&chunk[..n])
+                            .map_err(|e| format!("{}: {e}", self.path))?,
+                    );
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(format!("reading {}: {e}", self.path)),
+            }
+        }
+        if events.is_empty() {
+            Ok(SourcePoll::Idle)
+        } else {
+            Ok(SourcePoll::Events(events))
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!("tail {}", self.path)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP listener
+
+struct TcpConn {
+    stream: TcpStream,
+    parser: NdjsonTail,
+    peer: String,
+    open: bool,
+}
+
+/// Accept line-delimited events over TCP. Each client connection parses
+/// in its own scope (its own tagged/untagged mode and partial-line
+/// buffer); clients of a multi-tenant server should job-tag every line.
+/// A malformed line costs the *offending connection* only (dropped,
+/// counted in [`TcpSource::parse_errors`]) — never the server. The
+/// source ends once at least one client has connected and all have
+/// disconnected — unless built with [`TcpSource::bind_persistent`], which
+/// keeps listening forever (server mode).
+pub struct TcpSource {
+    listener: TcpListener,
+    conns: Vec<TcpConn>,
+    saw_client: bool,
+    persistent: bool,
+    addr: String,
+    parse_errors: usize,
+}
+
+impl TcpSource {
+    /// Bind and end after the last client disconnects.
+    pub fn bind(addr: &str) -> Result<Self, String> {
+        Self::bind_inner(addr, false)
+    }
+
+    /// Bind and keep serving across client generations.
+    pub fn bind_persistent(addr: &str) -> Result<Self, String> {
+        Self::bind_inner(addr, true)
+    }
+
+    fn bind_inner(addr: &str, persistent: bool) -> Result<Self, String> {
+        let listener =
+            TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| format!("nonblocking listener: {e}"))?;
+        let addr = listener
+            .local_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| addr.to_string());
+        Ok(TcpSource {
+            listener,
+            conns: Vec::new(),
+            saw_client: false,
+            persistent,
+            addr,
+            parse_errors: 0,
+        })
+    }
+
+    /// The bound address (resolves `:0` to the chosen port).
+    pub fn local_addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Live client connections.
+    pub fn connections(&self) -> usize {
+        self.conns.len()
+    }
+
+    /// Connections dropped for sending malformed lines.
+    pub fn parse_errors(&self) -> usize {
+        self.parse_errors
+    }
+}
+
+impl EventSource for TcpSource {
+    fn poll(&mut self) -> Result<SourcePoll, String> {
+        // Accept any waiting clients.
+        loop {
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    stream
+                        .set_nonblocking(true)
+                        .map_err(|e| format!("nonblocking conn: {e}"))?;
+                    self.saw_client = true;
+                    self.conns.push(TcpConn {
+                        stream,
+                        parser: NdjsonTail::new(),
+                        peer: peer.to_string(),
+                        open: true,
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) => return Err(format!("accept: {e}")),
+            }
+        }
+        // Drain whatever bytes each client has ready. A protocol error is
+        // scoped to the offending tenant's connection — drop it and keep
+        // serving everyone else; a multi-tenant server must not die
+        // because one client sent a malformed line.
+        let mut events = Vec::new();
+        let mut parse_errors = 0usize;
+        let mut chunk = [0u8; 64 * 1024];
+        for conn in &mut self.conns {
+            loop {
+                match conn.stream.read(&mut chunk) {
+                    Ok(0) => {
+                        // Client closed: flush a trailing unterminated line.
+                        match conn.parser.finish() {
+                            Ok(Some(e)) => events.push(e),
+                            Ok(None) => {}
+                            Err(_) => parse_errors += 1,
+                        }
+                        conn.open = false;
+                        break;
+                    }
+                    Ok(n) => match conn.parser.feed(&chunk[..n]) {
+                        Ok(evs) => events.extend(evs),
+                        Err(_) => {
+                            parse_errors += 1;
+                            conn.open = false;
+                            break;
+                        }
+                    },
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        conn.open = false;
+                        break;
+                    }
+                }
+            }
+        }
+        self.parse_errors += parse_errors;
+        self.conns.retain(|c| c.open);
+        if !events.is_empty() {
+            return Ok(SourcePoll::Events(events));
+        }
+        if self.saw_client && self.conns.is_empty() && !self.persistent {
+            Ok(SourcePoll::End)
+        } else {
+            Ok(SourcePoll::Idle)
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!("tcp {}", self.addr)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stdin
+
+/// Read the process's stdin. A background thread does the blocking reads
+/// (stdin has no portable non-blocking mode) and hands lines over a
+/// channel, so `poll` keeps the non-blocking contract.
+pub struct StdinSource {
+    rx: std::sync::mpsc::Receiver<Option<String>>,
+    parser: NdjsonTail,
+    done: bool,
+}
+
+impl StdinSource {
+    pub fn new() -> Self {
+        use std::io::BufRead;
+        let (tx, rx) = std::sync::mpsc::channel::<Option<String>>();
+        std::thread::spawn(move || {
+            let stdin = std::io::stdin();
+            for line in stdin.lock().lines() {
+                match line {
+                    Ok(l) => {
+                        if tx.send(Some(l)).is_err() {
+                            return;
+                        }
+                    }
+                    Err(_) => break,
+                }
+            }
+            let _ = tx.send(None);
+        });
+        StdinSource { rx, parser: NdjsonTail::new(), done: false }
+    }
+}
+
+impl Default for StdinSource {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EventSource for StdinSource {
+    fn poll(&mut self) -> Result<SourcePoll, String> {
+        if self.done {
+            return Ok(SourcePoll::End);
+        }
+        let mut events = Vec::new();
+        loop {
+            match self.rx.try_recv() {
+                Ok(Some(mut line)) => {
+                    line.push('\n');
+                    events.extend(
+                        self.parser
+                            .feed(line.as_bytes())
+                            .map_err(|e| format!("stdin: {e}"))?,
+                    );
+                }
+                Ok(None) | Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                    self.done = true;
+                    break;
+                }
+                Err(std::sync::mpsc::TryRecvError::Empty) => break,
+            }
+        }
+        if !events.is_empty() {
+            Ok(SourcePoll::Events(events))
+        } else if self.done {
+            Ok(SourcePoll::End)
+        } else {
+            Ok(SourcePoll::Idle)
+        }
+    }
+
+    fn describe(&self) -> String {
+        "stdin".to_string()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Memory replay
+
+/// Replay a pre-built stream in fixed-size chunks — the batch path of
+/// `bigroots serve`, and the deterministic source for tests and benches.
+pub struct MemorySource {
+    chunks: VecDeque<Vec<TaggedEvent>>,
+}
+
+impl MemorySource {
+    pub fn new(events: Vec<TaggedEvent>, chunk_size: usize) -> Self {
+        let chunk_size = chunk_size.max(1);
+        let mut chunks = VecDeque::new();
+        let mut events = events;
+        while !events.is_empty() {
+            let rest = events.split_off(chunk_size.min(events.len()));
+            chunks.push_back(events);
+            events = rest;
+        }
+        MemorySource { chunks }
+    }
+}
+
+impl EventSource for MemorySource {
+    fn poll(&mut self) -> Result<SourcePoll, String> {
+        match self.chunks.pop_front() {
+            Some(c) => Ok(SourcePoll::Events(c)),
+            None => Ok(SourcePoll::End),
+        }
+    }
+
+    fn describe(&self) -> String {
+        "memory".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{workloads, Engine, InjectionPlan, SimConfig};
+    use crate::trace::eventlog::{interleave_jobs, trace_to_events};
+    use crate::trace::JobTrace;
+    use std::io::Write;
+
+    fn trace(seed: u64) -> JobTrace {
+        let w = workloads::wordcount(0.1);
+        let mut eng = Engine::new(SimConfig { seed, ..Default::default() });
+        eng.run("src-test", w.name, &w.stages, &InjectionPlan::none())
+    }
+
+    fn tmp_path(name: &str) -> String {
+        let dir = std::env::temp_dir();
+        format!("{}/bigroots_{}_{}", dir.display(), std::process::id(), name)
+    }
+
+    fn drain(source: &mut dyn EventSource) -> Vec<TaggedEvent> {
+        let mut out = Vec::new();
+        loop {
+            match source.poll().unwrap() {
+                SourcePoll::Events(evs) => out.extend(evs),
+                SourcePoll::Idle => break,
+                SourcePoll::End => break,
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn memory_source_replays_in_chunks() {
+        let t = trace(1);
+        let events = interleave_jobs(&[(1, &t)]);
+        let mut src = MemorySource::new(events.clone(), 7);
+        let mut got = Vec::new();
+        loop {
+            match src.poll().unwrap() {
+                SourcePoll::Events(evs) => {
+                    assert!(evs.len() <= 7);
+                    got.extend(evs);
+                }
+                SourcePoll::End => break,
+                SourcePoll::Idle => unreachable!(),
+            }
+        }
+        assert_eq!(got, events);
+    }
+
+    #[test]
+    fn tail_source_follows_growth_and_partial_lines() {
+        let t = trace(2);
+        let events = interleave_jobs(&[(4, &t)]);
+        let text: String =
+            events.iter().map(|e| e.encode().to_string() + "\n").collect();
+        let path = tmp_path("tail_growth.ndjson");
+        let _ = std::fs::remove_file(&path);
+
+        let mut src = TailSource::new(&path);
+        // File absent: idle, not an error.
+        assert!(matches!(src.poll().unwrap(), SourcePoll::Idle));
+
+        let mut f = std::fs::File::create(&path).unwrap();
+        let bytes = text.as_bytes();
+        let mut written = 0;
+        let mut got = Vec::new();
+        // Append in awkward 37-byte slices (always splitting lines).
+        while written < bytes.len() {
+            let end = (written + 37).min(bytes.len());
+            f.write_all(&bytes[written..end]).unwrap();
+            f.flush().unwrap();
+            written = end;
+            got.extend(drain(&mut src));
+        }
+        assert_eq!(got, events);
+        assert_eq!(src.generations(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn tail_source_detects_rotation() {
+        let t = trace(3);
+        let events = trace_to_events(&t);
+        let line_a = events[0].encode().to_string() + "\n";
+        let line_b = events[1].encode().to_string() + "\n";
+        let path = tmp_path("tail_rotate.ndjson");
+        std::fs::write(&path, &line_a).unwrap();
+
+        let mut src = TailSource::new(&path);
+        let first = drain(&mut src);
+        assert_eq!(first.len(), 1);
+
+        // Rotate: replace the file (new inode on unix; shorter content
+        // also trips the length heuristic elsewhere).
+        std::fs::remove_file(&path).unwrap();
+        std::fs::write(&path, &line_b).unwrap();
+        // One poll may be spent noticing the swap.
+        let mut second = drain(&mut src);
+        if second.is_empty() {
+            second = drain(&mut src);
+        }
+        assert_eq!(second.len(), 1, "rotated file must be re-read from the top");
+        assert_eq!(second[0].event, events[1]);
+        assert!(src.generations() >= 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn tcp_source_accepts_and_ends_after_disconnect() {
+        let t = trace(4);
+        let events = interleave_jobs(&[(2, &t)]);
+        let text: String =
+            events.iter().map(|e| e.encode().to_string() + "\n").collect();
+        let mut src = match TcpSource::bind("127.0.0.1:0") {
+            Ok(s) => s,
+            // Sandboxed environments may forbid binding; the transport
+            // still compiles and the logic is covered by the file tests.
+            Err(_) => return,
+        };
+        let addr = src.local_addr().to_string();
+        let writer = std::thread::spawn(move || {
+            let mut conn = TcpStream::connect(&addr).unwrap();
+            for chunk in text.as_bytes().chunks(53) {
+                conn.write_all(chunk).unwrap();
+            }
+        });
+        let mut got = Vec::new();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        loop {
+            match src.poll().unwrap() {
+                SourcePoll::Events(evs) => got.extend(evs),
+                SourcePoll::Idle => {
+                    assert!(std::time::Instant::now() < deadline, "tcp test timed out");
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+                SourcePoll::End => break,
+            }
+        }
+        writer.join().unwrap();
+        assert_eq!(got, events);
+    }
+
+    #[test]
+    fn tcp_malformed_client_dropped_without_killing_server() {
+        let t = trace(5);
+        let events = interleave_jobs(&[(1, &t)]);
+        let text: String =
+            events.iter().map(|e| e.encode().to_string() + "\n").collect();
+        let mut src = match TcpSource::bind("127.0.0.1:0") {
+            Ok(s) => s,
+            Err(_) => return, // sandbox may forbid binding
+        };
+        let bad_addr = src.local_addr().to_string();
+        let good_addr = bad_addr.clone();
+        let bad = std::thread::spawn(move || {
+            let mut c = TcpStream::connect(&bad_addr).unwrap();
+            c.write_all(b"this is not json\n").unwrap();
+        });
+        let good = std::thread::spawn(move || {
+            let mut c = TcpStream::connect(&good_addr).unwrap();
+            c.write_all(text.as_bytes()).unwrap();
+        });
+        let mut got = Vec::new();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        loop {
+            // poll() must never error — the bad tenant is isolated.
+            match src.poll().unwrap() {
+                SourcePoll::Events(evs) => got.extend(evs),
+                SourcePoll::Idle => {
+                    assert!(std::time::Instant::now() < deadline, "tcp test timed out");
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+                SourcePoll::End => break,
+            }
+        }
+        bad.join().unwrap();
+        good.join().unwrap();
+        assert_eq!(got, events, "good tenant's stream intact");
+        assert_eq!(src.parse_errors(), 1, "bad tenant dropped");
+    }
+}

@@ -46,14 +46,25 @@ fn main() {
                 .opt_req("input", "event log path"),
         )
         .subcommand(
-            Command::new("serve", "multi-job concurrent analysis of an interleaved event stream")
-                .opt("input", "", "job-tagged ndjson event log (omit to simulate --jobs jobs)")
-                .opt("jobs", "8", "jobs to simulate when no --input is given")
+            Command::new("serve", "long-running multi-tenant analysis server (live/ subsystem)")
+                .opt("tail", "", "follow a growing job-tagged ndjson event log (live mode)")
+                .opt("listen", "", "accept line-delimited events over TCP, e.g. 127.0.0.1:7070")
+                .flag("stdin", "read the event stream from stdin (live mode)")
+                .opt("input", "", "replay a job-tagged ndjson event log (omit to simulate --jobs)")
+                .opt("jobs", "8", "jobs to simulate when no input/tail/listen is given")
                 .opt("scale", "0.3", "workload scale for simulated jobs")
                 .opt("seed", "42", "base seed for simulated jobs")
-                .opt("shards", "4", "job shards")
-                .opt("workers", "4", "analysis worker threads")
-                .opt("batch", "8", "ready stages per backend dispatch")
+                .opt("shards", "4", "shard worker threads (parallel demux + analysis)")
+                .opt("queue-cap", "8", "per-shard queue capacity in batches (backpressure bound)")
+                .opt("ingest-batch", "64", "events per shard-queue send")
+                .opt("evict-after", "5", "event-time quiescence (s) after job_end before eviction")
+                .opt("snapshot-every", "5", "seconds between fleet-baseline snapshots (live mode)")
+                .opt(
+                    "idle-timeout",
+                    "10",
+                    "stop after this many idle seconds (0 = run forever; with --listen, \
+                     also keeps the socket open across client generations)",
+                )
                 .flag("metrics", "print per-shard metrics"),
         )
         .subcommand(
@@ -286,85 +297,182 @@ fn cmd_stream(args: &bigroots::util::cli::Args) -> i32 {
 }
 
 fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
-    use bigroots::coordinator::{AnalysisService, ServiceConfig};
+    use bigroots::live::{
+        CompletedJob, EventSource, LifecycleConfig, LiveConfig, LiveServer, MemorySource,
+        SourcePoll, StdinSource, TailSource, TcpSource,
+    };
     use bigroots::sim::multi;
     use bigroots::trace::eventlog::parse_tagged_events;
 
-    let cfg = ServiceConfig {
+    let cfg = LiveConfig {
         shards: args.get_usize("shards", 4),
-        workers: args.get_usize("workers", 4),
-        batch_size: args.get_usize("batch", 8),
+        queue_capacity: args.get_usize("queue-cap", 8),
+        ingest_batch: args.get_usize("ingest-batch", 64),
+        lifecycle: LifecycleConfig {
+            evict_after: args.get_f64("evict-after", 5.0),
+            ..Default::default()
+        },
         ..Default::default()
     };
-    let input = args.get_or("input", "");
-    let events = if input.is_empty() {
-        let n = args.get_usize("jobs", 8);
-        let scale = args.get_f64("scale", 0.3);
-        let seed = args.get_u64("seed", 42);
-        println!("simulating {n} jobs (scale {scale}, seed {seed})…");
-        let specs = multi::round_robin_specs(n, scale, seed);
-        let (_, events) = multi::interleaved_workload(&specs);
-        events
-    } else {
-        let text = match std::fs::read_to_string(&input) {
-            Ok(t) => t,
-            Err(e) => {
-                eprintln!("reading {input}: {e}");
-                return 1;
-            }
+
+    // Pick the transport: tail / listen / stdin are live; --input replays
+    // a file; with none of those, simulate an interleaved multi-job run.
+    let tail = args.get_or("tail", "");
+    let listen = args.get_or("listen", "");
+    let mut source: Box<dyn EventSource> = if !tail.is_empty() {
+        Box::new(TailSource::new(&tail))
+    } else if !listen.is_empty() {
+        // --idle-timeout 0 means "run forever": keep the socket open
+        // across client generations instead of ending after the last
+        // client disconnects.
+        let bound = if args.get_f64("idle-timeout", 10.0) == 0.0 {
+            TcpSource::bind_persistent(&listen)
+        } else {
+            TcpSource::bind(&listen)
         };
-        match parse_tagged_events(&text) {
-            Ok(ev) => ev,
+        match bound {
+            Ok(s) => {
+                println!("listening on {}", s.local_addr());
+                Box::new(s)
+            }
             Err(e) => {
-                eprintln!("parsing {input}: {e}");
+                eprintln!("{e}");
                 return 1;
             }
         }
+    } else if args.flag("stdin") {
+        Box::new(StdinSource::new())
+    } else {
+        let input = args.get_or("input", "");
+        let events = if input.is_empty() {
+            let n = args.get_usize("jobs", 8);
+            let scale = args.get_f64("scale", 0.3);
+            let seed = args.get_u64("seed", 42);
+            println!("simulating {n} jobs (scale {scale}, seed {seed})…");
+            let specs = multi::round_robin_specs(n, scale, seed);
+            let (_, events) = multi::interleaved_workload(&specs);
+            events
+        } else {
+            let text = match std::fs::read_to_string(&input) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("reading {input}: {e}");
+                    return 1;
+                }
+            };
+            match parse_tagged_events(&text) {
+                Ok(ev) => ev,
+                Err(e) => {
+                    eprintln!("parsing {input}: {e}");
+                    return 1;
+                }
+            }
+        };
+        Box::new(MemorySource::new(events, 1024))
     };
 
-    let mut svc = AnalysisService::new(cfg);
-    svc.feed_all(&events);
-    let report = svc.finish();
+    println!("serving from {} over {} shards", source.describe(), cfg.shards);
+    let snapshot_every = args.get_f64("snapshot-every", 5.0).max(0.1);
+    let idle_timeout = args.get_f64("idle-timeout", 10.0);
+    let mut server = LiveServer::new(cfg);
 
-    let mut t = Table::new("Per-job streaming analysis")
-        .header(&["job", "stages", "stragglers", "causes"])
-        .aligns(&[Align::Right, Align::Right, Align::Right, Align::Right]);
-    for (job_id, analyses) in &report.per_job {
-        t.row(vec![
-            job_id.to_string(),
-            analyses.len().to_string(),
-            analyses.iter().map(|a| a.stragglers.rows.len()).sum::<usize>().to_string(),
-            analyses.iter().map(|a| a.causes.len()).sum::<usize>().to_string(),
-        ]);
+    let print_job = |j: &CompletedJob| {
+        let stragglers: usize = j.analyses.iter().map(|a| a.stragglers.rows.len()).sum();
+        let causes: usize = j.analyses.iter().map(|a| a.causes.len()).sum();
+        println!(
+            "job {}{}: {} stages, {} stragglers, {} causes, {} fleet flags{}{}",
+            j.job_id,
+            if j.incarnation > 0 { format!(" (incarnation {})", j.incarnation) } else { String::new() },
+            j.analyses.len(),
+            stragglers,
+            causes,
+            j.fleet_flags.len(),
+            if j.evicted_live { " [evicted]" } else { "" },
+            if j.incomplete.is_empty() {
+                String::new()
+            } else {
+                format!(" — incomplete stages {:?}", j.incomplete)
+            },
+        );
+    };
+
+    let started = std::time::Instant::now();
+    let mut last_snapshot = std::time::Instant::now();
+    let mut idle_since: Option<std::time::Instant> = None;
+    loop {
+        match source.poll() {
+            Ok(SourcePoll::Events(events)) => {
+                idle_since = None;
+                for e in events {
+                    server.feed(e);
+                }
+            }
+            Ok(SourcePoll::Idle) => {
+                server.pump();
+                let idle = idle_since.get_or_insert_with(std::time::Instant::now);
+                if idle_timeout > 0.0 && idle.elapsed().as_secs_f64() >= idle_timeout {
+                    println!("(idle for {idle_timeout}s — stopping)");
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+            Ok(SourcePoll::End) => break,
+            Err(e) => {
+                eprintln!("source error: {e}");
+                return 1;
+            }
+        }
+        for j in server.drain_completed() {
+            print_job(&j);
+        }
+        if last_snapshot.elapsed().as_secs_f64() >= snapshot_every
+            && server.registry().stages_folded() > 0
+        {
+            last_snapshot = std::time::Instant::now();
+            print!("{}", server.registry().report().render());
+        }
     }
-    print!("{}", t.render());
+
+    let report = server.finish();
+    for j in &report.jobs {
+        print_job(j);
+    }
+    print!("{}", report.fleet.render());
     let m = &report.metrics;
     println!(
-        "{} events over {} jobs in {:.3}s — {:.0} events/s, {} stages analyzed, {} batches",
+        "{} events, {} jobs completed ({} live evictions, {} strays dropped) in {:.3}s — \
+         {:.0} events/s, {} stages analyzed, resident high-water {}",
         m.events_total,
-        m.jobs_seen,
-        m.elapsed_secs,
+        m.jobs_completed,
+        m.evictions_live,
+        m.events_dropped,
+        started.elapsed().as_secs_f64(),
         m.events_per_sec,
         m.stages_analyzed,
-        m.batches_dispatched
+        m.resident_high_water,
     );
     if args.flag("metrics") {
         let mut t = Table::new("Per-shard metrics")
-            .header(&["shard", "jobs", "events", "ready", "analyzed"])
-            .aligns(&[Align::Right, Align::Right, Align::Right, Align::Right, Align::Right]);
+            .header(&["shard", "events", "stages", "resident", "high-water", "evicted"])
+            .aligns(&[
+                Align::Right,
+                Align::Right,
+                Align::Right,
+                Align::Right,
+                Align::Right,
+                Align::Right,
+            ]);
         for s in &m.per_shard {
             t.row(vec![
                 s.shard.to_string(),
-                s.jobs.to_string(),
                 s.events.to_string(),
-                s.stages_ready.to_string(),
-                s.stages_analyzed.to_string(),
+                s.stages.to_string(),
+                s.resident.to_string(),
+                s.resident_high.to_string(),
+                s.evicted.to_string(),
             ]);
         }
         print!("{}", t.render());
-    }
-    for (job_id, stages) in &report.incomplete {
-        println!("job {job_id}: incomplete stages at stream end: {stages:?}");
     }
     0
 }

@@ -128,6 +128,36 @@ impl Bench {
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
+
+    /// Merge this run's results into a machine-readable JSON file so the
+    /// perf trajectory is tracked across PRs. The file maps `section` →
+    /// bench name → `{mean_secs, p50_secs, p99_secs, items_per_sec?}`;
+    /// other sections already in the file are preserved, so several bench
+    /// binaries can share one report (e.g. `BENCH_multi_job.json` at the
+    /// repo root).
+    pub fn write_json(&self, path: &str, section: &str) -> std::io::Result<()> {
+        use crate::util::json::Json;
+        let mut root = std::fs::read_to_string(path)
+            .ok()
+            .and_then(|t| Json::parse(&t).ok())
+            .filter(|j| j.as_obj().is_some())
+            .unwrap_or_else(Json::obj);
+        let mut sec = Json::obj();
+        for r in &self.results {
+            let mut o = Json::obj();
+            o.set("mean_secs", r.mean().into());
+            o.set("p50_secs", r.p(0.5).into());
+            o.set("p99_secs", r.p(0.99).into());
+            o.set("samples", r.samples.len().into());
+            if let Some(t) = r.throughput() {
+                o.set("items_per_sec", t.into());
+            }
+            sec.set(&r.name, o);
+        }
+        sec.set("quick", self.quick.into());
+        root.set(section, sec);
+        std::fs::write(path, root.to_pretty() + "\n")
+    }
 }
 
 impl Default for Bench {
@@ -175,6 +205,44 @@ mod tests {
         assert!(fmt_dur(2e-3).ends_with(" ms"));
         assert!(fmt_dur(2e-6).ends_with(" µs"));
         assert!(fmt_dur(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn write_json_merges_sections() {
+        let path = format!(
+            "{}/bigroots_bench_json_{}.json",
+            std::env::temp_dir().display(),
+            std::process::id()
+        );
+        let _ = std::fs::remove_file(&path);
+        let mut a = Bench {
+            warmup: Duration::from_millis(1),
+            samples: 3,
+            quick: true,
+            results: Vec::new(),
+        };
+        a.run("alpha", 10.0, || {
+            std::hint::black_box(1 + 1);
+        });
+        a.write_json(&path, "first").unwrap();
+        let mut b = Bench {
+            warmup: Duration::from_millis(1),
+            samples: 3,
+            quick: true,
+            results: Vec::new(),
+        };
+        b.run("beta", 0.0, || {
+            std::hint::black_box(2 + 2);
+        });
+        b.write_json(&path, "second").unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = crate::util::json::Json::parse(&text).unwrap();
+        let obj = j.as_obj().unwrap();
+        assert!(obj.contains_key("first"), "earlier section preserved");
+        assert!(obj.contains_key("second"));
+        assert!(j.get("first").get("alpha").get("items_per_sec").as_f64().is_some());
+        assert!(j.get("second").get("beta").get("mean_secs").as_f64().is_some());
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

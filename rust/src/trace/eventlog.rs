@@ -157,6 +157,20 @@ impl Event {
             other => return Err(bad(&format!("unknown event '{other}'"))),
         })
     }
+
+    /// The event's timestamp, for events that carry one. `JobStart` and
+    /// `StageSubmitted` are control events without a clock reading — the
+    /// live job-lifecycle watermark skips them.
+    pub fn time(&self) -> Option<f64> {
+        match self {
+            Event::JobStart { .. } | Event::StageSubmitted { .. } => None,
+            Event::TaskStart { time, .. } => Some(*time),
+            Event::TaskEnd(t) => Some(t.finish),
+            Event::ResourceSample { time, .. } => Some(*time),
+            Event::Injection(i) => Some(i.t_start),
+            Event::JobEnd { time } => Some(*time),
+        }
+    }
 }
 
 /// An [`Event`] tagged with the job it belongs to — one line of a
@@ -337,6 +351,103 @@ pub fn parse_tagged_events(text: &str) -> Result<Vec<TaggedEvent>, JsonError> {
         }
     }
     Ok(out)
+}
+
+/// Incremental NDJSON reader — the parsing half of every live
+/// [`crate::live::source::EventSource`]: feed it raw byte chunks exactly
+/// as they come off a growing file, a socket, or stdin (chunks may end
+/// mid-line, even mid-UTF-8-sequence), get back the complete events. The
+/// trailing partial line stays buffered until its newline arrives or
+/// [`NdjsonTail::finish`] flushes it at end of stream.
+///
+/// Tagged/untagged handling matches [`parse_tagged_events`]: a fully
+/// untagged stream is job 0, and mixing tagged with untagged lines is
+/// rejected as ambiguous. A [`NdjsonTail::reset`] (log rotation) starts a
+/// fresh stream — buffer *and* tag mode are cleared.
+#[derive(Debug, Default)]
+pub struct NdjsonTail {
+    buf: Vec<u8>,
+    saw_tagged: bool,
+    saw_untagged: bool,
+    lines: usize,
+}
+
+impl NdjsonTail {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Consume one chunk; returns every event whose line completed.
+    pub fn feed(&mut self, chunk: &[u8]) -> Result<Vec<TaggedEvent>, JsonError> {
+        self.buf.extend_from_slice(chunk);
+        let Some(last_nl) = self.buf.iter().rposition(|&b| b == b'\n') else {
+            return Ok(Vec::new());
+        };
+        let complete: Vec<u8> = self.buf.drain(..=last_nl).collect();
+        let mut out = Vec::new();
+        for raw in complete.split(|&b| b == b'\n') {
+            let text = String::from_utf8_lossy(raw);
+            let line = text.trim();
+            if line.is_empty() {
+                continue;
+            }
+            out.push(self.parse_line(line)?);
+        }
+        Ok(out)
+    }
+
+    /// End of stream: parse a trailing unterminated line, if any.
+    pub fn finish(&mut self) -> Result<Option<TaggedEvent>, JsonError> {
+        let raw = std::mem::take(&mut self.buf);
+        let text = String::from_utf8_lossy(&raw);
+        let line = text.trim();
+        if line.is_empty() {
+            return Ok(None);
+        }
+        self.parse_line(line).map(Some)
+    }
+
+    fn parse_line(&mut self, line: &str) -> Result<TaggedEvent, JsonError> {
+        let j = Json::parse(line)?;
+        let has_job = j.as_obj().map(|m| m.contains_key("job")).unwrap_or(false);
+        if has_job {
+            self.saw_tagged = true;
+        } else {
+            self.saw_untagged = true;
+        }
+        if self.saw_tagged && self.saw_untagged {
+            return Err(JsonError {
+                offset: 0,
+                message: "mixed tagged and untagged event lines: tag every line with \
+                          \"job\" or none"
+                    .to_string(),
+            });
+        }
+        self.lines += 1;
+        if has_job {
+            TaggedEvent::decode(&j)
+        } else {
+            Ok(TaggedEvent { job_id: 0, event: Event::decode(&j)? })
+        }
+    }
+
+    /// Start over on a fresh stream (log rotation / reconnect).
+    pub fn reset(&mut self) {
+        self.buf.clear();
+        self.saw_tagged = false;
+        self.saw_untagged = false;
+        self.lines = 0;
+    }
+
+    /// Bytes held for the current partial line.
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Complete lines parsed since creation or the last [`NdjsonTail::reset`].
+    pub fn lines(&self) -> usize {
+        self.lines
+    }
 }
 
 /// Split an interleaved stream into per-job event sequences, preserving
@@ -590,5 +701,68 @@ mod tests {
         text.push_str(&trace_to_events(&t)[0].encode().to_string());
         text.push('\n');
         assert!(parse_tagged_events(&text).is_err());
+    }
+
+    #[test]
+    fn ndjson_tail_byte_by_byte_equals_batch_parse() {
+        let t = sample_trace();
+        let merged = interleave_jobs(&[(3, &t), (9, &t)]);
+        let text: String = merged.iter().map(|e| e.encode().to_string() + "\n").collect();
+        let mut tail = NdjsonTail::new();
+        let mut got = Vec::new();
+        for b in text.as_bytes() {
+            got.extend(tail.feed(std::slice::from_ref(b)).unwrap());
+        }
+        assert_eq!(tail.finish().unwrap(), None);
+        assert_eq!(got, merged);
+        assert_eq!(tail.lines(), merged.len());
+        assert_eq!(tail.buffered(), 0);
+    }
+
+    #[test]
+    fn ndjson_tail_flushes_unterminated_final_line() {
+        let t = sample_trace();
+        let events = trace_to_events(&t);
+        let mut text: String =
+            events.iter().map(|e| e.encode().to_string() + "\n").collect();
+        text.pop(); // drop the final newline
+        let mut tail = NdjsonTail::new();
+        let mut got = tail.feed(text.as_bytes()).unwrap();
+        assert_eq!(got.len(), events.len() - 1);
+        assert!(tail.buffered() > 0);
+        got.extend(tail.finish().unwrap());
+        let want: Vec<TaggedEvent> =
+            events.into_iter().map(|event| TaggedEvent { job_id: 0, event }).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn ndjson_tail_rejects_mixed_until_reset() {
+        let t = sample_trace();
+        let tagged_line = interleave_jobs(&[(0, &t)])[0].encode().to_string() + "\n";
+        let untagged_line = trace_to_events(&t)[0].encode().to_string() + "\n";
+        let mut tail = NdjsonTail::new();
+        assert_eq!(tail.feed(tagged_line.as_bytes()).unwrap().len(), 1);
+        assert!(tail.feed(untagged_line.as_bytes()).is_err());
+        // A rotation resets the tag mode: the untagged stream now parses.
+        tail.reset();
+        let got = tail.feed(untagged_line.as_bytes()).unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].job_id, 0);
+    }
+
+    #[test]
+    fn event_time_accessor() {
+        let t = sample_trace();
+        for e in trace_to_events(&t) {
+            match &e {
+                Event::JobStart { .. } | Event::StageSubmitted { .. } => {
+                    assert_eq!(e.time(), None)
+                }
+                Event::TaskEnd(task) => assert_eq!(e.time(), Some(task.finish)),
+                Event::JobEnd { time } => assert_eq!(e.time(), Some(*time)),
+                _ => assert!(e.time().is_some()),
+            }
+        }
     }
 }

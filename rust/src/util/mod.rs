@@ -4,6 +4,7 @@
 
 pub mod cli;
 pub mod json;
+pub mod queue;
 pub mod rng;
 pub mod stats;
 pub mod table;

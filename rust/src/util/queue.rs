@@ -1,0 +1,236 @@
+//! A bounded blocking channel (no `crossbeam` in the offline registry):
+//! the shard-ingest backbone of the live analysis server. `send` blocks
+//! while the queue is at capacity — that *is* the per-shard backpressure
+//! contract: a fast producer is throttled to the pace of the slowest shard
+//! it routes to, so queue memory stays bounded on unbounded streams.
+//!
+//! Semantics mirror `std::sync::mpsc` where they overlap:
+//!
+//! - any number of senders (clone), one receiver;
+//! - dropping every sender closes the channel — `recv` drains what is
+//!   buffered, then returns `None`;
+//! - dropping the receiver poisons the channel — `send` returns the
+//!   rejected item back to the caller instead of blocking forever.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+struct State<T> {
+    buf: VecDeque<T>,
+    /// No sender left — drain and stop.
+    senders: usize,
+    /// Receiver gone — sends are futile.
+    receiver_alive: bool,
+}
+
+struct Shared<T> {
+    state: Mutex<State<T>>,
+    cap: usize,
+    not_full: Condvar,
+    not_empty: Condvar,
+}
+
+/// Create a bounded channel with room for `cap` items (min 1).
+pub fn bounded<T>(cap: usize) -> (BoundedSender<T>, BoundedReceiver<T>) {
+    let shared = Arc::new(Shared {
+        state: Mutex::new(State {
+            buf: VecDeque::new(),
+            senders: 1,
+            receiver_alive: true,
+        }),
+        cap: cap.max(1),
+        not_full: Condvar::new(),
+        not_empty: Condvar::new(),
+    });
+    (BoundedSender { shared: Arc::clone(&shared) }, BoundedReceiver { shared })
+}
+
+/// Producer half. Cloning adds a sender; the channel closes when the last
+/// sender drops.
+pub struct BoundedSender<T> {
+    shared: Arc<Shared<T>>,
+}
+
+impl<T> BoundedSender<T> {
+    /// Enqueue `item`, blocking while the queue is full. Returns the item
+    /// back if the receiver is gone.
+    pub fn send(&self, item: T) -> Result<(), T> {
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if !st.receiver_alive {
+                return Err(item);
+            }
+            if st.buf.len() < self.shared.cap {
+                st.buf.push_back(item);
+                self.shared.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.shared.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Items currently buffered (diagnostic; racy by nature).
+    pub fn len(&self) -> usize {
+        self.shared.state.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Clone for BoundedSender<T> {
+    fn clone(&self) -> Self {
+        self.shared.state.lock().unwrap().senders += 1;
+        BoundedSender { shared: Arc::clone(&self.shared) }
+    }
+}
+
+impl<T> Drop for BoundedSender<T> {
+    fn drop(&mut self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.senders -= 1;
+        if st.senders == 0 {
+            // Wake a receiver blocked on an empty queue so it can observe
+            // the close and return None.
+            self.shared.not_empty.notify_all();
+        }
+    }
+}
+
+/// Consumer half (single receiver).
+pub struct BoundedReceiver<T> {
+    shared: Arc<Shared<T>>,
+}
+
+impl<T> BoundedReceiver<T> {
+    /// Dequeue one item, blocking while the queue is empty. Returns `None`
+    /// once every sender has dropped and the buffer is drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.buf.pop_front() {
+                self.shared.not_full.notify_one();
+                return Some(item);
+            }
+            if st.senders == 0 {
+                return None;
+            }
+            st = self.shared.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Dequeue one item if immediately available.
+    pub fn try_recv(&self) -> Option<T> {
+        let mut st = self.shared.state.lock().unwrap();
+        let item = st.buf.pop_front();
+        if item.is_some() {
+            self.shared.not_full.notify_one();
+        }
+        item
+    }
+
+    pub fn len(&self) -> usize {
+        self.shared.state.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Drop for BoundedReceiver<T> {
+    fn drop(&mut self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.receiver_alive = false;
+        st.buf.clear();
+        // Unblock senders waiting for room; they'll see the poisoned flag.
+        self.shared.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc as StdArc;
+
+    #[test]
+    fn fifo_order_preserved() {
+        let (tx, rx) = bounded::<u64>(100);
+        for i in 0..50 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let mut got = Vec::new();
+        while let Some(x) = rx.recv() {
+            got.push(x);
+        }
+        assert_eq!(got, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn send_blocks_at_capacity() {
+        let (tx, rx) = bounded::<u64>(2);
+        let max_seen = StdArc::new(AtomicUsize::new(0));
+        let max_clone = StdArc::clone(&max_seen);
+        let producer = std::thread::spawn(move || {
+            for i in 0..200 {
+                let depth = tx.len();
+                max_clone.fetch_max(depth, Ordering::SeqCst);
+                tx.send(i).unwrap();
+            }
+        });
+        let mut count = 0;
+        while let Some(_x) = rx.recv() {
+            count += 1;
+            std::thread::yield_now();
+        }
+        producer.join().unwrap();
+        assert_eq!(count, 200);
+        // The producer never observed more than `cap` buffered items.
+        assert!(max_seen.load(Ordering::SeqCst) <= 2);
+    }
+
+    #[test]
+    fn recv_returns_none_after_close() {
+        let (tx, rx) = bounded::<u8>(4);
+        tx.send(1).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(rx.recv(), None);
+        assert_eq!(rx.try_recv(), None);
+    }
+
+    #[test]
+    fn send_errors_after_receiver_drop() {
+        let (tx, rx) = bounded::<u8>(1);
+        drop(rx);
+        assert_eq!(tx.send(9), Err(9));
+    }
+
+    #[test]
+    fn cloned_senders_all_close() {
+        let (tx, rx) = bounded::<u8>(8);
+        let tx2 = tx.clone();
+        let a = std::thread::spawn(move || tx.send(1).unwrap());
+        let b = std::thread::spawn(move || tx2.send(2).unwrap());
+        a.join().unwrap();
+        b.join().unwrap();
+        let mut got = vec![rx.recv().unwrap(), rx.recv().unwrap()];
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 2]);
+        assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn receiver_blocks_until_item_arrives() {
+        let (tx, rx) = bounded::<u8>(1);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            tx.send(7).unwrap();
+        });
+        assert_eq!(rx.recv(), Some(7));
+        h.join().unwrap();
+    }
+}

@@ -161,6 +161,129 @@ impl Welford {
     }
 }
 
+/// Streaming quantile estimator — the P² algorithm (Jain & Chlamtac,
+/// CACM 1985): O(1) memory, no stored samples. Five markers track the
+/// min, p/2, p, (1+p)/2 and max quantiles; each observation nudges the
+/// interior markers toward their desired ranks with a piecewise-parabolic
+/// height update. Exact for the first five observations. The fleet
+/// baseline registry ([`crate::live::registry`]) keeps a handful of these
+/// per feature to hold cross-job distributions on unbounded streams.
+#[derive(Debug, Clone)]
+pub struct P2Quantile {
+    p: f64,
+    /// Marker heights q[0..5] (after init: ascending).
+    q: [f64; 5],
+    /// Actual marker positions, 1-based observation ranks.
+    n: [f64; 5],
+    /// Desired marker positions.
+    np: [f64; 5],
+    /// Per-observation desired-position increments.
+    dn: [f64; 5],
+    count: usize,
+}
+
+impl P2Quantile {
+    pub fn new(p: f64) -> Self {
+        let p = p.clamp(0.0, 1.0);
+        P2Quantile {
+            p,
+            q: [0.0; 5],
+            n: [1.0, 2.0, 3.0, 4.0, 5.0],
+            np: [1.0, 1.0 + 2.0 * p, 1.0 + 4.0 * p, 3.0 + 2.0 * p, 5.0],
+            dn: [0.0, p / 2.0, p, (1.0 + p) / 2.0, 1.0],
+            count: 0,
+        }
+    }
+
+    /// The tracked quantile (0..=1).
+    pub fn p(&self) -> f64 {
+        self.p
+    }
+
+    /// Observations consumed.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if self.count < 5 {
+            self.q[self.count] = x;
+            self.count += 1;
+            if self.count == 5 {
+                self.q.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            }
+            return;
+        }
+        self.count += 1;
+        // Locate the marker cell containing x, widening the extremes.
+        let k = if x < self.q[0] {
+            self.q[0] = x;
+            0
+        } else if x < self.q[1] {
+            0
+        } else if x < self.q[2] {
+            1
+        } else if x < self.q[3] {
+            2
+        } else if x <= self.q[4] {
+            3
+        } else {
+            self.q[4] = x;
+            3
+        };
+        for i in (k + 1)..5 {
+            self.n[i] += 1.0;
+        }
+        for i in 0..5 {
+            self.np[i] += self.dn[i];
+        }
+        // Move interior markers toward their desired ranks (at most one
+        // rank per observation, parabolic height with a linear fallback
+        // when the parabola would break marker monotonicity).
+        for i in 1..4 {
+            let d = self.np[i] - self.n[i];
+            if (d >= 1.0 && self.n[i + 1] - self.n[i] > 1.0)
+                || (d <= -1.0 && self.n[i - 1] - self.n[i] < -1.0)
+            {
+                let d = if d >= 0.0 { 1.0 } else { -1.0 };
+                let parab = self.parabolic(i, d);
+                if self.q[i - 1] < parab && parab < self.q[i + 1] {
+                    self.q[i] = parab;
+                } else {
+                    self.q[i] = self.linear(i, d);
+                }
+                self.n[i] += d;
+            }
+        }
+    }
+
+    fn parabolic(&self, i: usize, d: f64) -> f64 {
+        let (q, n) = (&self.q, &self.n);
+        q[i] + d / (n[i + 1] - n[i - 1])
+            * ((n[i] - n[i - 1] + d) * (q[i + 1] - q[i]) / (n[i + 1] - n[i])
+                + (n[i + 1] - n[i] - d) * (q[i] - q[i - 1]) / (n[i] - n[i - 1]))
+    }
+
+    fn linear(&self, i: usize, d: f64) -> f64 {
+        let j = if d > 0.0 { i + 1 } else { i - 1 };
+        self.q[i] + d * (self.q[j] - self.q[i]) / (self.n[j] - self.n[i])
+    }
+
+    /// Current estimate: exact below five observations, the center marker
+    /// after. 0.0 with no data (matching [`quantile`] on empty input).
+    pub fn value(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        if self.count < 5 {
+            let mut v = self.q[..self.count].to_vec();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            return quantile_sorted(&v, self.p);
+        }
+        self.q[2]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -228,6 +351,63 @@ mod tests {
     #[test]
     fn auc_empty_anchored() {
         assert!((auc(&[]) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn p2_exact_below_five_samples() {
+        let mut p2 = P2Quantile::new(0.5);
+        assert_eq!(p2.value(), 0.0);
+        for x in [5.0, 1.0, 3.0] {
+            p2.push(x);
+        }
+        assert_eq!(p2.value(), median(&[5.0, 1.0, 3.0]));
+        assert_eq!(p2.count(), 3);
+    }
+
+    #[test]
+    fn p2_tracks_uniform_quantiles() {
+        // Deterministic pseudo-uniform values in [0, 100).
+        let mut rng = crate::util::rng::Pcg64::seeded(99);
+        let mut xs = Vec::new();
+        let mut p50 = P2Quantile::new(0.5);
+        let mut p90 = P2Quantile::new(0.9);
+        let mut p95 = P2Quantile::new(0.95);
+        for _ in 0..4000 {
+            let x = rng.range_f64(0.0, 100.0);
+            xs.push(x);
+            p50.push(x);
+            p90.push(x);
+            p95.push(x);
+        }
+        assert!((p50.value() - quantile(&xs, 0.5)).abs() < 3.0, "p50 {}", p50.value());
+        assert!((p90.value() - quantile(&xs, 0.9)).abs() < 3.0, "p90 {}", p90.value());
+        assert!((p95.value() - quantile(&xs, 0.95)).abs() < 3.0, "p95 {}", p95.value());
+    }
+
+    #[test]
+    fn p2_monotone_markers_on_skewed_data() {
+        // Heavily skewed input must keep the estimate finite and within
+        // the observed range.
+        let mut p2 = P2Quantile::new(0.95);
+        let mut rng = crate::util::rng::Pcg64::seeded(7);
+        for _ in 0..2000 {
+            let u = rng.f64();
+            p2.push(u * u * u * 1000.0);
+        }
+        let v = p2.value();
+        assert!(v.is_finite());
+        assert!((0.0..=1000.0).contains(&v));
+        assert!(v > 500.0, "p95 of cubed-uniform should be high, got {v}");
+    }
+
+    #[test]
+    fn p2_constant_stream() {
+        let mut p2 = P2Quantile::new(0.9);
+        for _ in 0..100 {
+            p2.push(4.25);
+        }
+        assert_eq!(p2.value(), 4.25);
+        assert_eq!(p2.p(), 0.9);
     }
 
     #[test]

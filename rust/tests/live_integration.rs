@@ -1,0 +1,270 @@
+//! Integration: the live multi-tenant ingest subsystem — the growing-file
+//! acceptance scenario (per-job verdicts bit-identical to batch through a
+//! byte-level tail), lifecycle eviction bounds, evict-then-revive
+//! freshness, and the golden-fixture tail replay.
+
+use bigroots::coordinator::{AnalysisService, Pipeline, ServiceConfig};
+use bigroots::live::{
+    EventSource, LifecycleConfig, LiveConfig, LiveReport, LiveServer, MemorySource, SourcePoll,
+    TailSource,
+};
+use bigroots::sim::multi::{interleaved_workload, round_robin_specs};
+use bigroots::sim::{workloads, Engine, InjectionPlan, SimConfig};
+use bigroots::trace::eventlog::{interleave_jobs, parse_tagged_events, TaggedEvent};
+use bigroots::trace::JobTrace;
+use std::io::Write;
+
+fn tmp_path(name: &str) -> String {
+    format!(
+        "{}/bigroots_it_{}_{}",
+        std::env::temp_dir().display(),
+        std::process::id(),
+        name
+    )
+}
+
+fn run_live(events: &[TaggedEvent], cfg: LiveConfig) -> LiveReport {
+    let mut server = LiveServer::new(cfg);
+    server.feed_all(events);
+    server.finish()
+}
+
+fn single_trace(seed: u64, scale: f64) -> JobTrace {
+    let w = workloads::wordcount(scale);
+    let mut eng = Engine::new(SimConfig { seed, ..Default::default() });
+    eng.run("live-it", w.name, &w.stages, &InjectionPlan::none())
+}
+
+/// The acceptance scenario: an 8-job interleaved NDJSON log that *grows
+/// while being tailed* (appended in awkward chunk sizes that split lines)
+/// must produce per-job verdicts bit-identical to the offline batch
+/// pipeline, retire every job, and leave a populated fleet baseline.
+#[test]
+fn growing_eight_job_tail_matches_batch_bit_for_bit() {
+    let specs = round_robin_specs(8, 0.12, 20260729);
+    let (traces, events) = interleaved_workload(&specs);
+    let text: String = events.iter().map(|e| e.encode().to_string() + "\n").collect();
+    let path = tmp_path("tail8.ndjson");
+    let _ = std::fs::remove_file(&path);
+
+    let mut source = TailSource::new(&path);
+    let mut server = LiveServer::new(LiveConfig {
+        shards: 3,
+        ingest_batch: 32,
+        lifecycle: LifecycleConfig { evict_after: 2.0, scan_every: 16, ..Default::default() },
+        ..Default::default()
+    });
+
+    // Grow the file in 997-byte appends (prime, so lines split anywhere),
+    // polling the tail between appends — the live-tail loop, minus sleeps.
+    let bytes = text.as_bytes();
+    let mut f = std::fs::File::create(&path).unwrap();
+    let mut written = 0;
+    let mut fed = 0usize;
+    while written < bytes.len() {
+        let end = (written + 997).min(bytes.len());
+        f.write_all(&bytes[written..end]).unwrap();
+        f.flush().unwrap();
+        written = end;
+        loop {
+            match source.poll().unwrap() {
+                SourcePoll::Events(evs) => {
+                    fed += evs.len();
+                    for e in evs {
+                        server.feed(e);
+                    }
+                }
+                _ => break,
+            }
+        }
+    }
+    assert_eq!(fed, events.len(), "tail delivered every event exactly once");
+
+    let report = server.finish();
+    assert_eq!(report.jobs.len(), 8);
+    for (job_id, trace) in &traces {
+        let got = report.job(*job_id).expect("job retired");
+        assert!(got.ended, "job {job_id} saw its JobEnd");
+        assert!(got.incomplete.is_empty());
+        let mut p = Pipeline::native();
+        let want = p.analyze(trace, "live");
+        assert_eq!(got.analyses.len(), want.per_stage.len(), "job {job_id}");
+        for (g, (_, w)) in got.analyses.iter().zip(&want.per_stage) {
+            assert_eq!(g, w, "job {job_id} stage {} differs from batch", g.stage_id);
+        }
+    }
+    // The fleet baseline snapshot saw everything.
+    assert_eq!(report.fleet.stages, report.total_stages());
+    assert_eq!(report.fleet.jobs_completed, 8);
+    assert!(report.fleet.tasks > 0);
+    assert!(!report.fleet.render().is_empty());
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Memory stays bounded on an unbounded-style stream: jobs arriving one
+/// after another are evicted as they drain, so the resident `JobState`
+/// count never approaches the number of jobs seen.
+#[test]
+fn sequential_stream_bounds_resident_jobstates() {
+    let n_jobs = 10u64;
+    let mut stream = Vec::new();
+    let mut traces = Vec::new();
+    for i in 0..n_jobs {
+        let t = single_trace(100 + i, 0.08);
+        stream.extend(interleave_jobs(&[(i, &t)]));
+        traces.push((i, t));
+    }
+    let report = run_live(
+        &stream,
+        LiveConfig {
+            shards: 1, // one shard ⇒ the high-water mark is the true global peak
+            ingest_batch: 16,
+            lifecycle: LifecycleConfig { evict_after: 1.0, scan_every: 16, ..Default::default() },
+            ..Default::default()
+        },
+    );
+    assert_eq!(report.jobs.len(), n_jobs as usize);
+    assert!(
+        report.metrics.resident_high_water <= 2,
+        "resident high-water {} for {} sequential jobs",
+        report.metrics.resident_high_water,
+        n_jobs
+    );
+    assert!(
+        report.metrics.evictions_live >= n_jobs as usize - 1,
+        "only {} live evictions",
+        report.metrics.evictions_live
+    );
+    // Eviction changed no result: full batch parity for every job.
+    for (job_id, trace) in &traces {
+        let got = report.job(*job_id).unwrap();
+        let mut p = Pipeline::native();
+        let want = p.analyze(trace, "live");
+        assert_eq!(got.analyses.len(), want.per_stage.len());
+        for (g, (_, w)) in got.analyses.iter().zip(&want.per_stage) {
+            assert_eq!(g, w);
+        }
+    }
+}
+
+/// An evicted-then-revived job id must be a completely fresh job: new
+/// incarnation, analyses matching a fresh batch run of the second trace,
+/// nothing carried over from the first life.
+#[test]
+fn evicted_then_revived_job_id_is_fresh() {
+    let a = single_trace(7, 0.1);
+    let b = single_trace(8, 0.12);
+    let mut stream = interleave_jobs(&[(5, &a)]);
+    stream.extend(interleave_jobs(&[(5, &b)]));
+    let report = run_live(
+        &stream,
+        LiveConfig {
+            shards: 2,
+            ingest_batch: 8,
+            lifecycle: LifecycleConfig { evict_after: 1.0, scan_every: 8, ..Default::default() },
+            ..Default::default()
+        },
+    );
+    assert_eq!(report.jobs.len(), 2, "two incarnations of job 5");
+    assert_eq!(report.jobs[0].job_id, 5);
+    assert_eq!(report.jobs[0].incarnation, 0);
+    assert_eq!(report.jobs[1].incarnation, 1);
+    assert!(report.jobs[0].evicted_live, "first life must retire mid-stream");
+    for (job, trace) in [(&report.jobs[0], &a), (&report.jobs[1], &b)] {
+        let mut p = Pipeline::native();
+        let want = p.analyze(trace, "live");
+        assert_eq!(job.analyses.len(), want.per_stage.len());
+        for (g, (_, w)) in job.analyses.iter().zip(&want.per_stage) {
+            assert_eq!(g, w);
+        }
+    }
+}
+
+/// Golden fixture replayed byte-by-byte through the tail reader: the
+/// parsed stream, and the analyses it produces, are identical to reading
+/// the whole file at once.
+#[test]
+fn fixture_tail_replay_byte_by_byte_matches_batch() {
+    let fixture = format!(
+        "{}/tests/fixtures/events_interleaved.ndjson",
+        env!("CARGO_MANIFEST_DIR")
+    );
+    let text = std::fs::read_to_string(&fixture).unwrap();
+    let want_events = parse_tagged_events(&text).unwrap();
+
+    let path = tmp_path("fixture_replay.ndjson");
+    let _ = std::fs::remove_file(&path);
+    let mut source = TailSource::new(&path);
+    let mut got_events = Vec::new();
+    {
+        let mut f = std::fs::File::create(&path).unwrap();
+        for byte in text.as_bytes() {
+            f.write_all(std::slice::from_ref(byte)).unwrap();
+            f.flush().unwrap();
+            if let SourcePoll::Events(evs) = source.poll().unwrap() {
+                got_events.extend(evs);
+            }
+        }
+    }
+    assert_eq!(got_events, want_events, "byte-level tail == whole-file parse");
+
+    // And the live analyses of the tailed stream equal the service's
+    // batch analyses of the same events.
+    let live = run_live(&got_events, LiveConfig::default());
+    let mut svc = AnalysisService::new(ServiceConfig::default());
+    svc.feed_all(&want_events);
+    let batch = svc.finish();
+    for (job_id, analyses) in &batch.per_job {
+        let got = live.job(*job_id).expect("job in live report");
+        assert_eq!(&got.analyses, analyses, "job {job_id}");
+    }
+    assert_eq!(live.total_stages(), batch.per_job.iter().map(|(_, a)| a.len()).sum::<usize>());
+    let _ = std::fs::remove_file(&path);
+}
+
+/// A truncated stream (no JobEnd ever arrives) still reports at stream
+/// end, with the incomplete stages listed.
+#[test]
+fn truncated_stream_reports_incomplete_at_finish() {
+    let t = single_trace(33, 0.1);
+    let events = interleave_jobs(&[(1, &t)]);
+    let cut = events.len() / 3;
+    let report = run_live(&events[..cut], LiveConfig::default());
+    assert_eq!(report.jobs.len(), 1);
+    let job = report.jobs.first().unwrap();
+    assert!(!job.ended);
+    assert!(!job.evicted_live, "flushed at finish, not GC'd");
+    let analyzed = job.analyses.len();
+    let incomplete = job.incomplete.len();
+    assert!(analyzed + incomplete > 0);
+    assert_eq!(report.metrics.events_total, cut);
+}
+
+/// A `MemorySource`-driven replay equals direct feeding — the source
+/// layer adds no semantics.
+#[test]
+fn memory_source_replay_equals_direct_feed() {
+    let specs = round_robin_specs(3, 0.1, 404);
+    let (_, events) = interleaved_workload(&specs);
+    let direct = run_live(&events, LiveConfig::default());
+
+    let mut source = MemorySource::new(events.clone(), 113);
+    let mut server = LiveServer::new(LiveConfig::default());
+    loop {
+        match source.poll().unwrap() {
+            SourcePoll::Events(evs) => {
+                for e in evs {
+                    server.feed(e);
+                }
+            }
+            SourcePoll::Idle => server.pump(),
+            SourcePoll::End => break,
+        }
+    }
+    let via_source = server.finish();
+    assert_eq!(direct.jobs.len(), via_source.jobs.len());
+    for (a, b) in direct.jobs.iter().zip(&via_source.jobs) {
+        assert_eq!(a.job_id, b.job_id);
+        assert_eq!(a.analyses, b.analyses);
+    }
+}
