@@ -23,7 +23,7 @@ fn main() {
     // Tail the stream. In production this would read from a file/socket;
     // the analyzer is incremental either way.
     let mut analyzer =
-        StreamAnalyzer::new(Box::new(bigroots::analysis::NativeBackend), Default::default());
+        StreamAnalyzer::new(Box::new(bigroots::analysis::NativeBackend::new()), Default::default());
     for (i, e) in events.iter().enumerate() {
         if let Some(stage_id) = analyzer.feed(e) {
             let a = analyzer.results.last().unwrap();

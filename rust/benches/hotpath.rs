@@ -1,0 +1,285 @@
+//! Bench: the event→feature→stats hot path after the zero-alloc decode /
+//! scratch-reuse / stats-cache overhaul — with the *pre-overhaul* paths
+//! measured alongside, so the speedup is visible in one run and tracked
+//! across PRs in `BENCH_hotpath.json`.
+//!
+//! Three layers, two workload shapes:
+//!
+//! - **decode**: NDJSON event lines through the borrowed-token decoder
+//!   (`codec::decode_event_line`) vs the generic `Json` DOM path
+//!   (`Json::parse` + `Event::decode`) — the all-unique workload's win.
+//! - **stats**: the reconstructed pre-PR kernel (full stable sort per
+//!   column, `Vec::position` node slots, fresh buffers — `LegacyKernel`
+//!   below) vs the scratch-reusing `NativeBackend` vs a `CachedBackend`
+//!   replaying one shape (the repeated-shape win).
+//! - **e2e**: events/sec through the full `LiveServer` ingest for a
+//!   repeated-shape stream (same job resubmitted under many tenant ids)
+//!   and an all-unique stream. The baseline leg reverts the decode (Json
+//!   DOM) and cache (capacity 0) layers; the stats kernel inside
+//!   `LiveServer` is always the new one, so the e2e ratio is a *lower
+//!   bound* on the true speedup versus the pre-PR build.
+//!
+//! Run: `cargo bench --bench hotpath [-- --quick]`
+
+use bigroots::analysis::cache::CachedBackend;
+use bigroots::analysis::features::{FeatureKind, StageFeatures};
+use bigroots::analysis::stats::{
+    compute_native, quantile_grid, NativeBackend, StageStats, StatsBackend, GRID_Q,
+};
+use bigroots::util::stats::quantile_sorted;
+use bigroots::live::{LiveConfig, LiveServer};
+use bigroots::sim::multi::{interleaved_workload, round_robin_specs, MultiJobSpec};
+use bigroots::testing::bench::{black_box, Bench};
+use bigroots::trace::codec::decode_event_line;
+use bigroots::trace::eventlog::{parse_tagged_events, Event, TaggedEvent};
+use bigroots::util::json::Json;
+
+/// The pre-PR stats kernel, reconstructed for the baseline leg: fresh
+/// buffers every call, `Vec::position` node-slot resolution, and a full
+/// stable sort per feature column for the quantile grid. Output is
+/// bit-identical to `compute_native` (asserted below).
+fn legacy_kernel(sf: &StageFeatures) -> StageStats {
+    let f = FeatureKind::COUNT;
+    let n = sf.num_tasks();
+    let mut col_sum = vec![0.0f64; f];
+    let mut col_sumsq = vec![0.0f64; f];
+    let mut col_dot_dur = vec![0.0f64; f];
+    let mut dur_sum = 0.0f64;
+    let mut dur_sumsq = 0.0f64;
+    let mut nodes: Vec<usize> = Vec::new();
+    let mut node_of_row: Vec<usize> = Vec::with_capacity(n);
+    for &nd in &sf.nodes {
+        let slot = match nodes.iter().position(|&x| x == nd) {
+            Some(s) => s,
+            None => {
+                nodes.push(nd);
+                nodes.len() - 1
+            }
+        };
+        node_of_row.push(slot);
+    }
+    let mut node_sum = vec![0.0f64; nodes.len() * f];
+    let mut node_count = vec![0usize; nodes.len()];
+    for row in 0..n {
+        let d = sf.durations[row];
+        dur_sum += d;
+        dur_sumsq += d * d;
+        let slot = node_of_row[row];
+        node_count[slot] += 1;
+        let base = row * f;
+        for k in 0..f {
+            let v = sf.matrix[base + k];
+            col_sum[k] += v;
+            col_sumsq[k] += v * v;
+            col_dot_dur[k] += v * d;
+            node_sum[slot * f + k] += v;
+        }
+    }
+    let nf = n as f64;
+    let col_mean: Vec<f64> =
+        col_sum.iter().map(|s| if n > 0 { s / nf } else { 0.0 }).collect();
+    let col_var: Vec<f64> = (0..f)
+        .map(|k| {
+            if n > 0 {
+                (col_sumsq[k] / nf - col_mean[k] * col_mean[k]).max(0.0)
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let col_std: Vec<f64> = col_var.iter().map(|v| v.sqrt()).collect();
+    let dur_mean = if n > 0 { dur_sum / nf } else { 0.0 };
+    let dur_var = if n > 0 { (dur_sumsq / nf - dur_mean * dur_mean).max(0.0) } else { 0.0 };
+    let pearson: Vec<f64> = (0..f)
+        .map(|k| {
+            if n < 2 {
+                return 0.0;
+            }
+            let cov = col_dot_dur[k] / nf - col_mean[k] * dur_mean;
+            let denom = (col_var[k] * dur_var).sqrt();
+            if denom <= 1e-30 {
+                0.0
+            } else {
+                (cov / denom).clamp(-1.0, 1.0)
+            }
+        })
+        .collect();
+    let mut quantiles = vec![0.0f64; GRID_Q * f];
+    let grid = quantile_grid();
+    let mut col_buf: Vec<f64> = Vec::with_capacity(n);
+    for k in 0..f {
+        col_buf.clear();
+        col_buf.extend((0..n).map(|r| sf.matrix[r * f + k]));
+        col_buf.sort_by(|a, b| a.total_cmp(b));
+        for (qi, &q) in grid.iter().enumerate() {
+            quantiles[qi * f + k] = quantile_sorted(&col_buf, q);
+        }
+    }
+    StageStats { count: n, col_sum, col_mean, col_std, pearson, quantiles, nodes, node_sum, node_count }
+}
+
+/// Same workload resubmitted under `n` tenant ids — identical stage
+/// matrices, the memoizer's target shape.
+fn repeated_specs(n: usize, scale: f64, seed: u64) -> Vec<MultiJobSpec> {
+    let base = round_robin_specs(1, scale, seed).remove(0);
+    (0..n as u64).map(|job_id| MultiJobSpec { job_id, ..base.clone() }).collect()
+}
+
+fn ndjson(events: &[TaggedEvent]) -> String {
+    events.iter().map(|e| e.encode().to_string() + "\n").collect()
+}
+
+fn live_run(events: &[TaggedEvent], cache: usize) -> (usize, usize) {
+    let mut server = LiveServer::new(LiveConfig {
+        shards: 4,
+        stats_cache_capacity: cache,
+        ..Default::default()
+    });
+    server.feed_all(events);
+    let report = server.finish();
+    (report.total_stages(), report.metrics.cache_hits)
+}
+
+fn main() {
+    let mut bench = Bench::new();
+    let scale = if bench.quick { 0.08 } else { 0.15 };
+    let jobs = 8usize;
+
+    let (_, unique) = interleaved_workload(&round_robin_specs(jobs, scale, 17));
+    let (_, repeated) = interleaved_workload(&repeated_specs(jobs, scale, 17));
+    let unique_text = ndjson(&unique);
+    let repeated_text = ndjson(&repeated);
+    println!(
+        "(streams: {} unique-shape events, {} repeated-shape events, scale {scale})",
+        unique.len(),
+        repeated.len()
+    );
+
+    // --- decode: DOM baseline vs zero-alloc scanner -----------------------
+    bench.run("decode/json-dom", unique.len() as f64, || {
+        let n: usize = unique_text
+            .lines()
+            .filter(|l| !l.trim().is_empty())
+            .map(|l| {
+                let j = Json::parse(l).expect("valid line");
+                black_box(Event::decode(&j).expect("valid event"));
+            })
+            .count();
+        assert_eq!(n, unique.len());
+    });
+    bench.run("decode/zero-alloc", unique.len() as f64, || {
+        let n: usize = unique_text
+            .lines()
+            .filter(|l| !l.trim().is_empty())
+            .map(|l| {
+                black_box(decode_event_line(l).expect("valid event"));
+            })
+            .count();
+        assert_eq!(n, unique.len());
+    });
+    bench.run("decode/parse_tagged_events", unique.len() as f64, || {
+        black_box(parse_tagged_events(&unique_text).expect("valid stream"));
+    });
+
+    // --- stats kernel: fresh scratch vs reuse vs memo ---------------------
+    let sf = {
+        use bigroots::analysis::features::extract_all;
+        use bigroots::sim::{Engine, InjectionPlan, SimConfig, StageSpec};
+        let mut s = StageSpec::base("perf", if bench.quick { 300 } else { 2000 });
+        s.input_mean_bytes = 4e6;
+        s.compute_base = 0.1;
+        s.compute_per_byte = 0.0;
+        let mut eng = Engine::new(SimConfig { seed: 9, ..Default::default() });
+        let trace = eng.run("perf", "perf", &[s], &InjectionPlan::none());
+        extract_all(&trace, 3.0).remove(0)
+    };
+    let n_tasks = sf.num_tasks() as f64;
+    assert_eq!(legacy_kernel(&sf), compute_native(&sf), "kernel parity");
+    bench.run("stats/legacy-sort", n_tasks, || {
+        black_box(legacy_kernel(&sf));
+    });
+    bench.run("stats/fresh-scratch", n_tasks, || {
+        black_box(compute_native(&sf));
+    });
+    let mut warm = NativeBackend::new();
+    bench.run("stats/scratch-reuse", n_tasks, || {
+        black_box(warm.stage_stats(&sf));
+    });
+    let mut cached = CachedBackend::new(NativeBackend::new(), 64);
+    cached.stage_stats(&sf); // prime
+    bench.run("stats/cached-repeat", n_tasks, || {
+        black_box(cached.stage_stats(&sf));
+    });
+
+    // --- end-to-end: NDJSON text → decode → LiveServer → report -----------
+    // "pre-overhaul" = the PR-3 path: Json DOM per line, no stats memo.
+    // "overhauled"   = zero-alloc decode + per-shard stats cache.
+    let dom_parse = |text: &str| -> Vec<TaggedEvent> {
+        text.lines()
+            .filter(|l| !l.trim().is_empty())
+            .map(|l| {
+                let j = Json::parse(l).expect("valid line");
+                TaggedEvent::decode(&j).expect("valid tagged event")
+            })
+            .collect()
+    };
+    let (want_unique, _) = live_run(&unique, 256);
+    let (want_repeated, hits) = live_run(&repeated, 256);
+    assert!(hits > 0, "repeated-shape stream must produce cache hits");
+    assert_eq!(dom_parse(&repeated_text), repeated, "decode parity");
+    bench.run("e2e/unique/dom-nocache", unique.len() as f64, || {
+        let ev = dom_parse(&unique_text);
+        assert_eq!(live_run(&ev, 0).0, want_unique);
+    });
+    bench.run("e2e/unique/overhauled", unique.len() as f64, || {
+        let ev = parse_tagged_events(&unique_text).expect("valid stream");
+        assert_eq!(live_run(&ev, 256).0, want_unique);
+    });
+    bench.run("e2e/repeated/dom-nocache", repeated.len() as f64, || {
+        let ev = dom_parse(&repeated_text);
+        assert_eq!(live_run(&ev, 0).0, want_repeated);
+    });
+    bench.run("e2e/repeated/overhauled", repeated.len() as f64, || {
+        let ev = parse_tagged_events(&repeated_text).expect("valid stream");
+        assert_eq!(live_run(&ev, 256).0, want_repeated);
+    });
+
+    // --- headline ratios ----------------------------------------------------
+    let tp = |name: &str| {
+        bench
+            .results()
+            .iter()
+            .find(|r| r.name == name)
+            .and_then(|r| r.throughput())
+            .unwrap_or(0.0)
+    };
+    let dom = tp("decode/json-dom");
+    let fast = tp("decode/zero-alloc");
+    if dom > 0.0 {
+        println!("\nzero-alloc decode vs Json DOM: {:.2}x events/sec", fast / dom);
+    }
+    let legacy = tp("stats/legacy-sort");
+    let scratch = tp("stats/scratch-reuse");
+    if legacy > 0.0 {
+        println!("stats kernel, scratch+select vs legacy sort: {:.2}x tasks/sec", scratch / legacy);
+    }
+    for shape in ["repeated", "unique"] {
+        let before = tp(&format!("e2e/{shape}/dom-nocache"));
+        let after = tp(&format!("e2e/{shape}/overhauled"));
+        if before > 0.0 {
+            println!(
+                "{shape}-shape e2e, overhauled vs dom-decode+no-cache (lower bound vs \
+                 pre-PR): {:.2}x events/sec",
+                after / before
+            );
+        }
+    }
+
+    // The perf trajectory is the point of this bench — a silent write
+    // failure must fail the run (and CI), not upload a stale file.
+    let json_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
+    bench
+        .write_json(json_path, "hotpath")
+        .unwrap_or_else(|e| panic!("bench json write failed for {json_path}: {e}"));
+    println!("(wrote {json_path})");
+}

@@ -274,7 +274,7 @@ mod tests {
     }
 
     fn run(sf: &StageFeatures, cfg: &BigRootsConfig) -> StageAnalysis {
-        analyze_stage(sf, &mut NativeBackend, cfg)
+        analyze_stage(sf, &mut NativeBackend::new(), cfg)
     }
 
     #[test]

@@ -1,0 +1,354 @@
+//! Stage-stats memoization — the cache layer of the hot path.
+//!
+//! Fleets re-run the same jobs: a nightly ETL resubmitted per tenant, a
+//! benchmark suite looping over the HiBench workloads, a scheduler
+//! retrying a failed job. Their stages produce *identical* feature
+//! matrices, and [`compute_native`](super::stats::compute_native) work on
+//! an identical matrix is pure waste. [`CachedBackend`] wraps any
+//! [`StatsBackend`] with an LRU-bounded memo table keyed on a structural
+//! hash of the stats-relevant [`StageFeatures`] fields (`nodes`,
+//! `durations`, `matrix` — ids and edge-window means do not influence
+//! [`StageStats`]).
+//!
+//! Correctness contract: results are **bit-identical** to the wrapped
+//! backend, always. A hash hit is verified against a stored copy of the
+//! key fields before use, so a 64-bit collision degrades to a miss rather
+//! than a wrong answer; `rust/tests/hotpath_parity.rs` asserts parity
+//! (including under eviction pressure) property-style.
+//!
+//! Sizing: each resident entry holds the key fields plus the
+//! [`StageStats`] (~`(14 × tasks + 300) × 8` bytes), so the default
+//! capacity of a few hundred entries stays in the tens of megabytes even
+//! for 2 000-task stages. Capacity 0 disables caching entirely (every
+//! call forwards, counted as a miss).
+
+use std::collections::{BTreeMap, HashMap};
+
+use super::features::StageFeatures;
+use super::stats::{StageStats, StatsBackend};
+
+/// Hit/miss/eviction counters, surfaced through
+/// [`StatsBackend::cache_counters`] into service metrics and fleet
+/// snapshots.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheCounters {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl CacheCounters {
+    /// Hit fraction in [0, 1]; 0 before any lookup.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Owned copy of the fields that determine [`StageStats`], kept per entry
+/// so hash collisions can be detected exactly.
+#[derive(Debug, Clone)]
+struct CacheKey {
+    nodes: Vec<usize>,
+    durations: Vec<f64>,
+    matrix: Vec<f64>,
+}
+
+impl CacheKey {
+    fn of(sf: &StageFeatures) -> CacheKey {
+        CacheKey {
+            nodes: sf.nodes.clone(),
+            durations: sf.durations.clone(),
+            matrix: sf.matrix.clone(),
+        }
+    }
+
+    /// Exact (bitwise for floats) match — `f64::to_bits` so NaN keys
+    /// compare like any other value instead of poisoning the table.
+    fn matches(&self, sf: &StageFeatures) -> bool {
+        self.nodes == sf.nodes
+            && self.durations.len() == sf.durations.len()
+            && self.matrix.len() == sf.matrix.len()
+            && self
+                .durations
+                .iter()
+                .zip(&sf.durations)
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+            && self.matrix.iter().zip(&sf.matrix).all(|(a, b)| a.to_bits() == b.to_bits())
+    }
+}
+
+/// FNV-1a over the stats-relevant bytes of a stage. 64-bit — collisions
+/// are possible in principle, which is why entries verify the full key.
+pub fn structural_hash(sf: &StageFeatures) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    let mut eat = |x: u64| {
+        for shift in [0u32, 8, 16, 24, 32, 40, 48, 56] {
+            h ^= (x >> shift) & 0xff;
+            h = h.wrapping_mul(PRIME);
+        }
+    };
+    eat(sf.nodes.len() as u64);
+    for &nd in &sf.nodes {
+        eat(nd as u64);
+    }
+    eat(sf.durations.len() as u64);
+    for &d in &sf.durations {
+        eat(d.to_bits());
+    }
+    eat(sf.matrix.len() as u64);
+    for &v in &sf.matrix {
+        eat(v.to_bits());
+    }
+    h
+}
+
+struct Entry {
+    key: CacheKey,
+    value: StageStats,
+    /// Monotone recency tick; the entry's position in `lru`.
+    tick: u64,
+}
+
+/// A memoizing [`StatsBackend`] wrapper. See module docs.
+pub struct CachedBackend<B> {
+    inner: B,
+    capacity: usize,
+    /// structural hash → entry. One entry per hash: a colliding insert
+    /// replaces (correct either way — the key check decides hit vs miss).
+    map: HashMap<u64, Entry>,
+    /// recency tick → hash, oldest first (BTreeMap keeps ticks ordered, so
+    /// eviction is "remove the first key" without an intrusive list).
+    lru: BTreeMap<u64, u64>,
+    tick: u64,
+    counters: CacheCounters,
+}
+
+impl<B: StatsBackend> CachedBackend<B> {
+    pub fn new(inner: B, capacity: usize) -> Self {
+        CachedBackend {
+            inner,
+            capacity,
+            map: HashMap::new(),
+            lru: BTreeMap::new(),
+            tick: 0,
+            counters: CacheCounters::default(),
+        }
+    }
+
+    pub fn counters(&self) -> CacheCounters {
+        self.counters
+    }
+
+    /// Resident entries.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// The wrapped backend (e.g. to read its own counters).
+    pub fn inner(&self) -> &B {
+        &self.inner
+    }
+
+    fn lookup(&mut self, hash: u64, sf: &StageFeatures) -> Option<StageStats> {
+        self.tick += 1;
+        let tick = self.tick;
+        // One probe: verify the key, bump recency, clone the value.
+        let (value, old_tick) = match self.map.get_mut(&hash) {
+            Some(e) if e.key.matches(sf) => {
+                let old = e.tick;
+                e.tick = tick;
+                (e.value.clone(), old)
+            }
+            _ => return None,
+        };
+        self.lru.remove(&old_tick);
+        self.lru.insert(tick, hash);
+        Some(value)
+    }
+
+    fn insert(&mut self, hash: u64, sf: &StageFeatures, value: StageStats) {
+        // Replace a colliding (or stale same-hash) entry outright.
+        if let Some(old) = self.map.remove(&hash) {
+            self.lru.remove(&old.tick);
+        }
+        while self.map.len() >= self.capacity {
+            let oldest = match self.lru.iter().next() {
+                Some((&t, &h)) => (t, h),
+                None => break,
+            };
+            self.lru.remove(&oldest.0);
+            self.map.remove(&oldest.1);
+            self.counters.evictions += 1;
+        }
+        self.tick += 1;
+        self.lru.insert(self.tick, hash);
+        self.map.insert(hash, Entry { key: CacheKey::of(sf), value, tick: self.tick });
+    }
+}
+
+impl<B: StatsBackend> StatsBackend for CachedBackend<B> {
+    fn stage_stats(&mut self, sf: &StageFeatures) -> StageStats {
+        if self.capacity == 0 {
+            self.counters.misses += 1;
+            return self.inner.stage_stats(sf);
+        }
+        let hash = structural_hash(sf);
+        if let Some(v) = self.lookup(hash, sf) {
+            self.counters.hits += 1;
+            return v;
+        }
+        self.counters.misses += 1;
+        let v = self.inner.stage_stats(sf);
+        self.insert(hash, sf, v.clone());
+        v
+    }
+
+    // The default batch impl loops over `stage_stats`, which is exactly
+    // right here: every element gets its own cache lookup.
+
+    fn name(&self) -> &'static str {
+        "cached"
+    }
+
+    fn cache_counters(&self) -> Option<CacheCounters> {
+        Some(self.counters)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::features::FeatureKind as F;
+    use crate::analysis::stats::{compute_native, NativeBackend};
+
+    fn stage(seed: u64, n: usize) -> StageFeatures {
+        let f = F::COUNT;
+        let mut rng = crate::util::rng::Pcg64::seeded(seed);
+        StageFeatures {
+            stage_id: seed,
+            task_ids: (0..n as u64).collect(),
+            nodes: (0..n).map(|r| r % 3).collect(),
+            durations: (0..n).map(|_| rng.range_f64(0.5, 5.0)).collect(),
+            matrix: (0..n * f).map(|_| rng.range_f64(0.0, 4.0)).collect(),
+            head_means: vec![0.0; n * 3],
+            tail_means: vec![0.0; n * 3],
+        }
+    }
+
+    #[test]
+    fn hit_returns_identical_stats() {
+        let mut c = CachedBackend::new(NativeBackend::new(), 8);
+        let sf = stage(1, 20);
+        let first = c.stage_stats(&sf);
+        let second = c.stage_stats(&sf);
+        assert_eq!(first, second);
+        assert_eq!(first, compute_native(&sf));
+        assert_eq!(c.counters(), CacheCounters { hits: 1, misses: 1, evictions: 0 });
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn ids_do_not_affect_the_key() {
+        // stage_id / task_ids don't influence StageStats — same matrix
+        // under different ids must hit.
+        let mut c = CachedBackend::new(NativeBackend::new(), 8);
+        let a = stage(2, 12);
+        let mut b = a.clone();
+        b.stage_id = 999;
+        b.task_ids = (100..112).collect();
+        let ra = c.stage_stats(&a);
+        let rb = c.stage_stats(&b);
+        assert_eq!(ra, rb);
+        assert_eq!(c.counters().hits, 1);
+    }
+
+    #[test]
+    fn different_matrices_miss() {
+        let mut c = CachedBackend::new(NativeBackend::new(), 8);
+        let a = stage(3, 10);
+        let mut b = a.clone();
+        b.matrix[0] += 1.0;
+        c.stage_stats(&a);
+        c.stage_stats(&b);
+        assert_eq!(c.counters(), CacheCounters { hits: 0, misses: 2, evictions: 0 });
+        assert_eq!(c.stage_stats(&b), compute_native(&b));
+        assert_eq!(c.counters().hits, 1);
+    }
+
+    #[test]
+    fn eviction_is_lru_and_results_stay_correct() {
+        let mut c = CachedBackend::new(NativeBackend::new(), 2);
+        let s1 = stage(10, 8);
+        let s2 = stage(11, 8);
+        let s3 = stage(12, 8);
+        c.stage_stats(&s1);
+        c.stage_stats(&s2);
+        c.stage_stats(&s1); // s1 most recent; s2 is now LRU
+        c.stage_stats(&s3); // evicts s2
+        assert_eq!(c.counters().evictions, 1);
+        assert_eq!(c.len(), 2);
+        // s1 still resident → hit; s2 evicted → recomputed, still right.
+        let hits_before = c.counters().hits;
+        assert_eq!(c.stage_stats(&s1), compute_native(&s1));
+        assert_eq!(c.counters().hits, hits_before + 1);
+        assert_eq!(c.stage_stats(&s2), compute_native(&s2));
+        assert_eq!(c.counters().misses, 4);
+    }
+
+    #[test]
+    fn capacity_zero_disables_caching() {
+        let mut c = CachedBackend::new(NativeBackend::new(), 0);
+        let sf = stage(4, 6);
+        assert_eq!(c.stage_stats(&sf), compute_native(&sf));
+        assert_eq!(c.stage_stats(&sf), compute_native(&sf));
+        assert_eq!(c.counters(), CacheCounters { hits: 0, misses: 2, evictions: 0 });
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn batch_goes_through_the_cache() {
+        let mut c = CachedBackend::new(NativeBackend::new(), 8);
+        let a = stage(5, 10);
+        let b = stage(6, 10);
+        let refs = vec![&a, &b, &a];
+        let out = c.stage_stats_batch(&refs);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0], out[2]);
+        assert_eq!(out[1], compute_native(&b));
+        assert_eq!(c.counters(), CacheCounters { hits: 1, misses: 2, evictions: 0 });
+    }
+
+    #[test]
+    fn nan_keys_are_cacheable() {
+        // NaN != NaN, but keys compare by bits — a NaN-bearing stage must
+        // hit on resubmission rather than recompute forever.
+        let mut c = CachedBackend::new(NativeBackend::new(), 4);
+        let mut sf = stage(7, 6);
+        sf.matrix[0] = f64::NAN;
+        let a = c.stage_stats(&sf);
+        let b = c.stage_stats(&sf);
+        assert_eq!(c.counters().hits, 1);
+        // Compare through Debug: StageStats PartialEq is false under NaN.
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+    }
+
+    #[test]
+    fn hit_rate() {
+        let mut cc = CacheCounters::default();
+        assert_eq!(cc.hit_rate(), 0.0);
+        cc.hits = 3;
+        cc.misses = 1;
+        assert!((cc.hit_rate() - 0.75).abs() < 1e-12);
+    }
+}

@@ -35,7 +35,7 @@ impl FeatureCorrelations {
                 }
             }
         }
-        out.sort_by(|a, b| b.2.abs().partial_cmp(&a.2.abs()).unwrap());
+        out.sort_by(|a, b| b.2.abs().total_cmp(&a.2.abs()));
         out
     }
 }

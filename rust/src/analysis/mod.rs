@@ -4,6 +4,9 @@
 //!   `tasks × features` matrix per stage
 //! - [`stats`] — batched stage statistics (quantile grid, Pearson, per-node
 //!   sums) behind the [`stats::StatsBackend`] trait (native or XLA)
+//! - [`cache`] — [`cache::CachedBackend`], the LRU stage-stats memoizer
+//!   keyed on a structural hash of the feature matrix (repeated stage
+//!   shapes across jobs skip the stats kernel entirely)
 //! - [`straggler`] — Mantri-style detection (1.5× stage median)
 //! - [`bigroots`] — the identification rules (Eq. 5–7) incl. edge detection
 //! - [`pcc`] — the Pearson-correlation baseline (Eq. 8)
@@ -11,6 +14,7 @@
 //! - [`report`] — straggler annotations, Table VI summaries, figure CSVs
 
 pub mod bigroots;
+pub mod cache;
 pub mod correlation;
 pub mod features;
 pub mod pcc;
@@ -20,6 +24,7 @@ pub mod stats;
 pub mod straggler;
 
 pub use bigroots::{analyze_stage, BigRootsConfig, RootCause, StageAnalysis};
+pub use cache::{CacheCounters, CachedBackend};
 pub use correlation::{feature_correlations, joint_causes, FeatureCorrelations, JointCause};
 pub use features::{extract_all, extract_stage, FeatureCategory, FeatureKind, StageFeatures};
 pub use pcc::PccConfig;

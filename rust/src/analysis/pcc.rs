@@ -106,7 +106,7 @@ mod tests {
     #[test]
     fn correlated_feature_identified() {
         let sf = correlated_stage(F::BytesRead, 20);
-        let a = analyze_stage(&sf, &mut NativeBackend, &PccConfig::default());
+        let a = analyze_stage(&sf, &mut NativeBackend::new(), &PccConfig::default());
         assert_eq!(a.stragglers.rows, vec![19]);
         assert!(a.causes_of(19).iter().any(|c| c.kind == F::BytesRead));
     }
@@ -122,7 +122,7 @@ mod tests {
         for r in 0..n {
             sf.matrix[r * f + F::JvmGcTime.index()] = if r % 2 == 0 { 0.8 } else { 0.1 };
         }
-        let a = analyze_stage(&sf, &mut NativeBackend, &PccConfig::default());
+        let a = analyze_stage(&sf, &mut NativeBackend::new(), &PccConfig::default());
         assert!(a.causes_of(20).iter().all(|c| c.kind != F::JvmGcTime));
     }
 
@@ -137,7 +137,7 @@ mod tests {
         for r in 0..n {
             sf.matrix[r * f + F::ShuffleWriteBytes.index()] = sf.durations[r] * 3.0;
         }
-        let a = analyze_stage(&sf, &mut NativeBackend, &PccConfig::default());
+        let a = analyze_stage(&sf, &mut NativeBackend::new(), &PccConfig::default());
         let kinds: Vec<_> = a.causes_of(n - 1).iter().map(|c| c.kind).collect();
         assert!(kinds.contains(&F::BytesRead));
         assert!(kinds.contains(&F::ShuffleWriteBytes), "PCC flags the co-correlate too");
@@ -148,12 +148,12 @@ mod tests {
         let sf = correlated_stage(F::BytesRead, 30);
         let lo = analyze_stage(
             &sf,
-            &mut NativeBackend,
+            &mut NativeBackend::new(),
             &PccConfig { pearson_threshold: 0.1, max_quantile: 0.5, ..Default::default() },
         );
         let hi = analyze_stage(
             &sf,
-            &mut NativeBackend,
+            &mut NativeBackend::new(),
             &PccConfig { pearson_threshold: 0.99, max_quantile: 0.99, ..Default::default() },
         );
         assert!(hi.causes.len() <= lo.causes.len());
@@ -162,7 +162,7 @@ mod tests {
     #[test]
     fn non_straggler_rows_unflagged() {
         let sf = correlated_stage(F::BytesRead, 20);
-        let a = analyze_stage(&sf, &mut NativeBackend, &PccConfig::default());
+        let a = analyze_stage(&sf, &mut NativeBackend::new(), &PccConfig::default());
         for c in &a.causes {
             assert!(a.stragglers.is_straggler(c.row));
         }

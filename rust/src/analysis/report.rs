@@ -45,7 +45,7 @@ pub fn annotations(
             });
         }
     }
-    out.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+    out.sort_by(|a, b| a.start.total_cmp(&b.start));
     out
 }
 
@@ -160,7 +160,7 @@ mod tests {
         let per_stage: Vec<_> = extract_all(&trace, 3.0)
             .into_iter()
             .map(|sf| {
-                let a = analyze_stage(&sf, &mut NativeBackend, &BigRootsConfig::default());
+                let a = analyze_stage(&sf, &mut NativeBackend::new(), &BigRootsConfig::default());
                 (sf, a)
             })
             .collect();

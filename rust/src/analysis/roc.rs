@@ -289,7 +289,7 @@ mod tests {
         let trace = injected_trace(AnomalyKind::Cpu);
         let sf = extract_stage(&trace, 0, 3.0);
         let gt = ground_truth(&trace, &sf, 0.3);
-        let a = analyze_stage(&sf, &mut NativeBackend, &BigRootsConfig::default());
+        let a = analyze_stage(&sf, &mut NativeBackend::new(), &BigRootsConfig::default());
         assert!(!a.stragglers.rows.is_empty(), "CPU AG must create stragglers");
         let c = score(&a, &gt);
         assert!(c.tp > 0, "BigRoots must find injected CPU causes: {c:?}");
@@ -339,7 +339,7 @@ mod tests {
         let trace = injected_trace(AnomalyKind::Cpu);
         let sf = extract_stage(&trace, 0, 3.0);
         let gt = ground_truth(&trace, &sf, 0.3);
-        let a = analyze_stage(&sf, &mut NativeBackend, &BigRootsConfig::default());
+        let a = analyze_stage(&sf, &mut NativeBackend::new(), &BigRootsConfig::default());
         let (tp, fp) = score_injected_kind(&a, &gt, F::Cpu);
         let full = score_filtered(&a, &gt, &resource_features());
         assert!(tp <= full.tp);

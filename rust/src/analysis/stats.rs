@@ -13,6 +13,9 @@
 //! (`crate::runtime::XlaBackend`) compiled from the L1 Pallas kernels.
 //! Parity between them is tested in `rust/tests/`.
 
+use std::collections::HashMap;
+
+use super::cache::CacheCounters;
 use super::features::{FeatureKind, StageFeatures};
 
 /// Number of quantile grid points: q = i / (GRID_Q - 1), i ∈ 0..GRID_Q.
@@ -112,16 +115,74 @@ pub trait StatsBackend {
 
     /// Human-readable backend name (for reports / perf logs).
     fn name(&self) -> &'static str;
+
+    /// Memoization hit/miss counters, for backends that cache
+    /// ([`crate::analysis::cache::CachedBackend`]). None for backends that
+    /// recompute every call.
+    fn cache_counters(&self) -> Option<CacheCounters> {
+        None
+    }
+}
+
+// Boxed backends forward the whole contract, so wrappers like
+// `CachedBackend<Box<dyn StatsBackend>>` compose with dynamic dispatch.
+impl<T: StatsBackend + ?Sized> StatsBackend for Box<T> {
+    fn stage_stats(&mut self, sf: &StageFeatures) -> StageStats {
+        (**self).stage_stats(sf)
+    }
+
+    fn stage_stats_batch(&mut self, sfs: &[&StageFeatures]) -> Vec<StageStats> {
+        (**self).stage_stats_batch(sfs)
+    }
+
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn cache_counters(&self) -> Option<CacheCounters> {
+        (**self).cache_counters()
+    }
+}
+
+/// Reusable working memory for [`compute_native_with`]: everything the
+/// kernel needs beyond the output [`StageStats`] itself. One scratch lives
+/// inside each [`NativeBackend`] (one backend per service worker / shard
+/// thread), so the per-stage intermediate buffers are allocated once per
+/// worker instead of ~10 fresh vectors per stage analysis.
+#[derive(Debug, Default, Clone)]
+pub struct StatsScratch {
+    /// Per-feature Σv² (intermediate — only mean/std are returned).
+    col_sumsq: Vec<f64>,
+    /// Per-feature Σv·duration (intermediate for Pearson).
+    col_dot_dur: Vec<f64>,
+    /// node id → slot, O(1) instead of the former `Vec::position` scan.
+    node_slots: HashMap<usize, usize>,
+    /// Slot of each row, so the accumulation loop does no lookups.
+    node_of_row: Vec<usize>,
+    /// One feature column, reused for the quantile selection.
+    col_buf: Vec<f64>,
+    /// Order-statistic indices needed by the quantile grid (depends only
+    /// on the row count, so it is computed once per stage, not per column).
+    order_idxs: Vec<usize>,
 }
 
 /// Pure-rust reference backend (also the fallback when `artifacts/` is
-/// absent). Single-threaded, allocation-light.
+/// absent). Single-threaded; reuses a [`StatsScratch`] across calls, so
+/// steady-state cost is the arithmetic plus the output allocations only.
 #[derive(Debug, Default, Clone)]
-pub struct NativeBackend;
+pub struct NativeBackend {
+    scratch: StatsScratch,
+}
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
 
 impl StatsBackend for NativeBackend {
     fn stage_stats(&mut self, sf: &StageFeatures) -> StageStats {
-        compute_native(sf)
+        compute_native_with(sf, &mut self.scratch)
     }
 
     fn name(&self) -> &'static str {
@@ -129,28 +190,41 @@ impl StatsBackend for NativeBackend {
     }
 }
 
-/// The native computation, shared with tests.
+/// The native computation with a throwaway scratch — convenience for tests
+/// and one-shot callers. Hot paths go through [`NativeBackend`] /
+/// [`compute_native_with`] to reuse buffers.
 pub fn compute_native(sf: &StageFeatures) -> StageStats {
+    compute_native_with(sf, &mut StatsScratch::default())
+}
+
+/// The native computation. Bit-identical to the historical sort-based
+/// kernel: accumulation order is unchanged, and the quantile grid reads
+/// the same order statistics (selected, not obtained via a full sort).
+pub fn compute_native_with(sf: &StageFeatures, scratch: &mut StatsScratch) -> StageStats {
     let f = FeatureKind::COUNT;
     let n = sf.num_tasks();
     let mut col_sum = vec![0.0f64; f];
-    let mut col_sumsq = vec![0.0f64; f];
-    let mut col_dot_dur = vec![0.0f64; f];
+    scratch.col_sumsq.clear();
+    scratch.col_sumsq.resize(f, 0.0);
+    scratch.col_dot_dur.clear();
+    scratch.col_dot_dur.resize(f, 0.0);
+    let col_sumsq = &mut scratch.col_sumsq;
+    let col_dot_dur = &mut scratch.col_dot_dur;
     let mut dur_sum = 0.0f64;
     let mut dur_sumsq = 0.0f64;
 
-    // Node slots in first-appearance order.
+    // Node slots in first-appearance order (hash-mapped: O(rows), not
+    // O(rows × nodes)).
     let mut nodes: Vec<usize> = Vec::new();
-    let mut node_of_row: Vec<usize> = Vec::with_capacity(n);
+    scratch.node_slots.clear();
+    scratch.node_of_row.clear();
+    scratch.node_of_row.reserve(n);
     for &nd in &sf.nodes {
-        let slot = match nodes.iter().position(|&x| x == nd) {
-            Some(s) => s,
-            None => {
-                nodes.push(nd);
-                nodes.len() - 1
-            }
-        };
-        node_of_row.push(slot);
+        let slot = *scratch.node_slots.entry(nd).or_insert_with(|| {
+            nodes.push(nd);
+            nodes.len() - 1
+        });
+        scratch.node_of_row.push(slot);
     }
     let mut node_sum = vec![0.0f64; nodes.len() * f];
     let mut node_count = vec![0usize; nodes.len()];
@@ -159,7 +233,7 @@ pub fn compute_native(sf: &StageFeatures) -> StageStats {
         let d = sf.durations[row];
         dur_sum += d;
         dur_sumsq += d * d;
-        let slot = node_of_row[row];
+        let slot = scratch.node_of_row[row];
         node_count[slot] += 1;
         let base = row * f;
         for k in 0..f {
@@ -195,16 +269,39 @@ pub fn compute_native(sf: &StageFeatures) -> StageStats {
         })
         .collect();
 
-    // Quantile grid: sort each column once.
+    // Quantile grid: the grid needs at most 2·GRID_Q order statistics per
+    // column, so select exactly those instead of fully sorting. `total_cmp`
+    // keeps NaN feature values (degenerate input) from panicking — they
+    // sort to the top like an ordinary largest value.
     let mut quantiles = vec![0.0f64; GRID_Q * f];
-    let grid = quantile_grid();
-    let mut col_buf: Vec<f64> = Vec::with_capacity(n);
-    for k in 0..f {
-        col_buf.clear();
-        col_buf.extend((0..n).map(|r| sf.matrix[r * f + k]));
-        col_buf.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        for (qi, &q) in grid.iter().enumerate() {
-            quantiles[qi * f + k] = crate::util::stats::quantile_sorted(&col_buf, q);
+    if n > 0 {
+        let idxs = &mut scratch.order_idxs;
+        idxs.clear();
+        for qi in 0..GRID_Q {
+            let q = qi as f64 / (GRID_Q - 1) as f64;
+            let pos = q * (n - 1) as f64;
+            idxs.push(pos.floor() as usize);
+            idxs.push(pos.ceil() as usize);
+        }
+        idxs.sort_unstable();
+        idxs.dedup();
+        let col_buf = &mut scratch.col_buf;
+        for k in 0..f {
+            col_buf.clear();
+            col_buf.extend((0..n).map(|r| sf.matrix[r * f + k]));
+            select_order_stats(col_buf, idxs, 0);
+            for qi in 0..GRID_Q {
+                let q = qi as f64 / (GRID_Q - 1) as f64;
+                let pos = q * (n - 1) as f64;
+                let lo = pos.floor() as usize;
+                let hi = pos.ceil() as usize;
+                quantiles[qi * f + k] = if lo == hi {
+                    col_buf[lo]
+                } else {
+                    let frac = pos - lo as f64;
+                    col_buf[lo] * (1.0 - frac) + col_buf[hi] * frac
+                };
+            }
         }
     }
 
@@ -219,6 +316,22 @@ pub fn compute_native(sf: &StageFeatures) -> StageStats {
         node_sum,
         node_count,
     }
+}
+
+/// Place every order statistic in `idxs` (sorted, deduped, indices into the
+/// *whole* column; `base` is the offset of `data` within it) at its sorted
+/// position, by divide-and-conquer `select_nth_unstable_by`: one selection
+/// per grid point on an ever-shrinking slice — O(n log grid) instead of the
+/// full O(n log n) sort.
+fn select_order_stats(data: &mut [f64], idxs: &[usize], base: usize) {
+    if idxs.is_empty() || data.is_empty() {
+        return;
+    }
+    let mid = idxs.len() / 2;
+    let k = idxs[mid] - base;
+    let (lo, _, hi) = data.select_nth_unstable_by(k, |a, b| a.total_cmp(b));
+    select_order_stats(lo, &idxs[..mid], base);
+    select_order_stats(hi, &idxs[mid + 1..], base + k + 1);
 }
 
 #[cfg(test)]
@@ -329,9 +442,72 @@ mod tests {
 
     #[test]
     fn backend_trait_dispatch() {
-        let mut b = NativeBackend;
+        let mut b = NativeBackend::new();
         let s = b.stage_stats(&sf());
         assert_eq!(s, compute_native(&sf()));
         assert_eq!(b.name(), "native");
+        assert!(b.cache_counters().is_none());
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical() {
+        // The same backend (warm scratch) must produce identical results
+        // across differently-shaped stages, including after shrinking.
+        let mut b = NativeBackend::new();
+        let big = sf();
+        let mut small = sf();
+        small.task_ids.truncate(2);
+        small.nodes.truncate(2);
+        small.durations.truncate(2);
+        small.matrix.truncate(2 * F::COUNT);
+        for stage in [&big, &small, &big, &small] {
+            assert_eq!(b.stage_stats(stage), compute_native(stage));
+        }
+    }
+
+    #[test]
+    fn selected_quantiles_match_full_sort() {
+        // The multi-select kernel must read the exact same order statistics
+        // a full sort would produce, on adversarial value patterns.
+        let mut rng = crate::util::rng::Pcg64::seeded(31);
+        for n in [1usize, 2, 3, 7, 50, 257] {
+            let f = F::COUNT;
+            let mut matrix = vec![0.0; n * f];
+            for v in matrix.iter_mut() {
+                // Mix of duplicates and spread values.
+                *v = (rng.below(7) as f64) * rng.range_f64(0.0, 10.0);
+            }
+            let x = StageFeatures {
+                stage_id: 0,
+                task_ids: (0..n as u64).collect(),
+                nodes: (0..n).map(|r| r % 3).collect(),
+                durations: (0..n).map(|r| 1.0 + r as f64).collect(),
+                matrix,
+                head_means: vec![0.0; n * 3],
+                tail_means: vec![0.0; n * 3],
+            };
+            let s = compute_native(&x);
+            for k in 0..f {
+                let mut col: Vec<f64> = (0..n).map(|r| x.matrix[r * f + k]).collect();
+                col.sort_by(|a, b| a.total_cmp(b));
+                for (qi, &q) in quantile_grid().iter().enumerate() {
+                    let want = crate::util::stats::quantile_sorted(&col, q);
+                    assert_eq!(s.quantiles[qi * f + k], want, "n={n} k={k} q={q}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nan_feature_value_does_not_panic() {
+        // Regression: the old kernel sorted with partial_cmp().unwrap(),
+        // which panics on NaN. NaN now sorts like a largest value.
+        let mut x = sf();
+        x.matrix[F::BytesRead.index()] = f64::NAN;
+        let s = compute_native(&x);
+        assert_eq!(s.count, 4);
+        // The max quantile of the poisoned column is NaN; others are sane.
+        assert!(s.quantile(F::BytesRead, 1.0).is_nan());
+        assert!(s.quantile(F::Cpu, 1.0).is_finite());
     }
 }

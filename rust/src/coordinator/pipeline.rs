@@ -3,6 +3,7 @@
 //! features, report.
 
 use crate::analysis::bigroots::{analyze_stage_with_stats, BigRootsConfig, StageAnalysis};
+use crate::analysis::cache::CachedBackend;
 use crate::analysis::features::{extract_all, StageFeatures};
 use crate::analysis::pcc::{self, PccConfig};
 use crate::analysis::report::{annotations, summarize_workload, StragglerAnnotation, WorkloadSummary};
@@ -43,14 +44,32 @@ impl Pipeline {
         Pipeline { backend, bigroots: BigRootsConfig::default(), pcc: Some(PccConfig::default()) }
     }
 
-    /// Pipeline on the best available backend (XLA if artifacts exist).
+    /// Default stage-stats memo capacity for offline pipelines (multi-run
+    /// experiment sweeps re-analyze repeated stage shapes constantly).
+    pub const DEFAULT_CACHE_CAPACITY: usize = 256;
+
+    /// Pipeline on the best available backend (XLA if artifacts exist),
+    /// with stage-stats memoization in front — repeated stage shapes
+    /// across analyses skip the kernel (bit-identical results either way).
     pub fn auto() -> Self {
-        Self::new(crate::runtime::auto_backend())
+        Self::new(Box::new(CachedBackend::new(
+            crate::runtime::auto_backend(),
+            Self::DEFAULT_CACHE_CAPACITY,
+        )))
     }
 
-    /// Pipeline on the native backend (no artifacts needed).
+    /// Pipeline on the plain native backend (no artifacts needed) — the
+    /// uncached reference the parity tests compare everything against.
     pub fn native() -> Self {
-        Self::new(Box::new(crate::analysis::stats::NativeBackend))
+        Self::new(Box::new(crate::analysis::stats::NativeBackend::new()))
+    }
+
+    /// Native backend behind a stage-stats memo of the given capacity.
+    pub fn native_cached(capacity: usize) -> Self {
+        Self::new(Box::new(CachedBackend::new(
+            crate::analysis::stats::NativeBackend::new(),
+            capacity,
+        )))
     }
 
     /// Analyze a complete trace. All stages go to the backend as one
@@ -116,5 +135,23 @@ mod tests {
         let mut p = Pipeline::auto();
         let a = p.analyze(&t, "ml");
         assert_eq!(a.per_stage.len(), t.stages.len());
+    }
+
+    #[test]
+    fn cached_pipeline_matches_native_and_hits_on_rerun() {
+        let t = trace();
+        let mut native = Pipeline::native();
+        let want = native.analyze(&t, "ml");
+        let mut cached = Pipeline::native_cached(64);
+        for pass in 0..2 {
+            let got = cached.analyze(&t, "ml");
+            assert_eq!(got.per_stage.len(), want.per_stage.len());
+            for ((_, g), (_, w)) in got.per_stage.iter().zip(&want.per_stage) {
+                assert_eq!(g, w, "pass {pass}");
+            }
+        }
+        let c = cached.backend.cache_counters().expect("memoizing backend");
+        assert_eq!(c.misses, t.stages.len() as u64, "first pass misses");
+        assert_eq!(c.hits, t.stages.len() as u64, "second pass hits");
     }
 }

@@ -31,6 +31,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::analysis::bigroots::{analyze_stage_with_stats, BigRootsConfig, StageAnalysis};
+use crate::analysis::cache::CachedBackend;
 use crate::analysis::features::StageFeatures;
 use crate::analysis::stats::{NativeBackend, StatsBackend};
 use crate::coordinator::streaming::JobState;
@@ -49,6 +50,11 @@ pub struct ServiceConfig {
     /// Backpressure threshold: ingest blocks (draining results) while this
     /// many batches are queued or running on the pool.
     pub max_in_flight_batches: usize,
+    /// Per-worker stage-stats memo capacity
+    /// ([`crate::analysis::cache::CachedBackend`]); 0 disables caching.
+    /// Results are bit-identical either way — this only trades memory for
+    /// skipped recomputation on repeated stage shapes.
+    pub stats_cache_capacity: usize,
     /// Analyzer thresholds (paper defaults).
     pub bigroots: BigRootsConfig,
 }
@@ -60,6 +66,7 @@ impl Default for ServiceConfig {
             workers: 4,
             batch_size: 8,
             max_in_flight_batches: 8,
+            stats_cache_capacity: 256,
             bigroots: BigRootsConfig::default(),
         }
     }
@@ -100,6 +107,12 @@ pub struct ServiceMetrics {
     pub per_shard: Vec<ShardMetrics>,
     /// (job id, events ingested) sorted by job id.
     pub per_job_events: Vec<(u64, usize)>,
+    /// Stage-stats memo hits across worker backends. Backends checked out
+    /// by an in-flight batch are not counted until the batch returns, so
+    /// mid-run snapshots can trail; the final report is exact.
+    pub cache_hits: u64,
+    /// Stage-stats memo misses (see `cache_hits`).
+    pub cache_misses: u64,
     pub elapsed_secs: f64,
     /// Ingest throughput since service start.
     pub events_per_sec: f64,
@@ -166,10 +179,15 @@ pub struct AnalysisService {
 }
 
 impl AnalysisService {
-    /// Service with one [`NativeBackend`] per worker.
+    /// Service with one memoizing [`NativeBackend`] per worker (each
+    /// worker gets its own [`CachedBackend`] so no lock is shared on the
+    /// stats hot path).
     pub fn new(cfg: ServiceConfig) -> Self {
         let backends: Vec<Box<dyn StatsBackend + Send>> = (0..cfg.workers.max(1))
-            .map(|_| Box::new(NativeBackend) as Box<dyn StatsBackend + Send>)
+            .map(|_| {
+                Box::new(CachedBackend::new(NativeBackend::new(), cfg.stats_cache_capacity))
+                    as Box<dyn StatsBackend + Send>
+            })
             .collect();
         Self::with_backends(cfg, backends)
     }
@@ -182,7 +200,7 @@ impl AnalysisService {
         mut backends: Vec<Box<dyn StatsBackend + Send>>,
     ) -> Self {
         if backends.is_empty() {
-            backends.push(Box::new(NativeBackend));
+            backends.push(Box::new(NativeBackend::new()));
         }
         cfg.workers = backends.len();
         cfg.shards = cfg.shards.max(1);
@@ -207,7 +225,9 @@ impl AnalysisService {
     }
 
     fn shard_of(&self, job_id: u64) -> usize {
-        (job_id % self.cfg.shards as u64) as usize
+        // Rendezvous hashing: skewed tenant id schemes (strided, all-even)
+        // spread evenly, unlike the former `job_id % shards`.
+        crate::util::shard::shard_of(job_id, self.cfg.shards)
     }
 
     /// Ingest one tagged event. Blocks (draining results) when the worker
@@ -343,6 +363,12 @@ impl AnalysisService {
             .flat_map(|s| s.jobs.iter().map(|(id, st)| (*id, st.events_seen)))
             .collect();
         per_job_events.sort_by_key(|(id, _)| *id);
+        let (cache_hits, cache_misses) = {
+            let pool = self.backends.lock().unwrap();
+            pool.iter().filter_map(|b| b.cache_counters()).fold((0, 0), |(h, m), c| {
+                (h + c.hits, m + c.misses)
+            })
+        };
         ServiceMetrics {
             events_total: self.events_total,
             jobs_seen: per_job_events.len(),
@@ -363,6 +389,8 @@ impl AnalysisService {
                 })
                 .collect(),
             per_job_events,
+            cache_hits,
+            cache_misses,
             elapsed_secs: elapsed,
             events_per_sec: if elapsed > 0.0 { self.events_total as f64 / elapsed } else { 0.0 },
         }
@@ -575,13 +603,62 @@ mod tests {
         });
         svc.feed_all(&events);
         let m = svc.metrics();
-        // Job 0 → shard 0, job 1 → shard 1.
+        // Each job routes (stably) to its rendezvous shard.
         assert_eq!(m.per_shard.len(), 2);
-        assert_eq!(m.per_shard[0].jobs, 1);
-        assert_eq!(m.per_shard[1].jobs, 1);
+        for jid in [0u64, 1] {
+            let s = crate::util::shard::shard_of(jid, 2);
+            assert!(m.per_shard[s].jobs >= 1, "job {jid} missing from shard {s}");
+        }
+        assert_eq!(m.per_shard.iter().map(|s| s.jobs).sum::<usize>(), 2);
         assert_eq!(m.per_shard[0].events + m.per_shard[1].events, events.len());
         assert_eq!(m.per_job_events.len(), 2);
         let report = svc.finish();
         assert_eq!(report.metrics.stages_analyzed, report.total_stages());
+    }
+
+    #[test]
+    fn repeated_jobs_hit_the_stats_cache() {
+        // The same trace under many job ids re-analyzes identical stage
+        // matrices: after the first job, stats come from the memo. Shards
+        // and workers are 1 so every stage shares one backend's cache.
+        let a = job(81, 0.2);
+        let ids: Vec<u64> = (0..4).collect();
+        let jobs: Vec<(u64, &JobTrace)> = ids.iter().map(|&i| (i, &a)).collect();
+        let events = interleave_jobs(&jobs);
+        let mut svc = AnalysisService::new(ServiceConfig {
+            shards: 1,
+            workers: 1,
+            ..Default::default()
+        });
+        svc.feed_all(&events);
+        let report = svc.finish();
+        let m = &report.metrics;
+        assert_eq!(m.cache_hits + m.cache_misses, report.total_stages() as u64);
+        assert!(
+            m.cache_hits >= report.total_stages() as u64 / 2,
+            "expected repeated shapes to hit: {} hits / {} stages",
+            m.cache_hits,
+            report.total_stages()
+        );
+        // Cached results are bit-identical across the repeated jobs.
+        let first = report.job(0).unwrap();
+        for &jid in &ids[1..] {
+            assert_eq!(report.job(jid).unwrap(), first);
+        }
+    }
+
+    #[test]
+    fn cache_capacity_zero_disables_memoization() {
+        let a = job(82, 0.2);
+        let events = interleave_jobs(&[(1, &a), (2, &a)]);
+        let mut svc = AnalysisService::new(ServiceConfig {
+            stats_cache_capacity: 0,
+            ..Default::default()
+        });
+        svc.feed_all(&events);
+        let report = svc.finish();
+        assert_eq!(report.metrics.cache_hits, 0);
+        assert_eq!(report.metrics.cache_misses, report.total_stages() as u64);
+        assert_eq!(report.job(1).unwrap(), report.job(2).unwrap());
     }
 }

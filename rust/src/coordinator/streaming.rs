@@ -398,9 +398,9 @@ pub fn analyze_stream_threaded(
             if line.trim().is_empty() {
                 continue;
             }
-            let parsed = crate::util::json::Json::parse(line)
-                .map_err(|e| e.to_string())
-                .and_then(|j| Event::decode(&j).map_err(|e| e.to_string()));
+            let parsed = crate::trace::codec::decode_event_line(line)
+                .map(|d| d.event)
+                .map_err(|e| e.to_string());
             if tx.send(parsed).is_err() {
                 break;
             }
@@ -433,7 +433,7 @@ mod tests {
     fn streaming_analyzes_every_stage() {
         let t = trace();
         let events = trace_to_events(&t);
-        let mut an = StreamAnalyzer::new(Box::new(NativeBackend), BigRootsConfig::default());
+        let mut an = StreamAnalyzer::new(Box::new(NativeBackend::new()), BigRootsConfig::default());
         let mut completed = Vec::new();
         for e in &events {
             if let Some(sid) = an.feed(e) {
@@ -453,7 +453,7 @@ mod tests {
         // detection uses durations only).
         let t = trace();
         let events = trace_to_events(&t);
-        let mut an = StreamAnalyzer::new(Box::new(NativeBackend), BigRootsConfig::default());
+        let mut an = StreamAnalyzer::new(Box::new(NativeBackend::new()), BigRootsConfig::default());
         for e in &events {
             an.feed(e);
         }
@@ -472,7 +472,7 @@ mod tests {
         let t = trace();
         let events = trace_to_events(&t);
         let mut an =
-            StreamAnalyzer::new_deferred(Box::new(NativeBackend), BigRootsConfig::default());
+            StreamAnalyzer::new_deferred(Box::new(NativeBackend::new()), BigRootsConfig::default());
         for e in &events {
             an.feed(e);
         }
@@ -490,7 +490,7 @@ mod tests {
         let t = trace();
         let events = trace_to_events(&t);
         let cut = events.len() / 2;
-        let mut an = StreamAnalyzer::new(Box::new(NativeBackend), BigRootsConfig::default());
+        let mut an = StreamAnalyzer::new(Box::new(NativeBackend::new()), BigRootsConfig::default());
         for e in &events[..cut] {
             an.feed(e);
         }
@@ -504,7 +504,7 @@ mod tests {
         let text: String = events.iter().map(|e| e.encode().to_string() + "\n").collect();
         let an = analyze_stream_threaded(
             text,
-            Box::new(NativeBackend),
+            Box::new(NativeBackend::new()),
             BigRootsConfig::default(),
         )
         .unwrap();
@@ -515,7 +515,7 @@ mod tests {
     fn threaded_stream_bad_line_is_error() {
         let r = analyze_stream_threaded(
             "not json\n".to_string(),
-            Box::new(NativeBackend),
+            Box::new(NativeBackend::new()),
             BigRootsConfig::default(),
         );
         assert!(r.is_err());

@@ -41,6 +41,28 @@
 //!   answering fleet queries and flagging stages anomalous versus the
 //!   fleet baseline. `bigroots serve --tail/--listen/--stdin` and
 //!   `examples/live_tail.rs` drive it end to end.
+//!
+//! The event→feature→stats **hot path** is allocation-free and
+//! cache-aware end to end:
+//!
+//! - [`trace::codec::decode_event_line`] — a zero-allocation
+//!   borrowed-token NDJSON decoder (no `Json` DOM per line); every stream
+//!   reader ([`trace::eventlog::NdjsonTail`], the live [`live::source`]
+//!   transports, `parse_events`/`parse_tagged_events`, the threaded
+//!   stream analyzer) routes through it, with property-tested parity
+//!   against the generic parser;
+//! - [`analysis::stats::StatsScratch`] — each worker's
+//!   [`analysis::stats::NativeBackend`] reuses its intermediate buffers
+//!   across stages, resolves node slots through a hash map, and reads the
+//!   quantile grid via `select_nth_unstable_by` multi-selection instead
+//!   of a full per-column sort (NaN-safe `total_cmp` throughout);
+//! - [`analysis::cache::CachedBackend`] — an LRU stage-stats memoizer
+//!   keyed on a structural hash of the feature matrix, wired into the
+//!   service workers, the live shard workers and the offline pipeline;
+//!   hit/miss counters surface in service and fleet metrics. Job → shard
+//!   routing uses rendezvous hashing ([`util::shard`]), so skewed tenant
+//!   id schemes spread evenly. `benches/hotpath.rs` tracks decode-only,
+//!   stats-only and end-to-end events/sec in `BENCH_hotpath.json`.
 //! - **L2 (python/compile/model.py)** — the batched per-stage feature
 //!   statistics graph in JAX, lowered once to HLO text.
 //! - **L1 (python/compile/kernels/)** — Pallas kernels for the fused

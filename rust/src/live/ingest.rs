@@ -43,6 +43,7 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::analysis::bigroots::{analyze_stage_with_stats, BigRootsConfig, StageAnalysis};
+use crate::analysis::cache::CachedBackend;
 use crate::analysis::stats::{NativeBackend, StatsBackend};
 use crate::live::lifecycle::{Lifecycle, LifecycleConfig};
 use crate::live::registry::{FleetFlag, FleetRegistry, FleetReport};
@@ -61,6 +62,10 @@ pub struct LiveConfig {
     pub queue_capacity: usize,
     /// Job eviction policy.
     pub lifecycle: LifecycleConfig,
+    /// Per-shard stage-stats memo capacity
+    /// ([`crate::analysis::cache::CachedBackend`]); 0 disables caching.
+    /// Bit-identical results either way.
+    pub stats_cache_capacity: usize,
     /// Analyzer thresholds (paper defaults).
     pub bigroots: BigRootsConfig,
     /// Fleet-verdict cold-start guard (min observations per baseline).
@@ -74,6 +79,7 @@ impl Default for LiveConfig {
             ingest_batch: 64,
             queue_capacity: 8,
             lifecycle: LifecycleConfig::default(),
+            stats_cache_capacity: 256,
             bigroots: BigRootsConfig::default(),
             fleet_min_samples: 64,
         }
@@ -89,6 +95,8 @@ struct ShardStats {
     resident_high: AtomicUsize,
     evicted: AtomicUsize,
     dropped: AtomicUsize,
+    cache_hits: AtomicUsize,
+    cache_misses: AtomicUsize,
 }
 
 /// What a shard worker sends the collector.
@@ -141,6 +149,11 @@ pub struct LiveMetrics {
     pub resident_now: usize,
     /// Stray post-eviction events dropped.
     pub events_dropped: usize,
+    /// Stage-stats memo hits across shard backends (live — shard workers
+    /// publish after every ingest batch, so fleet snapshots see them).
+    pub cache_hits: usize,
+    /// Stage-stats memo misses (see `cache_hits`).
+    pub cache_misses: usize,
     pub per_shard: Vec<LiveShardMetrics>,
     pub elapsed_secs: f64,
     pub events_per_sec: f64,
@@ -154,6 +167,8 @@ pub struct LiveShardMetrics {
     pub resident: usize,
     pub resident_high: usize,
     pub evicted: usize,
+    pub cache_hits: usize,
+    pub cache_misses: usize,
 }
 
 /// Final output of a live run. Jobs already taken with
@@ -224,8 +239,9 @@ impl LiveServer {
             let worker_tx = results_tx.clone();
             let bigroots = cfg.bigroots;
             let lifecycle = cfg.lifecycle.clone();
+            let cache_capacity = cfg.stats_cache_capacity;
             workers.push(std::thread::spawn(move || {
-                shard_worker(rx, worker_tx, worker_stats, bigroots, lifecycle);
+                shard_worker(rx, worker_tx, worker_stats, bigroots, lifecycle, cache_capacity);
             }));
             senders.push(tx);
             stats.push(shard_stats);
@@ -253,7 +269,10 @@ impl LiveServer {
     }
 
     fn shard_of(&self, job_id: u64) -> usize {
-        (job_id % self.cfg.shards as u64) as usize
+        // Rendezvous hashing — skew-proof job → shard routing (see
+        // `util::shard`): strided tenant id schemes no longer pile onto a
+        // few shards, and a job's shard never changes mid-stream.
+        crate::util::shard::shard_of(job_id, self.cfg.shards)
     }
 
     /// Ingest one event. Blocks when the target shard's queue is full —
@@ -375,6 +394,8 @@ impl LiveServer {
                 resident: s.resident.load(Ordering::Relaxed),
                 resident_high: s.resident_high.load(Ordering::Relaxed),
                 evicted: s.evicted.load(Ordering::Relaxed),
+                cache_hits: s.cache_hits.load(Ordering::Relaxed),
+                cache_misses: s.cache_misses.load(Ordering::Relaxed),
             })
             .collect();
         LiveMetrics {
@@ -389,6 +410,8 @@ impl LiveServer {
                 .iter()
                 .map(|s| s.dropped.load(Ordering::Relaxed))
                 .sum(),
+            cache_hits: per_shard.iter().map(|s| s.cache_hits).sum(),
+            cache_misses: per_shard.iter().map(|s| s.cache_misses).sum(),
             per_shard,
             elapsed_secs: elapsed,
             events_per_sec: if elapsed > 0.0 {
@@ -420,21 +443,25 @@ impl LiveServer {
     }
 }
 
-/// One shard's worker loop: demux → lifecycle → analyze → report.
+/// One shard's worker loop: demux → lifecycle → analyze → report. The
+/// shard owns a memoizing backend — repeated stage shapes across its jobs
+/// skip the stats kernel, and the hit/miss counters publish to
+/// [`ShardStats`] after every ingest batch so snapshots stay live.
 fn shard_worker(
     rx: crate::util::queue::BoundedReceiver<Vec<TaggedEvent>>,
     tx: Sender<LiveMsg>,
     stats: Arc<ShardStats>,
     bigroots: BigRootsConfig,
     lifecycle_cfg: LifecycleConfig,
+    cache_capacity: usize,
 ) {
-    let mut backend = NativeBackend;
+    let mut backend = CachedBackend::new(NativeBackend::new(), cache_capacity);
     let mut lc = Lifecycle::new(lifecycle_cfg, bigroots.edge_width);
     let analyze_and_send =
         |job_id: u64,
          incarnation: u32,
          ready: Vec<crate::coordinator::streaming::ReadyStage>,
-         backend: &mut NativeBackend,
+         backend: &mut CachedBackend<NativeBackend>,
          stats: &ShardStats,
          tx: &Sender<LiveMsg>| {
             for r in ready {
@@ -450,6 +477,15 @@ fn shard_worker(
                 });
             }
         };
+    let publish = |backend: &CachedBackend<NativeBackend>, lc: &Lifecycle, stats: &ShardStats| {
+        stats.resident.store(lc.resident(), Ordering::Relaxed);
+        stats.resident_high.store(lc.resident_high(), Ordering::Relaxed);
+        stats.evicted.store(lc.evicted_total(), Ordering::Relaxed);
+        stats.dropped.store(lc.dropped(), Ordering::Relaxed);
+        let c = backend.counters();
+        stats.cache_hits.store(c.hits as usize, Ordering::Relaxed);
+        stats.cache_misses.store(c.misses as usize, Ordering::Relaxed);
+    };
     while let Some(batch) = rx.recv() {
         for ev in batch {
             stats.events.fetch_add(1, Ordering::Relaxed);
@@ -470,10 +506,7 @@ fn shard_worker(
                 });
             }
         }
-        stats.resident.store(lc.resident(), Ordering::Relaxed);
-        stats.resident_high.store(lc.resident_high(), Ordering::Relaxed);
-        stats.evicted.store(lc.evicted_total(), Ordering::Relaxed);
-        stats.dropped.store(lc.dropped(), Ordering::Relaxed);
+        publish(&backend, &lc, &stats);
     }
     // Input closed: retire everything still resident.
     for e in lc.drain_all() {
@@ -486,10 +519,7 @@ fn shard_worker(
             live: false,
         });
     }
-    stats.resident.store(lc.resident(), Ordering::Relaxed);
-    stats.resident_high.store(lc.resident_high(), Ordering::Relaxed);
-    stats.evicted.store(lc.evicted_total(), Ordering::Relaxed);
-    stats.dropped.store(lc.dropped(), Ordering::Relaxed);
+    publish(&backend, &lc, &stats);
 }
 
 #[cfg(test)]
@@ -566,6 +596,38 @@ mod tests {
         let report = server.finish();
         let total = drained.len() + report.jobs.len();
         assert_eq!(total, 3, "every job retires exactly once");
+    }
+
+    #[test]
+    fn repeated_tenants_hit_the_shard_caches() {
+        // One spec repeated under many job ids: identical stage matrices.
+        let mut specs = round_robin_specs(1, 0.12, 77);
+        let base = specs.remove(0);
+        let specs: Vec<_> = (0..4u64)
+            .map(|i| crate::sim::multi::MultiJobSpec { job_id: i, ..base.clone() })
+            .collect();
+        let (_, events) = interleaved_workload(&specs);
+        let report = run_live(
+            &events,
+            LiveConfig { shards: 1, ..Default::default() },
+        );
+        let m = &report.metrics;
+        assert_eq!(
+            m.cache_hits + m.cache_misses,
+            m.stages_analyzed,
+            "every analyzed stage is one lookup"
+        );
+        assert!(
+            m.cache_hits * 2 >= m.stages_analyzed,
+            "repeated shapes should mostly hit: {} / {}",
+            m.cache_hits,
+            m.stages_analyzed
+        );
+        // And the repeated jobs' analyses are bit-identical.
+        let first = &report.job(0).unwrap().analyses;
+        for id in 1..4u64 {
+            assert_eq!(&report.job(id).unwrap().analyses, first);
+        }
     }
 
     #[test]

@@ -443,7 +443,7 @@ mod tests {
 
     fn fold_trace(reg: &mut FleetRegistry, t: &JobTrace) {
         let cfg = BigRootsConfig::default();
-        let mut backend = NativeBackend;
+        let mut backend = NativeBackend::new();
         for sf in extract_all(t, cfg.edge_width) {
             let a = analyze_stage(&sf, &mut backend, &cfg);
             reg.fold_stage(&sf, &a);
@@ -471,7 +471,7 @@ mod tests {
     fn cause_incidence_matches_analyses() {
         let t = trace(12, true);
         let cfg = BigRootsConfig::default();
-        let mut backend = NativeBackend;
+        let mut backend = NativeBackend::new();
         let mut reg = FleetRegistry::new(8);
         let mut want_total = 0usize;
         for sf in extract_all(&t, cfg.edge_width) {
@@ -501,7 +501,7 @@ mod tests {
         }
         let t = trace(30, false);
         let cfg = BigRootsConfig::default();
-        let mut backend = NativeBackend;
+        let mut backend = NativeBackend::new();
         let mut sf_list = extract_all(&t, cfg.edge_width);
         let sf = &mut sf_list[0];
         let a = {
@@ -530,7 +530,7 @@ mod tests {
     fn cold_registry_stays_silent() {
         let t = trace(40, true);
         let cfg = BigRootsConfig::default();
-        let mut backend = NativeBackend;
+        let mut backend = NativeBackend::new();
         let reg = FleetRegistry::new(1_000_000);
         for sf in extract_all(&t, cfg.edge_width) {
             let a = analyze_stage(&sf, &mut backend, &cfg);

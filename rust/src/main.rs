@@ -58,6 +58,7 @@ fn main() {
                 .opt("queue-cap", "8", "per-shard queue capacity in batches (backpressure bound)")
                 .opt("ingest-batch", "64", "events per shard-queue send")
                 .opt("evict-after", "5", "event-time quiescence (s) after job_end before eviction")
+                .opt("stats-cache", "256", "per-shard stage-stats memo capacity (0 disables)")
                 .opt("snapshot-every", "5", "seconds between fleet-baseline snapshots (live mode)")
                 .opt(
                     "idle-timeout",
@@ -270,7 +271,7 @@ fn cmd_stream(args: &bigroots::util::cli::Args) -> i32 {
     };
     match bigroots::coordinator::streaming::analyze_stream_threaded(
         text,
-        Box::new(bigroots::analysis::stats::NativeBackend),
+        Box::new(bigroots::analysis::stats::NativeBackend::new()),
         Default::default(),
     ) {
         Ok(an) => {
@@ -312,6 +313,7 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
             evict_after: args.get_f64("evict-after", 5.0),
             ..Default::default()
         },
+        stats_cache_capacity: args.get_usize("stats-cache", 256),
         ..Default::default()
     };
 
@@ -441,7 +443,8 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
     let m = &report.metrics;
     println!(
         "{} events, {} jobs completed ({} live evictions, {} strays dropped) in {:.3}s — \
-         {:.0} events/s, {} stages analyzed, resident high-water {}",
+         {:.0} events/s, {} stages analyzed ({} stats-cache hits / {} misses), \
+         resident high-water {}",
         m.events_total,
         m.jobs_completed,
         m.evictions_live,
@@ -449,6 +452,8 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
         started.elapsed().as_secs_f64(),
         m.events_per_sec,
         m.stages_analyzed,
+        m.cache_hits,
+        m.cache_misses,
         m.resident_high_water,
     );
     if args.flag("metrics") {

@@ -200,7 +200,7 @@ impl XlaBackend {
             for row in 0..n {
                 sc.col[row] = sc.x[row * f + k];
             }
-            sc.col.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            sc.col.sort_by(|a, b| a.total_cmp(b));
             for row in 0..n {
                 sc.x_sorted[row * f + k] = sc.col[row];
             }
@@ -328,7 +328,7 @@ pub fn auto_backend() -> Box<dyn StatsBackend> {
             Err(e) => eprintln!("warning: XLA backend unavailable ({e:#}); using native"),
         }
     }
-    Box::new(crate::analysis::stats::NativeBackend)
+    Box::new(crate::analysis::stats::NativeBackend::new())
 }
 
 #[cfg(test)]

@@ -150,7 +150,7 @@ impl InjectionPlan {
                 intensity: AgIntensity::default(),
             });
         }
-        injections.sort_by(|a, b| a.t_start.partial_cmp(&b.t_start).unwrap());
+        injections.sort_by(|a, b| a.t_start.total_cmp(&b.t_start));
         InjectionPlan { injections }
     }
 

@@ -2,7 +2,21 @@
 //! the simulator (or a converter from real Spark event logs) writes a trace
 //! file, the analyzer reads it back. Round-trip is exact for all fields
 //! (f64 values serialize with shortest-roundtrip formatting).
+//!
+//! Also home of the **zero-allocation NDJSON event decoder**
+//! ([`decode_event_line`]): event-log lines are flat JSON objects, and the
+//! live ingest path decodes millions of them, so building a
+//! `BTreeMap<String, Json>` DOM per line (one allocation per key *and*
+//! value) dominated decode cost. The fast path scans the line's borrowed
+//! bytes once, parses scalars in place, and constructs the
+//! [`Event`](crate::trace::eventlog::Event) directly — the only heap
+//! traffic is the event's own owned strings. The generic [`Json`] parser
+//! stays for trace files, configs and fixtures; decode parity between the
+//! two paths is property-tested in `rust/tests/hotpath_parity.rs`.
 
+use std::borrow::Cow;
+
+use super::eventlog::Event;
 use super::model::*;
 use crate::util::json::{Json, JsonError};
 
@@ -211,6 +225,513 @@ pub fn decode(j: &Json) -> Result<JobTrace, JsonError> {
     Ok(trace)
 }
 
+// ---------------------------------------------------------------------------
+// Zero-allocation NDJSON event decoding
+
+/// One decoded event-log line. `has_job` distinguishes "no `"job"` field"
+/// from "`"job"` present but not an unsigned integer" (`job == None` in
+/// both cases) — the tagged/untagged stream-mode logic needs the former,
+/// strict tagged decoding errors on the latter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecodedLine {
+    pub has_job: bool,
+    pub job: Option<u64>,
+    pub event: Event,
+}
+
+impl DecodedLine {
+    /// The job tag for strict tagged consumers: an error when the line's
+    /// `"job"` field was present but not an unsigned integer (callers
+    /// check [`DecodedLine::has_job`] first to handle untagged lines).
+    pub fn require_job(&self) -> Result<u64, JsonError> {
+        self.job.ok_or_else(|| field_bad("job", "unsigned integer"))
+    }
+}
+
+/// Decode one NDJSON event line without building a [`Json`] DOM.
+///
+/// Accepts exactly the lines the generic path
+/// (`Json::parse` + `Event::decode`) accepts: a flat JSON object with the
+/// event's scalar fields, unknown fields ignored (nested values are
+/// scanned and skipped), duplicate keys last-wins, surrounding whitespace
+/// tolerated.
+pub fn decode_event_line(line: &str) -> Result<DecodedLine, JsonError> {
+    let mut s = Scan { src: line, b: line.as_bytes(), pos: 0 };
+    s.skip_ws();
+    s.expect(b'{')?;
+    let mut f = Fields::default();
+    s.skip_ws();
+    if s.peek() == Some(b'}') {
+        s.pos += 1;
+    } else {
+        loop {
+            s.skip_ws();
+            let key = s.string_token()?;
+            s.skip_ws();
+            s.expect(b':')?;
+            s.skip_ws();
+            match &*key {
+                "event" => f.event = s.str_field()?,
+                "job" => f.job = s.num_field()?,
+                "job_name" => f.job_name = s.str_field()?,
+                "workload" => f.workload = s.str_field()?,
+                "nodes" => f.nodes = s.num_field()?,
+                "cores_per_node" => f.cores_per_node = s.num_field()?,
+                "executors_per_node" => f.executors_per_node = s.num_field()?,
+                "stage_id" => f.stage_id = s.num_field()?,
+                "name" => f.name = s.str_field()?,
+                "num_tasks" => f.num_tasks = s.num_field()?,
+                "task_id" => f.task_id = s.num_field()?,
+                "node" => f.node = s.num_field()?,
+                "executor" => f.executor = s.num_field()?,
+                "time" => f.time = s.num_field()?,
+                "locality" => f.locality = s.str_field()?,
+                "start" => f.start = s.num_field()?,
+                "finish" => f.finish = s.num_field()?,
+                "bytes_read" => f.bytes_read = s.num_field()?,
+                "shuffle_read_bytes" => f.shuffle_read_bytes = s.num_field()?,
+                "shuffle_write_bytes" => f.shuffle_write_bytes = s.num_field()?,
+                "memory_bytes_spilled" => f.memory_bytes_spilled = s.num_field()?,
+                "disk_bytes_spilled" => f.disk_bytes_spilled = s.num_field()?,
+                "jvm_gc_time" => f.jvm_gc_time = s.num_field()?,
+                "serialize_time" => f.serialize_time = s.num_field()?,
+                "deserialize_time" => f.deserialize_time = s.num_field()?,
+                "cpu" => f.cpu = s.num_field()?,
+                "disk" => f.disk = s.num_field()?,
+                "net_bytes" => f.net_bytes = s.num_field()?,
+                "kind" => f.kind = s.str_field()?,
+                "t_start" => f.t_start = s.num_field()?,
+                "t_end" => f.t_end = s.num_field()?,
+                _ => s.skip_value()?,
+            }
+            s.skip_ws();
+            match s.peek() {
+                Some(b',') => s.pos += 1,
+                Some(b'}') => {
+                    s.pos += 1;
+                    break;
+                }
+                _ => return Err(s.err("expected ',' or '}'")),
+            }
+        }
+    }
+    s.skip_ws();
+    if s.pos != s.b.len() {
+        return Err(s.err("trailing data"));
+    }
+    f.build()
+}
+
+/// A numeric field's state: absent, a number, or present with a
+/// non-number value (only an error if the dispatched event needs it —
+/// matching how the DOM path ignores unused fields).
+#[derive(Clone, Copy, Default)]
+enum Num {
+    #[default]
+    Absent,
+    Val(f64),
+    Bad,
+}
+
+impl Num {
+    fn f64(self, key: &str) -> Result<f64, JsonError> {
+        match self {
+            Num::Val(v) => Ok(v),
+            _ => Err(field_bad(key, "number")),
+        }
+    }
+
+    fn u64(self, key: &str) -> Result<u64, JsonError> {
+        match self {
+            // Same acceptance as `Json::as_u64` (bit-for-bit: same
+            // comparison, same saturating cast).
+            Num::Val(x) if x >= 0.0 && x.fract() == 0.0 && x <= u64::MAX as f64 => Ok(x as u64),
+            _ => Err(field_bad(key, "unsigned integer")),
+        }
+    }
+
+    fn usize(self, key: &str) -> Result<usize, JsonError> {
+        Ok(self.u64(key)? as usize)
+    }
+}
+
+/// A string field's state (see [`Num`]).
+#[derive(Clone, Default)]
+enum SVal<'a> {
+    #[default]
+    Absent,
+    Str(Cow<'a, str>),
+    Bad,
+}
+
+impl<'a> SVal<'a> {
+    fn str(&self, key: &str) -> Result<&str, JsonError> {
+        match self {
+            SVal::Str(s) => Ok(s),
+            _ => Err(field_bad(key, "string")),
+        }
+    }
+}
+
+fn field_bad(key: &str, ty: &str) -> JsonError {
+    JsonError { offset: 0, message: format!("field '{key}': expected {ty}") }
+}
+
+/// Every scalar field any event line can carry.
+#[derive(Default)]
+struct Fields<'a> {
+    event: SVal<'a>,
+    job: Num,
+    job_name: SVal<'a>,
+    workload: SVal<'a>,
+    nodes: Num,
+    cores_per_node: Num,
+    executors_per_node: Num,
+    stage_id: Num,
+    name: SVal<'a>,
+    num_tasks: Num,
+    task_id: Num,
+    node: Num,
+    executor: Num,
+    time: Num,
+    locality: SVal<'a>,
+    start: Num,
+    finish: Num,
+    bytes_read: Num,
+    shuffle_read_bytes: Num,
+    shuffle_write_bytes: Num,
+    memory_bytes_spilled: Num,
+    disk_bytes_spilled: Num,
+    jvm_gc_time: Num,
+    serialize_time: Num,
+    deserialize_time: Num,
+    cpu: Num,
+    disk: Num,
+    net_bytes: Num,
+    kind: SVal<'a>,
+    t_start: Num,
+    t_end: Num,
+}
+
+impl<'a> Fields<'a> {
+    fn locality(&self, key: &str) -> Result<Locality, JsonError> {
+        Locality::from_str(self.locality.str(key)?)
+            .ok_or_else(|| JsonError { offset: 0, message: "bad locality".to_string() })
+    }
+
+    fn build(self) -> Result<DecodedLine, JsonError> {
+        let bad = |m: &str| JsonError { offset: 0, message: m.to_string() };
+        let event = match self.event.str("event")? {
+            "job_start" => Event::JobStart {
+                job_name: self.job_name.str("job_name")?.to_string(),
+                workload: self.workload.str("workload")?.to_string(),
+                cluster: ClusterInfo {
+                    nodes: self.nodes.usize("nodes")?,
+                    cores_per_node: self.cores_per_node.usize("cores_per_node")?,
+                    executors_per_node: self.executors_per_node.usize("executors_per_node")?,
+                },
+            },
+            "stage_submitted" => Event::StageSubmitted {
+                stage_id: self.stage_id.u64("stage_id")?,
+                name: self.name.str("name")?.to_string(),
+                num_tasks: self.num_tasks.usize("num_tasks")?,
+            },
+            "task_start" => Event::TaskStart {
+                task_id: self.task_id.u64("task_id")?,
+                stage_id: self.stage_id.u64("stage_id")?,
+                node: self.node.usize("node")?,
+                executor: self.executor.usize("executor")?,
+                time: self.time.f64("time")?,
+                locality: self.locality("locality")?,
+            },
+            "task_end" => Event::TaskEnd(TaskRecord {
+                task_id: self.task_id.u64("task_id")?,
+                stage_id: self.stage_id.u64("stage_id")?,
+                node: self.node.usize("node")?,
+                executor: self.executor.usize("executor")?,
+                start: self.start.f64("start")?,
+                finish: self.finish.f64("finish")?,
+                locality: self.locality("locality")?,
+                bytes_read: self.bytes_read.f64("bytes_read")?,
+                shuffle_read_bytes: self.shuffle_read_bytes.f64("shuffle_read_bytes")?,
+                shuffle_write_bytes: self.shuffle_write_bytes.f64("shuffle_write_bytes")?,
+                memory_bytes_spilled: self.memory_bytes_spilled.f64("memory_bytes_spilled")?,
+                disk_bytes_spilled: self.disk_bytes_spilled.f64("disk_bytes_spilled")?,
+                jvm_gc_time: self.jvm_gc_time.f64("jvm_gc_time")?,
+                serialize_time: self.serialize_time.f64("serialize_time")?,
+                deserialize_time: self.deserialize_time.f64("deserialize_time")?,
+            }),
+            "resource_sample" => Event::ResourceSample {
+                node: self.node.usize("node")?,
+                time: self.time.f64("time")?,
+                cpu: self.cpu.f64("cpu")?,
+                disk: self.disk.f64("disk")?,
+                net_bytes: self.net_bytes.f64("net_bytes")?,
+            },
+            "injection" => Event::Injection(InjectionRecord {
+                node: self.node.usize("node")?,
+                kind: AnomalyKind::from_str(self.kind.str("kind")?)
+                    .ok_or_else(|| bad("bad anomaly kind"))?,
+                t_start: self.t_start.f64("t_start")?,
+                t_end: self.t_end.f64("t_end")?,
+            }),
+            "job_end" => Event::JobEnd { time: self.time.f64("time")? },
+            other => return Err(bad(&format!("unknown event '{other}'"))),
+        };
+        let (has_job, job) = match self.job {
+            Num::Absent => (false, None),
+            j => (true, j.u64("job").ok()),
+        };
+        Ok(DecodedLine { has_job, job, event })
+    }
+}
+
+/// The borrowed-token scanner. Mirrors the grammar of
+/// [`crate::util::json`]'s parser so accept/reject behavior matches.
+struct Scan<'a> {
+    src: &'a str,
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Scan<'a> {
+    fn err(&self, msg: &str) -> JsonError {
+        JsonError { offset: self.pos, message: msg.to_string() }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), JsonError> {
+        if self.peek() == Some(c) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", c as char)))
+        }
+    }
+
+    /// A string token. Borrows the source slice when the string has no
+    /// escapes (every machine-generated event line); unescapes into an
+    /// owned buffer otherwise.
+    fn string_token(&mut self) -> Result<Cow<'a, str>, JsonError> {
+        self.expect(b'"')?;
+        let start = self.pos;
+        // Fast path: find the closing quote with no backslash in between.
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    let s = &self.src[start..self.pos];
+                    self.pos += 1;
+                    return Ok(Cow::Borrowed(s));
+                }
+                Some(b'\\') => break,
+                Some(_) => self.pos += 1,
+            }
+        }
+        // Slow path: escapes present — build an owned string.
+        let mut out = String::with_capacity(self.pos - start + 16);
+        out.push_str(&self.src[start..self.pos]);
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(Cow::Owned(out));
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'u') => {
+                            self.pos += 1;
+                            let cp = self.hex4()?;
+                            let ch = if (0xd800..0xdc00).contains(&cp) {
+                                if self.peek() == Some(b'\\') {
+                                    self.pos += 1;
+                                    self.expect(b'u')?;
+                                    let lo = self.hex4()?;
+                                    if (0xdc00..0xe000).contains(&lo) {
+                                        char::from_u32(
+                                            0x10000 + ((cp - 0xd800) << 10) + (lo - 0xdc00),
+                                        )
+                                    } else {
+                                        // Unpaired low half: reject without
+                                        // the DOM path's debug-mode overflow.
+                                        None
+                                    }
+                                } else {
+                                    None
+                                }
+                            } else {
+                                char::from_u32(cp)
+                            };
+                            out.push(ch.ok_or_else(|| self.err("bad unicode escape"))?);
+                            continue; // hex4 advanced pos already
+                        }
+                        _ => return Err(self.err("bad escape")),
+                    }
+                    self.pos += 1;
+                }
+                Some(_) => {
+                    // Copy one UTF-8 char (input is &str, so boundaries
+                    // are valid; chars().next() never fails here).
+                    let c = self.src[self.pos..].chars().next().unwrap();
+                    out.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, JsonError> {
+        if self.pos + 4 > self.b.len() {
+            return Err(self.err("short unicode escape"));
+        }
+        // Byte slice, not str slice: a multi-byte char here must error
+        // like the DOM parser, not panic on a non-boundary str index.
+        let hx = std::str::from_utf8(&self.b[self.pos..self.pos + 4])
+            .map_err(|_| self.err("bad hex"))?;
+        let v = u32::from_str_radix(hx, 16).map_err(|_| self.err("bad hex"))?;
+        self.pos += 4;
+        Ok(v)
+    }
+
+    fn number_token(&mut self) -> Result<f64, JsonError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        self.src[start..self.pos].parse::<f64>().map_err(|_| self.err("invalid number"))
+    }
+
+    /// A field value expected to be a number. Anything else is scanned
+    /// past and remembered as [`Num::Bad`].
+    fn num_field(&mut self) -> Result<Num, JsonError> {
+        match self.peek() {
+            Some(c) if c == b'-' || c.is_ascii_digit() => Ok(Num::Val(self.number_token()?)),
+            _ => {
+                self.skip_value()?;
+                Ok(Num::Bad)
+            }
+        }
+    }
+
+    /// A field value expected to be a string (see [`Scan::num_field`]).
+    fn str_field(&mut self) -> Result<SVal<'a>, JsonError> {
+        match self.peek() {
+            Some(b'"') => Ok(SVal::Str(self.string_token()?)),
+            _ => {
+                self.skip_value()?;
+                Ok(SVal::Bad)
+            }
+        }
+    }
+
+    fn literal(&mut self, word: &str) -> Result<(), JsonError> {
+        if self.b[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{word}'")))
+        }
+    }
+
+    /// Scan past one JSON value of any shape, validating its syntax —
+    /// unknown fields must not change accept/reject behavior versus the
+    /// DOM parser.
+    fn skip_value(&mut self) -> Result<(), JsonError> {
+        match self.peek() {
+            Some(b'n') => self.literal("null"),
+            Some(b't') => self.literal("true"),
+            Some(b'f') => self.literal("false"),
+            Some(b'"') => self.string_token().map(|_| ()),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number_token().map(|_| ()),
+            Some(b'[') => {
+                self.pos += 1;
+                self.skip_ws();
+                if self.peek() == Some(b']') {
+                    self.pos += 1;
+                    return Ok(());
+                }
+                loop {
+                    self.skip_ws();
+                    self.skip_value()?;
+                    self.skip_ws();
+                    match self.peek() {
+                        Some(b',') => self.pos += 1,
+                        Some(b']') => {
+                            self.pos += 1;
+                            return Ok(());
+                        }
+                        _ => return Err(self.err("expected ',' or ']'")),
+                    }
+                }
+            }
+            Some(b'{') => {
+                self.pos += 1;
+                self.skip_ws();
+                if self.peek() == Some(b'}') {
+                    self.pos += 1;
+                    return Ok(());
+                }
+                loop {
+                    self.skip_ws();
+                    self.string_token()?;
+                    self.skip_ws();
+                    self.expect(b':')?;
+                    self.skip_ws();
+                    self.skip_value()?;
+                    self.skip_ws();
+                    match self.peek() {
+                        Some(b',') => self.pos += 1,
+                        Some(b'}') => {
+                            self.pos += 1;
+                            return Ok(());
+                        }
+                        _ => return Err(self.err("expected ',' or '}'")),
+                    }
+                }
+            }
+            Some(_) => Err(self.err("unexpected character")),
+            None => Err(self.err("unexpected end of input")),
+        }
+    }
+}
+
 /// Write a trace to a file (pretty JSON).
 pub fn save(trace: &JobTrace, path: &str) -> anyhow::Result<()> {
     std::fs::write(path, encode(trace).to_pretty())?;
@@ -371,5 +892,121 @@ mod tests {
     fn missing_field_is_error() {
         let j = Json::parse(r#"{"version":1,"job_name":"x"}"#).unwrap();
         assert!(decode(&j).is_err());
+    }
+
+    // ---- zero-allocation event-line decoder -------------------------------
+
+    use crate::trace::eventlog::{trace_to_events, Event, TaggedEvent};
+
+    /// The DOM reference path the fast decoder must match. Same semantics
+    /// as the oracle in `rust/tests/hotpath_parity.rs`: a malformed job
+    /// tag yields `job == None` (strictness is the tagged consumer's job,
+    /// via [`DecodedLine::require_job`]), so keep the two in sync.
+    fn dom_decode(line: &str) -> Result<(bool, Option<u64>, Event), ()> {
+        let j = Json::parse(line).map_err(|_| ())?;
+        let has_job = j.as_obj().map(|m| m.contains_key("job")).unwrap_or(false);
+        let event = Event::decode(&j).map_err(|_| ())?;
+        let job = if has_job { j.get("job").as_u64() } else { None };
+        Ok((has_job, job, event))
+    }
+
+    #[test]
+    fn fast_decode_matches_dom_on_every_event_kind() {
+        let t = sample();
+        for e in trace_to_events(&t) {
+            let line = e.encode().to_string();
+            let fast = decode_event_line(&line).unwrap();
+            assert!(!fast.has_job);
+            assert_eq!(fast.event, e, "untagged: {line}");
+            // Tagged form of the same line.
+            let tagged = TaggedEvent { job_id: 7, event: e.clone() }.encode().to_string();
+            let fast = decode_event_line(&tagged).unwrap();
+            assert!(fast.has_job);
+            assert_eq!(fast.job, Some(7));
+            assert_eq!(fast.event, e, "tagged: {tagged}");
+        }
+    }
+
+    #[test]
+    fn fast_decode_tolerates_whitespace_and_unknown_fields() {
+        let line = r#"  { "event" : "job_end" , "time" : 4.5 ,
+            "extra_string" : "seén" , "extra_nested" : { "a" : [ 1 , true , null , {} ] } }  "#;
+        let d = decode_event_line(line).unwrap();
+        assert_eq!(d.event, Event::JobEnd { time: 4.5 });
+        assert!(!d.has_job);
+    }
+
+    #[test]
+    fn fast_decode_handles_escaped_strings() {
+        let name = "job \"q\"\t\\ € 😀";
+        let e = Event::JobStart {
+            job_name: name.to_string(),
+            workload: "w\nx".to_string(),
+            cluster: ClusterInfo { nodes: 1, cores_per_node: 1, executors_per_node: 1 },
+        };
+        let line = e.encode().to_string();
+        assert_eq!(decode_event_line(&line).unwrap().event, e);
+        // Explicit \u escape forms, incl. a surrogate pair.
+        let line = r#"{"event":"job_start","job_name":"\u0041\ud83d\ude00","workload":"w","nodes":1,"cores_per_node":1,"executors_per_node":1}"#;
+        match decode_event_line(line).unwrap().event {
+            Event::JobStart { job_name, .. } => assert_eq!(job_name, "A😀"),
+            other => panic!("wrong event {other:?}"),
+        }
+        // A lone high surrogate is rejected, like the DOM parser.
+        let line = r#"{"event":"job_end","time":1.0,"x":"\ud83d"}"#;
+        assert!(decode_event_line(line).is_err());
+    }
+
+    #[test]
+    fn fast_decode_duplicate_keys_last_wins() {
+        let line = r#"{"event":"job_end","time":1.0,"time":9.5}"#;
+        assert_eq!(decode_event_line(line).unwrap().event, Event::JobEnd { time: 9.5 });
+        // DOM agrees (BTreeMap insert overwrites).
+        let (_, _, dom) = dom_decode(line).unwrap();
+        assert_eq!(dom, Event::JobEnd { time: 9.5 });
+    }
+
+    #[test]
+    fn fast_decode_rejects_what_dom_rejects() {
+        for line in [
+            "",                                             // empty
+            "{",                                            // truncated
+            r#"{"event":"job_end"}"#,                       // missing field
+            r#"{"event":"job_end","time":"late"}"#,         // wrong type
+            r#"{"event":"wat","time":1.0}"#,                // unknown event
+            r#"{"event":"job_end","time":1.0} trailing"#,   // trailing data
+            r#"{"event":"job_end","time":1.0,}"#,           // bad comma
+            r#"{"event":"job_end","time":1.0,"x":nul}"#,    // bad literal
+            r#"{"event":"job_end","time":1.0,"x":"\q"}"#,   // bad escape
+            r#"{"event":"task_start","task_id":0,"stage_id":0,"node":0,"executor":0,"time":1.0,"locality":"WAT"}"#,
+            r#"{"event":"job_end","time":-1e999x}"#,        // malformed number tail
+            r#"{"event":"job_end","time":1.0,"x":"\u0é9"}"#, // multi-byte in hex escape
+        ] {
+            assert!(decode_event_line(line).is_err(), "should reject: {line}");
+            assert!(dom_decode(line).is_err(), "dom should reject: {line}");
+        }
+    }
+
+    #[test]
+    fn fast_decode_negative_or_fractional_ids_rejected() {
+        // `as_u64` semantics: ids must be non-negative integers.
+        for line in [
+            r#"{"event":"stage_submitted","stage_id":-1,"name":"s","num_tasks":2}"#,
+            r#"{"event":"stage_submitted","stage_id":1.5,"name":"s","num_tasks":2}"#,
+        ] {
+            assert!(decode_event_line(line).is_err(), "{line}");
+            assert!(dom_decode(line).is_err(), "{line}");
+        }
+    }
+
+    #[test]
+    fn fast_decode_bad_job_tag() {
+        // A bad "job" value is only an error for *tagged* consumers; the
+        // event itself still decodes (the DOM path behaves the same).
+        let line = r#"{"event":"job_end","time":1.0,"job":"zero"}"#;
+        let d = decode_event_line(line).unwrap();
+        assert!(d.has_job);
+        assert_eq!(d.job, None);
+        assert_eq!(d.event, Event::JobEnd { time: 1.0 });
     }
 }

@@ -262,7 +262,7 @@ pub fn trace_to_keyed_events(trace: &JobTrace) -> Vec<(f64, u8, Event)> {
         events.push((i.t_start, 2, Event::Injection(i.clone())));
     }
     events.push((trace.makespan(), 9, Event::JobEnd { time: trace.makespan() }));
-    events.sort_by(|a, b| (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap());
+    events.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
     events
 }
 
@@ -284,7 +284,7 @@ pub fn interleave_jobs(jobs: &[(u64, &JobTrace)]) -> Vec<TaggedEvent> {
         }
     }
     keyed.sort_by(|a, b| {
-        (a.0, a.1, a.2, a.3).partial_cmp(&(b.0, b.1, b.2, b.3)).unwrap()
+        a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2)).then(a.3.cmp(&b.3))
     });
     keyed
         .into_iter()
@@ -303,11 +303,14 @@ pub fn write_events(events: &[Event], path: &str) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Parse newline-delimited JSON events (skipping blank lines).
+/// Parse newline-delimited JSON events (skipping blank lines) through the
+/// zero-allocation decoder ([`crate::trace::codec::decode_event_line`]).
+/// A `"job"` tag, if present, is ignored — use [`parse_tagged_events`] for
+/// multi-job logs.
 pub fn parse_events(text: &str) -> Result<Vec<Event>, JsonError> {
     text.lines()
         .filter(|l| !l.trim().is_empty())
-        .map(|l| Event::decode(&Json::parse(l)?))
+        .map(|l| super::codec::decode_event_line(l).map(|d| d.event))
         .collect()
 }
 
@@ -332,14 +335,14 @@ pub fn parse_tagged_events(text: &str) -> Result<Vec<TaggedEvent>, JsonError> {
     let mut saw_untagged = false;
     let mut out = Vec::new();
     for l in text.lines().filter(|l| !l.trim().is_empty()) {
-        let j = Json::parse(l)?;
-        let has_job = j.as_obj().map(|m| m.contains_key("job")).unwrap_or(false);
-        if has_job {
+        let d = super::codec::decode_event_line(l)?;
+        if d.has_job {
             saw_tagged = true;
-            out.push(TaggedEvent::decode(&j)?);
+            let job_id = d.require_job()?;
+            out.push(TaggedEvent { job_id, event: d.event });
         } else {
             saw_untagged = true;
-            out.push(TaggedEvent { job_id: 0, event: Event::decode(&j)? });
+            out.push(TaggedEvent { job_id: 0, event: d.event });
         }
         if saw_tagged && saw_untagged {
             return Err(JsonError {
@@ -408,9 +411,10 @@ impl NdjsonTail {
     }
 
     fn parse_line(&mut self, line: &str) -> Result<TaggedEvent, JsonError> {
-        let j = Json::parse(line)?;
-        let has_job = j.as_obj().map(|m| m.contains_key("job")).unwrap_or(false);
-        if has_job {
+        // The zero-allocation decoder (`codec::decode_event_line`) is the
+        // reason a live tail keeps up with ingest: no Json DOM per line.
+        let d = super::codec::decode_event_line(line)?;
+        if d.has_job {
             self.saw_tagged = true;
         } else {
             self.saw_untagged = true;
@@ -424,10 +428,10 @@ impl NdjsonTail {
             });
         }
         self.lines += 1;
-        if has_job {
-            TaggedEvent::decode(&j)
+        if d.has_job {
+            Ok(TaggedEvent { job_id: d.require_job()?, event: d.event })
         } else {
-            Ok(TaggedEvent { job_id: 0, event: Event::decode(&j)? })
+            Ok(TaggedEvent { job_id: 0, event: d.event })
         }
     }
 
@@ -514,7 +518,7 @@ pub fn events_to_trace(events: &[Event]) -> Result<JobTrace, String> {
     let period = 1.0;
     let mut node_series: Vec<NodeSeries> =
         (0..cluster.nodes).map(|n| NodeSeries::empty(n, period)).collect();
-    samples.sort_by(|a, b| (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap());
+    samples.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.total_cmp(&b.1)));
     for (node, _time, cpu, disk, net) in samples {
         if node >= node_series.len() {
             return Err(format!("sample for unknown node {node}"));

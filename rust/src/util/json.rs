@@ -386,9 +386,16 @@ impl<'a> Parser<'a> {
                                     self.pos += 1;
                                     self.expect(b'u')?;
                                     let lo = self.hex4()?;
-                                    let c =
-                                        0x10000 + ((cp - 0xd800) << 10) + (lo - 0xdc00);
-                                    char::from_u32(c)
+                                    if (0xdc00..0xe000).contains(&lo) {
+                                        char::from_u32(
+                                            0x10000 + ((cp - 0xd800) << 10) + (lo - 0xdc00),
+                                        )
+                                    } else {
+                                        // Unpaired low half: reject (the
+                                        // unchecked subtraction used to
+                                        // overflow in debug builds).
+                                        None
+                                    }
                                 } else {
                                     None
                                 }
@@ -547,6 +554,10 @@ mod tests {
             Json::parse(r#""😀""#).unwrap(),
             Json::Str("😀".into())
         );
+        // A high surrogate followed by a non-low-surrogate escape is an
+        // error, not a debug-mode overflow panic.
+        assert!(Json::parse(r#""\ud800A""#).is_err());
+        assert!(Json::parse(r#""\ud800""#).is_err());
     }
 
     #[test]

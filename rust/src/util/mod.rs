@@ -6,6 +6,7 @@ pub mod cli;
 pub mod json;
 pub mod queue;
 pub mod rng;
+pub mod shard;
 pub mod stats;
 pub mod table;
 pub mod threadpool;

@@ -1,0 +1,101 @@
+//! Job → shard assignment by rendezvous (highest-random-weight) hashing.
+//!
+//! The PR-2/PR-3 services assigned `job_id % shards`, which a skewed
+//! tenant id scheme defeats outright: a cluster whose submitter allocates
+//! ids in strides (`tenant * 1000 + n`, or "all even") piles every job
+//! onto a few shards while the rest idle. Rendezvous hashing scores each
+//! (job, shard) pair with a mixed 64-bit hash and routes the job to the
+//! highest score, so any id population spreads ~uniformly, assignment is
+//! stable (same job → same shard, always), and growing the shard count
+//! only *moves* the jobs the new shard wins — everything else stays put
+//! (tested below).
+
+/// SplitMix64 finalizer — a full-avalanche 64-bit mixer.
+fn mix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// The shard that wins `job_id` among `shards` candidates. `shards == 0`
+/// is treated as 1. O(shards) per call — shard counts are small (a
+/// handful of worker threads), so this stays a few nanoseconds and needs
+/// no per-job routing table.
+pub fn shard_of(job_id: u64, shards: usize) -> usize {
+    if shards <= 1 {
+        return 0;
+    }
+    let seed = mix(job_id);
+    let mut best = 0usize;
+    let mut best_score = mix(seed); // s = 0: seed ^ 0
+
+    for s in 1..shards {
+        let score = mix(seed ^ s as u64);
+        if score > best_score {
+            best_score = score;
+            best = s;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stable_and_in_range() {
+        for shards in [1usize, 2, 3, 8, 16] {
+            for id in 0..200u64 {
+                let s = shard_of(id, shards);
+                assert!(s < shards);
+                assert_eq!(s, shard_of(id, shards), "assignment must be stable");
+            }
+        }
+        assert_eq!(shard_of(42, 0), 0);
+        assert_eq!(shard_of(42, 1), 0);
+    }
+
+    #[test]
+    fn skewed_tenant_ids_still_spread() {
+        // Adversarial populations for `id % shards`: strided, all-even,
+        // high-bits-only. Rendezvous must spread each of them.
+        let shards = 8usize;
+        let populations: [Vec<u64>; 3] = [
+            (0..1000u64).map(|i| i * shards as u64).collect(), // id % 8 == 0 for all
+            (0..1000u64).map(|i| i * 2).collect(),
+            (0..1000u64).map(|i| i << 32).collect(),
+        ];
+        for ids in &populations {
+            let mut counts = vec![0usize; shards];
+            for &id in ids {
+                counts[shard_of(id, shards)] += 1;
+            }
+            let expect = ids.len() / shards;
+            for (s, &c) in counts.iter().enumerate() {
+                assert!(
+                    c > expect / 2 && c < expect * 2,
+                    "shard {s} got {c} of {} (expect ~{expect}): {counts:?}",
+                    ids.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn adding_a_shard_only_moves_jobs_to_the_new_shard() {
+        // The rendezvous property modulo arithmetic lacks: growing the
+        // fleet never shuffles jobs between existing shards.
+        for shards in [1usize, 2, 4, 7] {
+            for id in 0..500u64 {
+                let before = shard_of(id, shards);
+                let after = shard_of(id, shards + 1);
+                assert!(
+                    after == before || after == shards,
+                    "id {id}: {before} -> {after} when adding shard {shards}"
+                );
+            }
+        }
+    }
+}

@@ -33,7 +33,7 @@ pub fn quantile(xs: &[f64], q: f64) -> f64 {
         return 0.0;
     }
     let mut sorted: Vec<f64> = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(|a, b| a.total_cmp(b));
     quantile_sorted(&sorted, q)
 }
 
@@ -95,7 +95,7 @@ pub fn auc(points: &[(f64, f64)]) -> f64 {
     // Anchor at (0,0) and (1,1) like a standard ROC sweep.
     pts.push((0.0, 0.0));
     pts.push((1.0, 1.0));
-    pts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    pts.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
     // Collapse duplicate x to max y.
     let mut env: Vec<(f64, f64)> = Vec::with_capacity(pts.len());
     for (x, y) in pts {
@@ -210,7 +210,7 @@ impl P2Quantile {
             self.q[self.count] = x;
             self.count += 1;
             if self.count == 5 {
-                self.q.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                self.q.sort_by(|a, b| a.total_cmp(b));
             }
             return;
         }
@@ -277,7 +277,7 @@ impl P2Quantile {
         }
         if self.count < 5 {
             let mut v = self.q[..self.count].to_vec();
-            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v.sort_by(|a, b| a.total_cmp(b));
             return quantile_sorted(&v, self.p);
         }
         self.q[2]

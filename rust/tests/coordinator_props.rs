@@ -296,7 +296,7 @@ fn prop_deferred_stream_equals_batch_analysis() {
         let mut eng = Engine::new(SimConfig { seed, ..Default::default() });
         let trace = eng.run("p", "p", &[spec], &InjectionPlan::none());
         let mut an = StreamAnalyzer::new_deferred(
-            Box::new(bigroots::analysis::stats::NativeBackend),
+            Box::new(bigroots::analysis::stats::NativeBackend::new()),
             BigRootsConfig::default(),
         );
         for e in &trace_to_events(&trace) {

@@ -1,0 +1,204 @@
+//! Hot-path overhaul invariants:
+//!
+//! - the zero-allocation NDJSON decoder accepts exactly what the Json-DOM
+//!   path accepts and produces identical events (every fixture + generated
+//!   traces);
+//! - `CachedBackend` results are bit-identical to the uncached backend,
+//!   including under eviction pressure, on generated stage batches;
+//! - a NaN feature value flows through the whole pipeline without the
+//!   historical `partial_cmp().unwrap()` panic;
+//! - rendezvous job→shard routing spreads skewed tenant id populations.
+
+use bigroots::analysis::cache::{structural_hash, CachedBackend};
+use bigroots::analysis::features::{extract_all, StageFeatures};
+use bigroots::analysis::stats::{NativeBackend, StatsBackend};
+use bigroots::coordinator::{AnalysisService, Pipeline, ServiceConfig};
+use bigroots::sim::multi::{interleaved_workload, round_robin_specs};
+use bigroots::sim::task::StageSpec;
+use bigroots::sim::{Engine, InjectionPlan, SimConfig};
+use bigroots::testing::proptest::{assert_prop, PairOf, TripleOf, U64Range};
+use bigroots::trace::codec::decode_event_line;
+use bigroots::trace::eventlog::{trace_to_events, Event, TaggedEvent};
+use bigroots::trace::{JobTrace, NodeSeries};
+use bigroots::util::json::Json;
+
+fn sim_trace(seed: u64, ntasks: usize) -> JobTrace {
+    let mut spec = StageSpec::base("p", ntasks);
+    spec.input_mean_bytes = 6e6;
+    let mut eng = Engine::new(SimConfig { seed, ..Default::default() });
+    eng.run("p", "p", &[spec], &InjectionPlan::none())
+}
+
+/// The DOM reference decode: `Json::parse` + `Event::decode` (+ the
+/// tagged-line job extraction), exactly as the pre-overhaul readers did.
+fn dom_decode(line: &str) -> Result<(bool, Option<u64>, Event), String> {
+    let j = Json::parse(line).map_err(|e| e.to_string())?;
+    let has_job = j.as_obj().map(|m| m.contains_key("job")).unwrap_or(false);
+    let event = Event::decode(&j).map_err(|e| e.to_string())?;
+    let job = if has_job { j.get("job").as_u64() } else { None };
+    Ok((has_job, job, event))
+}
+
+fn assert_line_parity(line: &str) {
+    let fast = decode_event_line(line);
+    let dom = dom_decode(line);
+    match (fast, dom) {
+        (Ok(f), Ok((has_job, job, event))) => {
+            assert_eq!(f.has_job, has_job, "{line}");
+            assert_eq!(f.job, job, "{line}");
+            assert_eq!(f.event, event, "{line}");
+        }
+        (Err(_), Err(_)) => {}
+        (f, d) => panic!("decoder disagreement on {line}: fast={f:?} dom={d:?}"),
+    }
+}
+
+#[test]
+fn prop_fast_decode_parity_on_generated_events() {
+    let gen = PairOf(U64Range(0, 100_000), U64Range(4, 40));
+    assert_prop(701, 25, &gen, |&(seed, ntasks)| {
+        let trace = sim_trace(seed, ntasks as usize);
+        for (i, e) in trace_to_events(&trace).into_iter().enumerate() {
+            let line = e.encode().to_string();
+            assert_line_parity(&line);
+            // Tagged form, with a job id that exercises wide u64s too.
+            let tagged =
+                TaggedEvent { job_id: seed.wrapping_mul(1 + i as u64), event: e }
+                    .encode()
+                    .to_string();
+            assert_line_parity(&tagged);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fast_decode_parity_on_fixture_files() {
+    for name in ["events_interleaved.ndjson"] {
+        let path = format!("{}/tests/fixtures/{name}", env!("CARGO_MANIFEST_DIR"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut lines = 0;
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            assert_line_parity(line);
+            lines += 1;
+        }
+        assert!(lines > 0, "{name} empty?");
+    }
+}
+
+#[test]
+fn prop_cached_backend_bit_identical_even_under_eviction() {
+    // (seed, stage count, cache capacity): capacities down to 1 force
+    // constant eviction; results must never change, and the counters must
+    // account for every lookup.
+    let gen = TripleOf(U64Range(0, 50_000), U64Range(2, 12), U64Range(1, 16));
+    assert_prop(702, 15, &gen, |&(seed, njobs, capacity)| {
+        // A batch with repeats: the same few traces' stages interleaved.
+        let mut stages: Vec<StageFeatures> = Vec::new();
+        for j in 0..njobs {
+            let trace = sim_trace(seed + j % 3, 10 + (j as usize % 5) * 7);
+            stages.extend(extract_all(&trace, 3.0));
+        }
+        let refs: Vec<&StageFeatures> = stages.iter().collect();
+        let mut plain = NativeBackend::new();
+        let want = plain.stage_stats_batch(&refs);
+        let mut cached = CachedBackend::new(NativeBackend::new(), capacity as usize);
+        let got = cached.stage_stats_batch(&refs);
+        if got != want {
+            return Err(format!("capacity {capacity}: cached batch diverged"));
+        }
+        // Second pass over the same batch: still identical.
+        if cached.stage_stats_batch(&refs) != want {
+            return Err(format!("capacity {capacity}: second pass diverged"));
+        }
+        let c = cached.counters();
+        if c.hits + c.misses != 2 * refs.len() as u64 {
+            return Err(format!("counters {c:?} != {} lookups", 2 * refs.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn structural_hash_ignores_ids_but_not_values() {
+    let trace = sim_trace(9, 20);
+    let sf = extract_all(&trace, 3.0).remove(0);
+    let mut renamed = sf.clone();
+    renamed.stage_id = 123;
+    renamed.task_ids.iter_mut().for_each(|t| *t += 1000);
+    assert_eq!(structural_hash(&sf), structural_hash(&renamed));
+    let mut changed = sf.clone();
+    changed.matrix[0] += 1.0;
+    assert_ne!(structural_hash(&sf), structural_hash(&changed));
+}
+
+#[test]
+fn nan_feature_flows_through_pipeline_without_panic() {
+    // Poison one node's resource series with NaN samples: the resource
+    // features of tasks on that node become NaN. The old quantile sort
+    // (`partial_cmp().unwrap()`) panicked on this; the pipeline must now
+    // complete, cached and uncached alike, and agree with itself.
+    let mut trace = sim_trace(11, 24);
+    let series: &mut NodeSeries = &mut trace.node_series[0];
+    for v in series.cpu.iter_mut() {
+        *v = f64::NAN;
+    }
+    assert!(
+        trace.tasks.iter().any(|t| t.node == 0),
+        "fixture must place tasks on the poisoned node"
+    );
+    let mut native = Pipeline::native();
+    let a = native.analyze(&trace, "nan");
+    let mut cached = Pipeline::native_cached(16);
+    let b = cached.analyze(&trace, "nan");
+    assert_eq!(a.per_stage.len(), b.per_stage.len());
+    for ((_, ga), (_, gb)) in a.per_stage.iter().zip(&b.per_stage) {
+        assert_eq!(ga, gb);
+    }
+    // The streaming service survives the same stream.
+    let events = bigroots::trace::eventlog::interleave_jobs(&[(1, &trace)]);
+    let mut svc = AnalysisService::new(ServiceConfig::default());
+    svc.feed_all(&events);
+    let report = svc.finish();
+    assert_eq!(report.job(1).unwrap().len(), a.per_stage.len());
+}
+
+#[test]
+fn nan_safe_scalar_stats() {
+    use bigroots::util::stats::{auc, median, quantile};
+    let xs = [1.0, f64::NAN, 3.0, 2.0];
+    // No panic; NaN sorts last under total_cmp.
+    assert_eq!(quantile(&xs, 0.0), 1.0);
+    let _ = median(&xs);
+    let _ = auc(&[(0.5, f64::NAN), (0.25, 0.5)]);
+}
+
+#[test]
+fn skewed_tenant_ids_spread_across_service_shards() {
+    // All job ids ≡ 0 (mod shards): the old `job_id % shards` routing
+    // pinned every job to shard 0. Rendezvous hashing must spread them.
+    let shards = 4usize;
+    let mut specs = round_robin_specs(8, 0.08, 303);
+    for (i, s) in specs.iter_mut().enumerate() {
+        s.job_id = (i as u64) * shards as u64; // 0, 4, 8, ... — worst case
+    }
+    let (_, events) = interleaved_workload(&specs);
+    let mut svc = AnalysisService::new(ServiceConfig {
+        shards,
+        ..Default::default()
+    });
+    svc.feed_all(&events);
+    let report = svc.finish();
+    let busy = report.metrics.per_shard.iter().filter(|s| s.jobs > 0).count();
+    assert!(
+        busy >= 2,
+        "8 stride-{shards} jobs all routed to {busy} shard(s): {:?}",
+        report
+            .metrics
+            .per_shard
+            .iter()
+            .map(|s| s.jobs)
+            .collect::<Vec<_>>()
+    );
+    assert_eq!(report.per_job.len(), 8);
+}

@@ -43,7 +43,7 @@ fn offline_and_streaming_agree_on_conclusions() {
     let off = offline.analyze(&trace, w.domain);
 
     let mut stream =
-        StreamAnalyzer::new(Box::new(bigroots::analysis::NativeBackend), Default::default());
+        StreamAnalyzer::new(Box::new(bigroots::analysis::NativeBackend::new()), Default::default());
     for e in eventlog::trace_to_events(&trace) {
         stream.feed(&e);
     }
