@@ -1,0 +1,138 @@
+//! Scripted control-plane client — the CI end-to-end driver for
+//! `bigroots serve --listen --control-port`.
+//!
+//! 1. connects to the event port and streams two simulated jobs;
+//! 2. polls `fleet-report` on the control port until both jobs retired;
+//! 3. queries `metrics` and `job <id>`;
+//! 4. requests a `snapshot` (the server writes its `--snapshot-path`);
+//! 5. sends `shutdown` and exits.
+//!
+//! Any protocol violation (non-ok response, timeout, missing snapshot
+//! file) exits non-zero, so a workflow step can gate on it:
+//!
+//! ```text
+//! bigroots serve --listen 127.0.0.1:7171 --control-port 127.0.0.1:7172 \
+//!     --idle-timeout 0 --snapshot-path fleet_snapshot.json &
+//! cargo run --release --example control_client -- 127.0.0.1:7171 127.0.0.1:7172
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use bigroots::sim::multi::{interleaved_workload, round_robin_specs};
+use bigroots::util::json::Json;
+
+fn fail(msg: &str) -> ! {
+    eprintln!("control_client: {msg}");
+    std::process::exit(1);
+}
+
+fn connect_retry(addr: &str, what: &str) -> TcpStream {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return s,
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    fail(&format!("connecting to {what} {addr}: {e}"));
+                }
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+}
+
+/// Send one request line, read one JSON response line, require `ok`.
+fn query(ctrl: &mut BufReader<TcpStream>, request: &str) -> Json {
+    ctrl.get_mut()
+        .write_all(format!("{request}\n").as_bytes())
+        .unwrap_or_else(|e| fail(&format!("sending '{request}': {e}")));
+    let mut line = String::new();
+    ctrl.read_line(&mut line)
+        .unwrap_or_else(|e| fail(&format!("reading response to '{request}': {e}")));
+    if line.is_empty() {
+        fail(&format!("control socket closed while waiting for '{request}'"));
+    }
+    let j = Json::parse(line.trim())
+        .unwrap_or_else(|e| fail(&format!("response to '{request}' is not JSON: {e}")));
+    if j.get("ok").as_bool() != Some(true) {
+        fail(&format!(
+            "'{request}' failed: {}",
+            j.get("error").as_str().unwrap_or("unknown error")
+        ));
+    }
+    j
+}
+
+fn main() {
+    let mut argv = std::env::args().skip(1);
+    let event_addr = argv.next().unwrap_or_else(|| "127.0.0.1:7171".to_string());
+    let control_addr = argv.next().unwrap_or_else(|| "127.0.0.1:7172".to_string());
+
+    // Stream two simulated jobs into the event port.
+    let specs = round_robin_specs(2, 0.15, 7);
+    let (traces, events) = interleaved_workload(&specs);
+    let job_id = traces[0].0;
+    let mut ev = connect_retry(&event_addr, "event port");
+    for e in &events {
+        ev.write_all(format!("{}\n", e.encode().to_string()).as_bytes())
+            .unwrap_or_else(|err| fail(&format!("streaming events: {err}")));
+    }
+    drop(ev); // clean disconnect: the server keeps serving (persistent mode)
+    println!("streamed {} events for {} jobs", events.len(), traces.len());
+
+    let mut ctrl = BufReader::new(connect_retry(&control_addr, "control port"));
+
+    // Poll the fleet report until both jobs retired into the baseline.
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let resp = query(&mut ctrl, "fleet-report");
+        let done = resp.get("data").get("jobs_completed").as_usize().unwrap_or(0);
+        if done >= traces.len() {
+            println!(
+                "fleet-report: {} jobs, {} stages, {} tasks",
+                done,
+                resp.get("data").get("stages").as_usize().unwrap_or(0),
+                resp.get("data").get("tasks").as_usize().unwrap_or(0),
+            );
+            break;
+        }
+        if Instant::now() >= deadline {
+            fail(&format!("jobs never retired (fleet shows {done})"));
+        }
+        std::thread::sleep(Duration::from_millis(200));
+    }
+
+    let metrics = query(&mut ctrl, "metrics");
+    let events_total = metrics.get("data").get("events_total").as_usize().unwrap_or(0);
+    if events_total < events.len() {
+        fail(&format!(
+            "metrics report {events_total} events, streamed {}",
+            events.len()
+        ));
+    }
+    println!("metrics: {events_total} events ingested");
+
+    let job = query(&mut ctrl, &format!("job {job_id}"));
+    let stages = job.get("data").get("stages").as_usize().unwrap_or(0);
+    if stages == 0 {
+        fail(&format!("job {job_id} summary reports no stages"));
+    }
+    println!("job {job_id}: {stages} stages analyzed");
+
+    let snap = query(&mut ctrl, "snapshot");
+    let path = snap
+        .get("data")
+        .get("path")
+        .as_str()
+        .unwrap_or_else(|| fail("snapshot response carries no path"))
+        .to_string();
+    if !std::path::Path::new(&path).exists() {
+        fail(&format!("snapshot file {path} does not exist"));
+    }
+    println!("snapshot written to {path}");
+
+    query(&mut ctrl, "shutdown");
+    println!("shutdown acknowledged — control-plane end-to-end OK");
+}

@@ -4,11 +4,21 @@
 //! benchmark suite looping over the HiBench workloads, a scheduler
 //! retrying a failed job. Their stages produce *identical* feature
 //! matrices, and [`compute_native`](super::stats::compute_native) work on
-//! an identical matrix is pure waste. [`CachedBackend`] wraps any
-//! [`StatsBackend`] with an LRU-bounded memo table keyed on a structural
-//! hash of the stats-relevant [`StageFeatures`] fields (`nodes`,
-//! `durations`, `matrix` — ids and edge-window means do not influence
-//! [`StageStats`]).
+//! an identical matrix is pure waste. Two memo shapes share one engine:
+//!
+//! - [`CachedBackend`] — a single-owner LRU memo in front of one backend.
+//!   No locks anywhere; the fast path for the offline
+//!   [`crate::coordinator::Pipeline`], which owns its backend outright.
+//! - [`SharedCachedBackend`] — the same memo semantics over a
+//!   [`SharedStatsCache`]: a **lock-striped** table (N stripes selected by
+//!   the structural hash, each its own mutex + LRU + eviction counter)
+//!   shared by every service worker and live shard worker. A tenant's
+//!   repeated stage shape hits *regardless of which shard rendezvous
+//!   routing picked* — shard 1 computes, shard 0 hits.
+//!
+//! Both are the one generic [`Memoized`] wrapper over the
+//! [`StageStatsCache`] storage trait — a single blanket `StatsBackend`
+//! impl replaces the per-wrapper forwarding boilerplate.
 //!
 //! Correctness contract: results are **bit-identical** to the wrapped
 //! backend, always. A hash hit is verified against a stored copy of the
@@ -23,6 +33,7 @@
 //! call forwards, counted as a miss).
 
 use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Mutex};
 
 use super::features::StageFeatures;
 use super::stats::{StageStats, StatsBackend};
@@ -58,6 +69,26 @@ struct CacheKey {
     matrix: Vec<f64>,
 }
 
+/// THE bitwise equality over the stats-relevant key fields — both the
+/// stored-key hit verification ([`CacheKey::matches`]) and the
+/// intra-batch duplicate check ([`same_stats_key`]) delegate here, so the
+/// correctness-critical predicate cannot drift between them.
+/// `f64::to_bits` comparison means NaN keys compare like any other value
+/// instead of poisoning the table.
+fn stats_key_eq(nodes: &[usize], durations: &[f64], matrix: &[f64], sf: &StageFeatures) -> bool {
+    nodes == sf.nodes.as_slice()
+        && durations.len() == sf.durations.len()
+        && matrix.len() == sf.matrix.len()
+        && durations.iter().zip(&sf.durations).all(|(a, b)| a.to_bits() == b.to_bits())
+        && matrix.iter().zip(&sf.matrix).all(|(a, b)| a.to_bits() == b.to_bits())
+}
+
+/// [`stats_key_eq`] between two live stages (no owned key) — used to spot
+/// intra-batch duplicates before dispatching misses.
+fn same_stats_key(a: &StageFeatures, b: &StageFeatures) -> bool {
+    stats_key_eq(&a.nodes, &a.durations, &a.matrix, b)
+}
+
 impl CacheKey {
     fn of(sf: &StageFeatures) -> CacheKey {
         CacheKey {
@@ -67,18 +98,9 @@ impl CacheKey {
         }
     }
 
-    /// Exact (bitwise for floats) match — `f64::to_bits` so NaN keys
-    /// compare like any other value instead of poisoning the table.
+    /// Exact (bitwise for floats) match against a stored key.
     fn matches(&self, sf: &StageFeatures) -> bool {
-        self.nodes == sf.nodes
-            && self.durations.len() == sf.durations.len()
-            && self.matrix.len() == sf.matrix.len()
-            && self
-                .durations
-                .iter()
-                .zip(&sf.durations)
-                .all(|(a, b)| a.to_bits() == b.to_bits())
-            && self.matrix.iter().zip(&sf.matrix).all(|(a, b)| a.to_bits() == b.to_bits())
+        stats_key_eq(&self.nodes, &self.durations, &self.matrix, sf)
     }
 }
 
@@ -116,9 +138,10 @@ struct Entry {
     tick: u64,
 }
 
-/// A memoizing [`StatsBackend`] wrapper. See module docs.
-pub struct CachedBackend<B> {
-    inner: B,
+/// The memo engine: one verified-key LRU table. Used directly (single
+/// owner) by [`CachedBackend`] and behind a stripe mutex by
+/// [`SharedStatsCache`].
+pub struct CacheCore {
     capacity: usize,
     /// structural hash → entry. One entry per hash: a colliding insert
     /// replaces (correct either way — the key check decides hit vs miss).
@@ -127,37 +150,18 @@ pub struct CachedBackend<B> {
     /// eviction is "remove the first key" without an intrusive list).
     lru: BTreeMap<u64, u64>,
     tick: u64,
-    counters: CacheCounters,
+    evictions: u64,
 }
 
-impl<B: StatsBackend> CachedBackend<B> {
-    pub fn new(inner: B, capacity: usize) -> Self {
-        CachedBackend {
-            inner,
+impl CacheCore {
+    pub fn new(capacity: usize) -> Self {
+        CacheCore {
             capacity,
             map: HashMap::new(),
             lru: BTreeMap::new(),
             tick: 0,
-            counters: CacheCounters::default(),
+            evictions: 0,
         }
-    }
-
-    pub fn counters(&self) -> CacheCounters {
-        self.counters
-    }
-
-    /// Resident entries.
-    pub fn len(&self) -> usize {
-        self.map.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
-    }
-
-    /// The wrapped backend (e.g. to read its own counters).
-    pub fn inner(&self) -> &B {
-        &self.inner
     }
 
     fn lookup(&mut self, hash: u64, sf: &StageFeatures) -> Option<StageStats> {
@@ -189,7 +193,7 @@ impl<B: StatsBackend> CachedBackend<B> {
             };
             self.lru.remove(&oldest.0);
             self.map.remove(&oldest.1);
-            self.counters.evictions += 1;
+            self.evictions += 1;
         }
         self.tick += 1;
         self.lru.insert(self.tick, hash);
@@ -197,32 +201,289 @@ impl<B: StatsBackend> CachedBackend<B> {
     }
 }
 
-impl<B: StatsBackend> StatsBackend for CachedBackend<B> {
-    fn stage_stats(&mut self, sf: &StageFeatures) -> StageStats {
+/// Memo storage behind [`Memoized`] — the one seam between the
+/// single-owner and the shared-striped cache. Hit/miss accounting lives in
+/// the wrapper (per backend), eviction accounting in the storage (where
+/// the eviction happens).
+pub trait StageStatsCache {
+    /// False ⇒ every call forwards (capacity 0).
+    fn enabled(&self) -> bool;
+    fn lookup(&mut self, hash: u64, sf: &StageFeatures) -> Option<StageStats>;
+    fn store(&mut self, hash: u64, sf: &StageFeatures, value: &StageStats);
+    /// Evictions in this storage (global for a shared cache).
+    fn evictions(&self) -> u64;
+    /// Resident entries (global for a shared cache).
+    fn len(&self) -> usize;
+    /// Backend name reported through [`StatsBackend::name`].
+    fn kind_name(&self) -> &'static str;
+}
+
+impl StageStatsCache for CacheCore {
+    fn enabled(&self) -> bool {
+        self.capacity > 0
+    }
+
+    fn lookup(&mut self, hash: u64, sf: &StageFeatures) -> Option<StageStats> {
+        CacheCore::lookup(self, hash, sf)
+    }
+
+    fn store(&mut self, hash: u64, sf: &StageFeatures, value: &StageStats) {
+        CacheCore::insert(self, hash, sf, value.clone());
+    }
+
+    fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    fn kind_name(&self) -> &'static str {
+        "cached"
+    }
+}
+
+/// The cross-worker stage-stats cache: `stripe_count` independent
+/// [`CacheCore`]s, each behind its own mutex, selected by the structural
+/// hash. Contention is 1/stripes of a single-lock table, and the total
+/// capacity is split across stripes (so the configured number bounds
+/// resident memory exactly). Capacity 0 disables caching.
+pub struct SharedStatsCache {
+    capacity: usize,
+    stripes: Vec<Mutex<CacheCore>>,
+}
+
+impl SharedStatsCache {
+    pub fn new(capacity: usize, stripes: usize) -> Self {
+        // Never more stripes than capacity — a stripe below one entry
+        // would silently inflate the configured bound.
+        let n = stripes.max(1).min(capacity.max(1));
+        let base = capacity / n;
+        let rem = capacity % n;
+        SharedStatsCache {
+            capacity,
+            stripes: (0..n)
+                .map(|i| Mutex::new(CacheCore::new(base + usize::from(i < rem))))
+                .collect(),
+        }
+    }
+
+    /// Total configured capacity across all stripes.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn stripe_count(&self) -> usize {
+        self.stripes.len()
+    }
+
+    fn stripe_of(&self, hash: u64) -> usize {
+        // The map inside each stripe keys on the full hash; pick the
+        // stripe from the high bits so the two partitions stay independent.
+        ((hash >> 32) as usize) % self.stripes.len()
+    }
+
+    pub fn lookup(&self, hash: u64, sf: &StageFeatures) -> Option<StageStats> {
         if self.capacity == 0 {
-            self.counters.misses += 1;
+            return None;
+        }
+        let mut core = self.stripes[self.stripe_of(hash)].lock().unwrap();
+        CacheCore::lookup(&mut core, hash, sf)
+    }
+
+    pub fn insert(&self, hash: u64, sf: &StageFeatures, value: StageStats) {
+        if self.capacity == 0 {
+            return;
+        }
+        let mut core = self.stripes[self.stripe_of(hash)].lock().unwrap();
+        CacheCore::insert(&mut core, hash, sf, value);
+    }
+
+    /// Resident entries across all stripes.
+    pub fn len(&self) -> usize {
+        self.stripes.iter().map(|s| s.lock().unwrap().map.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Evictions across all stripes.
+    pub fn evictions(&self) -> u64 {
+        self.stripes.iter().map(|s| s.lock().unwrap().evictions).sum()
+    }
+}
+
+impl StageStatsCache for Arc<SharedStatsCache> {
+    fn enabled(&self) -> bool {
+        self.capacity > 0
+    }
+
+    fn lookup(&mut self, hash: u64, sf: &StageFeatures) -> Option<StageStats> {
+        SharedStatsCache::lookup(self.as_ref(), hash, sf)
+    }
+
+    fn store(&mut self, hash: u64, sf: &StageFeatures, value: &StageStats) {
+        SharedStatsCache::insert(self.as_ref(), hash, sf, value.clone());
+    }
+
+    fn evictions(&self) -> u64 {
+        SharedStatsCache::evictions(self.as_ref())
+    }
+
+    fn len(&self) -> usize {
+        SharedStatsCache::len(self.as_ref())
+    }
+
+    fn kind_name(&self) -> &'static str {
+        "shared-cached"
+    }
+}
+
+/// A memoizing [`StatsBackend`] wrapper over any [`StageStatsCache`]
+/// storage. See module docs. `hits`/`misses` count *this wrapper's*
+/// lookups (per worker); `evictions` come from the storage, so for a
+/// shared cache they are global.
+pub struct Memoized<B, C> {
+    inner: B,
+    cache: C,
+    hits: u64,
+    misses: u64,
+}
+
+/// Single-owner memo: the classic per-backend LRU (no locks).
+pub type CachedBackend<B> = Memoized<B, CacheCore>;
+
+/// Memo over the cross-worker [`SharedStatsCache`].
+pub type SharedCachedBackend<B> = Memoized<B, Arc<SharedStatsCache>>;
+
+impl<B: StatsBackend> Memoized<B, CacheCore> {
+    pub fn new(inner: B, capacity: usize) -> Self {
+        Memoized { inner, cache: CacheCore::new(capacity), hits: 0, misses: 0 }
+    }
+}
+
+impl<B: StatsBackend> Memoized<B, Arc<SharedStatsCache>> {
+    pub fn new(inner: B, cache: Arc<SharedStatsCache>) -> Self {
+        Memoized { inner, cache, hits: 0, misses: 0 }
+    }
+}
+
+impl<B: StatsBackend, C: StageStatsCache> Memoized<B, C> {
+    pub fn counters(&self) -> CacheCounters {
+        CacheCounters { hits: self.hits, misses: self.misses, evictions: self.cache.evictions() }
+    }
+
+    /// This wrapper's own (hits, misses), read without touching the
+    /// storage — unlike [`Memoized::counters`], which sums evictions
+    /// across every stripe of a shared cache. Hot publish paths (the live
+    /// shard workers report after every batch and idle tick) use this to
+    /// avoid taking N stripe locks for numbers they don't report.
+    pub fn lookup_counts(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+
+    /// Resident entries (in the shared case: across all workers).
+    pub fn len(&self) -> usize {
+        self.cache.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The wrapped backend (e.g. to read its own counters).
+    pub fn inner(&self) -> &B {
+        &self.inner
+    }
+}
+
+// The one blanket impl both memo shapes share — no per-wrapper forwarding.
+impl<B: StatsBackend, C: StageStatsCache> StatsBackend for Memoized<B, C> {
+    fn stage_stats(&mut self, sf: &StageFeatures) -> StageStats {
+        if !self.cache.enabled() {
+            self.misses += 1;
             return self.inner.stage_stats(sf);
         }
         let hash = structural_hash(sf);
-        if let Some(v) = self.lookup(hash, sf) {
-            self.counters.hits += 1;
+        if let Some(v) = self.cache.lookup(hash, sf) {
+            self.hits += 1;
             return v;
         }
-        self.counters.misses += 1;
+        self.misses += 1;
         let v = self.inner.stage_stats(sf);
-        self.insert(hash, sf, v.clone());
+        self.cache.store(hash, sf, &v);
         v
     }
 
-    // The default batch impl loops over `stage_stats`, which is exactly
-    // right here: every element gets its own cache lookup.
+    /// Batch-aware memo: look every element up first, then forward *all*
+    /// misses to the inner backend as one sub-batch — so a batching inner
+    /// backend (the router's large side, an XLA executor) keeps its
+    /// amortization instead of degrading to per-element calls. Counter
+    /// semantics match the sequential path exactly: an intra-batch
+    /// duplicate of a miss is deferred and re-looked-up after the store,
+    /// so it counts (and behaves) as a hit.
+    fn stage_stats_batch(&mut self, sfs: &[&StageFeatures]) -> Vec<StageStats> {
+        if !self.cache.enabled() {
+            self.misses += sfs.len() as u64;
+            return self.inner.stage_stats_batch(sfs);
+        }
+        let mut out: Vec<Option<StageStats>> = sfs.iter().map(|_| None).collect();
+        let mut hashes: Vec<u64> = Vec::with_capacity(sfs.len());
+        // First occurrences of missing shapes, dispatched as one batch.
+        let mut miss_idx: Vec<usize> = Vec::new();
+        // Later occurrences of an in-batch miss: resolved after the store.
+        let mut dup_idx: Vec<usize> = Vec::new();
+        for (i, sf) in sfs.iter().enumerate() {
+            let hash = structural_hash(sf);
+            hashes.push(hash);
+            if let Some(v) = self.cache.lookup(hash, sf) {
+                self.hits += 1;
+                out[i] = Some(v);
+                continue;
+            }
+            let dup = miss_idx
+                .iter()
+                .any(|&j| hashes[j] == hash && same_stats_key(sfs[j], sf));
+            if dup {
+                dup_idx.push(i);
+            } else {
+                self.misses += 1;
+                miss_idx.push(i);
+            }
+        }
+        if !miss_idx.is_empty() {
+            let refs: Vec<&StageFeatures> = miss_idx.iter().map(|&i| sfs[i]).collect();
+            let computed = self.inner.stage_stats_batch(&refs);
+            assert_eq!(computed.len(), refs.len(), "backend returned wrong batch size");
+            for (j, v) in computed.into_iter().enumerate() {
+                let i = miss_idx[j];
+                self.cache.store(hashes[i], sfs[i], &v);
+                out[i] = Some(v);
+            }
+        }
+        for i in dup_idx {
+            // Normally a hit on the entry just stored; under extreme
+            // eviction pressure within this batch, fall back to the
+            // single-stage path (which recomputes and recounts correctly).
+            out[i] = Some(match self.cache.lookup(hashes[i], sfs[i]) {
+                Some(v) => {
+                    self.hits += 1;
+                    v
+                }
+                None => self.stage_stats(sfs[i]),
+            });
+        }
+        out.into_iter().map(|o| o.expect("memo covered every stage")).collect()
+    }
 
     fn name(&self) -> &'static str {
-        "cached"
+        self.cache.kind_name()
     }
 
     fn cache_counters(&self) -> Option<CacheCounters> {
-        Some(self.counters)
+        Some(self.counters())
     }
 }
 
@@ -350,5 +611,93 @@ mod tests {
         cc.hits = 3;
         cc.misses = 1;
         assert!((cc.hit_rate() - 0.75).abs() < 1e-12);
+    }
+
+    // ---- shared cache ----
+
+    #[test]
+    fn shared_cache_hits_across_backends() {
+        // Backend A computes; backend B (a different worker) hits the
+        // shared table — the cross-shard contract of the live server.
+        let cache = Arc::new(SharedStatsCache::new(64, 4));
+        let mut a = SharedCachedBackend::new(NativeBackend::new(), Arc::clone(&cache));
+        let mut b = SharedCachedBackend::new(NativeBackend::new(), Arc::clone(&cache));
+        let sf = stage(20, 16);
+        let ra = a.stage_stats(&sf);
+        let rb = b.stage_stats(&sf);
+        assert_eq!(ra, rb);
+        assert_eq!(ra, compute_native(&sf));
+        assert_eq!(a.counters().misses, 1);
+        assert_eq!(a.counters().hits, 0);
+        assert_eq!(b.counters().hits, 1, "second worker must hit the shared entry");
+        assert_eq!(b.counters().misses, 0);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn shared_cache_capacity_splits_across_stripes() {
+        let c = SharedStatsCache::new(10, 4);
+        assert_eq!(c.capacity(), 10);
+        assert_eq!(c.stripe_count(), 4);
+        // Never more stripes than capacity.
+        let tiny = SharedStatsCache::new(2, 16);
+        assert_eq!(tiny.stripe_count(), 2);
+        let off = SharedStatsCache::new(0, 8);
+        assert_eq!(off.stripe_count(), 1);
+    }
+
+    #[test]
+    fn shared_cache_capacity_zero_disables() {
+        let cache = Arc::new(SharedStatsCache::new(0, 4));
+        let mut b = SharedCachedBackend::new(NativeBackend::new(), Arc::clone(&cache));
+        let sf = stage(21, 8);
+        assert_eq!(b.stage_stats(&sf), compute_native(&sf));
+        assert_eq!(b.stage_stats(&sf), compute_native(&sf));
+        assert_eq!(b.counters(), CacheCounters { hits: 0, misses: 2, evictions: 0 });
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn shared_cache_evicts_within_capacity() {
+        // One stripe so the LRU order is observable; capacity 2.
+        let cache = Arc::new(SharedStatsCache::new(2, 1));
+        let mut b = SharedCachedBackend::new(NativeBackend::new(), Arc::clone(&cache));
+        let s1 = stage(30, 8);
+        let s2 = stage(31, 8);
+        let s3 = stage(32, 8);
+        b.stage_stats(&s1);
+        b.stage_stats(&s2);
+        b.stage_stats(&s3); // evicts s1 (LRU)
+        assert_eq!(cache.evictions(), 1);
+        assert!(cache.len() <= 2);
+        // Every result still bit-identical.
+        assert_eq!(b.stage_stats(&s1), compute_native(&s1));
+    }
+
+    #[test]
+    fn shared_cache_concurrent_mixed_shapes_stay_correct() {
+        // Hammer one shared cache from several threads over overlapping
+        // shapes; every returned result must equal the uncached compute.
+        let cache = Arc::new(SharedStatsCache::new(8, 4));
+        let shapes: Vec<StageFeatures> = (0..6).map(|i| stage(40 + i, 10)).collect();
+        let want: Vec<StageStats> = shapes.iter().map(compute_native).collect();
+        let shapes = Arc::new(shapes);
+        let want = Arc::new(want);
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let cache = Arc::clone(&cache);
+            let shapes = Arc::clone(&shapes);
+            let want = Arc::clone(&want);
+            handles.push(std::thread::spawn(move || {
+                let mut b = SharedCachedBackend::new(NativeBackend::new(), cache);
+                for round in 0..20 {
+                    let i = ((t + round) % shapes.len() as u64) as usize;
+                    assert_eq!(b.stage_stats(&shapes[i]), want[i]);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 }

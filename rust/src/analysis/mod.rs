@@ -4,9 +4,14 @@
 //!   `tasks × features` matrix per stage
 //! - [`stats`] — batched stage statistics (quantile grid, Pearson, per-node
 //!   sums) behind the [`stats::StatsBackend`] trait (native or XLA)
-//! - [`cache`] — [`cache::CachedBackend`], the LRU stage-stats memoizer
-//!   keyed on a structural hash of the feature matrix (repeated stage
-//!   shapes across jobs skip the stats kernel entirely)
+//! - [`cache`] — stage-stats memoization keyed on a structural hash of the
+//!   feature matrix: the single-owner [`cache::CachedBackend`] for the
+//!   offline pipeline, and the lock-striped [`cache::SharedStatsCache`]
+//!   behind [`cache::SharedCachedBackend`] shared by every service /
+//!   live-shard worker (repeated stage shapes hit regardless of shard
+//!   routing)
+//! - [`router`] — [`router::RoutingBackend`], size-predicate multi-backend
+//!   dispatch (native for small stages, XLA-capable for large)
 //! - [`straggler`] — Mantri-style detection (1.5× stage median)
 //! - [`bigroots`] — the identification rules (Eq. 5–7) incl. edge detection
 //! - [`pcc`] — the Pearson-correlation baseline (Eq. 8)
@@ -20,14 +25,16 @@ pub mod features;
 pub mod pcc;
 pub mod report;
 pub mod roc;
+pub mod router;
 pub mod stats;
 pub mod straggler;
 
 pub use bigroots::{analyze_stage, BigRootsConfig, RootCause, StageAnalysis};
-pub use cache::{CacheCounters, CachedBackend};
+pub use cache::{CacheCounters, CachedBackend, SharedCachedBackend, SharedStatsCache};
 pub use correlation::{feature_correlations, joint_causes, FeatureCorrelations, JointCause};
 pub use features::{extract_all, extract_stage, FeatureCategory, FeatureKind, StageFeatures};
 pub use pcc::PccConfig;
 pub use roc::{ground_truth, score, Confusion, GroundTruth};
+pub use router::RoutingBackend;
 pub use stats::{NativeBackend, StageStats, StatsBackend};
 pub use straggler::{detect, StragglerSet};

@@ -1,0 +1,254 @@
+//! Multi-backend routing — dispatch each stage to the backend that suits
+//! its size.
+//!
+//! The stats kernel has two implementations with opposite cost profiles:
+//! the pure-rust [`NativeBackend`] (zero dispatch overhead, great for the
+//! many small stages a busy fleet produces) and the AOT-compiled XLA
+//! artifact behind [`crate::runtime::XlaBackend`] (per-call
+//! transfer/selection overhead, amortized on large stages). Sending every
+//! stage to one of them wastes the other's sweet spot. [`RoutingBackend`]
+//! splits the stream by a size predicate: stages with fewer than
+//! `large_task_threshold` tasks go to the *small* backend, the rest to the
+//! *large* one. `stage_stats_batch` partitions a batch once and forwards
+//! each side as a single sub-batch, so the large backend still amortizes
+//! its dispatch overhead.
+//!
+//! Without the `pjrt` feature (or without `artifacts/`), the large side
+//! degrades to a second native backend — routing is then a no-op for
+//! results (bit-identical both sides), which is exactly what keeps the
+//! parity test suite meaningful while the XLA path stays feature-gated.
+
+use super::features::StageFeatures;
+use super::stats::{NativeBackend, StageStats, StatsBackend};
+use crate::analysis::cache::CacheCounters;
+
+/// Default task-count boundary between "small" (native) and "large"
+/// (XLA-capable) stages — matches the artifact bucket range where batched
+/// dispatch starts paying for itself.
+pub const DEFAULT_LARGE_TASK_THRESHOLD: usize = 256;
+
+/// Size-predicate dispatcher over two [`StatsBackend`]s. See module docs.
+pub struct RoutingBackend<S, L> {
+    small: S,
+    large: L,
+    large_task_threshold: usize,
+    small_count: usize,
+    large_count: usize,
+}
+
+impl<S: StatsBackend, L: StatsBackend> RoutingBackend<S, L> {
+    /// Route stages with `>= large_task_threshold` tasks to `large`,
+    /// the rest to `small`. A threshold of 0 is floored at 1 (an empty
+    /// stage is still "small").
+    pub fn new(small: S, large: L, large_task_threshold: usize) -> Self {
+        RoutingBackend {
+            small,
+            large,
+            large_task_threshold: large_task_threshold.max(1),
+            small_count: 0,
+            large_count: 0,
+        }
+    }
+
+    fn is_large(&self, sf: &StageFeatures) -> bool {
+        sf.num_tasks() >= self.large_task_threshold
+    }
+
+    /// (stages routed small, stages routed large) so far.
+    pub fn route_counts(&self) -> (usize, usize) {
+        (self.small_count, self.large_count)
+    }
+
+    pub fn large_task_threshold(&self) -> usize {
+        self.large_task_threshold
+    }
+}
+
+impl<S: StatsBackend, L: StatsBackend> StatsBackend for RoutingBackend<S, L> {
+    fn stage_stats(&mut self, sf: &StageFeatures) -> StageStats {
+        if self.is_large(sf) {
+            self.large_count += 1;
+            self.large.stage_stats(sf)
+        } else {
+            self.small_count += 1;
+            self.small.stage_stats(sf)
+        }
+    }
+
+    /// Partition once, dispatch each side as one sub-batch (the large
+    /// backend amortizes its per-call overhead), reassemble in input
+    /// order.
+    fn stage_stats_batch(&mut self, sfs: &[&StageFeatures]) -> Vec<StageStats> {
+        let mut small_idx: Vec<usize> = Vec::new();
+        let mut large_idx: Vec<usize> = Vec::new();
+        for (i, sf) in sfs.iter().enumerate() {
+            if self.is_large(sf) {
+                large_idx.push(i);
+            } else {
+                small_idx.push(i);
+            }
+        }
+        let mut out: Vec<Option<StageStats>> = sfs.iter().map(|_| None).collect();
+        if !small_idx.is_empty() {
+            let refs: Vec<&StageFeatures> = small_idx.iter().map(|&i| sfs[i]).collect();
+            let stats = self.small.stage_stats_batch(&refs);
+            assert_eq!(stats.len(), refs.len(), "small backend returned wrong batch size");
+            for (j, st) in stats.into_iter().enumerate() {
+                out[small_idx[j]] = Some(st);
+            }
+            self.small_count += small_idx.len();
+        }
+        if !large_idx.is_empty() {
+            let refs: Vec<&StageFeatures> = large_idx.iter().map(|&i| sfs[i]).collect();
+            let stats = self.large.stage_stats_batch(&refs);
+            assert_eq!(stats.len(), refs.len(), "large backend returned wrong batch size");
+            for (j, st) in stats.into_iter().enumerate() {
+                out[large_idx[j]] = Some(st);
+            }
+            self.large_count += large_idx.len();
+        }
+        out.into_iter().map(|o| o.expect("router covered every stage")).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "routing"
+    }
+
+    /// Sum of the two sides' memo counters, if either side memoizes.
+    fn cache_counters(&self) -> Option<CacheCounters> {
+        match (self.small.cache_counters(), self.large.cache_counters()) {
+            (None, None) => None,
+            (a, b) => {
+                let a = a.unwrap_or_default();
+                let b = b.unwrap_or_default();
+                Some(CacheCounters {
+                    hits: a.hits + b.hits,
+                    misses: a.misses + b.misses,
+                    evictions: a.evictions + b.evictions,
+                })
+            }
+        }
+    }
+}
+
+/// The large-stage backend available to *worker threads*. Real XLA
+/// execution needs the `pjrt` feature (the default build's stub PJRT
+/// client cannot open) **and** a `Send`-proven PJRT client (the `xla`
+/// crate's thread affinity is unverified) — neither holds today, so
+/// worker threads run the large side natively and only the
+/// single-threaded offline pipeline ([`auto_routed_backend`], which is
+/// free of the `Send` bound) dispatches to real XLA when artifacts
+/// exist. This function is the seam: once a `Send` device backend lands,
+/// returning it here lights up every service and live-shard worker with
+/// no other change.
+pub fn auto_large_backend() -> Box<dyn StatsBackend + Send> {
+    Box::new(NativeBackend::new())
+}
+
+/// The offline auto-routed backend: native small side, best-available
+/// (XLA if artifacts exist) large side, default threshold. Single-threaded
+/// contexts only — the large side is not required to be `Send` here, so
+/// real PJRT clients qualify.
+pub fn auto_routed_backend() -> RoutingBackend<NativeBackend, Box<dyn StatsBackend>> {
+    RoutingBackend::new(
+        NativeBackend::new(),
+        crate::runtime::auto_backend(),
+        DEFAULT_LARGE_TASK_THRESHOLD,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::features::FeatureKind as F;
+    use crate::analysis::stats::compute_native;
+
+    fn stage(seed: u64, n: usize) -> StageFeatures {
+        let f = F::COUNT;
+        let mut rng = crate::util::rng::Pcg64::seeded(seed);
+        StageFeatures {
+            stage_id: seed,
+            task_ids: (0..n as u64).collect(),
+            nodes: (0..n).map(|r| r % 2).collect(),
+            durations: (0..n).map(|_| rng.range_f64(0.5, 5.0)).collect(),
+            matrix: (0..n * f).map(|_| rng.range_f64(0.0, 4.0)).collect(),
+            head_means: vec![0.0; n * 3],
+            tail_means: vec![0.0; n * 3],
+        }
+    }
+
+    #[test]
+    fn routes_by_task_count() {
+        let mut r = RoutingBackend::new(NativeBackend::new(), NativeBackend::new(), 10);
+        let small = stage(1, 4);
+        let large = stage(2, 16);
+        assert_eq!(r.stage_stats(&small), compute_native(&small));
+        assert_eq!(r.stage_stats(&large), compute_native(&large));
+        assert_eq!(r.route_counts(), (1, 1));
+        assert_eq!(r.name(), "routing");
+        assert!(r.cache_counters().is_none(), "two native sides expose no memo");
+    }
+
+    #[test]
+    fn batch_partitions_and_preserves_order() {
+        let mut r = RoutingBackend::new(NativeBackend::new(), NativeBackend::new(), 10);
+        let stages: Vec<StageFeatures> =
+            [3usize, 20, 5, 11, 9, 30].iter().enumerate().map(|(i, &n)| stage(10 + i as u64, n)).collect();
+        let refs: Vec<&StageFeatures> = stages.iter().collect();
+        let out = r.stage_stats_batch(&refs);
+        assert_eq!(out.len(), stages.len());
+        for (got, sf) in out.iter().zip(&stages) {
+            assert_eq!(got, &compute_native(sf), "stage {} tasks", sf.num_tasks());
+        }
+        assert_eq!(r.route_counts(), (3, 3));
+    }
+
+    #[test]
+    fn threshold_edge_goes_large_and_zero_floors() {
+        let mut r = RoutingBackend::new(NativeBackend::new(), NativeBackend::new(), 8);
+        let edge = stage(40, 8); // exactly the threshold → large
+        r.stage_stats(&edge);
+        assert_eq!(r.route_counts(), (0, 1));
+        let floored = RoutingBackend::new(NativeBackend::new(), NativeBackend::new(), 0);
+        assert_eq!(floored.large_task_threshold(), 1);
+    }
+
+    #[test]
+    fn memoized_side_surfaces_counters() {
+        use crate::analysis::cache::CachedBackend;
+        let mut r = RoutingBackend::new(
+            CachedBackend::new(NativeBackend::new(), 8),
+            NativeBackend::new(),
+            1_000_000, // everything routes small
+        );
+        let sf = stage(50, 12);
+        r.stage_stats(&sf);
+        r.stage_stats(&sf);
+        let c = r.cache_counters().expect("memoizing small side");
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 1);
+    }
+
+    #[test]
+    fn auto_large_backend_works_without_artifacts() {
+        let mut b = auto_large_backend();
+        let sf = stage(60, 6);
+        assert_eq!(b.stage_stats(&sf), compute_native(&sf));
+    }
+
+    #[test]
+    fn auto_routed_backend_matches_native() {
+        let mut r = auto_routed_backend();
+        for n in [2usize, 100, 300] {
+            let sf = stage(70 + n as u64, n);
+            // Without artifacts both sides are native → exact match. (With
+            // artifacts the large side is XLA and parity is asserted at
+            // f32 tolerance in rust/tests/backend_parity.rs instead.)
+            if std::path::Path::new("artifacts/manifest.json").exists() {
+                let _ = r.stage_stats(&sf);
+            } else {
+                assert_eq!(r.stage_stats(&sf), compute_native(&sf));
+            }
+        }
+    }
+}

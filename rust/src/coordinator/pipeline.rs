@@ -48,12 +48,17 @@ impl Pipeline {
     /// experiment sweeps re-analyze repeated stage shapes constantly).
     pub const DEFAULT_CACHE_CAPACITY: usize = 256;
 
-    /// Pipeline on the best available backend (XLA if artifacts exist),
-    /// with stage-stats memoization in front — repeated stage shapes
-    /// across analyses skip the kernel (bit-identical results either way).
+    /// Pipeline on the routed auto backend — native for small stages, the
+    /// best available backend (XLA if artifacts exist) for large ones
+    /// ([`crate::analysis::router::RoutingBackend`]) — with single-owner
+    /// stage-stats memoization in front: the offline pipeline owns its
+    /// backend outright, so the lock-free [`CachedBackend`] fast path
+    /// applies, not the shared striped cache the services use. Repeated
+    /// stage shapes across analyses skip the kernel (bit-identical results
+    /// either way).
     pub fn auto() -> Self {
         Self::new(Box::new(CachedBackend::new(
-            crate::runtime::auto_backend(),
+            crate::analysis::router::auto_routed_backend(),
             Self::DEFAULT_CACHE_CAPACITY,
         )))
     }

@@ -31,7 +31,8 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::analysis::bigroots::{analyze_stage_with_stats, BigRootsConfig, StageAnalysis};
-use crate::analysis::cache::CachedBackend;
+use crate::analysis::cache::{SharedCachedBackend, SharedStatsCache};
+use crate::analysis::router::RoutingBackend;
 use crate::analysis::features::StageFeatures;
 use crate::analysis::stats::{NativeBackend, StatsBackend};
 use crate::coordinator::streaming::JobState;
@@ -50,11 +51,18 @@ pub struct ServiceConfig {
     /// Backpressure threshold: ingest blocks (draining results) while this
     /// many batches are queued or running on the pool.
     pub max_in_flight_batches: usize,
-    /// Per-worker stage-stats memo capacity
-    /// ([`crate::analysis::cache::CachedBackend`]); 0 disables caching.
+    /// Total stage-stats memo capacity, shared by all workers through one
+    /// lock-striped [`SharedStatsCache`] — a repeated stage shape hits no
+    /// matter which worker (or shard) saw it first; 0 disables caching.
     /// Results are bit-identical either way — this only trades memory for
     /// skipped recomputation on repeated stage shapes.
     pub stats_cache_capacity: usize,
+    /// Lock stripes in the shared stage-stats cache.
+    pub stats_cache_stripes: usize,
+    /// Route stages with at least this many tasks to the large-stage
+    /// backend ([`crate::analysis::router::RoutingBackend`]); 0 keeps
+    /// every stage native.
+    pub route_large_tasks: usize,
     /// Analyzer thresholds (paper defaults).
     pub bigroots: BigRootsConfig,
 }
@@ -67,6 +75,8 @@ impl Default for ServiceConfig {
             batch_size: 8,
             max_in_flight_batches: 8,
             stats_cache_capacity: 256,
+            stats_cache_stripes: 8,
+            route_large_tasks: 0,
             bigroots: BigRootsConfig::default(),
         }
     }
@@ -179,13 +189,27 @@ pub struct AnalysisService {
 }
 
 impl AnalysisService {
-    /// Service with one memoizing [`NativeBackend`] per worker (each
-    /// worker gets its own [`CachedBackend`] so no lock is shared on the
-    /// stats hot path).
+    /// Service whose workers all memoize through one lock-striped
+    /// [`SharedStatsCache`]: a repeated stage shape hits regardless of
+    /// which worker computed it first (the stripe mutex is held only for
+    /// the table probe, never across the stats kernel). With
+    /// `route_large_tasks > 0`, each worker additionally routes large
+    /// stages to the XLA-capable backend.
     pub fn new(cfg: ServiceConfig) -> Self {
+        let cache =
+            Arc::new(SharedStatsCache::new(cfg.stats_cache_capacity, cfg.stats_cache_stripes));
         let backends: Vec<Box<dyn StatsBackend + Send>> = (0..cfg.workers.max(1))
             .map(|_| {
-                Box::new(CachedBackend::new(NativeBackend::new(), cfg.stats_cache_capacity))
+                let inner: Box<dyn StatsBackend + Send> = if cfg.route_large_tasks > 0 {
+                    Box::new(RoutingBackend::new(
+                        NativeBackend::new(),
+                        crate::analysis::router::auto_large_backend(),
+                        cfg.route_large_tasks,
+                    ))
+                } else {
+                    Box::new(NativeBackend::new())
+                };
+                Box::new(SharedCachedBackend::new(inner, Arc::clone(&cache)))
                     as Box<dyn StatsBackend + Send>
             })
             .collect();
@@ -645,6 +669,62 @@ mod tests {
         for &jid in &ids[1..] {
             assert_eq!(report.job(jid).unwrap(), first);
         }
+    }
+
+    #[test]
+    fn shared_cache_hits_across_workers() {
+        // Four workers over a repeated trace: with per-worker memos every
+        // worker paid its own miss per shape; through the shared striped
+        // cache a shape computed by any worker hits on all of them.
+        let a = job(83, 0.2);
+        let ids: Vec<u64> = (0..6).collect();
+        let jobs: Vec<(u64, &JobTrace)> = ids.iter().map(|&i| (i, &a)).collect();
+        let events = interleave_jobs(&jobs);
+        let mut svc = AnalysisService::new(ServiceConfig {
+            shards: 2,
+            workers: 4,
+            batch_size: 2,
+            ..Default::default()
+        });
+        svc.feed_all(&events);
+        let report = svc.finish();
+        let m = &report.metrics;
+        assert_eq!(m.cache_hits + m.cache_misses, report.total_stages() as u64);
+        // Identical shapes racing in-flight can both miss, but at least
+        // the later jobs' stages must find the shared entries.
+        assert!(
+            m.cache_hits >= report.total_stages() as u64 / 4,
+            "expected cross-worker hits: {} hits / {} stages",
+            m.cache_hits,
+            report.total_stages()
+        );
+        let first = report.job(0).unwrap();
+        for &jid in &ids[1..] {
+            assert_eq!(report.job(jid).unwrap(), first);
+        }
+    }
+
+    #[test]
+    fn routed_service_matches_unrouted() {
+        // With no artifacts both router sides are native, so enabling
+        // routing must not change a single bit of any analysis. (With
+        // artifacts the large side is f32 XLA; parity at tolerance is
+        // covered by rust/tests/backend_parity.rs instead.)
+        if std::path::Path::new("artifacts/manifest.json").exists() {
+            return;
+        }
+        let a = job(84, 0.25);
+        let events = interleave_jobs(&[(1, &a)]);
+        let mut plain = AnalysisService::new(ServiceConfig::default());
+        plain.feed_all(&events);
+        let want = plain.finish();
+        let mut routed = AnalysisService::new(ServiceConfig {
+            route_large_tasks: 8,
+            ..Default::default()
+        });
+        routed.feed_all(&events);
+        let got = routed.finish();
+        assert_eq!(got.job(1).unwrap(), want.job(1).unwrap());
     }
 
     #[test]

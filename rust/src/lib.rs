@@ -28,19 +28,31 @@
 //!   interleaving-invariance tests live in `rust/tests/`.
 //!   `examples/multi_job_service.rs` drives it; [`sim::multi`] generates
 //!   interleaved multi-job traffic.
-//! - the **live multi-tenant server [`live::LiveServer`]** (sources →
-//!   sharded ingest → lifecycle GC → fleet registry): pluggable
-//!   transports ([`live::source`] — NDJSON file tail with rotation
-//!   detection, TCP listener, stdin) feed one worker thread per shard
-//!   over bounded queues ([`util::queue`], per-shard backpressure);
-//!   a job lifecycle manager ([`live::lifecycle`]) flushes and evicts
+//! - the **live multi-tenant control plane [`live::LiveServer`]**
+//!   (sources → sharded ingest → analysis/routing → registry/persistence
+//!   → control plane): pluggable transports ([`live::source`] — NDJSON
+//!   file tail with rotation detection, TCP listener that counts mid-line
+//!   disconnect losses, stdin) feed one worker thread per shard over
+//!   bounded queues ([`util::queue`], per-shard backpressure); a job
+//!   lifecycle manager ([`live::lifecycle`]) flushes and evicts
 //!   `JobState` after `JobEnd` plus a quiescence window (bounded memory
-//!   on unbounded streams, revived job ids are fresh incarnations); and
-//!   a cross-job [`live::registry::FleetRegistry`] folds every completed
-//!   stage into P² quantile sketches and root-cause incidence counters,
-//!   answering fleet queries and flagging stages anomalous versus the
-//!   fleet baseline. `bigroots serve --tail/--listen/--stdin` and
-//!   `examples/live_tail.rs` drive it end to end.
+//!   on unbounded streams, revived job ids are fresh incarnations); shard
+//!   workers compute through a [`analysis::router::RoutingBackend`]
+//!   (native for small stages, XLA-capable for large) memoized by one
+//!   lock-striped [`analysis::cache::SharedStatsCache`] (a repeated stage
+//!   shape hits across shards); a cross-job
+//!   [`live::registry::FleetRegistry`] folds every completed stage into
+//!   P² quantile sketches and root-cause incidence counters, answering
+//!   fleet queries and flagging stages anomalous versus the fleet
+//!   baseline — and **survives restarts** through versioned, bit-exact,
+//!   atomically-written snapshots ([`live::persist`], restore-on-boot);
+//!   a line-delimited TCP **control socket** ([`live::control`]:
+//!   `fleet-report`, `job <id>`, `metrics`, `snapshot`, `shutdown`)
+//!   shares one query path with the CLI's periodic snapshot printing and
+//!   gives `bigroots serve` a clean drain-then-snapshot shutdown.
+//!   `bigroots serve --tail/--listen --control-port --snapshot-path`,
+//!   `examples/live_tail.rs` and `examples/control_client.rs` drive it
+//!   end to end.
 //!
 //! The event→feature→stats **hot path** is allocation-free and
 //! cache-aware end to end:

@@ -1,0 +1,526 @@
+//! The TCP control/query plane of `bigroots serve` — a second,
+//! line-delimited socket (`--control-port`) that answers operator queries
+//! while the event port keeps ingesting.
+//!
+//! Protocol: one request per line, one JSON response line per request, in
+//! request order per connection. Verbs:
+//!
+//! | request        | response `data`                                   |
+//! |----------------|---------------------------------------------------|
+//! | `fleet-report` | the [`FleetReport`] (counters, quantiles, shares) |
+//! | `job <id>`     | summary of a retired job (stages, causes, flags)  |
+//! | `metrics`      | [`LiveMetrics`] incl. per-shard counters          |
+//! | `snapshot`     | writes the fleet snapshot file, returns its path  |
+//! | `shutdown`     | asks the server to drain, snapshot and exit       |
+//!
+//! Every response is `{"ok":true,"kind":...,"data":...}` or
+//! `{"ok":false,"error":...}`. Unknown verbs get an error response, never
+//! a dropped connection — an operator typo must not cost the session.
+//!
+//! The same query path backs the CLI: the periodic snapshot printing in
+//! `main.rs` goes through [`fleet_report`]/[`fleet_report_text`], so the
+//! console and the socket can never drift apart. [`ControlServer`] is
+//! poll-based and non-blocking like [`crate::live::source::EventSource`],
+//! so one driver thread multiplexes event ingest, control traffic and
+//! snapshot cadence.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+
+use crate::live::ingest::{CompletedJob, LiveMetrics, LiveServer};
+use crate::live::registry::FleetReport;
+use crate::util::json::Json;
+
+/// One parsed control request. `Invalid` carries the error text so the
+/// driver can answer in order instead of dropping the line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ControlCommand {
+    FleetReport,
+    Job(u64),
+    Metrics,
+    Snapshot,
+    Shutdown,
+    Invalid(String),
+}
+
+/// Parse one request line. Never fails — unparseable input becomes
+/// [`ControlCommand::Invalid`] so the response stream stays aligned with
+/// the request stream.
+pub fn parse_command(line: &str) -> ControlCommand {
+    let mut parts = line.split_whitespace();
+    match parts.next() {
+        Some("fleet-report") if parts.next().is_none() => ControlCommand::FleetReport,
+        Some("metrics") if parts.next().is_none() => ControlCommand::Metrics,
+        Some("snapshot") if parts.next().is_none() => ControlCommand::Snapshot,
+        Some("shutdown") if parts.next().is_none() => ControlCommand::Shutdown,
+        Some("job") => match (parts.next().map(str::parse::<u64>), parts.next()) {
+            (Some(Ok(id)), None) => ControlCommand::Job(id),
+            _ => ControlCommand::Invalid("usage: job <id>".to_string()),
+        },
+        _ => ControlCommand::Invalid(format!(
+            "unknown command '{}' (try: fleet-report | job <id> | metrics | snapshot | shutdown)",
+            line.trim()
+        )),
+    }
+}
+
+/// A request read off a control connection; pass it back to
+/// [`ControlServer::respond`] to answer it.
+#[derive(Debug)]
+pub struct ControlRequest {
+    conn_id: u64,
+    pub command: ControlCommand,
+}
+
+/// A request line longer than this is not a control command — drop the
+/// connection instead of buffering without bound (e.g. an event stream
+/// mistakenly pointed at the control port).
+const MAX_REQUEST_LINE: usize = 64 * 1024;
+
+/// Bytes read per connection per poll — bounds how long one fast writer
+/// can hold the driver thread before ingest gets its turn again.
+const MAX_READ_PER_POLL: usize = 256 * 1024;
+
+/// Unflushed response bytes tolerated per connection before the client
+/// is declared not-reading and dropped.
+const MAX_PENDING_OUT: usize = 256 * 1024;
+
+struct ControlConn {
+    id: u64,
+    stream: TcpStream,
+    peer: String,
+    buf: Vec<u8>,
+    /// Response bytes accepted but not yet written to the socket.
+    out: Vec<u8>,
+    /// The client half-closed its write side (`read()` hit EOF). Requests
+    /// already buffered still get their responses — a one-shot
+    /// `printf 'metrics\n' | nc` client must not be dropped before its
+    /// reply is written. The connection dies once `out` drains.
+    read_closed: bool,
+    open: bool,
+}
+
+/// Write as much of `conn.out` as the socket will take without blocking.
+fn try_flush(conn: &mut ControlConn) {
+    while !conn.out.is_empty() {
+        match conn.stream.write(&conn.out) {
+            Ok(0) => {
+                conn.open = false;
+                return;
+            }
+            Ok(n) => {
+                conn.out.drain(..n);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                conn.open = false;
+                return;
+            }
+        }
+    }
+}
+
+/// Non-blocking line-protocol listener. See module docs.
+pub struct ControlServer {
+    listener: TcpListener,
+    conns: Vec<ControlConn>,
+    addr: String,
+    next_conn_id: u64,
+    requests_served: usize,
+}
+
+impl ControlServer {
+    pub fn bind(addr: &str) -> Result<Self, String> {
+        let listener =
+            TcpListener::bind(addr).map_err(|e| format!("control bind {addr}: {e}"))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| format!("nonblocking control listener: {e}"))?;
+        let addr = listener
+            .local_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| addr.to_string());
+        Ok(ControlServer {
+            listener,
+            conns: Vec::new(),
+            addr,
+            next_conn_id: 0,
+            requests_served: 0,
+        })
+    }
+
+    /// The bound address (resolves `:0` to the chosen port).
+    pub fn local_addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Live control connections.
+    pub fn connections(&self) -> usize {
+        self.conns.len()
+    }
+
+    /// Responses accepted (queued or written) since bind.
+    pub fn requests_served(&self) -> usize {
+        self.requests_served
+    }
+
+    /// Response bytes queued but not yet written, across connections.
+    pub fn pending_responses(&self) -> usize {
+        self.conns.iter().map(|c| c.out.len()).sum()
+    }
+
+    /// Write whatever the sockets will take without blocking, dropping
+    /// connections that finished (half-closed with nothing left to send).
+    /// The serve loop calls this after `shutdown` so the final ack gets
+    /// out before the process exits.
+    pub fn flush(&mut self) {
+        for conn in &mut self.conns {
+            try_flush(conn);
+            if conn.read_closed && conn.out.is_empty() {
+                conn.open = false;
+            }
+        }
+        self.conns.retain(|c| c.open);
+    }
+
+    /// Accept waiting clients and read complete request lines. Never
+    /// blocks; returns the requests in per-connection arrival order.
+    pub fn poll(&mut self) -> Result<Vec<ControlRequest>, String> {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    stream
+                        .set_nonblocking(true)
+                        .map_err(|e| format!("nonblocking control conn: {e}"))?;
+                    self.next_conn_id += 1;
+                    self.conns.push(ControlConn {
+                        id: self.next_conn_id,
+                        stream,
+                        peer: peer.to_string(),
+                        buf: Vec::new(),
+                        out: Vec::new(),
+                        read_closed: false,
+                        open: true,
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) => return Err(format!("control accept: {e}")),
+            }
+        }
+        let mut requests = Vec::new();
+        let addr = self.addr.clone();
+        let mut chunk = [0u8; 16 * 1024];
+        for conn in &mut self.conns {
+            // Drain any response bytes an earlier respond() could not
+            // write without blocking.
+            try_flush(conn);
+            // A half-closed client lives until its responses are out.
+            if conn.read_closed {
+                if conn.out.is_empty() {
+                    conn.open = false;
+                }
+                continue;
+            }
+            let mut read_budget = MAX_READ_PER_POLL;
+            while read_budget > 0 {
+                match conn.stream.read(&mut chunk) {
+                    Ok(0) => {
+                        conn.read_closed = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.buf.extend_from_slice(&chunk[..n]);
+                        read_budget = read_budget.saturating_sub(n);
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        conn.open = false;
+                        break;
+                    }
+                }
+            }
+            // Split complete lines off the buffer; a trailing partial line
+            // stays until its newline arrives.
+            while let Some(nl) = conn.buf.iter().position(|&b| b == b'\n') {
+                let line: Vec<u8> = conn.buf.drain(..=nl).collect();
+                let text = String::from_utf8_lossy(&line);
+                let trimmed = text.trim();
+                if trimmed.is_empty() {
+                    continue;
+                }
+                requests.push(ControlRequest {
+                    conn_id: conn.id,
+                    command: parse_command(trimmed),
+                });
+            }
+            // A "line" that long is not a control command (an event stream
+            // pointed at the wrong port, most likely): cut the connection
+            // instead of buffering without bound.
+            if conn.open && conn.buf.len() > MAX_REQUEST_LINE {
+                eprintln!(
+                    "control {addr}: client {} sent a {}-byte line with no newline; \
+                     dropping connection",
+                    conn.peer,
+                    conn.buf.len()
+                );
+                conn.open = false;
+            }
+        }
+        self.conns.retain(|c| c.open);
+        Ok(requests)
+    }
+
+    /// Queue one JSON response line for `req` and write as much as the
+    /// socket takes *without blocking* — the driver thread never waits on
+    /// a control client. Leftover bytes drain on subsequent polls; a
+    /// client that stops reading past [`MAX_PENDING_OUT`] is dropped.
+    pub fn respond(&mut self, req: &ControlRequest, body: &Json) {
+        let Some(conn) = self.conns.iter_mut().find(|c| c.id == req.conn_id) else {
+            return; // client already gone
+        };
+        conn.out.extend_from_slice(format!("{}\n", body.to_string()).as_bytes());
+        try_flush(conn);
+        if conn.open && conn.out.len() > MAX_PENDING_OUT {
+            eprintln!(
+                "control {}: client {} is not reading responses; dropping connection",
+                self.addr, conn.peer
+            );
+            conn.open = false;
+        }
+        self.requests_served += 1;
+        self.conns.retain(|c| c.open);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Response envelopes
+
+/// `{"ok":true,"kind":<kind>,"data":<data>}`
+pub fn ok_response(kind: &str, data: Json) -> Json {
+    Json::from_pairs(vec![("ok", true.into()), ("kind", kind.into()), ("data", data)])
+}
+
+/// `{"ok":false,"error":<message>}`
+pub fn err_response(message: &str) -> Json {
+    Json::from_pairs(vec![("ok", false.into()), ("error", message.into())])
+}
+
+// ---------------------------------------------------------------------------
+// The one query path (CLI printing and socket responses)
+
+/// Point-in-time fleet report — the single query path behind both the
+/// periodic console snapshot and the socket's `fleet-report` verb.
+pub fn fleet_report(server: &LiveServer) -> FleetReport {
+    server.registry().report()
+}
+
+/// The console rendering of [`fleet_report`] (what `bigroots serve`
+/// prints on its snapshot cadence).
+pub fn fleet_report_text(server: &LiveServer) -> String {
+    fleet_report(server).render()
+}
+
+/// JSON shape of a [`FleetReport`].
+pub fn fleet_report_json(r: &FleetReport) -> Json {
+    let cause_incidence: Vec<Json> = r
+        .cause_incidence
+        .iter()
+        .map(|(kind, n)| {
+            Json::from_pairs(vec![
+                ("feature", kind.name().into()),
+                ("count", (*n).into()),
+                ("share", Json::Num(r.cause_fraction(*kind))),
+            ])
+        })
+        .collect();
+    let baselines: Vec<Json> = r
+        .baselines
+        .iter()
+        .map(|b| {
+            Json::from_pairs(vec![
+                ("feature", b.kind.name().into()),
+                ("count", b.count.into()),
+                ("p50", Json::Num(b.p50)),
+                ("p95", Json::Num(b.p95)),
+                ("straggler_p50", Json::Num(b.straggler_p50)),
+                ("cause_count", b.cause_count.into()),
+            ])
+        })
+        .collect();
+    Json::from_pairs(vec![
+        ("jobs_completed", r.jobs_completed.into()),
+        ("stages", r.stages.into()),
+        ("tasks", r.tasks.into()),
+        ("straggler_tasks", r.straggler_tasks.into()),
+        ("straggler_rate", Json::Num(r.straggler_rate())),
+        ("stage_median_p50", Json::Num(r.stage_median_p50)),
+        ("stage_median_p95", Json::Num(r.stage_median_p95)),
+        ("shuffle_heavy", r.shuffle_heavy.into()),
+        ("shuffle_heavy_gc", r.shuffle_heavy_gc.into()),
+        ("shuffle_heavy_gc_fraction", Json::Num(r.shuffle_heavy_gc_fraction())),
+        ("cause_incidence", Json::Arr(cause_incidence)),
+        ("baselines", Json::Arr(baselines)),
+    ])
+}
+
+/// JSON shape of [`LiveMetrics`].
+pub fn live_metrics_json(m: &LiveMetrics) -> Json {
+    let per_shard: Vec<Json> = m
+        .per_shard
+        .iter()
+        .map(|s| {
+            Json::from_pairs(vec![
+                ("shard", s.shard.into()),
+                ("events", s.events.into()),
+                ("stages", s.stages.into()),
+                ("resident", s.resident.into()),
+                ("resident_high", s.resident_high.into()),
+                ("evicted", s.evicted.into()),
+                ("cache_hits", s.cache_hits.into()),
+                ("cache_misses", s.cache_misses.into()),
+            ])
+        })
+        .collect();
+    Json::from_pairs(vec![
+        ("events_total", m.events_total.into()),
+        ("jobs_completed", m.jobs_completed.into()),
+        ("evictions_live", m.evictions_live.into()),
+        ("stages_analyzed", m.stages_analyzed.into()),
+        ("resident_high_water", m.resident_high_water.into()),
+        ("resident_now", m.resident_now.into()),
+        ("events_dropped", m.events_dropped.into()),
+        ("dropped_partial_lines", m.dropped_partial_lines.into()),
+        ("cache_hits", m.cache_hits.into()),
+        ("cache_misses", m.cache_misses.into()),
+        ("cache_evictions", m.cache_evictions.into()),
+        ("elapsed_secs", Json::Num(m.elapsed_secs)),
+        ("events_per_sec", Json::Num(m.events_per_sec)),
+        ("per_shard", Json::Arr(per_shard)),
+    ])
+}
+
+/// JSON summary of one retired job (what the `job <id>` verb returns).
+/// Job and stage *identities* are decimal strings, not JSON numbers: a
+/// tenant hashing 64-bit ids past 2^53 would otherwise get a rounded id
+/// back (`Json::Num` is an f64 — see [`crate::live::persist`], which
+/// makes the same call for its counters).
+pub fn job_summary_json(j: &CompletedJob) -> Json {
+    let stragglers: usize = j.analyses.iter().map(|a| a.stragglers.rows.len()).sum();
+    let causes: usize = j.analyses.iter().map(|a| a.causes.len()).sum();
+    Json::from_pairs(vec![
+        ("job_id", j.job_id.to_string().into()),
+        ("incarnation", j.incarnation.into()),
+        ("ended", j.ended.into()),
+        ("evicted_live", j.evicted_live.into()),
+        ("stages", j.analyses.len().into()),
+        ("stragglers", stragglers.into()),
+        ("causes", causes.into()),
+        ("fleet_flags", j.fleet_flags.len().into()),
+        (
+            "incomplete",
+            Json::Arr(j.incomplete.iter().map(|s| Json::Str(s.to_string())).collect()),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::{Duration, Instant};
+
+    #[test]
+    fn parses_every_verb() {
+        assert_eq!(parse_command("fleet-report"), ControlCommand::FleetReport);
+        assert_eq!(parse_command("  metrics  "), ControlCommand::Metrics);
+        assert_eq!(parse_command("snapshot"), ControlCommand::Snapshot);
+        assert_eq!(parse_command("shutdown"), ControlCommand::Shutdown);
+        assert_eq!(parse_command("job 42"), ControlCommand::Job(42));
+        assert!(matches!(parse_command("job"), ControlCommand::Invalid(_)));
+        assert!(matches!(parse_command("job x"), ControlCommand::Invalid(_)));
+        assert!(matches!(parse_command("job 1 2"), ControlCommand::Invalid(_)));
+        assert!(matches!(parse_command("bogus"), ControlCommand::Invalid(_)));
+        assert!(matches!(parse_command("fleet-report extra"), ControlCommand::Invalid(_)));
+    }
+
+    #[test]
+    fn envelopes_are_well_formed() {
+        let ok = ok_response("metrics", Json::obj());
+        assert_eq!(ok.get("ok").as_bool(), Some(true));
+        assert_eq!(ok.get("kind").as_str(), Some("metrics"));
+        let err = err_response("nope");
+        assert_eq!(err.get("ok").as_bool(), Some(false));
+        assert_eq!(err.get("error").as_str(), Some("nope"));
+        // Single-line framing survives serialization.
+        assert!(!ok.to_string().contains('\n'));
+    }
+
+    #[test]
+    fn socket_requests_answered_in_order() {
+        use std::io::{BufRead, BufReader, Write as _};
+        let mut srv = match ControlServer::bind("127.0.0.1:0") {
+            Ok(s) => s,
+            // Sandboxed environments may forbid binding; parsing and
+            // envelope logic are covered above.
+            Err(_) => return,
+        };
+        let addr = srv.local_addr().to_string();
+        let client = std::thread::spawn(move || {
+            let mut c = TcpStream::connect(&addr).unwrap();
+            c.write_all(b"metrics\njob 3\nbogus\n").unwrap();
+            let mut reader = BufReader::new(c);
+            let mut lines = Vec::new();
+            for _ in 0..3 {
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                lines.push(line);
+            }
+            lines
+        });
+        let mut served = 0;
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while served < 3 {
+            assert!(Instant::now() < deadline, "control test timed out");
+            for req in srv.poll().unwrap() {
+                let resp = match &req.command {
+                    ControlCommand::Metrics => ok_response("metrics", Json::obj()),
+                    ControlCommand::Job(id) => {
+                        ok_response("job", Json::from_pairs(vec![("job_id", (*id).into())]))
+                    }
+                    ControlCommand::Invalid(msg) => err_response(msg),
+                    other => err_response(&format!("unexpected {other:?}")),
+                };
+                srv.respond(&req, &resp);
+                served += 1;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // Drain any response bytes a WouldBlock deferred to later polls.
+        for _ in 0..100 {
+            let _ = srv.poll();
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let lines = client.join().unwrap();
+        let first = Json::parse(lines[0].trim()).unwrap();
+        assert_eq!(first.get("ok").as_bool(), Some(true));
+        assert_eq!(first.get("kind").as_str(), Some("metrics"));
+        let second = Json::parse(lines[1].trim()).unwrap();
+        assert_eq!(second.get("data").get("job_id").as_u64(), Some(3));
+        let third = Json::parse(lines[2].trim()).unwrap();
+        assert_eq!(third.get("ok").as_bool(), Some(false));
+        assert_eq!(srv.requests_served(), 3);
+    }
+
+    #[test]
+    fn fleet_report_json_shape() {
+        let server = LiveServer::new(crate::live::ingest::LiveConfig::default());
+        let r = fleet_report(&server);
+        let j = fleet_report_json(&r);
+        assert_eq!(j.get("jobs_completed").as_usize(), Some(0));
+        assert!(j.get("baselines").as_arr().is_some());
+        // The console path renders the same report.
+        assert!(fleet_report_text(&server).contains("fleet baseline"));
+        drop(server);
+    }
+}

@@ -27,7 +27,16 @@
 //!   number of *concurrently running* jobs, not jobs ever seen.
 //! - **Fleet registry**: the collector folds every completed stage into a
 //!   [`FleetRegistry`] and attaches the second-pass fleet verdict to each
-//!   job as it retires.
+//!   job as it retires. The registry can be restored from a
+//!   [`crate::live::persist`] snapshot on boot and handed back at
+//!   shutdown ([`LiveServer::finish_with_registry`]), so the cross-job
+//!   baseline survives restarts.
+//! - **Shared stats cache**: all shard workers memoize through one
+//!   lock-striped [`SharedStatsCache`] — a repeated stage shape hits even
+//!   when rendezvous routing sent its first occurrence to a different
+//!   shard — and, with `route_large_tasks` set, dispatch large stages to
+//!   the XLA-capable backend via
+//!   [`crate::analysis::router::RoutingBackend`].
 //!
 //! Determinism: a job's events all hash to one shard and stay in order,
 //! so per-job analyses are bit-identical to the offline batch pipeline —
@@ -43,7 +52,8 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::analysis::bigroots::{analyze_stage_with_stats, BigRootsConfig, StageAnalysis};
-use crate::analysis::cache::CachedBackend;
+use crate::analysis::cache::{SharedCachedBackend, SharedStatsCache};
+use crate::analysis::router::RoutingBackend;
 use crate::analysis::stats::{NativeBackend, StatsBackend};
 use crate::live::lifecycle::{Lifecycle, LifecycleConfig};
 use crate::live::registry::{FleetFlag, FleetRegistry, FleetReport};
@@ -62,10 +72,19 @@ pub struct LiveConfig {
     pub queue_capacity: usize,
     /// Job eviction policy.
     pub lifecycle: LifecycleConfig,
-    /// Per-shard stage-stats memo capacity
-    /// ([`crate::analysis::cache::CachedBackend`]); 0 disables caching.
-    /// Bit-identical results either way.
+    /// Total stage-stats memo capacity, shared by *all* shard workers
+    /// through one lock-striped [`SharedStatsCache`] — a tenant's repeated
+    /// stage shape hits no matter which shard rendezvous routing picked.
+    /// 0 disables caching. Bit-identical results either way.
     pub stats_cache_capacity: usize,
+    /// Lock stripes in the shared stage-stats cache (contention knob;
+    /// never more than the capacity).
+    pub stats_cache_stripes: usize,
+    /// Route stages with at least this many tasks to the large-stage
+    /// backend ([`crate::analysis::router::RoutingBackend`]: XLA-capable,
+    /// native-stubbed without artifacts). 0 keeps every stage on the
+    /// native backend.
+    pub route_large_tasks: usize,
     /// Analyzer thresholds (paper defaults).
     pub bigroots: BigRootsConfig,
     /// Fleet-verdict cold-start guard (min observations per baseline).
@@ -80,6 +99,8 @@ impl Default for LiveConfig {
             queue_capacity: 8,
             lifecycle: LifecycleConfig::default(),
             stats_cache_capacity: 256,
+            stats_cache_stripes: 8,
+            route_large_tasks: 0,
             bigroots: BigRootsConfig::default(),
             fleet_min_samples: 64,
         }
@@ -149,11 +170,19 @@ pub struct LiveMetrics {
     pub resident_now: usize,
     /// Stray post-eviction events dropped.
     pub events_dropped: usize,
+    /// Partial lines lost to mid-line client disconnects, as reported by
+    /// the event source (see
+    /// [`crate::live::source::EventSource::dropped_partial_lines`]).
+    pub dropped_partial_lines: usize,
     /// Stage-stats memo hits across shard backends (live — shard workers
     /// publish after every ingest batch, so fleet snapshots see them).
+    /// The memo is the cross-shard [`SharedStatsCache`], so hits include
+    /// shapes another shard computed.
     pub cache_hits: usize,
     /// Stage-stats memo misses (see `cache_hits`).
     pub cache_misses: usize,
+    /// Entries evicted from the shared stage-stats cache (global).
+    pub cache_evictions: usize,
     pub per_shard: Vec<LiveShardMetrics>,
     pub elapsed_secs: f64,
     pub events_per_sec: f64,
@@ -213,7 +242,11 @@ pub struct LiveServer {
     workers: Vec<JoinHandle<()>>,
     results_rx: Receiver<LiveMsg>,
     stats: Vec<Arc<ShardStats>>,
+    /// The cross-shard stage-stats cache every worker shares.
+    shared_cache: Arc<SharedStatsCache>,
     registry: FleetRegistry,
+    /// Cumulative partial-line drops reported by the event source.
+    source_dropped_partial_lines: usize,
     /// (job id, incarnation) → collected (seq, analysis, fleet flags).
     collected: HashMap<(u64, u32), Vec<(u64, StageAnalysis, Vec<FleetFlag>)>>,
     completed: Vec<CompletedJob>,
@@ -229,6 +262,8 @@ impl LiveServer {
         cfg.ingest_batch = cfg.ingest_batch.max(1);
         cfg.queue_capacity = cfg.queue_capacity.max(1);
         let (results_tx, results_rx) = channel::<LiveMsg>();
+        let shared_cache =
+            Arc::new(SharedStatsCache::new(cfg.stats_cache_capacity, cfg.stats_cache_stripes));
         let mut senders = Vec::with_capacity(cfg.shards);
         let mut workers = Vec::with_capacity(cfg.shards);
         let mut stats = Vec::with_capacity(cfg.shards);
@@ -239,9 +274,18 @@ impl LiveServer {
             let worker_tx = results_tx.clone();
             let bigroots = cfg.bigroots;
             let lifecycle = cfg.lifecycle.clone();
-            let cache_capacity = cfg.stats_cache_capacity;
+            let worker_cache = Arc::clone(&shared_cache);
+            let route_large_tasks = cfg.route_large_tasks;
             workers.push(std::thread::spawn(move || {
-                shard_worker(rx, worker_tx, worker_stats, bigroots, lifecycle, cache_capacity);
+                shard_worker(
+                    rx,
+                    worker_tx,
+                    worker_stats,
+                    bigroots,
+                    lifecycle,
+                    worker_cache,
+                    route_large_tasks,
+                );
             }));
             senders.push(tx);
             stats.push(shard_stats);
@@ -259,6 +303,8 @@ impl LiveServer {
             workers,
             results_rx,
             stats,
+            shared_cache,
+            source_dropped_partial_lines: 0,
             collected: HashMap::new(),
             completed: Vec::new(),
             jobs_completed: 0,
@@ -299,9 +345,17 @@ impl LiveServer {
 
     /// Push partially-filled ingest batches through and absorb any ready
     /// results. Call when the source is idle so analyses don't wait for a
-    /// batch to fill.
+    /// batch to fill. Also nudges each shard's lifecycle scan (an empty
+    /// batch is the idle tick), so a job that drained with the stream's
+    /// final events retires without waiting for more traffic. The tick is
+    /// best-effort (`try_send`): a shard with a full queue has work in
+    /// flight and scans on its own — pump stays non-blocking, so the
+    /// driver (and control plane) never stall behind a busy shard.
     pub fn pump(&mut self) {
         self.flush_pending();
+        for shard in 0..self.cfg.shards {
+            let _ = self.senders[shard].try_send(Vec::new());
+        }
         self.drain_results();
     }
 
@@ -330,6 +384,21 @@ impl LiveServer {
     /// Read-only fleet registry access (snapshot queries mid-run).
     pub fn registry(&self) -> &FleetRegistry {
         &self.registry
+    }
+
+    /// Replace the fleet registry with a restored snapshot
+    /// ([`crate::live::persist`]) — call before feeding any events so the
+    /// server resumes exactly where the snapshotted deployment stopped.
+    pub fn restore_registry(&mut self, registry: FleetRegistry) {
+        self.registry = registry;
+    }
+
+    /// Record the event source's cumulative partial-line drop count
+    /// (surfaced in [`LiveMetrics::dropped_partial_lines`]). The driver
+    /// loop calls this with
+    /// [`crate::live::source::EventSource::dropped_partial_lines`].
+    pub fn record_source_drops(&mut self, dropped_partial_lines: usize) {
+        self.source_dropped_partial_lines = dropped_partial_lines;
     }
 
     fn drain_results(&mut self) {
@@ -410,8 +479,10 @@ impl LiveServer {
                 .iter()
                 .map(|s| s.dropped.load(Ordering::Relaxed))
                 .sum(),
+            dropped_partial_lines: self.source_dropped_partial_lines,
             cache_hits: per_shard.iter().map(|s| s.cache_hits).sum(),
             cache_misses: per_shard.iter().map(|s| s.cache_misses).sum(),
+            cache_evictions: self.shared_cache.evictions() as usize,
             per_shard,
             elapsed_secs: elapsed,
             events_per_sec: if elapsed > 0.0 {
@@ -424,7 +495,15 @@ impl LiveServer {
 
     /// End of stream: flush the ingest buffers, retire every resident
     /// job, wait for the shard workers, and assemble the report.
-    pub fn finish(mut self) -> LiveReport {
+    pub fn finish(self) -> LiveReport {
+        self.finish_with_registry().0
+    }
+
+    /// [`LiveServer::finish`], additionally handing back the final
+    /// [`FleetRegistry`] so the caller can persist it
+    /// ([`crate::live::persist::save_snapshot`]) — the drain-then-snapshot
+    /// shutdown path of `bigroots serve`.
+    pub fn finish_with_registry(mut self) -> (LiveReport, FleetRegistry) {
         self.flush_pending();
         // Dropping the queue senders closes the shards' input; each
         // worker drains its queue, retires its jobs and exits.
@@ -439,29 +518,45 @@ impl LiveServer {
         let metrics = self.metrics();
         let mut jobs = std::mem::take(&mut self.completed);
         jobs.sort_by_key(|j| (j.job_id, j.incarnation));
-        LiveReport { jobs, fleet: self.registry.report(), metrics }
+        let registry = self.registry.clone();
+        (LiveReport { jobs, fleet: self.registry.report(), metrics }, registry)
     }
 }
 
 /// One shard's worker loop: demux → lifecycle → analyze → report. The
-/// shard owns a memoizing backend — repeated stage shapes across its jobs
-/// skip the stats kernel, and the hit/miss counters publish to
-/// [`ShardStats`] after every ingest batch so snapshots stay live.
+/// shard's backend memoizes through the *shared* striped cache —
+/// repeated stage shapes skip the stats kernel even when another shard
+/// computed them — and routes large stages to the XLA-capable backend
+/// when routing is enabled. Hit/miss counters (this worker's lookups)
+/// publish to [`ShardStats`] after every ingest batch so snapshots stay
+/// live.
 fn shard_worker(
     rx: crate::util::queue::BoundedReceiver<Vec<TaggedEvent>>,
     tx: Sender<LiveMsg>,
     stats: Arc<ShardStats>,
     bigroots: BigRootsConfig,
     lifecycle_cfg: LifecycleConfig,
-    cache_capacity: usize,
+    cache: Arc<SharedStatsCache>,
+    route_large_tasks: usize,
 ) {
-    let mut backend = CachedBackend::new(NativeBackend::new(), cache_capacity);
+    // Built inside the worker thread, so the large-stage backend never has
+    // to cross a thread boundary.
+    let inner: Box<dyn StatsBackend + Send> = if route_large_tasks > 0 {
+        Box::new(RoutingBackend::new(
+            NativeBackend::new(),
+            crate::analysis::router::auto_large_backend(),
+            route_large_tasks,
+        ))
+    } else {
+        Box::new(NativeBackend::new())
+    };
+    let mut backend = SharedCachedBackend::new(inner, cache);
     let mut lc = Lifecycle::new(lifecycle_cfg, bigroots.edge_width);
     let analyze_and_send =
         |job_id: u64,
          incarnation: u32,
          ready: Vec<crate::coordinator::streaming::ReadyStage>,
-         backend: &mut CachedBackend<NativeBackend>,
+         backend: &mut SharedCachedBackend<Box<dyn StatsBackend + Send>>,
          stats: &ShardStats,
          tx: &Sender<LiveMsg>| {
             for r in ready {
@@ -477,16 +572,37 @@ fn shard_worker(
                 });
             }
         };
-    let publish = |backend: &CachedBackend<NativeBackend>, lc: &Lifecycle, stats: &ShardStats| {
+    let publish = |backend: &SharedCachedBackend<Box<dyn StatsBackend + Send>>,
+                   lc: &Lifecycle,
+                   stats: &ShardStats| {
         stats.resident.store(lc.resident(), Ordering::Relaxed);
         stats.resident_high.store(lc.resident_high(), Ordering::Relaxed);
         stats.evicted.store(lc.evicted_total(), Ordering::Relaxed);
         stats.dropped.store(lc.dropped(), Ordering::Relaxed);
-        let c = backend.counters();
-        stats.cache_hits.store(c.hits as usize, Ordering::Relaxed);
-        stats.cache_misses.store(c.misses as usize, Ordering::Relaxed);
+        // Lock-free: counters() would sum evictions across every stripe
+        // of the shared cache, and this publish runs per batch/idle tick.
+        let (hits, misses) = backend.lookup_counts();
+        stats.cache_hits.store(hits as usize, Ordering::Relaxed);
+        stats.cache_misses.store(misses as usize, Ordering::Relaxed);
     };
     while let Some(batch) = rx.recv() {
+        if batch.is_empty() {
+            // Idle tick from `LiveServer::pump`: run the eviction scan so
+            // jobs that drained at the tail of the stream retire now.
+            lc.force_scan();
+            for e in lc.take_evictions() {
+                analyze_and_send(e.job_id, e.incarnation, e.flushed, &mut backend, &stats, &tx);
+                let _ = tx.send(LiveMsg::Evicted {
+                    job_id: e.job_id,
+                    incarnation: e.incarnation,
+                    ended: e.ended,
+                    incomplete: e.incomplete,
+                    live: true,
+                });
+            }
+            publish(&backend, &lc, &stats);
+            continue;
+        }
         for ev in batch {
             stats.events.fetch_add(1, Ordering::Relaxed);
             let job_id = ev.job_id;

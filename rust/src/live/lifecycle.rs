@@ -230,6 +230,17 @@ impl Lifecycle {
         });
     }
 
+    /// Run the eviction scan now, regardless of the event cadence. A job
+    /// whose *last* stage drained in the stream's final few events would
+    /// otherwise sit resident until the next event arrives — on an idle
+    /// persistent source, that is never. The live server sends an idle
+    /// tick through each shard queue so `serve --listen` retires drained
+    /// jobs promptly.
+    pub fn force_scan(&mut self) {
+        self.events_since_scan = 0;
+        self.scan();
+    }
+
     /// Take the evictions recorded since the last call.
     pub fn take_evictions(&mut self) -> Vec<EvictedJob> {
         std::mem::take(&mut self.evictions)

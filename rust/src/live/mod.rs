@@ -1,20 +1,26 @@
 //! The live multi-tenant ingest subsystem: a long-running analysis
-//! *server* on top of the per-job streaming analyzer.
+//! *server* on top of the per-job streaming analyzer — now a durable,
+//! queryable control plane.
 //!
-//! Four layers, composed left to right:
+//! Six layers, composed left to right:
 //!
 //! ```text
-//!  sources ──▶ sharded ingest ──▶ job lifecycle GC ──▶ fleet registry
-//!  (source)      (ingest)           (lifecycle)          (registry)
+//!  sources ──▶ sharded ingest ──▶ lifecycle GC ──▶ analysis/routing ──▶ registry ──▶ control
+//!  (source)      (ingest)         (lifecycle)    (analysis::router +   (registry +   plane
+//!                                                 shared stats cache)   persist)    (control)
 //! ```
 //!
 //! - [`source`] — pluggable transports ([`source::EventSource`]): tail a
 //!   growing NDJSON file with rotation detection, accept line-delimited
-//!   TCP clients, read stdin, or replay memory;
+//!   TCP clients (mid-line disconnects are logged and counted, never
+//!   silently dropped), read stdin, or replay memory;
 //! - [`ingest`] — [`ingest::LiveServer`]: one worker thread per shard
 //!   behind a bounded queue (per-shard backpressure), each running demux,
 //!   watermark accounting, feature extraction and the BigRoots rules for
-//!   its slice of the job population;
+//!   its slice of the job population. Workers memoize through one
+//!   lock-striped [`crate::analysis::cache::SharedStatsCache`] (repeated
+//!   shapes hit across shards) and can route large stages to the
+//!   XLA-capable backend ([`crate::analysis::router::RoutingBackend`]);
 //! - [`lifecycle`] — [`lifecycle::Lifecycle`]: flush-and-evict `JobState`
 //!   after `JobEnd` plus a quiescence window, with incarnation counters
 //!   so a revived job id is a fresh job — bounded memory on unbounded
@@ -23,18 +29,31 @@
 //!   quantile sketches (P²) and root-cause incidence counters, fleet
 //!   snapshot queries, and a second verdict pass that flags stages
 //!   anomalous versus the *fleet* baseline, not just their own stage
-//!   median.
+//!   median;
+//! - [`persist`] — versioned, bit-exact registry snapshots (atomic
+//!   write-temp-rename; restore on boot), so the baseline survives server
+//!   restarts;
+//! - [`control`] — [`control::ControlServer`]: a line-delimited TCP
+//!   control/query protocol (`fleet-report`, `job <id>`, `metrics`,
+//!   `snapshot`, `shutdown`) sharing one query path with the CLI's
+//!   periodic snapshot printing.
 //!
-//! `bigroots serve --tail/--listen` and `examples/live_tail.rs` drive the
+//! `bigroots serve --tail/--listen --control-port --snapshot-path` and
+//! `examples/live_tail.rs` / `examples/control_client.rs` drive the
 //! subsystem end to end; `rust/tests/live_integration.rs` pins the
-//! batch-parity, eviction and revival contracts.
+//! batch-parity, eviction, revival, restart-parity and cross-shard-cache
+//! contracts.
 
+pub mod control;
 pub mod ingest;
 pub mod lifecycle;
+pub mod persist;
 pub mod registry;
 pub mod source;
 
+pub use control::{ControlCommand, ControlRequest, ControlServer};
 pub use ingest::{CompletedJob, LiveConfig, LiveMetrics, LiveReport, LiveServer};
 pub use lifecycle::{Lifecycle, LifecycleConfig};
+pub use persist::{load_snapshot, save_snapshot};
 pub use registry::{FleetFlag, FleetRegistry, FleetReport, QuantileSketch};
 pub use source::{EventSource, MemorySource, SourcePoll, StdinSource, TailSource, TcpSource};

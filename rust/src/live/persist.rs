@@ -1,0 +1,393 @@
+//! Durable fleet-baseline snapshots — what makes the registry survive a
+//! server restart.
+//!
+//! The [`FleetRegistry`] is exactly the state a long-running deployment
+//! cannot afford to lose: P² sketch markers accumulate over *every job
+//! ever seen*, and the paper's fleet verdicts are only as good as that
+//! history. This module serializes the full registry — sketch marker
+//! state, incidence counters, job/stage/task counts — to a **versioned
+//! JSON document** and restores it bit-exactly:
+//!
+//! - every `f64` is encoded as its 16-hex-digit IEEE-754 bit pattern, so
+//!   the round trip is *bit-identical* (no decimal shortest-repr detours,
+//!   no `±inf` corner cases — a fresh sketch's `min = +inf` survives);
+//! - writes are **atomic**: the document lands in `<path>.tmp` first and
+//!   is renamed over the target, so a crash mid-write leaves the previous
+//!   snapshot intact;
+//! - the document carries a `kind` marker and a `version`; decode rejects
+//!   anything it does not understand instead of guessing.
+//!
+//! `LiveServer::restore_registry` + `bigroots serve --snapshot-path`
+//! complete the loop: restore on boot, write on cadence and on shutdown.
+//! `rust/tests/live_integration.rs` proves a restored server's final
+//! [`FleetReport`](crate::live::registry::FleetReport) is identical to an
+//! uninterrupted run.
+
+use crate::analysis::features::FeatureKind;
+use crate::live::registry::{FeatureBaseline, FleetRegistry, QuantileSketch};
+use crate::util::json::Json;
+use crate::util::stats::{P2Quantile, Welford};
+
+/// Current snapshot document version. Bump on any layout change.
+pub const SNAPSHOT_VERSION: u64 = 1;
+
+/// Document kind marker, so a stray JSON file is rejected early.
+pub const SNAPSHOT_KIND: &str = "bigroots-fleet-snapshot";
+
+// ---------------------------------------------------------------------------
+// Bit-exact f64 codec
+
+fn fbits(x: f64) -> Json {
+    Json::Str(format!("{:016x}", x.to_bits()))
+}
+
+fn fbits_arr(xs: &[f64]) -> Json {
+    Json::Arr(xs.iter().map(|&x| fbits(x)).collect())
+}
+
+fn read_fbits(j: &Json, what: &str) -> Result<f64, String> {
+    let s = j
+        .as_str()
+        .ok_or_else(|| format!("{what}: expected a hex f64-bits string"))?;
+    let bits =
+        u64::from_str_radix(s, 16).map_err(|e| format!("{what}: bad hex '{s}' ({e})"))?;
+    Ok(f64::from_bits(bits))
+}
+
+fn read_fbits5(j: &Json, what: &str) -> Result<[f64; 5], String> {
+    let arr = j.as_arr().ok_or_else(|| format!("{what}: expected an array"))?;
+    if arr.len() != 5 {
+        return Err(format!("{what}: expected 5 elements, got {}", arr.len()));
+    }
+    let mut out = [0.0; 5];
+    for (i, v) in arr.iter().enumerate() {
+        out[i] = read_fbits(v, what)?;
+    }
+    Ok(out)
+}
+
+// Counters travel as decimal *strings*, not JSON numbers: `Json::Num` is
+// an f64, which silently rounds integers past 2^53 — a fleet-lifetime
+// task counter can get there, and this codec's contract is exactness.
+
+fn count_json(x: u64) -> Json {
+    Json::Str(x.to_string())
+}
+
+fn read_count_u64(j: &Json, key: &str) -> Result<u64, String> {
+    let s = j
+        .get(key)
+        .as_str()
+        .ok_or_else(|| format!("field '{key}': expected a decimal-string counter"))?;
+    s.parse::<u64>().map_err(|e| format!("field '{key}': bad counter '{s}' ({e})"))
+}
+
+fn read_count(j: &Json, key: &str) -> Result<usize, String> {
+    Ok(read_count_u64(j, key)? as usize)
+}
+
+/// The `version` field stays a plain JSON number (it is tiny).
+fn read_u64(j: &Json, key: &str) -> Result<u64, String> {
+    j.get(key)
+        .as_u64()
+        .ok_or_else(|| format!("field '{key}': expected an unsigned integer"))
+}
+
+// ---------------------------------------------------------------------------
+// Encoders
+
+fn encode_welford(w: &Welford) -> Json {
+    Json::from_pairs(vec![
+        ("n", count_json(w.n)),
+        ("mean", fbits(w.mean)),
+        ("m2", fbits(w.m2)),
+    ])
+}
+
+fn decode_welford(j: &Json) -> Result<Welford, String> {
+    Ok(Welford {
+        n: read_count_u64(j, "n")?,
+        mean: read_fbits(j.get("mean"), "welford.mean")?,
+        m2: read_fbits(j.get("m2"), "welford.m2")?,
+    })
+}
+
+fn encode_p2(p2: &P2Quantile) -> Json {
+    Json::from_pairs(vec![
+        ("p", fbits(p2.p)),
+        ("q", fbits_arr(&p2.q)),
+        ("n", fbits_arr(&p2.n)),
+        ("np", fbits_arr(&p2.np)),
+        ("dn", fbits_arr(&p2.dn)),
+        ("count", count_json(p2.count as u64)),
+    ])
+}
+
+fn decode_p2(j: &Json) -> Result<P2Quantile, String> {
+    Ok(P2Quantile {
+        p: read_fbits(j.get("p"), "p2.p")?,
+        q: read_fbits5(j.get("q"), "p2.q")?,
+        n: read_fbits5(j.get("n"), "p2.n")?,
+        np: read_fbits5(j.get("np"), "p2.np")?,
+        dn: read_fbits5(j.get("dn"), "p2.dn")?,
+        count: read_count(j, "count")?,
+    })
+}
+
+fn encode_sketch(s: &QuantileSketch) -> Json {
+    Json::from_pairs(vec![
+        ("count", count_json(s.count as u64)),
+        ("min", fbits(s.min)),
+        ("max", fbits(s.max)),
+        ("mean", encode_welford(&s.mean)),
+        ("p50", encode_p2(&s.p50)),
+        ("p90", encode_p2(&s.p90)),
+        ("p95", encode_p2(&s.p95)),
+    ])
+}
+
+fn decode_sketch(j: &Json) -> Result<QuantileSketch, String> {
+    Ok(QuantileSketch {
+        count: read_count(j, "count")?,
+        min: read_fbits(j.get("min"), "sketch.min")?,
+        max: read_fbits(j.get("max"), "sketch.max")?,
+        mean: decode_welford(j.get("mean"))?,
+        p50: decode_p2(j.get("p50"))?,
+        p90: decode_p2(j.get("p90"))?,
+        p95: decode_p2(j.get("p95"))?,
+    })
+}
+
+/// Encode the full registry state as a versioned JSON document.
+pub fn encode_registry(reg: &FleetRegistry) -> Json {
+    let features: Vec<Json> = reg
+        .features
+        .iter()
+        .map(|b| {
+            Json::from_pairs(vec![
+                ("kind", b.kind.name().into()),
+                ("cause_count", count_json(b.cause_count as u64)),
+                ("all", encode_sketch(&b.all)),
+                ("stragglers", encode_sketch(&b.stragglers)),
+            ])
+        })
+        .collect();
+    let fleet = Json::from_pairs(vec![
+        ("min_samples", count_json(reg.min_samples as u64)),
+        ("jobs_completed", count_json(reg.jobs_completed as u64)),
+        ("stages", count_json(reg.stages as u64)),
+        ("tasks", count_json(reg.tasks as u64)),
+        ("straggler_tasks", count_json(reg.straggler_tasks as u64)),
+        ("shuffle_heavy", count_json(reg.shuffle_heavy as u64)),
+        ("shuffle_heavy_gc", count_json(reg.shuffle_heavy_gc as u64)),
+        ("stage_medians", encode_sketch(&reg.stage_medians)),
+        ("features", Json::Arr(features)),
+    ]);
+    Json::from_pairs(vec![
+        ("kind", SNAPSHOT_KIND.into()),
+        ("version", SNAPSHOT_VERSION.into()),
+        ("fleet", fleet),
+    ])
+}
+
+/// Decode a snapshot document back into a registry. Strict: the kind
+/// marker, version, and the full feature set must match this build.
+pub fn decode_registry(j: &Json) -> Result<FleetRegistry, String> {
+    let kind = j
+        .get("kind")
+        .as_str()
+        .ok_or_else(|| "missing 'kind' marker (not a fleet snapshot?)".to_string())?;
+    if kind != SNAPSHOT_KIND {
+        return Err(format!("unexpected document kind '{kind}' (want '{SNAPSHOT_KIND}')"));
+    }
+    let version = read_u64(j, "version")?;
+    if version != SNAPSHOT_VERSION {
+        return Err(format!(
+            "snapshot version {version} not supported (this build reads {SNAPSHOT_VERSION})"
+        ));
+    }
+    let fleet = j.get("fleet");
+    let feats = fleet
+        .get("features")
+        .as_arr()
+        .ok_or_else(|| "field 'features': expected an array".to_string())?;
+    if feats.len() != FeatureKind::COUNT {
+        return Err(format!(
+            "snapshot has {} feature baselines, this build has {}",
+            feats.len(),
+            FeatureKind::COUNT
+        ));
+    }
+    let mut features: Vec<Option<FeatureBaseline>> =
+        (0..FeatureKind::COUNT).map(|_| None).collect();
+    for f in feats {
+        let name = f
+            .get("kind")
+            .as_str()
+            .ok_or_else(|| "feature 'kind': expected a string".to_string())?;
+        let kind = FeatureKind::ALL
+            .iter()
+            .copied()
+            .find(|k| k.name() == name)
+            .ok_or_else(|| format!("unknown feature kind '{name}'"))?;
+        let slot = &mut features[kind.index()];
+        if slot.is_some() {
+            return Err(format!("duplicate feature kind '{name}'"));
+        }
+        *slot = Some(FeatureBaseline {
+            kind,
+            all: decode_sketch(f.get("all"))?,
+            stragglers: decode_sketch(f.get("stragglers"))?,
+            cause_count: read_count(f, "cause_count")?,
+        });
+    }
+    Ok(FleetRegistry {
+        min_samples: read_count(fleet, "min_samples")?.max(1),
+        jobs_completed: read_count(fleet, "jobs_completed")?,
+        stages: read_count(fleet, "stages")?,
+        tasks: read_count(fleet, "tasks")?,
+        straggler_tasks: read_count(fleet, "straggler_tasks")?,
+        features: features
+            .into_iter()
+            .map(|f| f.expect("every feature slot filled (checked above)"))
+            .collect(),
+        stage_medians: decode_sketch(fleet.get("stage_medians"))?,
+        shuffle_heavy: read_count(fleet, "shuffle_heavy")?,
+        shuffle_heavy_gc: read_count(fleet, "shuffle_heavy_gc")?,
+    })
+}
+
+/// Write a snapshot atomically: serialize to `<path>.tmp`, then rename
+/// over `path`. A crash mid-write leaves the previous snapshot intact.
+pub fn save_snapshot(reg: &FleetRegistry, path: &str) -> Result<(), String> {
+    let tmp = format!("{path}.tmp");
+    let doc = encode_registry(reg).to_pretty();
+    std::fs::write(&tmp, doc).map_err(|e| format!("writing {tmp}: {e}"))?;
+    std::fs::rename(&tmp, path).map_err(|e| format!("renaming {tmp} -> {path}: {e}"))
+}
+
+/// Load a snapshot written by [`save_snapshot`].
+pub fn load_snapshot(path: &str) -> Result<FleetRegistry, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+    let j = Json::parse(&text).map_err(|e| format!("parsing {path}: {e}"))?;
+    decode_registry(&j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::bigroots::{analyze_stage, BigRootsConfig};
+    use crate::analysis::features::extract_all;
+    use crate::analysis::stats::NativeBackend;
+    use crate::sim::{workloads, Engine, InjectionPlan, SimConfig};
+    use crate::trace::AnomalyKind;
+
+    fn folded_registry(jobs: usize) -> FleetRegistry {
+        let cfg = BigRootsConfig::default();
+        let mut backend = NativeBackend::new();
+        let mut reg = FleetRegistry::new(8);
+        for seed in 0..jobs as u64 {
+            let w = workloads::wordcount(0.2);
+            let mut eng = Engine::new(SimConfig { seed: 100 + seed, ..Default::default() });
+            let plan = InjectionPlan::intermittent(AnomalyKind::Cpu, 1, 15.0, 10.0, 300.0);
+            let t = eng.run("persist-test", w.name, &w.stages, &plan);
+            for sf in extract_all(&t, cfg.edge_width) {
+                let a = analyze_stage(&sf, &mut backend, &cfg);
+                reg.fold_stage(&sf, &a);
+            }
+            reg.job_completed();
+        }
+        reg
+    }
+
+    fn tmp_path(name: &str) -> String {
+        let dir = std::env::temp_dir();
+        format!("{}/bigroots_{}_{}", dir.display(), std::process::id(), name)
+    }
+
+    #[test]
+    fn roundtrip_is_bit_identical() {
+        let reg = folded_registry(3);
+        let doc = encode_registry(&reg);
+        let restored = decode_registry(&doc).expect("decode");
+        // The re-encoded document is byte-identical — no f64 drift.
+        assert_eq!(doc.to_string(), encode_registry(&restored).to_string());
+        // And the queryable report (quantiles, incidence, shares) matches
+        // exactly.
+        assert_eq!(reg.report(), restored.report());
+    }
+
+    #[test]
+    fn fresh_registry_roundtrips_including_infinities() {
+        // A fresh sketch holds min=+inf / max=-inf; the bit codec must
+        // carry them (plain JSON numbers could not).
+        let reg = FleetRegistry::new(64);
+        let restored = decode_registry(&encode_registry(&reg)).expect("decode");
+        assert_eq!(reg.report(), restored.report());
+    }
+
+    #[test]
+    fn restored_registry_keeps_accumulating_identically() {
+        // Fold a job, snapshot, then fold a second job into both the
+        // original and the restored copy: they must stay in lockstep.
+        let mut reg = folded_registry(1);
+        let mut restored = decode_registry(&encode_registry(&reg)).expect("decode");
+        let cfg = BigRootsConfig::default();
+        let mut backend = NativeBackend::new();
+        let w = workloads::wordcount(0.2);
+        let mut eng = Engine::new(SimConfig { seed: 777, ..Default::default() });
+        let t = eng.run("persist-cont", w.name, &w.stages, &InjectionPlan::none());
+        for sf in extract_all(&t, cfg.edge_width) {
+            let a = analyze_stage(&sf, &mut backend, &cfg);
+            reg.fold_stage(&sf, &a);
+            restored.fold_stage(&sf, &a);
+        }
+        reg.job_completed();
+        restored.job_completed();
+        assert_eq!(reg.report(), restored.report());
+        assert_eq!(
+            encode_registry(&reg).to_string(),
+            encode_registry(&restored).to_string()
+        );
+    }
+
+    #[test]
+    fn save_and_load_through_a_file() {
+        let reg = folded_registry(2);
+        let path = tmp_path("fleet_snapshot.json");
+        save_snapshot(&reg, &path).expect("save");
+        let restored = load_snapshot(&path).expect("load");
+        assert_eq!(reg.report(), restored.report());
+        // The tmp file was renamed away.
+        assert!(!std::path::Path::new(&format!("{path}.tmp")).exists());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn decode_rejects_wrong_kind_version_and_corruption() {
+        let reg = folded_registry(1);
+        let good = encode_registry(&reg);
+
+        let mut wrong_kind = good.clone();
+        wrong_kind.set("kind", "something-else".into());
+        assert!(decode_registry(&wrong_kind).unwrap_err().contains("kind"));
+
+        let mut wrong_version = good.clone();
+        wrong_version.set("version", 999u64.into());
+        assert!(decode_registry(&wrong_version).unwrap_err().contains("version"));
+
+        assert!(decode_registry(&Json::obj()).is_err());
+        assert!(load_snapshot("/nonexistent/bigroots.snapshot").is_err());
+
+        // Truncated feature list is rejected, not silently defaulted.
+        let mut few = good.clone();
+        let fleet = few.get("fleet").clone();
+        let mut fleet = fleet;
+        let feats = fleet.get("features").as_arr().unwrap().to_vec();
+        fleet.set("features", Json::Arr(feats[..3].to_vec()));
+        few.set("fleet", fleet);
+        let err = decode_registry(&few).unwrap_err();
+        assert!(err.contains("feature baselines"), "{err}");
+    }
+}

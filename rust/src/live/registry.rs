@@ -31,16 +31,17 @@ use crate::util::stats::{median, P2Quantile, Welford};
 use crate::util::table::{fnum, pct, Align, Table};
 
 /// Streaming distribution summary: count/min/max/mean exactly, p50/p90/p95
-/// via P² markers. Constant memory.
+/// via P² markers. Constant memory. Fields are crate-visible so
+/// [`crate::live::persist`] can round-trip the sketch bit-exactly.
 #[derive(Debug, Clone)]
 pub struct QuantileSketch {
-    count: usize,
-    min: f64,
-    max: f64,
-    mean: Welford,
-    p50: P2Quantile,
-    p90: P2Quantile,
-    p95: P2Quantile,
+    pub(crate) count: usize,
+    pub(crate) min: f64,
+    pub(crate) max: f64,
+    pub(crate) mean: Welford,
+    pub(crate) p50: P2Quantile,
+    pub(crate) p90: P2Quantile,
+    pub(crate) p95: P2Quantile,
 }
 
 impl QuantileSketch {
@@ -125,23 +126,24 @@ pub struct FleetFlag {
     pub fleet_p95: f64,
 }
 
-/// Cross-job accumulator. See module docs.
+/// Cross-job accumulator. See module docs. Fields are crate-visible so
+/// [`crate::live::persist`] can snapshot and restore the full state.
 #[derive(Debug, Clone)]
 pub struct FleetRegistry {
     /// A baseline must hold at least this many observations before the
     /// fleet verdict pass trusts it (cold-start guard).
-    min_samples: usize,
-    jobs_completed: usize,
-    stages: usize,
-    tasks: usize,
-    straggler_tasks: usize,
-    features: Vec<FeatureBaseline>,
+    pub(crate) min_samples: usize,
+    pub(crate) jobs_completed: usize,
+    pub(crate) stages: usize,
+    pub(crate) tasks: usize,
+    pub(crate) straggler_tasks: usize,
+    pub(crate) features: Vec<FeatureBaseline>,
     /// Distribution of per-stage median task durations.
-    stage_medians: QuantileSketch,
+    pub(crate) stage_medians: QuantileSketch,
     /// Stragglers whose shuffle-read exceeded their stage median.
-    shuffle_heavy: usize,
+    pub(crate) shuffle_heavy: usize,
     /// …of those, how many had a JVM-GC root cause.
-    shuffle_heavy_gc: usize,
+    pub(crate) shuffle_heavy_gc: usize,
 }
 
 impl FleetRegistry {
@@ -305,8 +307,10 @@ impl Default for FleetRegistry {
     }
 }
 
-/// Per-feature slice of a [`FleetReport`].
-#[derive(Debug, Clone)]
+/// Per-feature slice of a [`FleetReport`]. `PartialEq` backs the
+/// restart-parity tests: a restored registry's report must equal the
+/// uninterrupted run's bit for bit.
+#[derive(Debug, Clone, PartialEq)]
 pub struct FeatureSnapshot {
     pub kind: FeatureKind,
     pub count: usize,
@@ -317,7 +321,7 @@ pub struct FeatureSnapshot {
 }
 
 /// Queryable point-in-time snapshot of the fleet baseline.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct FleetReport {
     pub jobs_completed: usize,
     pub stages: usize,

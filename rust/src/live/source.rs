@@ -41,6 +41,15 @@ pub trait EventSource {
 
     /// Human-readable description for logs.
     fn describe(&self) -> String;
+
+    /// Buffered partial lines this source has *lost* (e.g. a TCP client
+    /// that disconnected mid-line). Cumulative; the serve loop copies it
+    /// into [`crate::live::LiveMetrics::dropped_partial_lines`] so the
+    /// loss is visible instead of silent. Sources that cannot lose a
+    /// partial line (file tail, memory replay) keep the default 0.
+    fn dropped_partial_lines(&self) -> usize {
+        0
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -178,6 +187,7 @@ pub struct TcpSource {
     persistent: bool,
     addr: String,
     parse_errors: usize,
+    dropped_partial_lines: usize,
 }
 
 impl TcpSource {
@@ -208,6 +218,7 @@ impl TcpSource {
             persistent,
             addr,
             parse_errors: 0,
+            dropped_partial_lines: 0,
         })
     }
 
@@ -224,6 +235,11 @@ impl TcpSource {
     /// Connections dropped for sending malformed lines.
     pub fn parse_errors(&self) -> usize {
         self.parse_errors
+    }
+
+    /// Partial lines lost to clients that went away mid-line.
+    pub fn dropped_partial_lines(&self) -> usize {
+        self.dropped_partial_lines
     }
 }
 
@@ -254,16 +270,32 @@ impl EventSource for TcpSource {
         // because one client sent a malformed line.
         let mut events = Vec::new();
         let mut parse_errors = 0usize;
+        let mut dropped_partials = 0usize;
+        let addr = self.addr.clone();
         let mut chunk = [0u8; 64 * 1024];
         for conn in &mut self.conns {
             loop {
                 match conn.stream.read(&mut chunk) {
                     Ok(0) => {
-                        // Client closed: flush a trailing unterminated line.
+                        // Client closed: flush a trailing unterminated
+                        // line. If what's buffered does not parse, it was
+                        // either cut mid-line or malformed — the two are
+                        // indistinguishable at EOF, so count it in *both*
+                        // metrics (it is a lost line and a parse failure)
+                        // and log the loss instead of swallowing it.
                         match conn.parser.finish() {
                             Ok(Some(e)) => events.push(e),
                             Ok(None) => {}
-                            Err(_) => parse_errors += 1,
+                            Err(_) => {
+                                dropped_partials += 1;
+                                parse_errors += 1;
+                                eprintln!(
+                                    "tcp {addr}: client {} left an unterminated line \
+                                     that does not parse (mid-line disconnect or \
+                                     malformed trailer); dropping it",
+                                    conn.peer
+                                );
+                            }
                         }
                         conn.open = false;
                         break;
@@ -279,6 +311,16 @@ impl EventSource for TcpSource {
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
                     Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
                     Err(_) => {
+                        // Hard connection error: anything still buffered
+                        // for the current line is gone with the client.
+                        if conn.parser.buffered() > 0 {
+                            dropped_partials += 1;
+                            eprintln!(
+                                "tcp {addr}: client {} connection error mid-line; \
+                                 dropping buffered partial line",
+                                conn.peer
+                            );
+                        }
                         conn.open = false;
                         break;
                     }
@@ -286,6 +328,7 @@ impl EventSource for TcpSource {
             }
         }
         self.parse_errors += parse_errors;
+        self.dropped_partial_lines += dropped_partials;
         self.conns.retain(|c| c.open);
         if !events.is_empty() {
             return Ok(SourcePoll::Events(events));
@@ -299,6 +342,10 @@ impl EventSource for TcpSource {
 
     fn describe(&self) -> String {
         format!("tcp {}", self.addr)
+    }
+
+    fn dropped_partial_lines(&self) -> usize {
+        self.dropped_partial_lines
     }
 }
 
@@ -556,6 +603,47 @@ mod tests {
         }
         writer.join().unwrap();
         assert_eq!(got, events);
+    }
+
+    #[test]
+    fn tcp_mid_line_disconnect_counts_dropped_partial_line() {
+        // A client that dies between two bytes of a line must not lose the
+        // buffered prefix *silently*: the complete lines before it arrive,
+        // and the loss is counted in dropped_partial_lines.
+        let t = trace(6);
+        let events = interleave_jobs(&[(1, &t)]);
+        let good_line = events[0].encode().to_string() + "\n";
+        let mut src = match TcpSource::bind("127.0.0.1:0") {
+            Ok(s) => s,
+            Err(_) => return, // sandbox may forbid binding
+        };
+        let addr = src.local_addr().to_string();
+        let writer = std::thread::spawn(move || {
+            let mut c = TcpStream::connect(&addr).unwrap();
+            c.write_all(good_line.as_bytes()).unwrap();
+            // Half an event line, never terminated: the disconnect (clean
+            // close below) strands it mid-line.
+            c.write_all(b"{\"event\":\"task_st").unwrap();
+        });
+        let mut got = Vec::new();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        loop {
+            match src.poll().unwrap() {
+                SourcePoll::Events(evs) => got.extend(evs),
+                SourcePoll::Idle => {
+                    assert!(std::time::Instant::now() < deadline, "tcp test timed out");
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+                SourcePoll::End => break,
+            }
+        }
+        writer.join().unwrap();
+        assert_eq!(got.len(), 1, "the complete line survives");
+        assert_eq!(got[0], events[0]);
+        assert_eq!(src.dropped_partial_lines(), 1, "the partial line is counted, not silent");
+        // The trait default/override agree.
+        let as_source: &dyn EventSource = &src;
+        assert_eq!(as_source.dropped_partial_lines(), 1);
     }
 
     #[test]

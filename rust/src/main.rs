@@ -58,8 +58,22 @@ fn main() {
                 .opt("queue-cap", "8", "per-shard queue capacity in batches (backpressure bound)")
                 .opt("ingest-batch", "64", "events per shard-queue send")
                 .opt("evict-after", "5", "event-time quiescence (s) after job_end before eviction")
-                .opt("stats-cache", "256", "per-shard stage-stats memo capacity (0 disables)")
+                .opt("stats-cache", "256", "shared stage-stats cache capacity (0 disables)")
+                .opt("cache-stripes", "8", "lock stripes in the shared stage-stats cache")
+                .opt("route-large", "0", "route stages with >= this many tasks to the large-stage backend (0 = native only)")
                 .opt("snapshot-every", "5", "seconds between fleet-baseline snapshots (live mode)")
+                .opt(
+                    "control-port",
+                    "",
+                    "line-delimited JSON control/query socket (fleet-report | job <id> | \
+                     metrics | snapshot | shutdown), e.g. 127.0.0.1:7172",
+                )
+                .opt(
+                    "snapshot-path",
+                    "",
+                    "fleet-baseline snapshot file: restored on boot if present, written on \
+                     the snapshot cadence and at shutdown (atomic rename)",
+                )
                 .opt(
                     "idle-timeout",
                     "10",
@@ -298,12 +312,14 @@ fn cmd_stream(args: &bigroots::util::cli::Args) -> i32 {
 }
 
 fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
+    use bigroots::live::control::{self, ControlCommand, ControlServer};
     use bigroots::live::{
-        CompletedJob, EventSource, LifecycleConfig, LiveConfig, LiveServer, MemorySource,
-        SourcePoll, StdinSource, TailSource, TcpSource,
+        persist, CompletedJob, EventSource, LifecycleConfig, LiveConfig, LiveServer,
+        MemorySource, SourcePoll, StdinSource, TailSource, TcpSource,
     };
     use bigroots::sim::multi;
     use bigroots::trace::eventlog::parse_tagged_events;
+    use bigroots::util::json::Json;
 
     let cfg = LiveConfig {
         shards: args.get_usize("shards", 4),
@@ -314,6 +330,8 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
             ..Default::default()
         },
         stats_cache_capacity: args.get_usize("stats-cache", 256),
+        stats_cache_stripes: args.get_usize("cache-stripes", 8),
+        route_large_tasks: args.get_usize("route-large", 0),
         ..Default::default()
     };
 
@@ -376,7 +394,39 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
     println!("serving from {} over {} shards", source.describe(), cfg.shards);
     let snapshot_every = args.get_f64("snapshot-every", 5.0).max(0.1);
     let idle_timeout = args.get_f64("idle-timeout", 10.0);
+    let snapshot_path = args.get_or("snapshot-path", "");
+    let control_addr = args.get_or("control-port", "");
+    let mut control = if control_addr.is_empty() {
+        None
+    } else {
+        match ControlServer::bind(&control_addr) {
+            Ok(c) => {
+                println!("control socket on {}", c.local_addr());
+                Some(c)
+            }
+            Err(e) => {
+                eprintln!("{e}");
+                return 1;
+            }
+        }
+    };
     let mut server = LiveServer::new(cfg);
+
+    // Restore the fleet baseline from the last shutdown's snapshot: the
+    // cross-job history the registry's verdicts depend on survives the
+    // restart.
+    if !snapshot_path.is_empty() && std::path::Path::new(&snapshot_path).exists() {
+        match persist::load_snapshot(&snapshot_path) {
+            Ok(reg) => {
+                println!(
+                    "restored fleet baseline from {snapshot_path}: {} stages folded",
+                    reg.stages_folded()
+                );
+                server.restore_registry(reg);
+            }
+            Err(e) => eprintln!("snapshot restore failed ({e}); starting with a fresh baseline"),
+        }
+    }
 
     let print_job = |j: &CompletedJob| {
         let stragglers: usize = j.analyses.iter().map(|a| a.stragglers.rows.len()).sum();
@@ -401,6 +451,27 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
     let started = std::time::Instant::now();
     let mut last_snapshot = std::time::Instant::now();
     let mut idle_since: Option<std::time::Instant> = None;
+    // Latest summary per retired job id, for the control plane's `job`
+    // verb (retired jobs are drained out of the server as they complete).
+    // Bounded like everything else on the unbounded-stream path: oldest
+    // retirements age out once the cap is hit.
+    const MAX_JOB_SUMMARIES: usize = 4096;
+    let mut job_summaries: std::collections::HashMap<u64, Json> =
+        std::collections::HashMap::new();
+    let mut job_summary_order: std::collections::VecDeque<u64> =
+        std::collections::VecDeque::new();
+    let mut shutdown_requested = false;
+    // Non-zero when the source died — the drain-then-snapshot exit still
+    // runs (losing the registry on a disk error would defeat the point of
+    // persistence), but the process reports the failure.
+    let mut exit_code = 0;
+    // stages_folded at the last periodic snapshot write; restored state
+    // counts, so an idle rebooted server doesn't rewrite the same file.
+    let mut last_snapshot_stages = server.registry().stages_folded();
+    let write_snapshot = |server: &LiveServer, path: &str| -> Result<usize, String> {
+        let reg = server.registry();
+        persist::save_snapshot(reg, path).map(|()| reg.stages_folded())
+    };
     loop {
         match source.poll() {
             Ok(SourcePoll::Events(events)) => {
@@ -420,35 +491,141 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
             }
             Ok(SourcePoll::End) => break,
             Err(e) => {
-                eprintln!("source error: {e}");
-                return 1;
+                eprintln!("source error: {e} — draining and snapshotting before exit");
+                exit_code = 1;
+                break;
             }
         }
+        server.record_source_drops(source.dropped_partial_lines());
         for j in server.drain_completed() {
+            // A refreshed id (revived incarnation) moves to the back of
+            // the age queue, so the newest summary is the last to go.
+            if job_summaries.insert(j.job_id, control::job_summary_json(&j)).is_some() {
+                if let Some(pos) = job_summary_order.iter().position(|&id| id == j.job_id) {
+                    job_summary_order.remove(pos);
+                }
+            }
+            job_summary_order.push_back(j.job_id);
+            while job_summary_order.len() > MAX_JOB_SUMMARIES {
+                if let Some(old) = job_summary_order.pop_front() {
+                    job_summaries.remove(&old);
+                }
+            }
             print_job(&j);
+        }
+        // Control plane: answer operator queries on the same driver
+        // thread, in request order.
+        if let Some(ctrl) = control.as_mut() {
+            let requests = match ctrl.poll() {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("control error: {e}");
+                    Vec::new()
+                }
+            };
+            for req in requests {
+                let resp = match &req.command {
+                    ControlCommand::FleetReport => control::ok_response(
+                        "fleet-report",
+                        control::fleet_report_json(&control::fleet_report(&server)),
+                    ),
+                    ControlCommand::Metrics => control::ok_response(
+                        "metrics",
+                        control::live_metrics_json(&server.metrics()),
+                    ),
+                    ControlCommand::Job(id) => match job_summaries.get(id) {
+                        Some(j) => control::ok_response("job", j.clone()),
+                        None => control::err_response(&format!("job {id} has not retired")),
+                    },
+                    ControlCommand::Snapshot => {
+                        if snapshot_path.is_empty() {
+                            control::err_response("no --snapshot-path configured")
+                        } else {
+                            match write_snapshot(&server, &snapshot_path) {
+                                Ok(stages) => {
+                                    // The cadence guard sees this write.
+                                    last_snapshot_stages = stages;
+                                    control::ok_response(
+                                        "snapshot",
+                                        Json::from_pairs(vec![
+                                            ("path", snapshot_path.as_str().into()),
+                                            ("stages", stages.into()),
+                                        ]),
+                                    )
+                                }
+                                Err(e) => control::err_response(&e),
+                            }
+                        }
+                    }
+                    ControlCommand::Shutdown => {
+                        shutdown_requested = true;
+                        control::ok_response("shutdown", Json::obj())
+                    }
+                    ControlCommand::Invalid(msg) => control::err_response(msg),
+                };
+                ctrl.respond(&req, &resp);
+            }
+        }
+        if shutdown_requested {
+            println!("(shutdown requested via control socket — draining)");
+            break;
         }
         if last_snapshot.elapsed().as_secs_f64() >= snapshot_every
             && server.registry().stages_folded() > 0
         {
             last_snapshot = std::time::Instant::now();
-            print!("{}", server.registry().report().render());
+            print!("{}", control::fleet_report_text(&server));
+            // Skip the file write when nothing folded since the last one
+            // — an idle restored server must not churn the disk forever.
+            let folded = server.registry().stages_folded();
+            if !snapshot_path.is_empty() && folded != last_snapshot_stages {
+                match write_snapshot(&server, &snapshot_path) {
+                    Ok(_) => last_snapshot_stages = folded,
+                    Err(e) => eprintln!("snapshot write failed: {e}"),
+                }
+            }
         }
     }
 
-    let report = server.finish();
+    // Get any queued control responses (the shutdown ack in particular)
+    // onto the wire before draining — respond() never blocks, so a
+    // WouldBlock leftover would otherwise die with the process.
+    if let Some(ctrl) = control.as_mut() {
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(2);
+        while ctrl.pending_responses() > 0 && std::time::Instant::now() < deadline {
+            ctrl.flush();
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        ctrl.flush();
+    }
+
+    // Drain-then-snapshot exit: retire every resident job, then persist
+    // the final baseline so the next boot resumes from it.
+    server.record_source_drops(source.dropped_partial_lines());
+    let (report, registry) = server.finish_with_registry();
+    if !snapshot_path.is_empty() {
+        match persist::save_snapshot(&registry, &snapshot_path) {
+            Ok(()) => println!(
+                "wrote fleet snapshot {snapshot_path} ({} stages folded)",
+                registry.stages_folded()
+            ),
+            Err(e) => eprintln!("final snapshot write failed: {e}"),
+        }
+    }
     for j in &report.jobs {
         print_job(j);
     }
     print!("{}", report.fleet.render());
     let m = &report.metrics;
     println!(
-        "{} events, {} jobs completed ({} live evictions, {} strays dropped) in {:.3}s — \
-         {:.0} events/s, {} stages analyzed ({} stats-cache hits / {} misses), \
-         resident high-water {}",
+        "{} events, {} jobs completed ({} live evictions, {} strays dropped, \
+         {} partial lines dropped) in {:.3}s — {:.0} events/s, {} stages analyzed \
+         ({} stats-cache hits / {} misses), resident high-water {}",
         m.events_total,
         m.jobs_completed,
         m.evictions_live,
         m.events_dropped,
+        m.dropped_partial_lines,
         started.elapsed().as_secs_f64(),
         m.events_per_sec,
         m.stages_analyzed,
@@ -479,7 +656,7 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
         }
         print!("{}", t.render());
     }
-    0
+    exit_code
 }
 
 fn cmd_verify(args: &bigroots::util::cli::Args) -> i32 {

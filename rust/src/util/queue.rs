@@ -69,6 +69,21 @@ impl<T> BoundedSender<T> {
         }
     }
 
+    /// Enqueue `item` only if there is room right now — never blocks.
+    /// `Err` returns the item back, whether the queue was full or the
+    /// receiver is gone. The live server's idle tick uses this: a tick is
+    /// advisory, and a shard busy enough to have a full queue is already
+    /// running its scans through the normal feed path.
+    pub fn try_send(&self, item: T) -> Result<(), T> {
+        let mut st = self.shared.state.lock().unwrap();
+        if !st.receiver_alive || st.buf.len() >= self.shared.cap {
+            return Err(item);
+        }
+        st.buf.push_back(item);
+        self.shared.not_empty.notify_one();
+        Ok(())
+    }
+
     /// Items currently buffered (diagnostic; racy by nature).
     pub fn len(&self) -> usize {
         self.shared.state.lock().unwrap().buf.len()

@@ -120,12 +120,14 @@ pub fn auc(points: &[(f64, f64)]) -> f64 {
 }
 
 /// Welford online mean/variance accumulator — used by the streaming
-/// coordinator and the Table VII overhead sampler.
+/// coordinator and the Table VII overhead sampler. Fields are
+/// crate-visible so the fleet snapshot codec
+/// ([`crate::live::persist`]) can round-trip the accumulator bit-exactly.
 #[derive(Debug, Clone, Default)]
 pub struct Welford {
-    n: u64,
-    mean: f64,
-    m2: f64,
+    pub(crate) n: u64,
+    pub(crate) mean: f64,
+    pub(crate) m2: f64,
 }
 
 impl Welford {
@@ -168,18 +170,20 @@ impl Welford {
 /// height update. Exact for the first five observations. The fleet
 /// baseline registry ([`crate::live::registry`]) keeps a handful of these
 /// per feature to hold cross-job distributions on unbounded streams.
+/// Fields are crate-visible so the fleet snapshot codec
+/// ([`crate::live::persist`]) can round-trip the marker state bit-exactly.
 #[derive(Debug, Clone)]
 pub struct P2Quantile {
-    p: f64,
+    pub(crate) p: f64,
     /// Marker heights q[0..5] (after init: ascending).
-    q: [f64; 5],
+    pub(crate) q: [f64; 5],
     /// Actual marker positions, 1-based observation ranks.
-    n: [f64; 5],
+    pub(crate) n: [f64; 5],
     /// Desired marker positions.
-    np: [f64; 5],
+    pub(crate) np: [f64; 5],
     /// Per-observation desired-position increments.
-    dn: [f64; 5],
-    count: usize,
+    pub(crate) dn: [f64; 5],
+    pub(crate) count: usize,
 }
 
 impl P2Quantile {

@@ -268,3 +268,114 @@ fn memory_source_replay_equals_direct_feed() {
         assert_eq!(a.analyses, b.analyses);
     }
 }
+
+/// The crash/restart acceptance scenario: feed the first half of a stream
+/// (split at a job boundary), snapshot the fleet registry through the
+/// persist codec and a real file, restart a *fresh* `LiveServer` from the
+/// snapshot, feed the rest — the final `FleetReport` (quantiles,
+/// incidence counters, cause shares) must be *identical* to an
+/// uninterrupted run, since P² folds are deterministic with one shard.
+#[test]
+fn snapshot_restart_matches_uninterrupted_run_exactly() {
+    use bigroots::live::persist;
+
+    let specs = round_robin_specs(6, 0.1, 4242);
+    let mut first_half: Vec<TaggedEvent> = Vec::new();
+    let mut second_half: Vec<TaggedEvent> = Vec::new();
+    for i in 0..specs.len() {
+        let (_, ev) = interleaved_workload(&specs[i..=i]);
+        if i < 3 {
+            first_half.extend(ev);
+        } else {
+            second_half.extend(ev);
+        }
+    }
+    let cfg = || LiveConfig { shards: 1, ..Default::default() };
+
+    // Uninterrupted reference run over the concatenated stream.
+    let mut all = first_half.clone();
+    all.extend(second_half.iter().cloned());
+    let want = run_live(&all, cfg());
+    assert_eq!(want.fleet.jobs_completed, 6);
+
+    // Interrupted run: half, snapshot to a file, restart, the rest.
+    let mut a = LiveServer::new(cfg());
+    a.feed_all(&first_half);
+    let (report_a, registry) = a.finish_with_registry();
+    assert_eq!(report_a.fleet.jobs_completed, 3);
+    let path = tmp_path("fleet_restart.snapshot.json");
+    persist::save_snapshot(&registry, &path).expect("save snapshot");
+    let restored = persist::load_snapshot(&path).expect("load snapshot");
+    let _ = std::fs::remove_file(&path);
+
+    let mut b = LiveServer::new(cfg());
+    b.restore_registry(restored);
+    b.feed_all(&second_half);
+    let got = b.finish();
+
+    // Exact match: every count, every P² quantile, every cause share.
+    assert_eq!(got.fleet, want.fleet);
+}
+
+/// The cross-shard cache acceptance scenario: the same stage shape routed
+/// to *different* shards still hits, because all shard workers memoize
+/// through one shared striped cache.
+#[test]
+fn same_stage_shape_hits_across_different_shards() {
+    use bigroots::sim::multi::MultiJobSpec;
+    use bigroots::util::shard::shard_of;
+
+    let shards = 2usize;
+    let id_a = 0u64;
+    let id_b = (1..64u64)
+        .find(|&i| shard_of(i, shards) != shard_of(id_a, shards))
+        .expect("some id maps to the other shard");
+
+    // One spec under two job ids: identical traces, identical stage
+    // feature matrices — but rendezvous-routed to different shards.
+    let base = round_robin_specs(1, 0.12, 77).remove(0);
+    let spec_a = MultiJobSpec { job_id: id_a, ..base.clone() };
+    let spec_b = MultiJobSpec { job_id: id_b, ..base };
+    let (traces_a, events_a) = interleaved_workload(&[spec_a]);
+    let (_, events_b) = interleaved_workload(&[spec_b]);
+    let stages_a = traces_a[0].1.stages.len();
+
+    let mut server = LiveServer::new(LiveConfig { shards, ..Default::default() });
+    server.feed_all(&events_a);
+    // Wait until shard A has analyzed (and shared) every stage of job A,
+    // so job B's lookups cannot race the inserts.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    loop {
+        server.pump();
+        if server.metrics().stages_analyzed >= stages_a {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "job A never finished analyzing");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    server.feed_all(&events_b);
+    let report = server.finish();
+
+    let m = &report.metrics;
+    assert!(
+        m.cache_hits >= stages_a,
+        "same shape on another shard must hit the shared cache: {} hits / {} stages of job A",
+        m.cache_hits,
+        stages_a
+    );
+    // The hits land on job B's shard — proof the *other* shard's worker
+    // found entries it never inserted.
+    let shard_b = shard_of(id_b, shards);
+    assert!(
+        m.per_shard[shard_b].cache_hits >= stages_a,
+        "shard {} shows {} hits, want >= {}",
+        shard_b,
+        m.per_shard[shard_b].cache_hits,
+        stages_a
+    );
+    // And the cached results are bit-identical across the two jobs.
+    assert_eq!(
+        report.job(id_a).expect("job A retired").analyses,
+        report.job(id_b).expect("job B retired").analyses
+    );
+}
