@@ -4,19 +4,27 @@
 //! 1. connects to the event port and streams two simulated jobs;
 //! 2. polls `fleet-report` on the control port until both jobs retired;
 //! 3. queries `metrics` and `job <id>`;
-//! 4. requests a `snapshot` (the server writes its `--snapshot-path`);
-//! 5. sends `shutdown` and exits.
+//! 4. queries `metrics-prom` and gates on the required metric families
+//!    (and nonzero span counts for the instrumented hot-path phases);
+//! 5. queries `self-report` (tolerating a warming-up refusal);
+//! 6. if a third address is given, HTTP-scrapes the `--metrics-port`
+//!    endpoint and gates on the exposition;
+//! 7. requests a `snapshot` (the server writes its `--snapshot-path`);
+//! 8. sends `shutdown` and exits.
 //!
 //! Any protocol violation (non-ok response, timeout, missing snapshot
-//! file) exits non-zero, so a workflow step can gate on it:
+//! file, missing metric family) exits non-zero, so a workflow step can
+//! gate on it:
 //!
 //! ```text
 //! bigroots serve --listen 127.0.0.1:7171 --control-port 127.0.0.1:7172 \
+//!     --metrics-port 127.0.0.1:9191 \
 //!     --idle-timeout 0 --snapshot-path fleet_snapshot.json &
-//! cargo run --release --example control_client -- 127.0.0.1:7171 127.0.0.1:7172
+//! cargo run --release --example control_client -- \
+//!     127.0.0.1:7171 127.0.0.1:7172 127.0.0.1:9191
 //! ```
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
@@ -45,17 +53,7 @@ fn connect_retry(addr: &str, what: &str) -> TcpStream {
 
 /// Send one request line, read one JSON response line, require `ok`.
 fn query(ctrl: &mut BufReader<TcpStream>, request: &str) -> Json {
-    ctrl.get_mut()
-        .write_all(format!("{request}\n").as_bytes())
-        .unwrap_or_else(|e| fail(&format!("sending '{request}': {e}")));
-    let mut line = String::new();
-    ctrl.read_line(&mut line)
-        .unwrap_or_else(|e| fail(&format!("reading response to '{request}': {e}")));
-    if line.is_empty() {
-        fail(&format!("control socket closed while waiting for '{request}'"));
-    }
-    let j = Json::parse(line.trim())
-        .unwrap_or_else(|e| fail(&format!("response to '{request}' is not JSON: {e}")));
+    let j = query_any(ctrl, request);
     if j.get("ok").as_bool() != Some(true) {
         fail(&format!(
             "'{request}' failed: {}",
@@ -65,10 +63,36 @@ fn query(ctrl: &mut BufReader<TcpStream>, request: &str) -> Json {
     j
 }
 
+/// Like [`query`] but returns the response whether or not `ok` is set —
+/// for verbs with a legitimate refusal path (`self-report` warming up).
+fn query_any(ctrl: &mut BufReader<TcpStream>, request: &str) -> Json {
+    ctrl.get_mut()
+        .write_all(format!("{request}\n").as_bytes())
+        .unwrap_or_else(|e| fail(&format!("sending '{request}': {e}")));
+    let mut line = String::new();
+    ctrl.read_line(&mut line)
+        .unwrap_or_else(|e| fail(&format!("reading response to '{request}': {e}")));
+    if line.is_empty() {
+        fail(&format!("control socket closed while waiting for '{request}'"));
+    }
+    Json::parse(line.trim())
+        .unwrap_or_else(|e| fail(&format!("response to '{request}' is not JSON: {e}")))
+}
+
+/// Value of `bigroots_span_seconds_count{span="..."}` in an exposition, or 0.
+fn span_count(text: &str, span: &str) -> f64 {
+    let needle = format!("bigroots_span_seconds_count{{span=\"{span}\"}} ");
+    text.lines()
+        .find_map(|l| l.strip_prefix(needle.as_str()))
+        .and_then(|v| v.trim().parse::<f64>().ok())
+        .unwrap_or(0.0)
+}
+
 fn main() {
     let mut argv = std::env::args().skip(1);
     let event_addr = argv.next().unwrap_or_else(|| "127.0.0.1:7171".to_string());
     let control_addr = argv.next().unwrap_or_else(|| "127.0.0.1:7172".to_string());
+    let metrics_addr = argv.next(); // optional --metrics-port endpoint to scrape
 
     // Stream two simulated jobs into the event port.
     let specs = round_robin_specs(2, 0.15, 7);
@@ -120,6 +144,69 @@ fn main() {
         fail(&format!("job {job_id} summary reports no stages"));
     }
     println!("job {job_id}: {stages} stages analyzed");
+
+    // Prometheus exposition over the control socket: required families
+    // must be present and the hot-path spans must actually have fired.
+    let prom = query(&mut ctrl, "metrics-prom");
+    let text = prom
+        .get("data")
+        .get("text")
+        .as_str()
+        .unwrap_or_else(|| fail("metrics-prom response carries no text"))
+        .to_string();
+    for family in [
+        "bigroots_events_total",
+        "bigroots_span_seconds",
+        "bigroots_span_quantile_seconds",
+        "bigroots_source_parse_errors_total",
+        "bigroots_fleet_jobs_completed",
+    ] {
+        if !text.contains(&format!("# TYPE {family} ")) {
+            fail(&format!("metrics-prom exposition missing family {family}"));
+        }
+    }
+    for span in ["source_poll", "decode", "stats_kernel", "cache_lookup", "control"] {
+        if span_count(&text, span) <= 0.0 {
+            fail(&format!("metrics-prom shows zero {span} spans — instrumentation not firing"));
+        }
+    }
+    println!("metrics-prom: {} bytes, all required families present", text.len());
+
+    // Self-analysis: with this short a stream the server may still be
+    // warming up; a refusal mentioning samples is acceptable, anything
+    // else is a protocol violation.
+    let sr = query_any(&mut ctrl, "self-report");
+    if sr.get("ok").as_bool() == Some(true) {
+        let batches = sr.get("data").get("batches_analyzed").as_usize().unwrap_or(0);
+        if batches == 0 {
+            fail("self-report ok but analyzed zero batches");
+        }
+        println!("self-report: {batches} batches self-analyzed");
+    } else {
+        let err = sr.get("error").as_str().unwrap_or("").to_string();
+        if !err.contains("samples") {
+            fail(&format!("self-report failed unexpectedly: {err}"));
+        }
+        println!("self-report: warming up ({err})");
+    }
+
+    // Optional: scrape the HTTP metrics endpoint like Prometheus would.
+    if let Some(addr) = metrics_addr {
+        let mut conn = connect_retry(&addr, "metrics port");
+        conn.write_all(b"GET /metrics HTTP/1.0\r\n\r\n")
+            .unwrap_or_else(|e| fail(&format!("sending scrape: {e}")));
+        let mut response = String::new();
+        conn.read_to_string(&mut response)
+            .unwrap_or_else(|e| fail(&format!("reading scrape: {e}")));
+        if !response.starts_with("HTTP/1.0 200") {
+            fail(&format!("metrics scrape returned non-200: {}", response.lines().next().unwrap_or("")));
+        }
+        let body = response.split("\r\n\r\n").nth(1).unwrap_or("");
+        if !body.contains("bigroots_span_seconds_bucket") || !body.contains("bigroots_events_total") {
+            fail("metrics scrape body missing required families");
+        }
+        println!("metrics scrape over http: {} bytes of exposition", body.len());
+    }
 
     let snap = query(&mut ctrl, "snapshot");
     let path = snap

@@ -1,18 +1,30 @@
-//! Bench: **Table VII** — resource consumption of the sampling tools.
+//! Bench: **Table VII** — resource consumption of the monitoring layer.
 //!
 //! The paper reports mpstat/iostat/sar at < 1% CPU and < 888 KB memory.
 //! We measure a real sampling thread per tool-equivalent (wake at 1 Hz,
 //! parse a stat line, store the sample) and report CPU fraction and
-//! resident bytes.
+//! resident bytes — then apply the same question to our own
+//! self-observability layer (`bigroots::obs`): the identical live-ingest
+//! workload runs with the span recorder disabled and enabled, and the
+//! events/sec delta is the end-to-end cost of instrumentation. The
+//! acceptance bar is ≤ 5% throughput loss enabled.
 //!
 //! Run: `cargo bench --bench table7_overhead [-- --quick]`
 
+use bigroots::live::{LiveConfig, LiveServer};
+use bigroots::sim::multi::{interleaved_workload, round_robin_specs};
 use bigroots::sim::sampler::measure_sampler_overhead;
-use bigroots::testing::bench::Bench;
+use bigroots::testing::bench::{black_box, Bench};
 use bigroots::util::table::{fnum, Align, Table};
 
+fn live_run(events: &[bigroots::trace::eventlog::TaggedEvent]) -> usize {
+    let mut server = LiveServer::new(LiveConfig { shards: 4, ..Default::default() });
+    server.feed_all(events);
+    server.finish().total_stages()
+}
+
 fn main() {
-    let bench = Bench::new();
+    let mut bench = Bench::new();
     let duration = if bench.quick { 1.0 } else { 5.0 };
 
     let mut t = Table::new(&format!(
@@ -31,4 +43,45 @@ fn main() {
     }
     print!("{}", t.render());
     println!("shape: all tools < 1% CPU and < 1 MB resident — matches the paper's negligible-overhead claim");
+
+    // --- self-observability overhead: spans + histograms on the hot path ---
+    let scale = if bench.quick { 0.05 } else { 0.12 };
+    let (_, events) = interleaved_workload(&round_robin_specs(4, scale, 23));
+    let n = events.len() as f64;
+    println!("\n(observability stream: 4 jobs = {} events, scale {scale})", events.len());
+
+    bigroots::obs::set_enabled(false);
+    bench.run("obs/ingest/disabled", n, || {
+        black_box(live_run(&events));
+    });
+    bigroots::obs::set_enabled(true);
+    bench.run("obs/ingest/enabled", n, || {
+        black_box(live_run(&events));
+    });
+    bigroots::obs::set_enabled(false);
+
+    let results = bench.results();
+    let off_tp = results
+        .iter()
+        .find(|r| r.name == "obs/ingest/disabled")
+        .and_then(|r| r.throughput())
+        .unwrap_or(0.0);
+    let on_tp = results
+        .iter()
+        .find(|r| r.name == "obs/ingest/enabled")
+        .and_then(|r| r.throughput())
+        .unwrap_or(0.0);
+    if off_tp > 0.0 && on_tp > 0.0 {
+        let overhead_pct = (1.0 - on_tp / off_tp) * 100.0;
+        bench.record("obs/ingest/overhead_pct", overhead_pct);
+        println!(
+            "observability overhead: {off_tp:.0} ev/s disabled vs {on_tp:.0} ev/s enabled = {overhead_pct:.2}% (target ≤ 5%)"
+        );
+    }
+
+    let json_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
+    match bench.write_json(json_path, "table7_overhead") {
+        Ok(()) => println!("(wrote {json_path})"),
+        Err(e) => eprintln!("(bench json write failed: {e})"),
+    }
 }

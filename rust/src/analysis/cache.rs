@@ -407,7 +407,10 @@ impl<B: StatsBackend, C: StageStatsCache> StatsBackend for Memoized<B, C> {
             return self.inner.stage_stats(sf);
         }
         let hash = structural_hash(sf);
-        if let Some(v) = self.cache.lookup(hash, sf) {
+        let g = crate::obs::span(crate::obs::SpanKind::CacheLookup);
+        let found = self.cache.lookup(hash, sf);
+        g.finish();
+        if let Some(v) = found {
             self.hits += 1;
             return v;
         }
@@ -438,7 +441,10 @@ impl<B: StatsBackend, C: StageStatsCache> StatsBackend for Memoized<B, C> {
         for (i, sf) in sfs.iter().enumerate() {
             let hash = structural_hash(sf);
             hashes.push(hash);
-            if let Some(v) = self.cache.lookup(hash, sf) {
+            let g = crate::obs::span(crate::obs::SpanKind::CacheLookup);
+            let found = self.cache.lookup(hash, sf);
+            g.finish();
+            if let Some(v) = found {
                 self.hits += 1;
                 out[i] = Some(v);
                 continue;

@@ -328,7 +328,9 @@ impl AnalysisService {
             let mut backend =
                 backends.lock().unwrap().pop().expect("one stats backend per worker");
             let refs: Vec<&StageFeatures> = batch.iter().map(|r| &r.features).collect();
+            let g = crate::obs::span(crate::obs::SpanKind::StatsKernel);
             let stats = backend.stage_stats_batch(&refs);
+            g.finish();
             // A short stats vec would silently drop stages via zip below.
             assert_eq!(stats.len(), batch.len(), "backend returned wrong batch size");
             let out: BatchResult = batch

@@ -80,6 +80,21 @@
 //! - **L1 (python/compile/kernels/)** — Pallas kernels for the fused
 //!   moments/Pearson reduction and edge-detection window means.
 //!
+//! The server watches itself through the **self-observability layer**
+//! ([`obs`]): every pipeline phase — source poll, decode, enqueue/dequeue
+//! wait, stats kernel, cache lookup, registry fold, control handling,
+//! snapshot writes — is timed into lock-free sharded log2 histograms
+//! ([`obs::hist`]) behind a near-zero-cost disabled flag; diagnostics go
+//! through a leveled, rate-limited structured logger ([`obs::log`],
+//! `--log-level`/`--log-json`); counters, histograms and P²-sketch
+//! quantiles are exported as Prometheus text ([`obs::prom`]) via the
+//! `metrics-prom` control verb and a `--metrics-port` HTTP endpoint; and
+//! `serve --self-analyze` feeds the server's own per-shard batch timings
+//! back through the [`coordinator::AnalysisService`] ([`obs::selfmon`]),
+//! so BigRoots diagnoses its own stragglers (queue wait vs. stats kernel
+//! vs. cache misses). `docs/OBSERVABILITY.md` catalogs the metrics;
+//! `benches/table7_overhead.rs` measures the enabled-vs-disabled cost.
+//!
 //! Python never runs at analysis time: `make artifacts` AOT-compiles the
 //! L1/L2 stack, and the rust binary loads `artifacts/*.hlo.txt` via PJRT.
 //!
@@ -89,6 +104,7 @@
 pub mod analysis;
 pub mod coordinator;
 pub mod live;
+pub mod obs;
 pub mod runtime;
 pub mod sim;
 pub mod testing;

@@ -10,6 +10,8 @@
 //! | `fleet-report` | the [`FleetReport`] (counters, quantiles, shares) |
 //! | `job <id>`     | summary of a retired job (stages, causes, flags)  |
 //! | `metrics`      | [`LiveMetrics`] incl. per-shard counters          |
+//! | `metrics-prom` | `{"text": ...}` — Prometheus exposition text      |
+//! | `self-report`  | BigRoots-on-BigRoots verdict on the server itself |
 //! | `snapshot`     | writes the fleet snapshot file, returns its path  |
 //! | `shutdown`     | asks the server to drain, snapshot and exit       |
 //!
@@ -38,6 +40,12 @@ pub enum ControlCommand {
     FleetReport,
     Job(u64),
     Metrics,
+    /// Prometheus text exposition, embedded in the JSON envelope as
+    /// `{"text": ...}` so the one-line-per-response protocol holds.
+    MetricsProm,
+    /// The server's self-analysis ([`crate::obs::selfmon`]): which shard
+    /// is the straggler and which internal phase dominates.
+    SelfReport,
     Snapshot,
     Shutdown,
     Invalid(String),
@@ -51,6 +59,8 @@ pub fn parse_command(line: &str) -> ControlCommand {
     match parts.next() {
         Some("fleet-report") if parts.next().is_none() => ControlCommand::FleetReport,
         Some("metrics") if parts.next().is_none() => ControlCommand::Metrics,
+        Some("metrics-prom") if parts.next().is_none() => ControlCommand::MetricsProm,
+        Some("self-report") if parts.next().is_none() => ControlCommand::SelfReport,
         Some("snapshot") if parts.next().is_none() => ControlCommand::Snapshot,
         Some("shutdown") if parts.next().is_none() => ControlCommand::Shutdown,
         Some("job") => match (parts.next().map(str::parse::<u64>), parts.next()) {
@@ -58,7 +68,8 @@ pub fn parse_command(line: &str) -> ControlCommand {
             _ => ControlCommand::Invalid("usage: job <id>".to_string()),
         },
         _ => ControlCommand::Invalid(format!(
-            "unknown command '{}' (try: fleet-report | job <id> | metrics | snapshot | shutdown)",
+            "unknown command '{}' (try: fleet-report | job <id> | metrics | metrics-prom | \
+             self-report | snapshot | shutdown)",
             line.trim()
         )),
     }
@@ -259,11 +270,15 @@ impl ControlServer {
             // pointed at the wrong port, most likely): cut the connection
             // instead of buffering without bound.
             if conn.open && conn.buf.len() > MAX_REQUEST_LINE {
-                eprintln!(
-                    "control {addr}: client {} sent a {}-byte line with no newline; \
-                     dropping connection",
-                    conn.peer,
-                    conn.buf.len()
+                crate::obs::log::log(
+                    crate::obs::log::Level::Warn,
+                    "live.control",
+                    "client sent an over-long line with no newline; dropping connection",
+                    &[
+                        ("addr", addr.clone()),
+                        ("peer", conn.peer.clone()),
+                        ("bytes", conn.buf.len().to_string()),
+                    ],
                 );
                 conn.open = false;
             }
@@ -283,9 +298,11 @@ impl ControlServer {
         conn.out.extend_from_slice(format!("{}\n", body.to_string()).as_bytes());
         try_flush(conn);
         if conn.open && conn.out.len() > MAX_PENDING_OUT {
-            eprintln!(
-                "control {}: client {} is not reading responses; dropping connection",
-                self.addr, conn.peer
+            crate::obs::log::log(
+                crate::obs::log::Level::Warn,
+                "live.control",
+                "client is not reading responses; dropping connection",
+                &[("addr", self.addr.clone()), ("peer", conn.peer.clone())],
             );
             conn.open = false;
         }
@@ -392,6 +409,7 @@ pub fn live_metrics_json(m: &LiveMetrics) -> Json {
         ("resident_now", m.resident_now.into()),
         ("events_dropped", m.events_dropped.into()),
         ("dropped_partial_lines", m.dropped_partial_lines.into()),
+        ("source_parse_errors", m.source_parse_errors.into()),
         ("cache_hits", m.cache_hits.into()),
         ("cache_misses", m.cache_misses.into()),
         ("cache_evictions", m.cache_evictions.into()),
@@ -434,6 +452,8 @@ mod tests {
     fn parses_every_verb() {
         assert_eq!(parse_command("fleet-report"), ControlCommand::FleetReport);
         assert_eq!(parse_command("  metrics  "), ControlCommand::Metrics);
+        assert_eq!(parse_command("metrics-prom"), ControlCommand::MetricsProm);
+        assert_eq!(parse_command("self-report"), ControlCommand::SelfReport);
         assert_eq!(parse_command("snapshot"), ControlCommand::Snapshot);
         assert_eq!(parse_command("shutdown"), ControlCommand::Shutdown);
         assert_eq!(parse_command("job 42"), ControlCommand::Job(42));

@@ -57,6 +57,7 @@ use crate::analysis::router::RoutingBackend;
 use crate::analysis::stats::{NativeBackend, StatsBackend};
 use crate::live::lifecycle::{Lifecycle, LifecycleConfig};
 use crate::live::registry::{FleetFlag, FleetRegistry, FleetReport};
+use crate::obs::{self, SpanKind};
 use crate::trace::eventlog::TaggedEvent;
 use crate::util::queue::{bounded, BoundedSender};
 
@@ -174,6 +175,11 @@ pub struct LiveMetrics {
     /// the event source (see
     /// [`crate::live::source::EventSource::dropped_partial_lines`]).
     pub dropped_partial_lines: usize,
+    /// Event lines the source failed to parse (see
+    /// [`crate::live::source::EventSource::parse_errors`]). Updated every
+    /// driver-loop iteration, so the `metrics` control verb sees it while
+    /// the stream is still flowing.
+    pub source_parse_errors: usize,
     /// Stage-stats memo hits across shard backends (live — shard workers
     /// publish after every ingest batch, so fleet snapshots see them).
     /// The memo is the cross-shard [`SharedStatsCache`], so hits include
@@ -247,6 +253,8 @@ pub struct LiveServer {
     registry: FleetRegistry,
     /// Cumulative partial-line drops reported by the event source.
     source_dropped_partial_lines: usize,
+    /// Cumulative parse failures reported by the event source.
+    source_parse_errors: usize,
     /// (job id, incarnation) → collected (seq, analysis, fleet flags).
     collected: HashMap<(u64, u32), Vec<(u64, StageAnalysis, Vec<FleetFlag>)>>,
     completed: Vec<CompletedJob>,
@@ -267,7 +275,7 @@ impl LiveServer {
         let mut senders = Vec::with_capacity(cfg.shards);
         let mut workers = Vec::with_capacity(cfg.shards);
         let mut stats = Vec::with_capacity(cfg.shards);
-        for _ in 0..cfg.shards {
+        for shard in 0..cfg.shards {
             let (tx, rx) = bounded::<Vec<TaggedEvent>>(cfg.queue_capacity);
             let shard_stats = Arc::new(ShardStats::default());
             let worker_stats = Arc::clone(&shard_stats);
@@ -278,6 +286,7 @@ impl LiveServer {
             let route_large_tasks = cfg.route_large_tasks;
             workers.push(std::thread::spawn(move || {
                 shard_worker(
+                    shard,
                     rx,
                     worker_tx,
                     worker_stats,
@@ -305,6 +314,7 @@ impl LiveServer {
             stats,
             shared_cache,
             source_dropped_partial_lines: 0,
+            source_parse_errors: 0,
             collected: HashMap::new(),
             completed: Vec::new(),
             jobs_completed: 0,
@@ -329,7 +339,10 @@ impl LiveServer {
         self.pending[shard].push(event);
         if self.pending[shard].len() >= self.cfg.ingest_batch {
             let batch = std::mem::take(&mut self.pending[shard]);
-            if self.senders[shard].send(batch).is_err() {
+            let g = obs::span(SpanKind::EnqueueWait);
+            let sent = self.senders[shard].send(batch);
+            g.finish();
+            if sent.is_err() {
                 panic!("live shard {shard} worker died");
             }
         }
@@ -363,7 +376,10 @@ impl LiveServer {
         for shard in 0..self.cfg.shards {
             if !self.pending[shard].is_empty() {
                 let batch = std::mem::take(&mut self.pending[shard]);
-                if self.senders[shard].send(batch).is_err() {
+                let g = obs::span(SpanKind::EnqueueWait);
+                let sent = self.senders[shard].send(batch);
+                g.finish();
+                if sent.is_err() {
                     panic!("live shard {shard} worker died");
                 }
             }
@@ -401,6 +417,15 @@ impl LiveServer {
         self.source_dropped_partial_lines = dropped_partial_lines;
     }
 
+    /// Record both cumulative source-side loss counters in one call —
+    /// partial-line drops and parse failures — so the `metrics` control
+    /// verb and Prometheus exposition see them while the stream is still
+    /// flowing, not only at shutdown.
+    pub fn record_source_stats(&mut self, dropped_partial_lines: usize, parse_errors: usize) {
+        self.source_dropped_partial_lines = dropped_partial_lines;
+        self.source_parse_errors = parse_errors;
+    }
+
     fn drain_results(&mut self) {
         while let Ok(msg) = self.results_rx.try_recv() {
             self.absorb(msg);
@@ -412,6 +437,7 @@ impl LiveServer {
             LiveMsg::Stage { job_id, incarnation, seq, features, analysis } => {
                 // Second verdict pass against the baseline *before* this
                 // stage joins it (no self-comparison), then fold.
+                let _g = obs::span(SpanKind::RegistryFold);
                 let flags = self.registry.fleet_verdict(&features, &analysis);
                 self.registry.fold_stage(&features, &analysis);
                 self.collected
@@ -480,6 +506,7 @@ impl LiveServer {
                 .map(|s| s.dropped.load(Ordering::Relaxed))
                 .sum(),
             dropped_partial_lines: self.source_dropped_partial_lines,
+            source_parse_errors: self.source_parse_errors,
             cache_hits: per_shard.iter().map(|s| s.cache_hits).sum(),
             cache_misses: per_shard.iter().map(|s| s.cache_misses).sum(),
             cache_evictions: self.shared_cache.evictions() as usize,
@@ -531,6 +558,7 @@ impl LiveServer {
 /// publish to [`ShardStats`] after every ingest batch so snapshots stay
 /// live.
 fn shard_worker(
+    shard: usize,
     rx: crate::util::queue::BoundedReceiver<Vec<TaggedEvent>>,
     tx: Sender<LiveMsg>,
     stats: Arc<ShardStats>,
@@ -558,9 +586,16 @@ fn shard_worker(
          ready: Vec<crate::coordinator::streaming::ReadyStage>,
          backend: &mut SharedCachedBackend<Box<dyn StatsBackend + Send>>,
          stats: &ShardStats,
-         tx: &Sender<LiveMsg>| {
+         tx: &Sender<LiveMsg>,
+         kernel_secs: &mut f64| {
             for r in ready {
+                let t0 = obs::enabled().then(Instant::now);
                 let st = backend.stage_stats(&r.features);
+                if let Some(t0) = t0 {
+                    let d = t0.elapsed();
+                    obs::record(SpanKind::StatsKernel, d);
+                    *kernel_secs += d.as_secs_f64();
+                }
                 let analysis = analyze_stage_with_stats(&r.features, &st, &bigroots);
                 stats.stages.fetch_add(1, Ordering::Relaxed);
                 let _ = tx.send(LiveMsg::Stage {
@@ -585,13 +620,28 @@ fn shard_worker(
         stats.cache_hits.store(hits as usize, Ordering::Relaxed);
         stats.cache_misses.store(misses as usize, Ordering::Relaxed);
     };
-    while let Some(batch) = rx.recv() {
+    loop {
+        // Time the blocking recv so queue-idle shows up as dequeue wait in
+        // the span histograms and in this shard's self-analysis samples.
+        let wait_t0 = obs::enabled().then(Instant::now);
+        let Some(batch) = rx.recv() else { break };
+        let queue_wait = wait_t0.map(|t| t.elapsed()).unwrap_or_default();
         if batch.is_empty() {
             // Idle tick from `LiveServer::pump`: run the eviction scan so
-            // jobs that drained at the tail of the stream retire now.
+            // jobs that drained at the tail of the stream retire now. Not
+            // a real batch — no dequeue-wait span, no telemetry sample.
             lc.force_scan();
+            let mut kernel = 0.0;
             for e in lc.take_evictions() {
-                analyze_and_send(e.job_id, e.incarnation, e.flushed, &mut backend, &stats, &tx);
+                analyze_and_send(
+                    e.job_id,
+                    e.incarnation,
+                    e.flushed,
+                    &mut backend,
+                    &stats,
+                    &tx,
+                    &mut kernel,
+                );
                 let _ = tx.send(LiveMsg::Evicted {
                     job_id: e.job_id,
                     incarnation: e.incarnation,
@@ -603,16 +653,40 @@ fn shard_worker(
             publish(&backend, &lc, &stats);
             continue;
         }
+        obs::record(SpanKind::DequeueWait, queue_wait);
+        let batch_t0 = wait_t0.map(|_| Instant::now());
+        let batch_start =
+            if batch_t0.is_some() { obs::global().uptime_secs() } else { 0.0 };
+        let misses_before =
+            if batch_t0.is_some() { backend.lookup_counts().1 } else { 0 };
+        let n_events = batch.len();
+        let mut kernel = 0.0;
         for ev in batch {
             stats.events.fetch_add(1, Ordering::Relaxed);
             let job_id = ev.job_id;
             if let Some((incarnation, ready)) = lc.feed(&ev) {
                 if !ready.is_empty() {
-                    analyze_and_send(job_id, incarnation, ready, &mut backend, &stats, &tx);
+                    analyze_and_send(
+                        job_id,
+                        incarnation,
+                        ready,
+                        &mut backend,
+                        &stats,
+                        &tx,
+                        &mut kernel,
+                    );
                 }
             }
             for e in lc.take_evictions() {
-                analyze_and_send(e.job_id, e.incarnation, e.flushed, &mut backend, &stats, &tx);
+                analyze_and_send(
+                    e.job_id,
+                    e.incarnation,
+                    e.flushed,
+                    &mut backend,
+                    &stats,
+                    &tx,
+                    &mut kernel,
+                );
                 let _ = tx.send(LiveMsg::Evicted {
                     job_id: e.job_id,
                     incarnation: e.incarnation,
@@ -623,10 +697,31 @@ fn shard_worker(
             }
         }
         publish(&backend, &lc, &stats);
+        if let Some(t0) = batch_t0 {
+            let miss_delta = backend.lookup_counts().1.saturating_sub(misses_before);
+            crate::obs::telemetry().record(crate::obs::BatchSample {
+                shard,
+                start: batch_start,
+                duration: t0.elapsed().as_secs_f64(),
+                queue_wait: queue_wait.as_secs_f64(),
+                kernel,
+                events: n_events,
+                cache_misses: miss_delta,
+            });
+        }
     }
     // Input closed: retire everything still resident.
+    let mut kernel = 0.0;
     for e in lc.drain_all() {
-        analyze_and_send(e.job_id, e.incarnation, e.flushed, &mut backend, &stats, &tx);
+        analyze_and_send(
+            e.job_id,
+            e.incarnation,
+            e.flushed,
+            &mut backend,
+            &stats,
+            &tx,
+            &mut kernel,
+        );
         let _ = tx.send(LiveMsg::Evicted {
             job_id: e.job_id,
             incarnation: e.incarnation,

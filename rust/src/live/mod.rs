@@ -35,8 +35,14 @@
 //!   restarts;
 //! - [`control`] — [`control::ControlServer`]: a line-delimited TCP
 //!   control/query protocol (`fleet-report`, `job <id>`, `metrics`,
-//!   `snapshot`, `shutdown`) sharing one query path with the CLI's
-//!   periodic snapshot printing.
+//!   `metrics-prom`, `self-report`, `snapshot`, `shutdown`) sharing one
+//!   query path with the CLI's periodic snapshot printing.
+//!
+//! Every layer is instrumented through [`crate::obs`]: spans time source
+//! polls, decode, queue waits, the stats kernel, cache lookups, registry
+//! folds, control handling and snapshot writes; per-shard batch timings
+//! feed the server's BigRoots-on-BigRoots self-analysis
+//! ([`crate::obs::selfmon`]).
 //!
 //! `bigroots serve --tail/--listen --control-port --snapshot-path` and
 //! `examples/live_tail.rs` / `examples/control_client.rs` drive the

@@ -19,6 +19,7 @@ use std::collections::VecDeque;
 use std::io::Read;
 use std::net::{TcpListener, TcpStream};
 
+use crate::obs::{self, SpanKind};
 use crate::trace::eventlog::{NdjsonTail, TaggedEvent};
 
 /// One poll's outcome.
@@ -48,6 +49,16 @@ pub trait EventSource {
     /// loss is visible instead of silent. Sources that cannot lose a
     /// partial line (file tail, memory replay) keep the default 0.
     fn dropped_partial_lines(&self) -> usize {
+        0
+    }
+
+    /// Lines (or connections) this source rejected as unparseable.
+    /// Cumulative; the serve loop copies it into
+    /// [`crate::live::LiveMetrics::source_parse_errors`] so bad input is
+    /// visible *while the stream flows*, not only at shutdown. Sources
+    /// that fail hard on a parse error instead (file tail, stdin) keep
+    /// the default 0 — their errors surface through `poll`'s `Err`.
+    fn parse_errors(&self) -> usize {
         0
     }
 }
@@ -140,11 +151,10 @@ impl EventSource for TailSource {
                 Ok(0) => break,
                 Ok(n) => {
                     self.offset += n as u64;
-                    events.extend(
-                        self.parser
-                            .feed(&chunk[..n])
-                            .map_err(|e| format!("{}: {e}", self.path))?,
-                    );
+                    let g = obs::span(SpanKind::Decode);
+                    let parsed = self.parser.feed(&chunk[..n]);
+                    g.finish();
+                    events.extend(parsed.map_err(|e| format!("{}: {e}", self.path))?);
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
                 Err(e) => return Err(format!("reading {}: {e}", self.path)),
@@ -289,25 +299,45 @@ impl EventSource for TcpSource {
                             Err(_) => {
                                 dropped_partials += 1;
                                 parse_errors += 1;
-                                eprintln!(
-                                    "tcp {addr}: client {} left an unterminated line \
-                                     that does not parse (mid-line disconnect or \
-                                     malformed trailer); dropping it",
-                                    conn.peer
+                                obs::log::log(
+                                    obs::log::Level::Warn,
+                                    "live.source",
+                                    "unterminated trailing line does not parse \
+                                     (mid-line disconnect or malformed trailer); \
+                                     dropping it",
+                                    &[
+                                        ("addr", addr.clone()),
+                                        ("peer", conn.peer.clone()),
+                                    ],
                                 );
                             }
                         }
                         conn.open = false;
                         break;
                     }
-                    Ok(n) => match conn.parser.feed(&chunk[..n]) {
-                        Ok(evs) => events.extend(evs),
-                        Err(_) => {
-                            parse_errors += 1;
-                            conn.open = false;
-                            break;
+                    Ok(n) => {
+                        let g = obs::span(SpanKind::Decode);
+                        let parsed = conn.parser.feed(&chunk[..n]);
+                        g.finish();
+                        match parsed {
+                            Ok(evs) => events.extend(evs),
+                            Err(e) => {
+                                parse_errors += 1;
+                                obs::log::log(
+                                    obs::log::Level::Warn,
+                                    "live.source",
+                                    "malformed line; dropping connection",
+                                    &[
+                                        ("addr", addr.clone()),
+                                        ("peer", conn.peer.clone()),
+                                        ("error", e.to_string()),
+                                    ],
+                                );
+                                conn.open = false;
+                                break;
+                            }
                         }
-                    },
+                    }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
                     Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
                     Err(_) => {
@@ -315,10 +345,15 @@ impl EventSource for TcpSource {
                         // for the current line is gone with the client.
                         if conn.parser.buffered() > 0 {
                             dropped_partials += 1;
-                            eprintln!(
-                                "tcp {addr}: client {} connection error mid-line; \
-                                 dropping buffered partial line",
-                                conn.peer
+                            obs::log::log(
+                                obs::log::Level::Warn,
+                                "live.source",
+                                "connection error mid-line; dropping buffered \
+                                 partial line",
+                                &[
+                                    ("addr", addr.clone()),
+                                    ("peer", conn.peer.clone()),
+                                ],
                             );
                         }
                         conn.open = false;
@@ -346,6 +381,10 @@ impl EventSource for TcpSource {
 
     fn dropped_partial_lines(&self) -> usize {
         self.dropped_partial_lines
+    }
+
+    fn parse_errors(&self) -> usize {
+        self.parse_errors
     }
 }
 
@@ -399,11 +438,10 @@ impl EventSource for StdinSource {
             match self.rx.try_recv() {
                 Ok(Some(mut line)) => {
                     line.push('\n');
-                    events.extend(
-                        self.parser
-                            .feed(line.as_bytes())
-                            .map_err(|e| format!("stdin: {e}"))?,
-                    );
+                    let g = obs::span(SpanKind::Decode);
+                    let parsed = self.parser.feed(line.as_bytes());
+                    g.finish();
+                    events.extend(parsed.map_err(|e| format!("stdin: {e}"))?);
                 }
                 Ok(None) | Err(std::sync::mpsc::TryRecvError::Disconnected) => {
                     self.done = true;
@@ -683,5 +721,8 @@ mod tests {
         good.join().unwrap();
         assert_eq!(got, events, "good tenant's stream intact");
         assert_eq!(src.parse_errors(), 1, "bad tenant dropped");
+        // The trait accessor agrees — this is what the serve loop reads.
+        let as_source: &dyn EventSource = &src;
+        assert_eq!(as_source.parse_errors(), 1);
     }
 }

@@ -66,8 +66,23 @@ fn main() {
                     "control-port",
                     "",
                     "line-delimited JSON control/query socket (fleet-report | job <id> | \
-                     metrics | snapshot | shutdown), e.g. 127.0.0.1:7172",
+                     metrics | metrics-prom | self-report | snapshot | shutdown), \
+                     e.g. 127.0.0.1:7172",
                 )
+                .opt(
+                    "metrics-port",
+                    "",
+                    "HTTP endpoint serving the Prometheus text exposition (scrape with \
+                     curl or a Prometheus server), e.g. 127.0.0.1:9191",
+                )
+                .opt("log-level", "info", "diagnostics level: error | warn | info | debug | trace")
+                .flag("log-json", "emit diagnostics as NDJSON lines instead of human-readable")
+                .flag(
+                    "self-analyze",
+                    "feed the server's own per-shard batch timings through BigRoots and \
+                     print which shard/phase is the straggler on the snapshot cadence",
+                )
+                .flag("no-obs", "disable span recording (overhead-measurement baseline)")
                 .opt(
                     "snapshot-path",
                     "",
@@ -317,9 +332,21 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
         persist, CompletedJob, EventSource, LifecycleConfig, LiveConfig, LiveServer,
         MemorySource, SourcePoll, StdinSource, TailSource, TcpSource,
     };
+    use bigroots::obs;
     use bigroots::sim::multi;
     use bigroots::trace::eventlog::parse_tagged_events;
     use bigroots::util::json::Json;
+
+    if let Err(e) = obs::log::set_level_str(&args.get_or("log-level", "info")) {
+        eprintln!("{e}");
+        return 2;
+    }
+    obs::log::set_json(args.flag("log-json"));
+    // The span recorder is on for every serve run unless the operator asks
+    // for the uninstrumented baseline; nothing else in the binary enables
+    // it, so offline analysis stays at the one-atomic-load disabled cost.
+    obs::set_enabled(!args.flag("no-obs"));
+    let self_analyze = args.flag("self-analyze");
 
     let cfg = LiveConfig {
         shards: args.get_usize("shards", 4),
@@ -410,6 +437,24 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
             }
         }
     };
+    let metrics_addr = args.get_or("metrics-port", "");
+    let mut metrics_http = if metrics_addr.is_empty() {
+        None
+    } else {
+        match obs::MetricsServer::bind(&metrics_addr) {
+            Ok(s) => {
+                match s.local_addr() {
+                    Ok(a) => println!("metrics endpoint on http://{a}/metrics"),
+                    Err(_) => println!("metrics endpoint on http://{metrics_addr}/metrics"),
+                }
+                Some(s)
+            }
+            Err(e) => {
+                eprintln!("metrics bind {metrics_addr}: {e}");
+                return 1;
+            }
+        }
+    };
     let mut server = LiveServer::new(cfg);
 
     // Restore the fleet baseline from the last shutdown's snapshot: the
@@ -424,7 +469,10 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
                 );
                 server.restore_registry(reg);
             }
-            Err(e) => eprintln!("snapshot restore failed ({e}); starting with a fresh baseline"),
+            Err(e) => obs::log::warn(
+                "serve",
+                &format!("snapshot restore failed ({e}); starting with a fresh baseline"),
+            ),
         }
     }
 
@@ -469,11 +517,15 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
     // counts, so an idle rebooted server doesn't rewrite the same file.
     let mut last_snapshot_stages = server.registry().stages_folded();
     let write_snapshot = |server: &LiveServer, path: &str| -> Result<usize, String> {
+        let _g = obs::span(obs::SpanKind::SnapshotWrite);
         let reg = server.registry();
         persist::save_snapshot(reg, path).map(|()| reg.stages_folded())
     };
     loop {
-        match source.poll() {
+        let poll_span = obs::span(obs::SpanKind::SourcePoll);
+        let polled = source.poll();
+        poll_span.finish();
+        match polled {
             Ok(SourcePoll::Events(events)) => {
                 idle_since = None;
                 for e in events {
@@ -491,12 +543,15 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
             }
             Ok(SourcePoll::End) => break,
             Err(e) => {
-                eprintln!("source error: {e} — draining and snapshotting before exit");
+                obs::log::error(
+                    "serve",
+                    &format!("source error: {e} — draining and snapshotting before exit"),
+                );
                 exit_code = 1;
                 break;
             }
         }
-        server.record_source_drops(source.dropped_partial_lines());
+        server.record_source_stats(source.dropped_partial_lines(), source.parse_errors());
         for j in server.drain_completed() {
             // A refreshed id (revived incarnation) moves to the back of
             // the age queue, so the newest summary is the last to go.
@@ -519,11 +574,12 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
             let requests = match ctrl.poll() {
                 Ok(r) => r,
                 Err(e) => {
-                    eprintln!("control error: {e}");
+                    obs::log::error("live.control", &format!("control error: {e}"));
                     Vec::new()
                 }
             };
             for req in requests {
+                let req_span = obs::span(obs::SpanKind::Control);
                 let resp = match &req.command {
                     ControlCommand::FleetReport => control::ok_response(
                         "fleet-report",
@@ -533,6 +589,30 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
                         "metrics",
                         control::live_metrics_json(&server.metrics()),
                     ),
+                    // The exposition text rides inside the JSON envelope so
+                    // the one-line-per-response protocol holds; operators
+                    // wanting plain text scrape --metrics-port instead.
+                    ControlCommand::MetricsProm => control::ok_response(
+                        "metrics-prom",
+                        Json::from_pairs(vec![(
+                            "text",
+                            obs::prom::render(
+                                obs::global(),
+                                Some(&server.metrics()),
+                                Some(&control::fleet_report(&server)),
+                            )
+                            .into(),
+                        )]),
+                    ),
+                    ControlCommand::SelfReport => {
+                        match obs::selfmon::analyze(&obs::telemetry().samples()) {
+                            Some(r) => control::ok_response("self-report", r.to_json()),
+                            None => control::err_response(
+                                "self-analysis needs more batch samples (keep the stream \
+                                 flowing and retry)",
+                            ),
+                        }
+                    }
                     ControlCommand::Job(id) => match job_summaries.get(id) {
                         Some(j) => control::ok_response("job", j.clone()),
                         None => control::err_response(&format!("job {id} has not retired")),
@@ -564,7 +644,18 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
                     ControlCommand::Invalid(msg) => control::err_response(msg),
                 };
                 ctrl.respond(&req, &resp);
+                req_span.finish();
             }
+        }
+        // Scrape endpoint: render on demand, never block the driver.
+        if let Some(ms) = metrics_http.as_mut() {
+            ms.poll(|| {
+                obs::prom::render(
+                    obs::global(),
+                    Some(&server.metrics()),
+                    Some(&control::fleet_report(&server)),
+                )
+            });
         }
         if shutdown_requested {
             println!("(shutdown requested via control socket — draining)");
@@ -575,13 +666,19 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
         {
             last_snapshot = std::time::Instant::now();
             print!("{}", control::fleet_report_text(&server));
+            if self_analyze {
+                match obs::selfmon::analyze(&obs::telemetry().samples()) {
+                    Some(r) => print!("{}", r.render()),
+                    None => println!("self-analysis: warming up (not enough batch samples yet)"),
+                }
+            }
             // Skip the file write when nothing folded since the last one
             // — an idle restored server must not churn the disk forever.
             let folded = server.registry().stages_folded();
             if !snapshot_path.is_empty() && folded != last_snapshot_stages {
                 match write_snapshot(&server, &snapshot_path) {
                     Ok(_) => last_snapshot_stages = folded,
-                    Err(e) => eprintln!("snapshot write failed: {e}"),
+                    Err(e) => obs::log::warn("serve", &format!("snapshot write failed: {e}")),
                 }
             }
         }
@@ -601,7 +698,7 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
 
     // Drain-then-snapshot exit: retire every resident job, then persist
     // the final baseline so the next boot resumes from it.
-    server.record_source_drops(source.dropped_partial_lines());
+    server.record_source_stats(source.dropped_partial_lines(), source.parse_errors());
     let (report, registry) = server.finish_with_registry();
     if !snapshot_path.is_empty() {
         match persist::save_snapshot(&registry, &snapshot_path) {
@@ -609,7 +706,7 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
                 "wrote fleet snapshot {snapshot_path} ({} stages folded)",
                 registry.stages_folded()
             ),
-            Err(e) => eprintln!("final snapshot write failed: {e}"),
+            Err(e) => obs::log::error("serve", &format!("final snapshot write failed: {e}")),
         }
     }
     for j in &report.jobs {
@@ -633,6 +730,16 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
         m.cache_misses,
         m.resident_high_water,
     );
+    if self_analyze {
+        match obs::selfmon::analyze(&obs::telemetry().samples()) {
+            Some(r) => print!("{}", r.render()),
+            None => println!(
+                "self-analysis: not enough batch samples ({} recorded) — \
+                 a longer run is needed for a verdict",
+                obs::telemetry().total_recorded()
+            ),
+        }
+    }
     if args.flag("metrics") {
         let mut t = Table::new("Per-shard metrics")
             .header(&["shard", "events", "stages", "resident", "high-water", "evicted"])

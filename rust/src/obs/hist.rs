@@ -1,0 +1,227 @@
+//! Lock-free log-bucketed latency histogram.
+//!
+//! The recording path is a handful of `Relaxed` atomic adds on a per-thread
+//! shard — no locks, no allocation, no floating point. Buckets are powers of
+//! two in nanoseconds: bucket `i` covers `[2^i, 2^(i+1))` ns (bucket 0 also
+//! absorbs 0–1 ns, the last bucket absorbs everything above ~9 minutes), so
+//! the bucket index is one `leading_zeros` instruction. Alongside the bucket
+//! counts each shard keeps an exact integer event count and an exact integer
+//! nanosecond sum, which makes a merged snapshot *bit-identical* to
+//! single-threaded recording of the same durations — the property
+//! `rust/tests/observability.rs` asserts.
+//!
+//! Reading merges the shards into a plain [`HistSnapshot`], which derives
+//! quantiles by linear interpolation inside the covering bucket. Those
+//! quantiles are coarse (log-spaced buckets) but monotone; the span layer
+//! pairs them with exact P² sketches for the scrape-facing estimates.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Number of log2 buckets: `[2^0, 2^39)` ns spans 1 ns to ~9.2 minutes,
+/// with the final bucket as an open-ended catch-all.
+pub const BUCKETS: usize = 40;
+
+/// Number of independently-written shards. Writers pick a shard from a
+/// per-thread lane id, so shards only contend when more threads than shards
+/// record the same histogram concurrently.
+pub const SHARDS: usize = 8;
+
+/// Bucket index for a duration in nanoseconds.
+#[inline]
+pub fn bucket_index(nanos: u64) -> usize {
+    if nanos == 0 {
+        return 0;
+    }
+    ((63 - nanos.leading_zeros()) as usize).min(BUCKETS - 1)
+}
+
+/// Exclusive upper bound of bucket `i` in seconds (`f64::INFINITY` for the
+/// last bucket).
+pub fn bucket_upper_secs(i: usize) -> f64 {
+    if i + 1 >= BUCKETS {
+        f64::INFINITY
+    } else {
+        (1u64 << (i + 1)) as f64 * 1e-9
+    }
+}
+
+#[repr(align(64))]
+struct HistShard {
+    counts: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_nanos: AtomicU64,
+}
+
+impl HistShard {
+    fn new() -> Self {
+        HistShard {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_nanos: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Sharded lock-free histogram; see the module docs for layout.
+pub struct LatencyHistogram {
+    shards: Box<[HistShard]>,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram { shards: (0..SHARDS).map(|_| HistShard::new()).collect() }
+    }
+
+    /// Record a duration on the given lane (any usize; wrapped mod
+    /// [`SHARDS`]). Safe from any thread, never blocks.
+    #[inline]
+    pub fn record(&self, lane: usize, d: Duration) {
+        self.record_nanos(lane, d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    #[inline]
+    pub fn record_nanos(&self, lane: usize, nanos: u64) {
+        let shard = &self.shards[lane % SHARDS];
+        shard.counts[bucket_index(nanos)].fetch_add(1, Ordering::Relaxed);
+        shard.count.fetch_add(1, Ordering::Relaxed);
+        shard.sum_nanos.fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    /// Merge every shard into one snapshot. Count and sum are exact
+    /// integers, so a snapshot of sharded recording equals a snapshot of
+    /// the same values recorded on a single shard, bit for bit.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut counts = [0u64; BUCKETS];
+        let mut count = 0u64;
+        let mut sum_nanos = 0u64;
+        for sh in self.shards.iter() {
+            for (acc, c) in counts.iter_mut().zip(sh.counts.iter()) {
+                *acc += c.load(Ordering::Relaxed);
+            }
+            count += sh.count.load(Ordering::Relaxed);
+            sum_nanos = sum_nanos.wrapping_add(sh.sum_nanos.load(Ordering::Relaxed));
+        }
+        HistSnapshot { counts, count, sum_nanos }
+    }
+}
+
+/// Point-in-time merged view of a [`LatencyHistogram`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub counts: [u64; BUCKETS],
+    pub count: u64,
+    pub sum_nanos: u64,
+}
+
+impl HistSnapshot {
+    pub fn empty() -> Self {
+        HistSnapshot { counts: [0; BUCKETS], count: 0, sum_nanos: 0 }
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_nanos as f64 * 1e-9 / self.count as f64
+        }
+    }
+
+    /// Quantile estimate in seconds by linear interpolation inside the
+    /// covering bucket. Monotone in `q`; 0.0 on an empty snapshot.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        // Rank in [1, count]; the task at that rank sits in some bucket.
+        let rank = (q * self.count as f64).max(1.0);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let next = cum + c;
+            if rank <= next as f64 {
+                let lo = if i == 0 { 0.0 } else { (1u64 << i) as f64 };
+                let hi = if i + 1 >= BUCKETS {
+                    // Open-ended top bucket: fall back to its lower bound
+                    // plus one doubling, so the estimate stays finite.
+                    lo * 2.0
+                } else {
+                    (1u64 << (i + 1)) as f64
+                };
+                let frac = (rank - cum as f64) / c as f64;
+                return (lo + frac * (hi - lo)) * 1e-9;
+            }
+            cum = next;
+        }
+        // Unreachable when count > 0, but stay total.
+        self.mean_secs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_boundaries() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(2), 1);
+        assert_eq!(bucket_index(3), 1);
+        assert_eq!(bucket_index(4), 2);
+        assert_eq!(bucket_index((1 << 39) - 1), 38);
+        assert_eq!(bucket_index(1 << 39), 39);
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn sharded_merge_is_bit_exact() {
+        let single = LatencyHistogram::new();
+        let sharded = LatencyHistogram::new();
+        let values: Vec<u64> = (0..10_000).map(|i| (i * 2654435761u64) % 5_000_000).collect();
+        for &v in &values {
+            single.record_nanos(0, v);
+        }
+        for (i, &v) in values.iter().enumerate() {
+            sharded.record_nanos(i, v); // cycles through every shard
+        }
+        assert_eq!(single.snapshot(), sharded.snapshot());
+    }
+
+    #[test]
+    fn quantiles_are_monotone_and_bounded() {
+        let h = LatencyHistogram::new();
+        for i in 1..=1000u64 {
+            h.record_nanos(i as usize, i * 1000); // 1 µs .. 1 ms
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 1000);
+        let mut prev = 0.0;
+        for step in 0..=100 {
+            let v = s.quantile(step as f64 / 100.0);
+            assert!(v >= prev, "quantile not monotone at {step}: {v} < {prev}");
+            prev = v;
+        }
+        assert!(s.quantile(0.5) > 0.0);
+        assert!(s.quantile(1.0) <= 2.1e-3, "p100 {} too large", s.quantile(1.0));
+        let mean = s.mean_secs();
+        assert!((mean - 500.5e-6).abs() < 1e-9, "exact mean from integer sum, got {mean}");
+    }
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let s = LatencyHistogram::new().snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.quantile(0.5), 0.0);
+        assert_eq!(s.mean_secs(), 0.0);
+    }
+}

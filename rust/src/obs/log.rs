@@ -1,0 +1,281 @@
+//! Structured, leveled, rate-limited logger for server diagnostics.
+//!
+//! Replaces the ad-hoc `eprintln!` calls that used to be scattered through
+//! `main.rs`, `live/source.rs`, `live/control.rs` and
+//! `runtime/stats_exec.rs`. Lines go to stderr in either a human form
+//!
+//! ```text
+//! [warn live.source] connection error mid-line (peer=10.0.0.7:51344)
+//! ```
+//!
+//! or NDJSON (`--log-json`) for machine collection:
+//!
+//! ```text
+//! {"level":"warn","msg":"connection error mid-line","target":"live.source","ts":1754556000.123,...}
+//! ```
+//!
+//! Each *target* (a dotted subsystem name) is rate-limited to
+//! [`MAX_PER_WINDOW`] lines per second; excess lines are counted and
+//! summarized when the window rolls over, so a flapping source cannot
+//! drown the terminal or the collector. User-facing CLI usage errors stay
+//! on plain `eprintln!` — they are the program's output, not diagnostics.
+
+use std::collections::HashMap;
+use std::io::Write as _;
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+use crate::util::json::Json;
+
+/// Max lines emitted per target per one-second window.
+pub const MAX_PER_WINDOW: u32 = 32;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+            Level::Trace => "trace",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<Level> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" | "warning" => Level::Warn,
+            "info" => Level::Info,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => return None,
+        })
+    }
+
+    fn from_u8(v: u8) -> Level {
+        match v {
+            0 => Level::Error,
+            1 => Level::Warn,
+            2 => Level::Info,
+            3 => Level::Debug,
+            _ => Level::Trace,
+        }
+    }
+}
+
+struct Window {
+    start_sec: u64,
+    emitted: u32,
+    suppressed: u64,
+}
+
+struct Logger {
+    level: AtomicU8,
+    json: AtomicBool,
+    t0: Instant,
+    windows: Mutex<HashMap<String, Window>>,
+}
+
+static LOGGER: OnceLock<Logger> = OnceLock::new();
+
+fn logger() -> &'static Logger {
+    LOGGER.get_or_init(|| Logger {
+        level: AtomicU8::new(Level::Info as u8),
+        json: AtomicBool::new(false),
+        t0: Instant::now(),
+        windows: Mutex::new(HashMap::new()),
+    })
+}
+
+/// Current threshold; lines above it are dropped before formatting.
+pub fn level() -> Level {
+    Level::from_u8(logger().level.load(Ordering::Relaxed))
+}
+
+pub fn set_level(l: Level) {
+    logger().level.store(l as u8, Ordering::Relaxed);
+}
+
+/// Parse and apply a `--log-level` value.
+pub fn set_level_str(s: &str) -> Result<(), String> {
+    match Level::from_str(s) {
+        Some(l) => {
+            set_level(l);
+            Ok(())
+        }
+        None => Err(format!("unknown log level '{s}' (error|warn|info|debug|trace)")),
+    }
+}
+
+/// Switch between human lines and NDJSON.
+pub fn set_json(on: bool) {
+    logger().json.store(on, Ordering::Relaxed);
+}
+
+pub fn error(target: &str, msg: &str) {
+    log(Level::Error, target, msg, &[]);
+}
+
+pub fn warn(target: &str, msg: &str) {
+    log(Level::Warn, target, msg, &[]);
+}
+
+pub fn info(target: &str, msg: &str) {
+    log(Level::Info, target, msg, &[]);
+}
+
+pub fn debug(target: &str, msg: &str) {
+    log(Level::Debug, target, msg, &[]);
+}
+
+/// Emit one line with structured fields. Returns whether the line was
+/// actually written (false: filtered by level or rate-limited) — which is
+/// also what makes the limiter unit-testable without capturing stderr.
+pub fn log(level: Level, target: &str, msg: &str, fields: &[(&str, String)]) -> bool {
+    let lg = logger();
+    if level > Level::from_u8(lg.level.load(Ordering::Relaxed)) {
+        return false;
+    }
+    // Rate limit per target on a one-second window.
+    let now_sec = lg.t0.elapsed().as_secs();
+    let mut rollover_note: Option<u64> = None;
+    {
+        let mut windows = match lg.windows.lock() {
+            Ok(w) => w,
+            Err(p) => p.into_inner(),
+        };
+        let w = windows
+            .entry(target.to_string())
+            .or_insert(Window { start_sec: now_sec, emitted: 0, suppressed: 0 });
+        if w.start_sec != now_sec {
+            if w.suppressed > 0 {
+                rollover_note = Some(w.suppressed);
+            }
+            w.start_sec = now_sec;
+            w.emitted = 0;
+            w.suppressed = 0;
+        }
+        if w.emitted >= MAX_PER_WINDOW {
+            w.suppressed += 1;
+            return false;
+        }
+        w.emitted += 1;
+    }
+    let json = lg.json.load(Ordering::Relaxed);
+    if let Some(n) = rollover_note {
+        emit(format_line(json, Level::Warn, target, &format!("rate limit: suppressed {n} messages"), &[]));
+    }
+    emit(format_line(json, level, target, msg, fields));
+    true
+}
+
+fn emit(line: String) {
+    let stderr = std::io::stderr();
+    let mut h = stderr.lock();
+    let _ = writeln!(h, "{line}");
+}
+
+fn unix_ts() -> f64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_secs_f64()).unwrap_or(0.0)
+}
+
+/// Pure formatter (separately unit-tested).
+pub fn format_line(
+    json: bool,
+    level: Level,
+    target: &str,
+    msg: &str,
+    fields: &[(&str, String)],
+) -> String {
+    if json {
+        let mut o = Json::obj();
+        o.set("ts", ((unix_ts() * 1000.0).round() / 1000.0).into());
+        o.set("level", level.as_str().into());
+        o.set("target", target.into());
+        o.set("msg", msg.into());
+        for (k, v) in fields {
+            o.set(k, v.as_str().into());
+        }
+        o.to_string()
+    } else {
+        let mut s = format!("[{} {}] {}", level.as_str(), target, msg);
+        if !fields.is_empty() {
+            s.push_str(" (");
+            for (i, (k, v)) in fields.iter().enumerate() {
+                if i > 0 {
+                    s.push_str(", ");
+                }
+                s.push_str(k);
+                s.push('=');
+                s.push_str(v);
+            }
+            s.push(')');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing_roundtrip() {
+        for l in [Level::Error, Level::Warn, Level::Info, Level::Debug, Level::Trace] {
+            assert_eq!(Level::from_str(l.as_str()), Some(l));
+        }
+        assert_eq!(Level::from_str("WARNING"), Some(Level::Warn));
+        assert!(Level::from_str("loud").is_none());
+    }
+
+    #[test]
+    fn human_and_json_formats() {
+        let plain = format_line(false, Level::Warn, "live.source", "oops", &[("peer", "1.2.3.4".into())]);
+        assert_eq!(plain, "[warn live.source] oops (peer=1.2.3.4)");
+        let j = format_line(true, Level::Info, "t", "m", &[("k", "v".into())]);
+        let parsed = Json::parse(&j).expect("ndjson line parses");
+        assert_eq!(parsed.get("level").as_str(), Some("info"));
+        assert_eq!(parsed.get("msg").as_str(), Some("m"));
+        assert_eq!(parsed.get("k").as_str(), Some("v"));
+        assert!(parsed.get("ts").as_f64().is_some());
+    }
+
+    // The logger level is process-global; tests that change it must not
+    // interleave or they would filter each other's lines.
+    static LEVEL_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    #[test]
+    fn level_filter_drops_below_threshold() {
+        let _guard = LEVEL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let prev = level();
+        set_level(Level::Warn);
+        assert!(!log(Level::Info, "test.filter", "hidden", &[]));
+        assert!(log(Level::Warn, "test.filter", "shown", &[]));
+        set_level(prev);
+    }
+
+    #[test]
+    fn rate_limiter_suppresses_after_burst() {
+        let _guard = LEVEL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let prev = level();
+        set_level(Level::Info);
+        let mut emitted = 0;
+        for i in 0..(MAX_PER_WINDOW + 10) {
+            if log(Level::Info, "test.ratelimit", &format!("m{i}"), &[]) {
+                emitted += 1;
+            }
+        }
+        assert_eq!(emitted, MAX_PER_WINDOW);
+        set_level(prev);
+    }
+}

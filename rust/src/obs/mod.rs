@@ -1,0 +1,40 @@
+//! Self-observability: spans, histograms, logging, Prometheus, and
+//! BigRoots-on-BigRoots self-analysis.
+//!
+//! The paper's Table 7 measures the cost of the monitoring that feeds
+//! root-cause analysis; this module is that monitoring turned on the
+//! analysis server itself. Four pieces:
+//!
+//! | piece | module | what it does |
+//! |-------|--------|--------------|
+//! | latency histograms | [`hist`] | lock-free sharded log2-bucket recorder, bit-exact merge |
+//! | span recorder | [`span`] | times every pipeline phase ([`SpanKind`]) behind a global enable flag |
+//! | structured logger | [`log`] | leveled, rate-limited, optional NDJSON diagnostics on stderr |
+//! | exposition | [`prom`] | Prometheus text for counters + histograms + P² quantiles, control verb `metrics-prom` and `--metrics-port` HTTP |
+//! | self-analysis | [`selfmon`] | feeds the server's own batch telemetry through [`crate::coordinator::service::AnalysisService`] |
+//!
+//! Instrumentation is observation-only: span recording never changes
+//! analysis results (the streaming-equals-batch invariant is untouched),
+//! and with the recorder disabled — the default everywhere except
+//! `bigroots serve` — each span site costs one relaxed atomic load.
+//! `benches/table7_overhead.rs` measures the enabled cost end to end.
+
+pub mod hist;
+pub mod log;
+pub mod prom;
+pub mod selfmon;
+pub mod span;
+
+pub use hist::{HistSnapshot, LatencyHistogram};
+pub use prom::MetricsServer;
+pub use selfmon::{BatchSample, SelfReport, SelfTelemetry};
+pub use span::{enabled, global, record, set_enabled, span, Obs, SpanGuard, SpanKind};
+
+use std::sync::OnceLock;
+
+static TELEMETRY: OnceLock<SelfTelemetry> = OnceLock::new();
+
+/// The process-wide batch-telemetry ring feeding self-analysis.
+pub fn telemetry() -> &'static SelfTelemetry {
+    TELEMETRY.get_or_init(SelfTelemetry::new)
+}

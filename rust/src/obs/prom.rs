@@ -1,0 +1,511 @@
+//! Prometheus text exposition (format 0.0.4) and the `--metrics-port`
+//! listener.
+//!
+//! [`render`] turns the live server's counters ([`LiveMetrics`]), fleet
+//! baseline ([`FleetReport`] — backed by the single-writer P² sketches in
+//! `live/registry.rs`) and the span histograms ([`Obs`]) into one scrape
+//! body. Span latencies appear twice, deliberately:
+//!
+//! - `bigroots_span_seconds` — a classic `histogram` family with
+//!   log2-spaced `le` buckets plus exact `_sum`/`_count`, merged bit-exact
+//!   from the per-thread shards;
+//! - `bigroots_span_quantile_seconds` — a `gauge` family carrying the P²
+//!   sketch estimates (p50/p90/p99). Prometheus forbids mixing `le` and
+//!   `quantile` labels in one family, hence the split.
+//!
+//! [`MetricsServer`] is a deliberately tiny HTTP/1.0 responder on the same
+//! non-blocking poll pattern as the control socket: accept, read until the
+//! blank line, write one `200 text/plain` response, close. `curl
+//! http://host:port/metrics` works; so does a plain `GET / HTTP/1.0`.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::Instant;
+
+use super::hist::{bucket_upper_secs, HistSnapshot, BUCKETS};
+use super::span::{Obs, SpanKind};
+use crate::live::ingest::LiveMetrics;
+use crate::live::registry::FleetReport;
+
+/// Append one metric family header.
+fn family(out: &mut String, name: &str, typ: &str, help: &str) {
+    out.push_str("# HELP ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(help);
+    out.push('\n');
+    out.push_str("# TYPE ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(typ);
+    out.push('\n');
+}
+
+/// Append one sample line: `name{labels} value`.
+fn sample(out: &mut String, name: &str, labels: &[(&str, &str)], value: f64) {
+    out.push_str(name);
+    if !labels.is_empty() {
+        out.push('{');
+        for (i, (k, v)) in labels.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(k);
+            out.push_str("=\"");
+            out.push_str(v);
+            out.push('"');
+        }
+        out.push('}');
+    }
+    out.push(' ');
+    if value.is_infinite() {
+        out.push_str(if value > 0.0 { "+Inf" } else { "-Inf" });
+    } else {
+        out.push_str(&format_value(value));
+    }
+    out.push('\n');
+}
+
+fn format_value(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn span_histogram(out: &mut String, kind: SpanKind, snap: &HistSnapshot) {
+    let name = kind.as_str();
+    let mut cum = 0u64;
+    for i in 0..BUCKETS {
+        cum += snap.counts[i];
+        let le = bucket_upper_secs(i);
+        let le_str =
+            if le.is_infinite() { "+Inf".to_string() } else { format!("{le:e}") };
+        sample(
+            out,
+            "bigroots_span_seconds_bucket",
+            &[("span", name), ("le", &le_str)],
+            cum as f64,
+        );
+    }
+    sample(out, "bigroots_span_seconds_sum", &[("span", name)], snap.sum_nanos as f64 * 1e-9);
+    sample(out, "bigroots_span_seconds_count", &[("span", name)], snap.count as f64);
+}
+
+/// Render the full scrape body.
+pub fn render(obs: &Obs, metrics: Option<&LiveMetrics>, fleet: Option<&FleetReport>) -> String {
+    let mut out = String::with_capacity(16 * 1024);
+
+    family(&mut out, "bigroots_build_info", "gauge", "Build metadata (constant 1).");
+    sample(
+        &mut out,
+        "bigroots_build_info",
+        &[("version", env!("CARGO_PKG_VERSION"))],
+        1.0,
+    );
+    family(&mut out, "bigroots_uptime_seconds", "gauge", "Seconds since observability start.");
+    sample(&mut out, "bigroots_uptime_seconds", &[], obs.uptime_secs());
+
+    if let Some(m) = metrics {
+        let counters: [(&str, &str, f64); 10] = [
+            ("bigroots_events_total", "Events ingested.", m.events_total as f64),
+            ("bigroots_jobs_completed_total", "Jobs retired by lifecycle.", m.jobs_completed as f64),
+            ("bigroots_stages_analyzed_total", "Stage analyses produced.", m.stages_analyzed as f64),
+            ("bigroots_events_dropped_total", "Stray post-eviction events dropped.", m.events_dropped as f64),
+            ("bigroots_evictions_live_total", "Jobs evicted while still live.", m.evictions_live as f64),
+            (
+                "bigroots_source_dropped_partial_lines_total",
+                "Partial lines lost to mid-line disconnects at the event source.",
+                m.dropped_partial_lines as f64,
+            ),
+            (
+                "bigroots_source_parse_errors_total",
+                "Event lines the source failed to parse.",
+                m.source_parse_errors as f64,
+            ),
+            ("bigroots_cache_hits_total", "Stage-stats memo hits.", m.cache_hits as f64),
+            ("bigroots_cache_misses_total", "Stage-stats memo misses.", m.cache_misses as f64),
+            ("bigroots_cache_evictions_total", "Stage-stats memo evictions.", m.cache_evictions as f64),
+        ];
+        for (name, help, v) in counters {
+            family(&mut out, name, "counter", help);
+            sample(&mut out, name, &[], v);
+        }
+        family(&mut out, "bigroots_resident_jobs", "gauge", "JobStates currently resident.");
+        sample(&mut out, "bigroots_resident_jobs", &[], m.resident_now as f64);
+        family(
+            &mut out,
+            "bigroots_resident_jobs_high_water",
+            "gauge",
+            "Peak resident JobStates (sum of per-shard high-water marks).",
+        );
+        sample(&mut out, "bigroots_resident_jobs_high_water", &[], m.resident_high_water as f64);
+        family(&mut out, "bigroots_events_per_second", "gauge", "Ingest rate since start.");
+        sample(&mut out, "bigroots_events_per_second", &[], m.events_per_sec);
+
+        family(&mut out, "bigroots_shard_events_total", "counter", "Events routed to each shard.");
+        for s in &m.per_shard {
+            let shard = s.shard.to_string();
+            sample(&mut out, "bigroots_shard_events_total", &[("shard", &shard)], s.events as f64);
+        }
+        family(&mut out, "bigroots_shard_stages_total", "counter", "Stages analyzed per shard.");
+        for s in &m.per_shard {
+            let shard = s.shard.to_string();
+            sample(&mut out, "bigroots_shard_stages_total", &[("shard", &shard)], s.stages as f64);
+        }
+        family(&mut out, "bigroots_shard_resident_jobs", "gauge", "Resident JobStates per shard.");
+        for s in &m.per_shard {
+            let shard = s.shard.to_string();
+            sample(&mut out, "bigroots_shard_resident_jobs", &[("shard", &shard)], s.resident as f64);
+        }
+    }
+
+    // Span latencies: exact sharded histogram + P² sketch quantiles.
+    family(
+        &mut out,
+        "bigroots_span_seconds",
+        "histogram",
+        "Latency of instrumented pipeline phases (log2 buckets).",
+    );
+    for (kind, snap) in obs.snapshot_all() {
+        span_histogram(&mut out, kind, &snap);
+    }
+    family(
+        &mut out,
+        "bigroots_span_quantile_seconds",
+        "gauge",
+        "P2-sketch latency quantiles per pipeline phase.",
+    );
+    for &kind in SpanKind::ALL.iter() {
+        if let Some(q) = obs.sketch_quantiles(kind) {
+            let name = kind.as_str();
+            for (label, v) in [("0.5", q.p50), ("0.9", q.p90), ("0.99", q.p99)] {
+                sample(
+                    &mut out,
+                    "bigroots_span_quantile_seconds",
+                    &[("quantile", label), ("span", name)],
+                    v,
+                );
+            }
+        }
+    }
+
+    if let Some(f) = fleet {
+        let gauges: [(&str, &str, f64); 6] = [
+            ("bigroots_fleet_jobs_completed", "Jobs folded into the fleet baseline.", f.jobs_completed as f64),
+            ("bigroots_fleet_stages", "Stages folded into the fleet baseline.", f.stages as f64),
+            ("bigroots_fleet_tasks", "Tasks folded into the fleet baseline.", f.tasks as f64),
+            ("bigroots_fleet_straggler_tasks", "Straggler tasks seen fleet-wide.", f.straggler_tasks as f64),
+            ("bigroots_fleet_stage_duration_p50_seconds", "Fleet median of stage median durations.", f.stage_median_p50),
+            ("bigroots_fleet_stage_duration_p95_seconds", "Fleet p95 of stage median durations.", f.stage_median_p95),
+        ];
+        for (name, help, v) in gauges {
+            family(&mut out, name, "gauge", help);
+            sample(&mut out, name, &[], v);
+        }
+        family(
+            &mut out,
+            "bigroots_fleet_feature",
+            "gauge",
+            "Fleet per-feature baseline quantiles from the registry P2 sketches.",
+        );
+        for b in &f.baselines {
+            let feat = b.kind.name();
+            for (q, v) in [("0.5", b.p50), ("0.95", b.p95)] {
+                sample(&mut out, "bigroots_fleet_feature", &[("feature", feat), ("quantile", q)], v);
+            }
+        }
+        family(
+            &mut out,
+            "bigroots_fleet_cause_total",
+            "counter",
+            "Root causes identified fleet-wide, by feature.",
+        );
+        for (kind, n) in &f.cause_incidence {
+            sample(&mut out, "bigroots_fleet_cause_total", &[("feature", kind.name())], *n as f64);
+        }
+    }
+
+    out
+}
+
+/// Pending connection on the metrics listener.
+struct MetricsConn {
+    stream: TcpStream,
+    peer: SocketAddr,
+    buf: Vec<u8>,
+    out: Vec<u8>,
+    written: usize,
+    responded: bool,
+    opened: Instant,
+}
+
+/// Minimal non-blocking HTTP/1.0 scrape endpoint.
+///
+/// Drive it from the serve loop: `poll(|| render(...))` accepts new
+/// connections, answers completed requests and flushes pending writes. One
+/// response per connection, then close — exactly what Prometheus (and
+/// `curl`) expects from an HTTP/1.0 server.
+pub struct MetricsServer {
+    listener: TcpListener,
+    conns: Vec<MetricsConn>,
+    served: u64,
+}
+
+/// Drop a connection that has not completed its request in this long.
+const CONN_DEADLINE_SECS: u64 = 5;
+/// Cap on request bytes buffered per connection.
+const MAX_REQUEST_BYTES: usize = 8 * 1024;
+
+impl MetricsServer {
+    pub fn bind(addr: &str) -> std::io::Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        Ok(MetricsServer { listener, conns: Vec::new(), served: 0 })
+    }
+
+    pub fn local_addr(&self) -> std::io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Responses fully served so far.
+    pub fn served(&self) -> u64 {
+        self.served
+    }
+
+    /// One non-blocking pump. `body` is invoked once per request that
+    /// completed this poll.
+    pub fn poll<F: FnMut() -> String>(&mut self, mut body: F) -> u64 {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    if stream.set_nonblocking(true).is_ok() {
+                        self.conns.push(MetricsConn {
+                            stream,
+                            peer,
+                            buf: Vec::new(),
+                            out: Vec::new(),
+                            written: 0,
+                            responded: false,
+                            opened: Instant::now(),
+                        });
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(_) => break,
+            }
+        }
+        let served_before = self.served;
+        let mut keep = Vec::with_capacity(self.conns.len());
+        for mut conn in std::mem::take(&mut self.conns) {
+            if conn.opened.elapsed().as_secs() >= CONN_DEADLINE_SECS && !conn.responded {
+                continue; // stale half-request: drop
+            }
+            if !conn.responded {
+                let mut chunk = [0u8; 4096];
+                loop {
+                    match conn.stream.read(&mut chunk) {
+                        Ok(0) => {
+                            conn.responded = true; // EOF: answer what we have
+                            break;
+                        }
+                        Ok(n) => {
+                            conn.buf.extend_from_slice(&chunk[..n]);
+                            if conn.buf.len() > MAX_REQUEST_BYTES {
+                                conn.responded = true;
+                                break;
+                            }
+                            if request_complete(&conn.buf) {
+                                conn.responded = true;
+                                break;
+                            }
+                        }
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                        Err(_) => {
+                            conn.responded = true;
+                            break;
+                        }
+                    }
+                }
+                if conn.responded {
+                    let text = body();
+                    conn.out = format!(
+                        "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+                        text.len(),
+                        text
+                    )
+                    .into_bytes();
+                    crate::obs::log::debug(
+                        "obs.metrics",
+                        &format!("scrape from {}", conn.peer),
+                    );
+                }
+            }
+            if conn.responded {
+                match flush_some(&mut conn) {
+                    FlushState::Done => {
+                        self.served += 1;
+                        continue; // drop = close
+                    }
+                    FlushState::Pending => keep.push(conn),
+                    FlushState::Dead => continue,
+                }
+            } else {
+                keep.push(conn);
+            }
+        }
+        self.conns = keep;
+        self.served - served_before
+    }
+}
+
+fn request_complete(buf: &[u8]) -> bool {
+    buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.windows(2).any(|w| w == b"\n\n")
+}
+
+enum FlushState {
+    Done,
+    Pending,
+    Dead,
+}
+
+fn flush_some(conn: &mut MetricsConn) -> FlushState {
+    while conn.written < conn.out.len() {
+        match conn.stream.write(&conn.out[conn.written..]) {
+            Ok(0) => return FlushState::Dead,
+            Ok(n) => conn.written += n,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return FlushState::Pending,
+            Err(_) => return FlushState::Dead,
+        }
+    }
+    let _ = conn.stream.flush();
+    FlushState::Done
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::Obs;
+    use std::time::Duration;
+
+    fn obs_with_samples() -> Obs {
+        let obs = Obs::new();
+        obs.set_enabled(true);
+        for i in 1..=50u64 {
+            obs.record(SpanKind::Decode, Duration::from_micros(i * 10));
+            obs.record(SpanKind::StatsKernel, Duration::from_micros(i * 7));
+        }
+        obs
+    }
+
+    /// Minimal exposition-format checker: every line is a comment or
+    /// `name{labels} value` with a parseable value.
+    fn validate_exposition(text: &str) {
+        for line in text.lines() {
+            if line.is_empty() || line.starts_with("# HELP ") || line.starts_with("# TYPE ") {
+                continue;
+            }
+            let (name_labels, value) =
+                line.rsplit_once(' ').unwrap_or_else(|| panic!("no value in line: {line}"));
+            let name = name_labels.split('{').next().unwrap();
+            assert!(
+                !name.is_empty()
+                    && name
+                        .chars()
+                        .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+                "bad metric name in line: {line}"
+            );
+            if let Some(rest) = name_labels.strip_prefix(name) {
+                if !rest.is_empty() {
+                    assert!(
+                        rest.starts_with('{') && rest.ends_with('}'),
+                        "bad label block: {line}"
+                    );
+                    for pair in rest[1..rest.len() - 1].split(',') {
+                        let (k, v) = pair.split_once('=').expect("label k=v");
+                        assert!(!k.is_empty() && v.starts_with('"') && v.ends_with('"'));
+                    }
+                }
+            }
+            assert!(
+                value == "+Inf" || value == "-Inf" || value.parse::<f64>().is_ok(),
+                "bad value in line: {line}"
+            );
+        }
+    }
+
+    #[test]
+    fn exposition_is_well_formed() {
+        let obs = obs_with_samples();
+        let text = render(&obs, None, None);
+        validate_exposition(&text);
+        for fam in ["bigroots_build_info", "bigroots_uptime_seconds", "bigroots_span_seconds"] {
+            assert!(text.contains(&format!("# HELP {fam} ")), "missing HELP for {fam}");
+            assert!(text.contains(&format!("# TYPE {fam} ")), "missing TYPE for {fam}");
+        }
+        // Every span kind appears even with zero samples.
+        for kind in SpanKind::ALL {
+            assert!(
+                text.contains(&format!("bigroots_span_seconds_count{{span=\"{}\"}}", kind.as_str())),
+                "missing span family for {}",
+                kind.as_str()
+            );
+        }
+        // Quantiles exist for the kinds that recorded samples.
+        assert!(text.contains("bigroots_span_quantile_seconds{quantile=\"0.5\",span=\"decode\"}"));
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_match_count() {
+        let obs = obs_with_samples();
+        let text = render(&obs, None, None);
+        let mut last = 0.0;
+        let mut inf_value = None;
+        for line in text.lines() {
+            if line.starts_with("bigroots_span_seconds_bucket{span=\"decode\"") {
+                let v: f64 = line.rsplit_once(' ').unwrap().1.parse().unwrap();
+                assert!(v >= last, "buckets must be cumulative: {line}");
+                last = v;
+                if line.contains("le=\"+Inf\"") {
+                    inf_value = Some(v);
+                }
+            }
+        }
+        assert_eq!(inf_value, Some(50.0), "+Inf bucket equals total count");
+        assert!(text.contains("bigroots_span_seconds_count{span=\"decode\"} 50"));
+    }
+
+    #[test]
+    fn metrics_server_answers_http() {
+        let mut srv = match MetricsServer::bind("127.0.0.1:0") {
+            Ok(s) => s,
+            Err(_) => return, // sandboxed environment without sockets
+        };
+        let addr = srv.local_addr().unwrap();
+        let obs = obs_with_samples();
+        let mut client = TcpStream::connect(addr).unwrap();
+        client.write_all(b"GET /metrics HTTP/1.0\r\nHost: x\r\n\r\n").unwrap();
+        client.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+        let mut response = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while Instant::now() < deadline {
+            srv.poll(|| render(&obs, None, None));
+            let mut chunk = [0u8; 4096];
+            match client.read(&mut chunk) {
+                Ok(0) => break,
+                Ok(n) => response.extend_from_slice(&chunk[..n]),
+                Err(e)
+                    if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {}
+                Err(e) => panic!("client read: {e}"),
+            }
+            if !response.is_empty() && srv.conns.is_empty() {
+                break;
+            }
+        }
+        let text = String::from_utf8_lossy(&response);
+        assert!(text.starts_with("HTTP/1.0 200 OK"), "got: {}", &text[..text.len().min(80)]);
+        assert!(text.contains("bigroots_span_seconds_bucket"), "body present");
+        assert_eq!(srv.served(), 1);
+    }
+}

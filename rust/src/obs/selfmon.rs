@@ -1,0 +1,435 @@
+//! BigRoots-on-BigRoots: the server analyzes its own shard workers.
+//!
+//! Every ingest batch a shard worker processes is sampled into a bounded
+//! ring as a [`BatchSample`] — wall time, queue wait, stats-kernel time,
+//! cache-miss delta, event count. [`analyze`] then dresses those samples up
+//! as a synthetic BigRoots job (one *task* per batch, one *node* per shard)
+//! and feeds them through a regular [`AnalysisService`]: the same straggler
+//! detector that diagnoses Spark stages diagnoses the server itself.
+//!
+//! The mapping from internal phases onto BigRoots task features:
+//!
+//! | internal measurement      | `TaskRecord` field    | verdict label  |
+//! |---------------------------|-----------------------|----------------|
+//! | stats-kernel time         | `jvm_gc_time`         | `stats-kernel` |
+//! | queue wait before batch   | `serialize_time`      | `queue-wait`   |
+//! | events in batch           | `bytes_read`          | `batch-size`   |
+//! | cache misses in batch     | `shuffle_read_bytes`  | `cache-miss`   |
+//!
+//! The analyzer's `time_lower_bound` (0.2 s, a Spark-scale constant) would
+//! mute millisecond-scale server internals, so all time values are fed in
+//! ms-expressed-as-seconds ([`TIME_SCALE`]); straggler detection and the
+//! quantile/peer thresholds are scale-invariant, and the report descales
+//! before presenting. The numeric features ride the byte-count slots, which
+//! BigRoots already treats as per-peer-normalized numerical features.
+//! Detected `FeatureKind`s are translated back to the internal labels for
+//! the per-shard verdict, so `bigroots serve --self-analyze` reports e.g.
+//! *"shard 3 straggling, dominant cause stats-kernel"* from its own
+//! telemetry.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::analysis::features::FeatureKind;
+use crate::coordinator::service::{AnalysisService, ServiceConfig};
+use crate::trace::eventlog::{Event, TaggedEvent};
+use crate::trace::model::{ClusterInfo, Locality, TaskRecord};
+use crate::util::json::Json;
+
+/// Synthetic job id carrying the server's own telemetry.
+pub const SELF_JOB_ID: u64 = 0xB160;
+
+/// Batches below this count produce no verdict — a handful of samples has
+/// no meaningful median.
+pub const MIN_SAMPLES: usize = 8;
+
+/// Retained batch samples (newest win).
+pub const RING_CAPACITY: usize = 4096;
+
+/// Internal seconds → synthetic-trace seconds. The analyzer's absolute
+/// `time_lower_bound` (0.2 s) is calibrated for Spark tasks; server phases
+/// are 10³ smaller, so the synthetic job expresses milliseconds as seconds.
+pub const TIME_SCALE: f64 = 1e3;
+
+/// One ingest batch, as measured by its shard worker.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchSample {
+    pub shard: usize,
+    /// Seconds since observability start, at batch begin.
+    pub start: f64,
+    /// Wall time of the whole batch (s).
+    pub duration: f64,
+    /// Time the worker sat blocked on its queue before this batch (s).
+    pub queue_wait: f64,
+    /// Time inside the stats kernel during this batch (s).
+    pub kernel: f64,
+    /// Events in the batch.
+    pub events: usize,
+    /// Stage-stats cache misses during the batch.
+    pub cache_misses: u64,
+}
+
+/// Bounded, thread-safe ring of recent batch samples.
+pub struct SelfTelemetry {
+    ring: Mutex<VecDeque<BatchSample>>,
+    total: AtomicU64,
+}
+
+impl SelfTelemetry {
+    pub fn new() -> Self {
+        SelfTelemetry { ring: Mutex::new(VecDeque::new()), total: AtomicU64::new(0) }
+    }
+
+    pub fn record(&self, sample: BatchSample) {
+        self.total.fetch_add(1, Ordering::Relaxed);
+        let mut ring = match self.ring.lock() {
+            Ok(r) => r,
+            Err(p) => p.into_inner(),
+        };
+        if ring.len() >= RING_CAPACITY {
+            ring.pop_front();
+        }
+        ring.push_back(sample);
+    }
+
+    /// Copy of the retained samples, oldest first.
+    pub fn samples(&self) -> Vec<BatchSample> {
+        match self.ring.lock() {
+            Ok(r) => r.iter().cloned().collect(),
+            Err(p) => p.into_inner().iter().cloned().collect(),
+        }
+    }
+
+    /// Batches ever recorded (including ones the ring has since dropped).
+    pub fn total_recorded(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for SelfTelemetry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Internal-cause label for a detected feature kind.
+pub fn cause_label(kind: FeatureKind) -> &'static str {
+    match kind {
+        FeatureKind::JvmGcTime => "stats-kernel",
+        FeatureKind::SerializeTime => "queue-wait",
+        FeatureKind::BytesRead => "batch-size",
+        FeatureKind::ShuffleReadBytes => "cache-miss",
+        other => other.name(),
+    }
+}
+
+/// Per-shard slice of the verdict.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardVerdict {
+    pub shard: usize,
+    pub batches: usize,
+    pub straggler_batches: usize,
+    /// (internal cause label, hits), most frequent first.
+    pub causes: Vec<(&'static str, usize)>,
+}
+
+/// The server's self-diagnosis.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SelfReport {
+    pub batches_analyzed: usize,
+    pub straggler_batches: usize,
+    /// Median batch wall time (s) and the straggler threshold above it.
+    pub median_batch_secs: f64,
+    pub threshold_secs: f64,
+    pub shards: Vec<ShardVerdict>,
+    /// Shard with the most straggler batches, if any stragglers exist.
+    pub dominant_shard: Option<usize>,
+    /// Most frequent internal cause label, if any causes were identified.
+    pub dominant_cause: Option<&'static str>,
+}
+
+impl SelfReport {
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "self-analysis: {} batches, {} stragglers (median {:.3} ms, threshold {:.3} ms)\n",
+            self.batches_analyzed,
+            self.straggler_batches,
+            self.median_batch_secs * 1e3,
+            self.threshold_secs * 1e3,
+        ));
+        for sv in &self.shards {
+            let causes = if sv.causes.is_empty() {
+                String::from("-")
+            } else {
+                sv.causes
+                    .iter()
+                    .map(|(c, n)| format!("{c}:{n}"))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            };
+            s.push_str(&format!(
+                "  shard {:>2}: {:>4} batches, {:>3} stragglers, causes: {}\n",
+                sv.shard, sv.batches, sv.straggler_batches, causes
+            ));
+        }
+        match (self.dominant_shard, self.dominant_cause) {
+            (Some(sh), Some(c)) => {
+                s.push_str(&format!("  verdict: shard {sh} is the straggler, dominant cause {c}\n"))
+            }
+            (Some(sh), None) => {
+                s.push_str(&format!("  verdict: shard {sh} is the straggler (no dominant cause)\n"))
+            }
+            _ => s.push_str("  verdict: no straggler shard\n"),
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("batches_analyzed", self.batches_analyzed.into());
+        o.set("straggler_batches", self.straggler_batches.into());
+        o.set("median_batch_secs", self.median_batch_secs.into());
+        o.set("threshold_secs", self.threshold_secs.into());
+        o.set(
+            "dominant_shard",
+            match self.dominant_shard {
+                Some(s) => s.into(),
+                None => Json::Null,
+            },
+        );
+        o.set(
+            "dominant_cause",
+            match self.dominant_cause {
+                Some(c) => c.into(),
+                None => Json::Null,
+            },
+        );
+        let shards: Vec<Json> = self
+            .shards
+            .iter()
+            .map(|sv| {
+                let mut sj = Json::obj();
+                sj.set("shard", sv.shard.into());
+                sj.set("batches", sv.batches.into());
+                sj.set("straggler_batches", sv.straggler_batches.into());
+                let causes: Vec<Json> = sv
+                    .causes
+                    .iter()
+                    .map(|(c, n)| {
+                        let mut cj = Json::obj();
+                        cj.set("cause", (*c).into());
+                        cj.set("count", (*n).into());
+                        cj
+                    })
+                    .collect();
+                sj.set("causes", Json::Arr(causes));
+                sj
+            })
+            .collect();
+        o.set("shards", Json::Arr(shards));
+        o
+    }
+}
+
+/// Synthesize the event stream for a batch-sample set: one job, one stage,
+/// one task per batch, one node per shard. Task ids are the sample's index
+/// in `samples`, so `StageAnalysis` rows (sorted by task id) map straight
+/// back to samples.
+pub fn build_events(samples: &[BatchSample]) -> Vec<TaggedEvent> {
+    let nodes = samples.iter().map(|s| s.shard + 1).max().unwrap_or(1);
+    let mut events = Vec::with_capacity(samples.len() + 3);
+    let tag = |event: Event| TaggedEvent { job_id: SELF_JOB_ID, event };
+    events.push(tag(Event::JobStart {
+        job_name: "bigroots-self".to_string(),
+        workload: "self-observability".to_string(),
+        cluster: ClusterInfo { nodes, cores_per_node: 1, executors_per_node: 1 },
+    }));
+    events.push(tag(Event::StageSubmitted {
+        stage_id: 0,
+        name: "ingest-batch".to_string(),
+        num_tasks: samples.len(),
+    }));
+    let mut end_time = 0.0f64;
+    for (i, s) in samples.iter().enumerate() {
+        let start = s.start * TIME_SCALE;
+        let finish = (s.start + s.duration) * TIME_SCALE;
+        end_time = end_time.max(finish);
+        events.push(tag(Event::TaskEnd(TaskRecord {
+            task_id: i as u64,
+            stage_id: 0,
+            node: s.shard,
+            executor: s.shard,
+            start,
+            finish,
+            locality: Locality::ProcessLocal,
+            bytes_read: s.events as f64,
+            shuffle_read_bytes: s.cache_misses as f64,
+            shuffle_write_bytes: 0.0,
+            memory_bytes_spilled: 0.0,
+            disk_bytes_spilled: 0.0,
+            jvm_gc_time: s.kernel * TIME_SCALE,
+            serialize_time: s.queue_wait * TIME_SCALE,
+            deserialize_time: 0.0,
+        })));
+    }
+    events.push(tag(Event::JobEnd { time: end_time }));
+    events
+}
+
+/// Run the server's own batch telemetry through a fresh [`AnalysisService`]
+/// and translate the result back into shard/cause terms. `None` below
+/// [`MIN_SAMPLES`].
+pub fn analyze(samples: &[BatchSample]) -> Option<SelfReport> {
+    if samples.len() < MIN_SAMPLES {
+        return None;
+    }
+    let events = build_events(samples);
+    let cfg = ServiceConfig { shards: 1, workers: 1, stats_cache_capacity: 0, ..Default::default() };
+    let mut svc = AnalysisService::new(cfg);
+    svc.feed_all(&events);
+    let report = svc.finish();
+    let stages = report.job(SELF_JOB_ID)?;
+    let analysis = stages.first()?;
+
+    let shard_count = samples.iter().map(|s| s.shard + 1).max().unwrap_or(1);
+    let mut verdicts: Vec<ShardVerdict> = (0..shard_count)
+        .map(|shard| ShardVerdict { shard, batches: 0, straggler_batches: 0, causes: Vec::new() })
+        .collect();
+    for s in samples {
+        verdicts[s.shard].batches += 1;
+    }
+    // Straggler rows index tasks sorted by task id == sample index.
+    for &row in &analysis.stragglers.rows {
+        if let Some(s) = samples.get(row) {
+            verdicts[s.shard].straggler_batches += 1;
+        }
+    }
+    let mut cause_counts: Vec<(&'static str, usize, usize)> = Vec::new(); // (label, shard, n)
+    for cause in &analysis.causes {
+        let Some(s) = samples.get(cause.task_id as usize) else { continue };
+        let label = cause_label(cause.kind);
+        match cause_counts.iter_mut().find(|(l, sh, _)| *l == label && *sh == s.shard) {
+            Some((_, _, n)) => *n += 1,
+            None => cause_counts.push((label, s.shard, 1)),
+        }
+    }
+    for &(label, shard, n) in &cause_counts {
+        verdicts[shard].causes.push((label, n));
+    }
+    for sv in &mut verdicts {
+        sv.causes.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+    }
+
+    let straggler_batches = analysis.stragglers.rows.len();
+    let dominant_shard = verdicts
+        .iter()
+        .filter(|v| v.straggler_batches > 0)
+        .max_by_key(|v| v.straggler_batches)
+        .map(|v| v.shard);
+    let mut totals: Vec<(&'static str, usize)> = Vec::new();
+    for &(label, _, n) in &cause_counts {
+        match totals.iter_mut().find(|(l, _)| *l == label) {
+            Some((_, t)) => *t += n,
+            None => totals.push((label, n)),
+        }
+    }
+    totals.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+    let dominant_cause = totals.first().map(|(l, _)| *l);
+
+    Some(SelfReport {
+        batches_analyzed: samples.len(),
+        straggler_batches,
+        median_batch_secs: analysis.stragglers.median / TIME_SCALE,
+        threshold_secs: analysis.stragglers.threshold / TIME_SCALE,
+        shards: verdicts,
+        dominant_shard,
+        dominant_cause,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A healthy batch: ~1 ms, tiny kernel share.
+    fn healthy(shard: usize, i: usize) -> BatchSample {
+        BatchSample {
+            shard,
+            start: i as f64 * 0.01,
+            duration: 0.001 + (i % 3) as f64 * 0.0001,
+            queue_wait: 0.0002,
+            kernel: 0.0004,
+            events: 64,
+            cache_misses: 1,
+        }
+    }
+
+    #[test]
+    fn below_min_samples_is_none() {
+        let samples: Vec<BatchSample> = (0..MIN_SAMPLES - 1).map(|i| healthy(0, i)).collect();
+        assert!(analyze(&samples).is_none());
+    }
+
+    #[test]
+    fn kernel_bound_shard_is_diagnosed() {
+        // Shards 0..7 healthy except shard 7, whose batches run ~6× long
+        // with the excess entirely inside the stats kernel. The slow share
+        // (12.5%) stays below the λ_q=0.8 global-quantile boundary.
+        let mut samples = Vec::new();
+        for i in 0..160 {
+            let shard = i % 8;
+            let mut s = healthy(shard, i);
+            if shard == 7 {
+                s.duration = 0.006;
+                s.kernel = 0.0052;
+            }
+            samples.push(s);
+        }
+        let report = analyze(&samples).expect("enough samples");
+        assert!(report.straggler_batches > 0, "slow shard must produce stragglers");
+        assert_eq!(report.dominant_shard, Some(7));
+        assert_eq!(report.dominant_cause, Some("stats-kernel"));
+        assert_eq!(report.shards.len(), 8);
+        assert!(report.shards[7].straggler_batches > 0);
+        assert_eq!(report.shards[0].straggler_batches, 0);
+        let text = report.render();
+        assert!(text.contains("shard 7 is the straggler"), "render: {text}");
+        assert!(text.contains("stats-kernel"), "render: {text}");
+        let j = report.to_json();
+        assert_eq!(j.get("dominant_cause").as_str(), Some("stats-kernel"));
+    }
+
+    #[test]
+    fn queue_wait_cause_maps_back() {
+        // One of five shards spends its time blocked on the queue (20%
+        // slow share — under the quantile boundary).
+        let mut samples = Vec::new();
+        for i in 0..80 {
+            let shard = i % 5;
+            let mut s = healthy(shard, i);
+            if shard == 1 {
+                s.duration = 0.008;
+                s.queue_wait = 0.0075;
+                s.kernel = 0.0003;
+            }
+            samples.push(s);
+        }
+        let report = analyze(&samples).expect("enough samples");
+        assert_eq!(report.dominant_shard, Some(1));
+        assert_eq!(report.dominant_cause, Some("queue-wait"));
+    }
+
+    #[test]
+    fn telemetry_ring_is_bounded() {
+        let t = SelfTelemetry::new();
+        for i in 0..RING_CAPACITY + 100 {
+            t.record(healthy(0, i));
+        }
+        assert_eq!(t.samples().len(), RING_CAPACITY);
+        assert_eq!(t.total_recorded() as usize, RING_CAPACITY + 100);
+        // Oldest were dropped: first retained sample is number 100.
+        assert!((t.samples()[0].start - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,320 @@
+//! Span recorder: named pipeline phases timed into per-kind histograms.
+//!
+//! Every hot phase of the live pipeline is wrapped in a [`span`] guard that
+//! records its wall time into a [`LatencyHistogram`] keyed by [`SpanKind`].
+//! The whole subsystem sits behind one global enable flag:
+//!
+//! - **disabled** (the default, and the state for all deterministic tests
+//!   and the offline pipeline): [`span`] is a single `Relaxed` atomic load
+//!   and returns an inert guard — no clock read, no allocation. Analysis
+//!   results are never affected either way; spans only *observe*.
+//! - **enabled** (`bigroots serve`, unless `--no-obs`): two `Instant`
+//!   reads plus three relaxed atomic adds per span, and a `try_lock`ed P²
+//!   sketch update (skipped under contention, so the hot path still never
+//!   blocks).
+//!
+//! Shard selection inside each histogram uses a per-thread lane id, so the
+//! ingest workers never contend on the same cache line.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use super::hist::{HistSnapshot, LatencyHistogram};
+use crate::util::stats::P2Quantile;
+
+/// One instrumented pipeline phase. `ALL` drives iteration everywhere
+/// (exposition, snapshots), so adding a kind here is the whole change.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// One `EventSource::poll` call in the serve driver loop.
+    SourcePoll,
+    /// NDJSON chunk decode inside a source (`NdjsonTail::feed`).
+    Decode,
+    /// Blocking wait to enqueue a batch onto a shard's bounded queue
+    /// (backpressure on the driver thread).
+    EnqueueWait,
+    /// Shard worker blocked on its queue waiting for the next batch.
+    DequeueWait,
+    /// One stage-stats kernel invocation (native or accelerator).
+    StatsKernel,
+    /// Stage-stats memo probe in the caching backend.
+    CacheLookup,
+    /// Folding completed-stage analyses into the fleet registry.
+    RegistryFold,
+    /// Parsing + answering one control-socket request.
+    Control,
+    /// Writing a fleet snapshot to disk.
+    SnapshotWrite,
+}
+
+impl SpanKind {
+    pub const ALL: [SpanKind; 9] = [
+        SpanKind::SourcePoll,
+        SpanKind::Decode,
+        SpanKind::EnqueueWait,
+        SpanKind::DequeueWait,
+        SpanKind::StatsKernel,
+        SpanKind::CacheLookup,
+        SpanKind::RegistryFold,
+        SpanKind::Control,
+        SpanKind::SnapshotWrite,
+    ];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SpanKind::SourcePoll => "source_poll",
+            SpanKind::Decode => "decode",
+            SpanKind::EnqueueWait => "enqueue_wait",
+            SpanKind::DequeueWait => "dequeue_wait",
+            SpanKind::StatsKernel => "stats_kernel",
+            SpanKind::CacheLookup => "cache_lookup",
+            SpanKind::RegistryFold => "registry_fold",
+            SpanKind::Control => "control",
+            SpanKind::SnapshotWrite => "snapshot_write",
+        }
+    }
+
+    #[inline]
+    fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// P² sketches for one span kind, updated best-effort behind a `try_lock`.
+struct SpanSketch {
+    p50: P2Quantile,
+    p90: P2Quantile,
+    p99: P2Quantile,
+}
+
+impl SpanSketch {
+    fn new() -> Self {
+        SpanSketch {
+            p50: P2Quantile::new(0.50),
+            p90: P2Quantile::new(0.90),
+            p99: P2Quantile::new(0.99),
+        }
+    }
+}
+
+/// Exact quantile estimates for one span kind, in seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SketchQuantiles {
+    pub count: u64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+/// The observability registry: one histogram + sketch trio per span kind.
+pub struct Obs {
+    enabled: AtomicBool,
+    started: Instant,
+    hists: Vec<LatencyHistogram>,
+    sketches: Vec<Mutex<SpanSketch>>,
+}
+
+impl Obs {
+    pub fn new() -> Self {
+        Obs {
+            enabled: AtomicBool::new(false),
+            started: Instant::now(),
+            hists: SpanKind::ALL.iter().map(|_| LatencyHistogram::new()).collect(),
+            sketches: SpanKind::ALL.iter().map(|_| Mutex::new(SpanSketch::new())).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Seconds since this registry was created (process uptime for the
+    /// global registry).
+    pub fn uptime_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Record a finished span. No-op while disabled.
+    #[inline]
+    pub fn record(&self, kind: SpanKind, d: Duration) {
+        if !self.is_enabled() {
+            return;
+        }
+        self.record_always(kind, d);
+    }
+
+    /// Record regardless of the enable flag (tests, merge checks).
+    pub fn record_always(&self, kind: SpanKind, d: Duration) {
+        self.hists[kind.index()].record(lane(), d);
+        // Sketches are approximations; dropping a sample under contention
+        // is fine and keeps the hot path lock-free.
+        if let Ok(mut sk) = self.sketches[kind.index()].try_lock() {
+            let secs = d.as_secs_f64();
+            sk.p50.push(secs);
+            sk.p90.push(secs);
+            sk.p99.push(secs);
+        }
+    }
+
+    pub fn snapshot(&self, kind: SpanKind) -> HistSnapshot {
+        self.hists[kind.index()].snapshot()
+    }
+
+    /// Merged histogram snapshot of every kind, `SpanKind::ALL` order.
+    pub fn snapshot_all(&self) -> Vec<(SpanKind, HistSnapshot)> {
+        SpanKind::ALL.iter().map(|&k| (k, self.snapshot(k))).collect()
+    }
+
+    /// P²-sketch quantiles for a kind; `None` before the first sample.
+    pub fn sketch_quantiles(&self, kind: SpanKind) -> Option<SketchQuantiles> {
+        let sk = self.sketches[kind.index()].lock().ok()?;
+        if sk.p50.count() == 0 {
+            return None;
+        }
+        Some(SketchQuantiles {
+            count: sk.p50.count() as u64,
+            p50: sk.p50.value(),
+            p90: sk.p90.value(),
+            p99: sk.p99.value(),
+        })
+    }
+}
+
+impl Default for Obs {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+static GLOBAL: OnceLock<Obs> = OnceLock::new();
+
+/// The process-wide registry every instrumentation point records into.
+pub fn global() -> &'static Obs {
+    GLOBAL.get_or_init(Obs::new)
+}
+
+/// Fast global enable check (one relaxed load).
+#[inline]
+pub fn enabled() -> bool {
+    // Avoid the OnceLock probe until someone actually initializes it.
+    match GLOBAL.get() {
+        Some(o) => o.is_enabled(),
+        None => false,
+    }
+}
+
+/// Turn the global recorder on or off. `serve` enables it at startup;
+/// everything else (tests, offline pipeline) leaves it off.
+pub fn set_enabled(on: bool) {
+    global().set_enabled(on);
+}
+
+/// Time a phase: records into the global registry when the guard drops.
+/// While disabled this is one atomic load and an inert guard.
+#[inline]
+pub fn span(kind: SpanKind) -> SpanGuard {
+    if enabled() {
+        SpanGuard { live: Some((kind, Instant::now())) }
+    } else {
+        SpanGuard { live: None }
+    }
+}
+
+/// Record an externally-measured duration against the global registry.
+#[inline]
+pub fn record(kind: SpanKind, d: Duration) {
+    if enabled() {
+        global().record_always(kind, d);
+    }
+}
+
+/// RAII span timer returned by [`span`].
+pub struct SpanGuard {
+    live: Option<(SpanKind, Instant)>,
+}
+
+impl SpanGuard {
+    /// Finish early (otherwise the drop does it).
+    pub fn finish(mut self) {
+        self.finish_inner();
+    }
+
+    fn finish_inner(&mut self) {
+        if let Some((kind, t0)) = self.live.take() {
+            global().record_always(kind, t0.elapsed());
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        self.finish_inner();
+    }
+}
+
+static NEXT_LANE: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static LANE: usize = NEXT_LANE.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Stable per-thread lane id used to pick a histogram shard.
+#[inline]
+pub fn lane() -> usize {
+    LANE.with(|l| *l)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_span_records_nothing() {
+        let obs = Obs::new();
+        assert!(!obs.is_enabled());
+        obs.record(SpanKind::Decode, Duration::from_micros(5));
+        assert_eq!(obs.snapshot(SpanKind::Decode).count, 0);
+        obs.set_enabled(true);
+        obs.record(SpanKind::Decode, Duration::from_micros(5));
+        assert_eq!(obs.snapshot(SpanKind::Decode).count, 1);
+    }
+
+    #[test]
+    fn sketch_quantiles_track_recorded_spans() {
+        let obs = Obs::new();
+        obs.set_enabled(true);
+        for i in 1..=100u64 {
+            obs.record(SpanKind::StatsKernel, Duration::from_micros(i));
+        }
+        let q = obs.sketch_quantiles(SpanKind::StatsKernel).unwrap();
+        assert_eq!(q.count, 100);
+        assert!(q.p50 > 20e-6 && q.p50 < 80e-6, "p50 {}", q.p50);
+        assert!(q.p99 >= q.p90 && q.p90 >= q.p50);
+        assert!(obs.sketch_quantiles(SpanKind::Decode).is_none());
+    }
+
+    #[test]
+    fn global_span_guard_roundtrip() {
+        // The global registry is shared across the test binary; use a kind
+        // no other test touches and only assert growth.
+        let before = global().snapshot(SpanKind::SnapshotWrite).count;
+        set_enabled(true);
+        {
+            let _g = span(SpanKind::SnapshotWrite);
+        }
+        set_enabled(false);
+        let after = global().snapshot(SpanKind::SnapshotWrite).count;
+        assert_eq!(after, before + 1);
+        // Disabled: no record.
+        {
+            let _g = span(SpanKind::SnapshotWrite);
+        }
+        assert_eq!(global().snapshot(SpanKind::SnapshotWrite).count, after);
+    }
+}

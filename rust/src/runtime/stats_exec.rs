@@ -325,7 +325,14 @@ pub fn auto_backend() -> Box<dyn StatsBackend> {
     if std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
         match XlaBackend::open(&dir) {
             Ok(b) => return Box::new(b),
-            Err(e) => eprintln!("warning: XLA backend unavailable ({e:#}); using native"),
+            Err(e) => {
+                crate::obs::log::log(
+                    crate::obs::log::Level::Warn,
+                    "runtime.xla",
+                    "XLA backend unavailable; using native",
+                    &[("error", format!("{e:#}"))],
+                );
+            }
         }
     }
     Box::new(crate::analysis::stats::NativeBackend::new())

@@ -1,0 +1,283 @@
+//! Integration tests for the self-observability layer (`bigroots::obs`):
+//! cross-thread histogram merge exactness, Prometheus exposition from a
+//! real `LiveServer` run, the source-counter visibility regression
+//! (drop/parse counters must surface in the `metrics` verb while the
+//! server is still running), self-analysis end to end, and the
+//! `--metrics-port` HTTP responder.
+//!
+//! The span recorder is a process-global; tests that enable it assert
+//! *growth* of counters rather than absolute values so they stay correct
+//! under the parallel test runner, and disable it again on exit.
+//! Instrumentation is observation-only, so a concurrently-enabled
+//! recorder can never change another test's analysis results.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use bigroots::live::{control, LiveConfig, LiveServer};
+use bigroots::obs::{self, BatchSample, LatencyHistogram, MetricsServer, SpanKind};
+use bigroots::sim::multi::{interleaved_workload, round_robin_specs};
+
+// ---------------------------------------------------------------------------
+// Histogram: concurrent merge exactness + quantile monotonicity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn histogram_merge_is_bit_exact_across_threads() {
+    let hist = Arc::new(LatencyHistogram::new());
+    let threads = 8usize;
+    let per_thread = 5_000u64;
+
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let h = Arc::clone(&hist);
+            thread::spawn(move || {
+                let mut local_sum = 0u64;
+                for i in 0..per_thread {
+                    // Deterministic spread across many buckets, different
+                    // per thread so lanes genuinely contend.
+                    let nanos = 1 + (i * 2_654_435_761u64.wrapping_add(t as u64)) % 50_000_000;
+                    h.record_nanos(t, nanos);
+                    local_sum += nanos;
+                }
+                local_sum
+            })
+        })
+        .collect();
+
+    let expected_sum: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let snap = hist.snapshot();
+    assert_eq!(snap.count, threads as u64 * per_thread, "no recording lost or duplicated");
+    assert_eq!(snap.sum_nanos, expected_sum, "sum merges bit-exactly");
+    assert_eq!(snap.counts.iter().sum::<u64>(), snap.count, "bucket counts account for every sample");
+}
+
+#[test]
+fn histogram_quantiles_are_monotone_and_bounded() {
+    let hist = LatencyHistogram::new();
+    for i in 1..=10_000u64 {
+        hist.record_nanos(0, i * 1_000); // 1µs .. 10ms
+    }
+    let snap = hist.snapshot();
+    assert_eq!(snap.count, 10_000);
+
+    let mut prev = 0.0f64;
+    for q in [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 0.999, 1.0] {
+        let v = snap.quantile(q);
+        assert!(v >= prev, "quantile must be monotone in q: q={q} gave {v} < {prev}");
+        assert!(v.is_finite() && v >= 0.0);
+        prev = v;
+    }
+    // The log2 buckets bound the error to one doubling: p50 of a uniform
+    // 1µs..10ms spread must land within [0.5×, 2×] of the true 5ms.
+    let p50 = snap.quantile(0.5);
+    assert!((0.0025..=0.01).contains(&p50), "p50 {p50} out of bucket-error range");
+}
+
+// ---------------------------------------------------------------------------
+// Prometheus exposition from a real LiveServer run
+// ---------------------------------------------------------------------------
+
+/// Every non-comment exposition line must be `name{labels} value` with a
+/// parseable float value; comment lines must be `# HELP` or `# TYPE`.
+fn assert_parseable_prom(text: &str) {
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# ") {
+            assert!(
+                rest.starts_with("HELP ") || rest.starts_with("TYPE "),
+                "unknown comment line: {line}"
+            );
+            continue;
+        }
+        let (name_part, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("no value on line: {line}"));
+        assert!(!name_part.is_empty(), "empty series name: {line}");
+        let v: f64 = value.parse().unwrap_or_else(|_| panic!("unparseable value on line: {line}"));
+        assert!(!v.is_nan(), "NaN sample: {line}");
+    }
+}
+
+#[test]
+fn prom_render_covers_a_live_server_run() {
+    let before_kernel = obs::global().snapshot(SpanKind::StatsKernel).count;
+    let before_enqueue = obs::global().snapshot(SpanKind::EnqueueWait).count;
+
+    obs::set_enabled(true);
+    let (_, events) = interleaved_workload(&round_robin_specs(2, 0.05, 11));
+    let mut server = LiveServer::new(LiveConfig { shards: 2, ..Default::default() });
+    server.feed_all(&events);
+    // Simulate the serve driver surfacing source-side counters mid-run.
+    server.record_source_stats(3, 2);
+
+    // finish() joins the shard workers, so every span from the run is
+    // recorded before the exposition is rendered.
+    let report = server.finish();
+    obs::set_enabled(false);
+    let metrics = &report.metrics;
+    let text = obs::prom::render(obs::global(), Some(metrics), Some(&report.fleet));
+
+    assert!(report.total_stages() > 0, "workload must analyze stages");
+    assert_parseable_prom(&text);
+
+    // Stable family names with HELP/TYPE headers.
+    for family in [
+        "bigroots_build_info",
+        "bigroots_uptime_seconds",
+        "bigroots_events_total",
+        "bigroots_span_seconds",
+        "bigroots_span_quantile_seconds",
+        "bigroots_source_dropped_partial_lines_total",
+        "bigroots_source_parse_errors_total",
+        "bigroots_fleet_jobs_completed",
+    ] {
+        assert!(text.contains(&format!("# HELP {family} ")), "missing HELP for {family}");
+        assert!(text.contains(&format!("# TYPE {family} ")), "missing TYPE for {family}");
+    }
+    assert!(text.contains("# TYPE bigroots_span_seconds histogram"));
+
+    // Histogram series exist for every span kind, with a closing +Inf bucket.
+    for kind in SpanKind::ALL {
+        let needle = format!("bigroots_span_seconds_count{{span=\"{}\"}}", kind.as_str());
+        assert!(text.contains(&needle), "missing histogram count for {}", kind.as_str());
+    }
+    assert!(text.contains("le=\"+Inf\""));
+
+    // The run itself was observed: kernel and enqueue spans grew.
+    let after_kernel = obs::global().snapshot(SpanKind::StatsKernel).count;
+    let after_enqueue = obs::global().snapshot(SpanKind::EnqueueWait).count;
+    assert!(after_kernel > before_kernel, "stats-kernel spans must be recorded during ingest");
+    assert!(after_enqueue > before_enqueue, "enqueue-wait spans must be recorded during ingest");
+
+    // Quantile gauges materialize for spans with samples.
+    assert!(
+        text.contains("bigroots_span_quantile_seconds{quantile=\"0.5\",span=\"stats_kernel\"}"),
+        "missing p50 gauge for stats_kernel"
+    );
+
+    // Counter values mirror LiveMetrics, including the new source counters.
+    assert!(text.contains(&format!("bigroots_events_total {}", metrics.events_total)));
+    assert!(text.contains("bigroots_source_dropped_partial_lines_total 3"));
+    assert!(text.contains("bigroots_source_parse_errors_total 2"));
+}
+
+// ---------------------------------------------------------------------------
+// Satellite 2 regression: source counters visible while the server runs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn metrics_verb_surfaces_source_counters_mid_run() {
+    let (_, events) = interleaved_workload(&round_robin_specs(1, 0.05, 3));
+    let mut server = LiveServer::new(LiveConfig { shards: 2, ..Default::default() });
+    server.feed_all(&events);
+
+    // The serve driver pushes the source's running totals in after each
+    // poll; the `metrics` verb must reflect them *before* shutdown.
+    server.record_source_stats(5, 3);
+    let m = server.metrics();
+    assert_eq!(m.dropped_partial_lines, 5, "partial-line drops invisible mid-run");
+    assert_eq!(m.source_parse_errors, 3, "parse errors invisible mid-run");
+
+    let j = control::live_metrics_json(&m);
+    assert_eq!(j.get("dropped_partial_lines").as_usize(), Some(5));
+    assert_eq!(j.get("source_parse_errors").as_usize(), Some(3));
+
+    // Totals are running state, not deltas: a later poll overwrites.
+    server.record_source_stats(6, 3);
+    assert_eq!(server.metrics().dropped_partial_lines, 6);
+    server.finish();
+}
+
+// ---------------------------------------------------------------------------
+// Self-analysis end to end: synthetic telemetry → per-shard verdict
+// ---------------------------------------------------------------------------
+
+#[test]
+fn self_analysis_diagnoses_cache_miss_bound_shard() {
+    // Four shards; shard 2's batches run ~5× long with the slowdown
+    // tracked by a cache-miss burst rather than kernel or queue time.
+    let mut samples = Vec::new();
+    for i in 0..96usize {
+        let shard = i % 4;
+        let slow = shard == 2;
+        samples.push(BatchSample {
+            shard,
+            start: i as f64 * 0.01,
+            duration: if slow { 0.005 } else { 0.001 + (i % 3) as f64 * 0.0001 },
+            queue_wait: 0.0002,
+            kernel: 0.0004,
+            events: 64,
+            cache_misses: if slow { 60 } else { 1 },
+        });
+    }
+    let report = obs::selfmon::analyze(&samples).expect("enough samples");
+    assert_eq!(report.shards.len(), 4);
+    assert_eq!(report.dominant_shard, Some(2), "slow shard must be singled out");
+    assert_eq!(report.dominant_cause, Some("cache-miss"));
+    assert!(report.shards[2].straggler_batches > 0);
+    assert_eq!(report.shards[0].straggler_batches, 0);
+
+    let rendered = report.render();
+    assert!(rendered.contains("shard 2 is the straggler"), "render: {rendered}");
+    let j = report.to_json();
+    assert_eq!(j.get("dominant_shard").as_usize(), Some(2));
+    assert_eq!(j.get("dominant_cause").as_str(), Some("cache-miss"));
+}
+
+#[test]
+fn self_analysis_needs_minimum_samples() {
+    let few: Vec<BatchSample> = (0..3)
+        .map(|i| BatchSample {
+            shard: 0,
+            start: i as f64,
+            duration: 0.001,
+            queue_wait: 0.0,
+            kernel: 0.0005,
+            events: 10,
+            cache_misses: 0,
+        })
+        .collect();
+    assert!(obs::selfmon::analyze(&few).is_none());
+    assert!(obs::selfmon::analyze(&[]).is_none());
+}
+
+// ---------------------------------------------------------------------------
+// --metrics-port HTTP responder round trip
+// ---------------------------------------------------------------------------
+
+#[test]
+fn metrics_server_answers_http_scrape() {
+    // Sandboxes without loopback sockets skip rather than fail.
+    let mut ms = match MetricsServer::bind("127.0.0.1:0") {
+        Ok(ms) => ms,
+        Err(_) => return,
+    };
+    let addr = ms.local_addr().expect("bound listener has an address");
+
+    let client = thread::spawn(move || {
+        let mut conn = TcpStream::connect(addr).expect("connect to metrics port");
+        conn.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").expect("send request");
+        let mut response = String::new();
+        conn.read_to_string(&mut response).expect("read response");
+        response
+    });
+
+    // Drive the nonblocking responder the way the serve loop does.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while ms.served() == 0 && Instant::now() < deadline {
+        ms.poll(|| obs::prom::render(obs::global(), None, None));
+        thread::sleep(Duration::from_millis(5));
+    }
+    assert!(ms.served() >= 1, "responder never served the scrape");
+
+    let response = client.join().expect("client thread");
+    assert!(response.starts_with("HTTP/1.0 200"), "bad status line: {response}");
+    assert!(response.contains("text/plain"), "missing content type");
+    let body = response.split("\r\n\r\n").nth(1).unwrap_or("");
+    assert!(body.contains("bigroots_uptime_seconds"), "body missing metrics: {body}");
+    assert_parseable_prom(body);
+}
