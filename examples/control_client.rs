@@ -4,13 +4,16 @@
 //! 1. connects to the event port and streams two simulated jobs;
 //! 2. polls `fleet-report` on the control port until both jobs retired;
 //! 3. queries `metrics` and `job <id>`;
-//! 4. queries `metrics-prom` and gates on the required metric families
+//! 4. queries `what-if <id>` and gates on a well-formed ranked
+//!    counterfactual response (descending `saved_secs`, bounded by the
+//!    replay baseline);
+//! 5. queries `metrics-prom` and gates on the required metric families
 //!    (and nonzero span counts for the instrumented hot-path phases);
-//! 5. queries `self-report` (tolerating a warming-up refusal);
-//! 6. if a third address is given, HTTP-scrapes the `--metrics-port`
+//! 6. queries `self-report` (tolerating a warming-up refusal);
+//! 7. if a third address is given, HTTP-scrapes the `--metrics-port`
 //!    endpoint and gates on the exposition;
-//! 7. requests a `snapshot` (the server writes its `--snapshot-path`);
-//! 8. sends `shutdown` and exits.
+//! 8. requests a `snapshot` (the server writes its `--snapshot-path`);
+//! 9. sends `shutdown` and exits.
 //!
 //! Any protocol violation (non-ok response, timeout, missing snapshot
 //! file, missing metric family) exits non-zero, so a workflow step can
@@ -144,6 +147,51 @@ fn main() {
         fail(&format!("job {job_id} summary reports no stages"));
     }
     println!("job {job_id}: {stages} stages analyzed");
+    // The job summary embeds the counterfactual verdict.
+    if matches!(job.get("data").get("estimated_savings"), Json::Null) {
+        fail(&format!("job {job_id} summary carries no estimated_savings"));
+    }
+
+    // The counterfactual what-if verdict: a well-formed ranked response —
+    // positive replay baseline, rows sorted by saved_secs descending, and
+    // every row's saving bounded by the baseline.
+    let wi = query(&mut ctrl, &format!("what-if {job_id}"));
+    let baseline = wi
+        .get("data")
+        .get("baseline_secs")
+        .as_f64()
+        .unwrap_or_else(|| fail("what-if response carries no baseline_secs"));
+    if baseline <= 0.0 {
+        fail(&format!("what-if baseline is not positive: {baseline}"));
+    }
+    let rows = wi
+        .get("data")
+        .get("rows")
+        .as_arr()
+        .unwrap_or_else(|| fail("what-if response carries no rows array"))
+        .to_vec();
+    let mut prev = f64::INFINITY;
+    for row in &rows {
+        let cause = row
+            .get("cause")
+            .as_str()
+            .unwrap_or_else(|| fail("what-if row carries no cause"));
+        let saved = row
+            .get("saved_secs")
+            .as_f64()
+            .unwrap_or_else(|| fail("what-if row carries no saved_secs"));
+        if !(0.0..=baseline).contains(&saved) {
+            fail(&format!("what-if row {cause}: saved {saved} outside [0, {baseline}]"));
+        }
+        if saved > prev {
+            fail(&format!("what-if rows not ranked descending at {cause}"));
+        }
+        prev = saved;
+    }
+    println!(
+        "what-if {job_id}: baseline {baseline:.2} s, {} ranked causes",
+        rows.len()
+    );
 
     // Prometheus exposition over the control socket: required families
     // must be present and the hot-path spans must actually have fired.

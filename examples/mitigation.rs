@@ -2,18 +2,21 @@
 //! identify the root causes of stragglers, we can mitigate their impact by
 //! taking corresponding optimizations" (Section I).
 //!
-//! The driver analyzes a skew-heavy Kmeans run, reads BigRoots' dominant
-//! cause, applies the matching mitigation, re-simulates and reports the
-//! improvement:
+//! The driver analyzes a skew-heavy Kmeans run, asks the counterfactual
+//! what-if engine (`bigroots::analysis::whatif`) which detected cause is
+//! worth the most estimated completion time, applies the matching
+//! mitigation, re-simulates and reports the improvement:
 //!
 //! - shuffle-read skew → repartition (more, flatter reduce partitions)
 //! - bytes-read skew  → rebalance input splits
-//! - resource cause   → avoid the contended node (blacklist placement)
+//! - anything else    → no spec-level mitigation applies; report and stop
+//!   gracefully instead of aborting
 //!
 //! ```sh
 //! cargo run --release --example mitigation
 //! ```
 
+use bigroots::analysis::whatif::{self, WhatIfConfig};
 use bigroots::analysis::FeatureKind;
 use bigroots::coordinator::Pipeline;
 use bigroots::sim::{workloads, Engine, InjectionPlan, SimConfig, SizeDist};
@@ -34,30 +37,49 @@ fn main() {
     let mut pipeline = Pipeline::auto();
     let analysis = pipeline.analyze(&base, w.domain);
 
-    let Some(&(top_cause, count)) = analysis.summary.causes.first() else {
-        println!("no dominant cause found — nothing to mitigate");
+    // --- 2. Rank the causes by estimated completion time saved ------------
+    let whatif_report = whatif::analyze_trace(
+        &base,
+        &analysis.per_stage,
+        None,
+        &WhatIfConfig { seed, ..Default::default() },
+    );
+    print!("{}", whatif_report.render());
+    let Some(top) = whatif_report.top() else {
+        println!("no causes detected — nothing to mitigate");
         return;
     };
     println!(
-        "baseline: makespan {:.1} s, p99 task {:.2} s, {} stragglers; dominant cause: {} ({}×)",
+        "baseline: makespan {:.1} s, p99 task {:.2} s, {} stragglers; \
+         best counterfactual: remove {} (est. {:.2} s saved)",
         base.makespan(),
         tail_latency(&base),
         analysis.total_stragglers(),
-        top_cause.name(),
-        count
+        top.kind.name(),
+        top.saved_secs
     );
 
-    // --- 2. Apply the mitigation the analysis recommends ------------------
+    // --- 3. Apply the mitigation the ranking recommends -------------------
+    // Every arm degrades gracefully: a cause whose mitigation has no
+    // matching stage (or no spec-level knob at all) reports and returns
+    // instead of panicking.
     let mut mitigated = w.clone();
-    let action = match top_cause {
+    let action = match top.kind {
         FeatureKind::ShuffleReadBytes => {
             // Repartition: split the skewed reduce into 2× more partitions
             // and salt the keys (lower Zipf exponent).
-            let reduce = mitigated
+            let Some(reduce) = mitigated
                 .stages
                 .iter_mut()
                 .find(|s| matches!(s.input_dist, SizeDist::Zipf { .. }))
-                .expect("kmeans has a zipf reduce stage");
+            else {
+                println!(
+                    "no applicable mitigation: {} dominates but no Zipf-skewed stage exists \
+                     to repartition",
+                    top.kind.name()
+                );
+                return;
+            };
             reduce.num_tasks *= 2;
             reduce.input_mean_bytes /= 2.0;
             reduce.input_dist = SizeDist::Zipf { s: 0.5 };
@@ -69,10 +91,15 @@ fn main() {
             }
             "rebalance input splits"
         }
-        _ => {
-            // Resource cause: double per-node headroom (the "assign more
-            // cores / faster disk" advice of Section IV-C).
-            "add resource headroom"
+        other => {
+            // Resource/time causes need cluster-level fixes (swap the slow
+            // node, tune the JVM) that a workload spec cannot express.
+            println!(
+                "no applicable mitigation: {} needs a cluster-level fix, not a workload \
+                 change — the what-if ranking above is the guidance",
+                other.name()
+            );
+            return;
         }
     };
     println!("mitigation: {action}");
@@ -81,7 +108,14 @@ fn main() {
     let fixed = eng2.run("kmeans-mitigated", w.name, &mitigated.stages, &InjectionPlan::none());
     let analysis2 = pipeline.analyze(&fixed, w.domain);
 
-    // --- 3. Report before/after -------------------------------------------
+    // --- 4. Report before/after -------------------------------------------
+    let count = analysis
+        .summary
+        .causes
+        .iter()
+        .find(|(k, _)| *k == top.kind)
+        .map(|&(_, n)| n)
+        .unwrap_or(0);
     let mut t = Table::new("Mitigation effect")
         .header(&["metric", "before", "after", "delta"])
         .aligns(&[Align::Left, Align::Right, Align::Right, Align::Right]);
@@ -100,7 +134,7 @@ fn main() {
                 .summary
                 .causes
                 .iter()
-                .find(|(k, _)| *k == top_cause)
+                .find(|(k, _)| *k == top.kind)
                 .map(|&(_, n)| n as f64)
                 .unwrap_or(0.0),
         ),

@@ -17,6 +17,8 @@
 //! - [`pcc`] — the Pearson-correlation baseline (Eq. 8)
 //! - [`roc`] — ground-truth scoring, ROC sweeps, AUC (Eq. 9, Fig. 8/9)
 //! - [`report`] — straggler annotations, Table VI summaries, figure CSVs
+//! - [`whatif`] — counterfactual what-if engine: rank detected causes by
+//!   estimated completion-time saved via deterministic trace replay
 
 pub mod bigroots;
 pub mod cache;
@@ -28,6 +30,7 @@ pub mod roc;
 pub mod router;
 pub mod stats;
 pub mod straggler;
+pub mod whatif;
 
 pub use bigroots::{analyze_stage, BigRootsConfig, RootCause, StageAnalysis};
 pub use cache::{CacheCounters, CachedBackend, SharedCachedBackend, SharedStatsCache};
@@ -38,3 +41,4 @@ pub use roc::{ground_truth, score, Confusion, GroundTruth};
 pub use router::RoutingBackend;
 pub use stats::{NativeBackend, StageStats, StatsBackend};
 pub use straggler::{detect, StragglerSet};
+pub use whatif::{CauseSavings, WhatIfConfig, WhatIfReport};

@@ -1,0 +1,553 @@
+//! Counterfactual what-if engine: rank root causes by **estimated job
+//! completion time saved**, not by incidence.
+//!
+//! The source paper stops at naming a straggler's cause; "Understanding
+//! Stragglers in Large Model Training Using What-if Analysis" (arxiv
+//! 2505.05713) closes the gap by asking, per cause: *how much faster would
+//! this job have finished if that cause were removed?* This module answers
+//! that question from the two things we already own — the observed
+//! per-stage features/verdicts and the deterministic replay scheduler
+//! ([`crate::sim::replay`]):
+//!
+//! 1. replay the observed per-task durations through the slot scheduler →
+//!    the **baseline** completion time;
+//! 2. for each detected cause kind, rebuild the durations with that cause
+//!    **neutralized** on exactly the tasks where BigRoots detected it, and
+//!    replay again → the **counterfactual** completion time;
+//! 3. report `saved = baseline − counterfactual` per cause, ranked.
+//!
+//! Neutralization semantics per feature category (see `docs/WHATIF.md`):
+//!
+//! | category | neutralizer |
+//! |----------|-------------|
+//! | time (`jvm_gc_time`) | GC time zeroed: `dur ← dur·(1 − gc_frac)` |
+//! | time (ser/deser) | excess over the benign target removed |
+//! | numerical (shuffle-read, bytes-read, spills) | bytes normalized to the benign target; the duration credit is the stage's fitted seconds-per-ratio slope × the excess |
+//! | resource (cpu/disk/network) | slow node swapped to fleet-median speed: the node's slowdown factor versus the reference median is divided out |
+//! | discrete (locality) | remote read replaced by a median local task |
+//!
+//! The *benign target* is the within-stage median of the feature column —
+//! or, when a warm [`FleetReport`] baseline is supplied, the fleet-wide
+//! p50 of that (already peer-normalized) feature. The slow-node reference
+//! likewise tightens to the fleet median of stage medians when available.
+//! A neutralized duration never increases and never drops below
+//! `min_duration_frac` of the original.
+//!
+//! **Determinism:** every step is closed-form `f64` arithmetic in a fixed
+//! order over `(trace, seed)` — same inputs, bit-identical ranking
+//! (`rust/tests/whatif_integration.rs` asserts it). The seed is carried in
+//! the report so future stochastic replay extensions stay keyed.
+
+use crate::analysis::bigroots::StageAnalysis;
+use crate::analysis::features::{FeatureCategory, FeatureKind, StageFeatures};
+use crate::live::registry::FleetReport;
+use crate::sim::replay::{job_completion, ReplayStage, ReplayTask};
+use crate::util::json::Json;
+use crate::util::stats::median;
+use crate::util::table::{fnum, pct, Align, Table};
+
+/// A fleet feature baseline below this many observations is too cold to
+/// override the within-stage target (matches the registry's default
+/// cold-start guard).
+pub const FLEET_MIN_COUNT: usize = 64;
+
+/// What-if replay knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WhatIfConfig {
+    /// Carried into the report; the current neutralizers are closed-form,
+    /// so the seed namespaces determinism rather than driving sampling.
+    pub seed: u64,
+    /// Task slots per node for the replay scheduler. The offline path
+    /// infers this from the trace ([`crate::sim::replay::infer_slots_per_node`]);
+    /// the live path uses this configured value.
+    pub slots_per_node: usize,
+    /// Floor on a neutralized duration, as a fraction of the original.
+    pub min_duration_frac: f64,
+}
+
+impl Default for WhatIfConfig {
+    fn default() -> Self {
+        // slots_per_node matches SimConfig::default().slots.
+        WhatIfConfig { seed: 42, slots_per_node: 12, min_duration_frac: 0.05 }
+    }
+}
+
+/// Estimated effect of removing one cause.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CauseSavings {
+    pub kind: FeatureKind,
+    /// Tasks whose duration the neutralizer adjusted.
+    pub tasks_affected: usize,
+    /// Stages containing at least one adjusted task.
+    pub stages_affected: usize,
+    /// Replayed completion time with this cause neutralized (s).
+    pub counterfactual_secs: f64,
+    /// `baseline − counterfactual` (s).
+    pub saved_secs: f64,
+    /// `saved / baseline` (0 when the baseline is 0).
+    pub saved_frac: f64,
+}
+
+/// Ranked what-if verdict for one job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WhatIfReport {
+    pub job: String,
+    pub seed: u64,
+    pub slots_per_node: usize,
+    /// Replayed completion time of the observed durations (s).
+    pub baseline_secs: f64,
+    /// One row per detected cause kind, largest saving first.
+    pub rows: Vec<CauseSavings>,
+}
+
+impl WhatIfReport {
+    /// The cause whose removal saves the most time, if any.
+    pub fn top(&self) -> Option<&CauseSavings> {
+        self.rows.first()
+    }
+
+    /// `(kind, saved_secs)` pairs in rank order — the shape the fleet
+    /// registry accumulates.
+    pub fn ranked(&self) -> Vec<(FeatureKind, f64)> {
+        self.rows.iter().map(|r| (r.kind, r.saved_secs)).collect()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "what-if {}: replay baseline {} s ({} slots/node, seed {})\n",
+            self.job,
+            fnum(self.baseline_secs, 2),
+            self.slots_per_node,
+            self.seed,
+        );
+        if self.rows.is_empty() {
+            out.push_str("no causes detected — nothing to neutralize\n");
+            return out;
+        }
+        let mut t = Table::new("Estimated completion-time saved per cause")
+            .header(&["rank", "cause", "tasks", "stages", "counterfactual s", "saved s", "saved"])
+            .aligns(&[
+                Align::Right,
+                Align::Left,
+                Align::Right,
+                Align::Right,
+                Align::Right,
+                Align::Right,
+                Align::Right,
+            ]);
+        for (i, r) in self.rows.iter().enumerate() {
+            t.row(vec![
+                (i + 1).to_string(),
+                r.kind.name().to_string(),
+                r.tasks_affected.to_string(),
+                r.stages_affected.to_string(),
+                fnum(r.counterfactual_secs, 2),
+                fnum(r.saved_secs, 2),
+                pct(r.saved_frac),
+            ]);
+        }
+        out.push_str(&t.render());
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                Json::from_pairs(vec![
+                    ("cause", r.kind.name().into()),
+                    ("tasks_affected", r.tasks_affected.into()),
+                    ("stages_affected", r.stages_affected.into()),
+                    ("counterfactual_secs", r.counterfactual_secs.into()),
+                    ("saved_secs", r.saved_secs.into()),
+                    ("saved_frac", r.saved_frac.into()),
+                ])
+            })
+            .collect();
+        Json::from_pairs(vec![
+            ("job", self.job.as_str().into()),
+            ("seed", self.seed.into()),
+            ("slots_per_node", self.slots_per_node.into()),
+            ("baseline_secs", self.baseline_secs.into()),
+            ("rows", Json::Arr(rows)),
+        ])
+    }
+}
+
+/// Benign target value for a feature: the fleet-wide p50 when the supplied
+/// baseline is warm enough, else the within-stage median of the column.
+fn benign_target(
+    fleet: Option<&FleetReport>,
+    kind: FeatureKind,
+    stage_median: f64,
+) -> f64 {
+    if let Some(f) = fleet {
+        if let Some(b) = f.baselines.iter().find(|b| b.kind == kind) {
+            if b.count >= FLEET_MIN_COUNT {
+                return b.p50;
+            }
+        }
+    }
+    stage_median
+}
+
+/// Least-squares slope of `durations` on `values`, clamped non-negative.
+/// The "seconds of duration per unit of feature ratio" the numerical
+/// neutralizer credits back.
+fn duration_slope(values: &[f64], durations: &[f64]) -> f64 {
+    let n = values.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    let mean_v = values.iter().sum::<f64>() / nf;
+    let mean_d = durations.iter().sum::<f64>() / nf;
+    let mut cov = 0.0;
+    let mut var = 0.0;
+    for i in 0..n {
+        let dv = values[i] - mean_v;
+        cov += dv * (durations[i] - mean_d);
+        var += dv * dv;
+    }
+    if var <= 0.0 {
+        0.0
+    } else {
+        (cov / var).max(0.0)
+    }
+}
+
+/// Median duration of the tasks that ran on `node` in this stage.
+fn node_median_duration(sf: &StageFeatures, node: usize) -> f64 {
+    let durs: Vec<f64> = (0..sf.num_tasks())
+        .filter(|&r| sf.nodes[r] == node)
+        .map(|r| sf.durations[r])
+        .collect();
+    median(&durs)
+}
+
+/// Neutralized durations for one stage: rows where `kind` was detected as
+/// a cause get their duration credit; everything else is untouched.
+/// Returns `(durations, adjusted_rows)`.
+fn neutralize_stage(
+    sf: &StageFeatures,
+    analysis: &StageAnalysis,
+    kind: FeatureKind,
+    fleet: Option<&FleetReport>,
+    cfg: &WhatIfConfig,
+) -> (Vec<f64>, usize) {
+    let mut durs = sf.durations.clone();
+    let mut rows: Vec<usize> = analysis
+        .causes
+        .iter()
+        .filter(|c| c.kind == kind)
+        .map(|c| c.row)
+        .collect();
+    rows.sort_unstable();
+    rows.dedup();
+    if rows.is_empty() {
+        return (durs, 0);
+    }
+    let col = sf.column(kind);
+    let stage_col_median = median(&col);
+    let stage_dur_median = median(&sf.durations);
+    let target = benign_target(fleet, kind, stage_col_median);
+    let slope = match kind.category() {
+        FeatureCategory::Numerical => duration_slope(&col, &sf.durations),
+        _ => 0.0,
+    };
+    // Slow-node reference: the stage's own median, tightened to the fleet
+    // median of stage medians when a warm baseline says this whole stage
+    // ran degraded.
+    let node_reference = match fleet {
+        Some(f) if f.stages >= FLEET_MIN_COUNT && f.stage_median_p50 > 0.0 => {
+            stage_dur_median.min(f.stage_median_p50)
+        }
+        _ => stage_dur_median,
+    };
+    for &row in &rows {
+        let dur = durs[row];
+        if dur <= 0.0 {
+            continue;
+        }
+        let v = col[row];
+        let neutralized = match kind.category() {
+            FeatureCategory::Time => {
+                // v is the phase's fraction of the task duration. GC is
+                // zeroed outright; ser/deser shrink to the benign target.
+                let tgt = if kind == FeatureKind::JvmGcTime { 0.0 } else { target.min(v) };
+                dur - dur * (v - tgt).max(0.0)
+            }
+            FeatureCategory::Numerical => {
+                // v is the task's bytes ratio versus the stage mean;
+                // normalize to the benign target and credit the fitted
+                // seconds-per-ratio slope for the excess.
+                let tgt = target.min(v);
+                dur - slope * (v - tgt).max(0.0)
+            }
+            FeatureCategory::Resource => {
+                // Swap the slow node for a fleet-median-speed one: divide
+                // out the node's slowdown factor versus the reference.
+                let node_med = node_median_duration(sf, sf.nodes[row]);
+                let factor = if node_reference > 0.0 && node_med > 0.0 {
+                    (node_med / node_reference).max(1.0)
+                } else {
+                    1.0
+                };
+                dur / factor
+            }
+            FeatureCategory::Discrete => {
+                // Remote read → a typical local task.
+                dur.min(stage_dur_median)
+            }
+        };
+        durs[row] = neutralized.clamp(dur * cfg.min_duration_frac, dur);
+    }
+    (durs, rows.len())
+}
+
+fn replay_stages(
+    per_stage: &[(StageFeatures, StageAnalysis)],
+    durations: impl Fn(usize) -> Vec<f64>,
+) -> Vec<ReplayStage> {
+    let mut order: Vec<usize> = (0..per_stage.len()).collect();
+    order.sort_by_key(|&i| per_stage[i].0.stage_id);
+    order
+        .into_iter()
+        .map(|i| {
+            let sf = &per_stage[i].0;
+            let durs = durations(i);
+            ReplayStage {
+                stage_id: sf.stage_id,
+                tasks: (0..sf.num_tasks())
+                    .map(|r| ReplayTask { node: sf.nodes[r], duration: durs[r] })
+                    .collect(),
+            }
+        })
+        .collect()
+}
+
+/// Savings estimate for one specific cause kind — 0 saved (and 0 tasks
+/// affected) when the analyses never implicated it.
+pub fn estimate_for_kind(
+    per_stage: &[(StageFeatures, StageAnalysis)],
+    kind: FeatureKind,
+    fleet: Option<&FleetReport>,
+    cfg: &WhatIfConfig,
+) -> CauseSavings {
+    let baseline_stages = replay_stages(per_stage, |i| per_stage[i].0.durations.clone());
+    let baseline = job_completion(&baseline_stages, cfg.slots_per_node);
+    estimate_against_baseline(per_stage, kind, fleet, cfg, baseline)
+}
+
+fn estimate_against_baseline(
+    per_stage: &[(StageFeatures, StageAnalysis)],
+    kind: FeatureKind,
+    fleet: Option<&FleetReport>,
+    cfg: &WhatIfConfig,
+    baseline: f64,
+) -> CauseSavings {
+    let mut tasks_affected = 0usize;
+    let mut stages_affected = 0usize;
+    let neutralized: Vec<Vec<f64>> = per_stage
+        .iter()
+        .map(|(sf, a)| {
+            let (durs, adjusted) = neutralize_stage(sf, a, kind, fleet, cfg);
+            tasks_affected += adjusted;
+            if adjusted > 0 {
+                stages_affected += 1;
+            }
+            durs
+        })
+        .collect();
+    let stages = replay_stages(per_stage, |i| neutralized[i].clone());
+    let counterfactual = job_completion(&stages, cfg.slots_per_node);
+    let saved = (baseline - counterfactual).max(0.0);
+    CauseSavings {
+        kind,
+        tasks_affected,
+        stages_affected,
+        counterfactual_secs: counterfactual,
+        saved_secs: saved,
+        saved_frac: if baseline > 0.0 { saved / baseline } else { 0.0 },
+    }
+}
+
+/// The what-if verdict for one analyzed job: replay the observed durations
+/// once, then once per detected cause kind with that cause neutralized.
+/// Rows are ranked by time saved (ties broken by feature order), so
+/// `rows[0]` is the mitigation with the largest estimated payoff.
+pub fn analyze_job(
+    job: &str,
+    per_stage: &[(StageFeatures, StageAnalysis)],
+    fleet: Option<&FleetReport>,
+    cfg: &WhatIfConfig,
+) -> WhatIfReport {
+    let baseline_stages = replay_stages(per_stage, |i| per_stage[i].0.durations.clone());
+    let baseline = job_completion(&baseline_stages, cfg.slots_per_node);
+
+    let mut seen = [false; FeatureKind::COUNT];
+    for (_, a) in per_stage {
+        for c in &a.causes {
+            seen[c.kind.index()] = true;
+        }
+    }
+    let mut rows: Vec<CauseSavings> = FeatureKind::ALL
+        .iter()
+        .filter(|k| seen[k.index()])
+        .map(|&k| estimate_against_baseline(per_stage, k, fleet, cfg, baseline))
+        .collect();
+    rows.sort_by(|a, b| {
+        b.saved_secs
+            .total_cmp(&a.saved_secs)
+            .then_with(|| a.kind.index().cmp(&b.kind.index()))
+    });
+    WhatIfReport {
+        job: job.to_string(),
+        seed: cfg.seed,
+        slots_per_node: cfg.slots_per_node,
+        baseline_secs: baseline,
+        rows,
+    }
+}
+
+/// Offline entry point: what-if over a full trace, slots inferred from the
+/// observed per-node concurrency.
+pub fn analyze_trace(
+    trace: &crate::trace::JobTrace,
+    per_stage: &[(StageFeatures, StageAnalysis)],
+    fleet: Option<&FleetReport>,
+    cfg: &WhatIfConfig,
+) -> WhatIfReport {
+    let mut cfg = *cfg;
+    cfg.slots_per_node = crate::sim::replay::infer_slots_per_node(trace);
+    analyze_job(&trace.job_name, per_stage, fleet, &cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::bigroots::{analyze_stage, BigRootsConfig};
+    use crate::analysis::features::extract_all;
+    use crate::analysis::stats::NativeBackend;
+    use crate::sim::{workloads, Engine, InjectionPlan, SimConfig};
+    use crate::trace::{AnomalyKind, JobTrace};
+
+    fn analyzed(
+        seed: u64,
+        plan: &InjectionPlan,
+    ) -> (JobTrace, Vec<(StageFeatures, StageAnalysis)>) {
+        let w = workloads::wordcount(0.25);
+        let mut eng = Engine::new(SimConfig { seed, ..Default::default() });
+        let t = eng.run("whatif-test", w.name, &w.stages, plan);
+        let cfg = BigRootsConfig::default();
+        let mut backend = NativeBackend::new();
+        let per_stage: Vec<_> = extract_all(&t, cfg.edge_width)
+            .into_iter()
+            .map(|sf| {
+                let a = analyze_stage(&sf, &mut backend, &cfg);
+                (sf, a)
+            })
+            .collect();
+        (t, per_stage)
+    }
+
+    #[test]
+    fn clean_job_has_bounded_report() {
+        let (t, per_stage) = analyzed(5, &InjectionPlan::none());
+        let r = analyze_trace(&t, &per_stage, None, &WhatIfConfig::default());
+        assert!(r.baseline_secs > 0.0);
+        for row in &r.rows {
+            assert!(row.saved_secs >= 0.0);
+            assert!(row.counterfactual_secs <= r.baseline_secs);
+            assert!(row.saved_frac <= 1.0);
+        }
+        // Ranked descending.
+        for w in r.rows.windows(2) {
+            assert!(w[0].saved_secs >= w[1].saved_secs);
+        }
+    }
+
+    #[test]
+    fn report_is_bit_identical_across_runs() {
+        let plan = InjectionPlan::intermittent(AnomalyKind::Cpu, 1, 15.0, 10.0, 300.0);
+        let (t, per_stage) = analyzed(7, &plan);
+        let cfg = WhatIfConfig::default();
+        let a = analyze_trace(&t, &per_stage, None, &cfg);
+        let b = analyze_trace(&t, &per_stage, None, &cfg);
+        assert_eq!(a, b);
+        assert_eq!(
+            a.baseline_secs.to_bits(),
+            b.baseline_secs.to_bits(),
+            "baseline replay must be bit-identical"
+        );
+        for (x, y) in a.rows.iter().zip(&b.rows) {
+            assert_eq!(x.saved_secs.to_bits(), y.saved_secs.to_bits());
+        }
+    }
+
+    #[test]
+    fn undetected_kind_saves_nothing() {
+        let (t, per_stage) = analyzed(9, &InjectionPlan::none());
+        let mut cfg = WhatIfConfig::default();
+        cfg.slots_per_node = crate::sim::replay::infer_slots_per_node(&t);
+        // Find a kind no analysis implicated.
+        let mut seen = [false; FeatureKind::COUNT];
+        for (_, a) in &per_stage {
+            for c in &a.causes {
+                seen[c.kind.index()] = true;
+            }
+        }
+        let quiet = FeatureKind::ALL.iter().copied().find(|k| !seen[k.index()]);
+        if let Some(kind) = quiet {
+            let est = estimate_for_kind(&per_stage, kind, None, &cfg);
+            assert_eq!(est.tasks_affected, 0);
+            assert_eq!(est.saved_secs, 0.0);
+        }
+    }
+
+    #[test]
+    fn neutralizing_never_inflates_durations() {
+        let plan = InjectionPlan::intermittent(AnomalyKind::Cpu, 2, 15.0, 10.0, 300.0);
+        let (_, per_stage) = analyzed(11, &plan);
+        let cfg = WhatIfConfig::default();
+        for (sf, a) in &per_stage {
+            for &kind in FeatureKind::ALL.iter() {
+                let (durs, _) = neutralize_stage(sf, a, kind, None, &cfg);
+                for (new, old) in durs.iter().zip(&sf.durations) {
+                    assert!(new <= old, "{} inflated {old} -> {new}", kind.name());
+                    assert!(*new >= old * cfg.min_duration_frac - 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn slope_fit_is_sane() {
+        // duration = 2·v + 1 exactly.
+        let v = vec![1.0, 2.0, 3.0, 4.0];
+        let d = vec![3.0, 5.0, 7.0, 9.0];
+        assert!((duration_slope(&v, &d) - 2.0).abs() < 1e-12);
+        // Anti-correlated clamps to zero.
+        let d2 = vec![9.0, 7.0, 5.0, 3.0];
+        assert_eq!(duration_slope(&v, &d2), 0.0);
+        assert_eq!(duration_slope(&[1.0], &[1.0]), 0.0);
+        assert_eq!(duration_slope(&[2.0, 2.0], &[1.0, 5.0]), 0.0);
+    }
+
+    #[test]
+    fn render_and_json_carry_the_ranking() {
+        let plan = InjectionPlan::intermittent(AnomalyKind::Cpu, 1, 15.0, 10.0, 300.0);
+        let (t, per_stage) = analyzed(13, &plan);
+        let r = analyze_trace(&t, &per_stage, None, &WhatIfConfig::default());
+        let text = r.render();
+        assert!(text.contains("what-if whatif-test"));
+        let j = r.to_json();
+        assert_eq!(j.get("job").as_str(), Some("whatif-test"));
+        let rows = j.get("rows").as_arr().expect("rows array");
+        assert_eq!(rows.len(), r.rows.len());
+        if let Some(top) = r.top() {
+            assert_eq!(rows[0].get("cause").as_str(), Some(top.kind.name()));
+        }
+    }
+}

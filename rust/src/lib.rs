@@ -47,12 +47,23 @@
 //!   baseline — and **survives restarts** through versioned, bit-exact,
 //!   atomically-written snapshots ([`live::persist`], restore-on-boot);
 //!   a line-delimited TCP **control socket** ([`live::control`]:
-//!   `fleet-report`, `job <id>`, `metrics`, `snapshot`, `shutdown`)
-//!   shares one query path with the CLI's periodic snapshot printing and
-//!   gives `bigroots serve` a clean drain-then-snapshot shutdown.
+//!   `fleet-report`, `job <id>`, `what-if <id>`, `metrics`,
+//!   `metrics-prom`, `self-report`, `snapshot`, `shutdown`) shares one
+//!   query path with the CLI's periodic snapshot printing and gives
+//!   `bigroots serve` a clean drain-then-snapshot shutdown.
 //!   `bigroots serve --tail/--listen --control-port --snapshot-path`,
 //!   `examples/live_tail.rs` and `examples/control_client.rs` drive it
 //!   end to end.
+//! - the **counterfactual what-if engine** ([`analysis::whatif`] over
+//!   the deterministic replay scheduler [`sim::replay`]): every detected
+//!   cause is neutralized in turn (GC zeroed, bytes normalized to the
+//!   benign target, slow node swapped to fleet-median speed, remote
+//!   reads localized) and the job replayed, ranking causes by estimated
+//!   completion time saved — bit-identical given `(trace, seed)`.
+//!   Surfaced as the `what-if <id>` control verb, the `bigroots whatif`
+//!   offline subcommand, a ranked `estimated_savings` column in the
+//!   fleet report (persisted in snapshot v2), and the mitigation picker
+//!   in `examples/mitigation.rs`. See `docs/WHATIF.md`.
 //!
 //! The event→feature→stats **hot path** is allocation-free and
 //! cache-aware end to end:

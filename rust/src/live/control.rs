@@ -9,6 +9,7 @@
 //! |----------------|---------------------------------------------------|
 //! | `fleet-report` | the [`FleetReport`] (counters, quantiles, shares) |
 //! | `job <id>`     | summary of a retired job (stages, causes, flags)  |
+//! | `what-if <id>` | a retired job's counterfactual verdict: causes ranked by estimated completion-time saved |
 //! | `metrics`      | [`LiveMetrics`] incl. per-shard counters          |
 //! | `metrics-prom` | `{"text": ...}` — Prometheus exposition text      |
 //! | `self-report`  | BigRoots-on-BigRoots verdict on the server itself |
@@ -39,6 +40,9 @@ use crate::util::json::Json;
 pub enum ControlCommand {
     FleetReport,
     Job(u64),
+    /// A retired job's what-if verdict ([`crate::analysis::whatif`]):
+    /// detected causes ranked by estimated completion-time saved.
+    WhatIf(u64),
     Metrics,
     /// Prometheus text exposition, embedded in the JSON envelope as
     /// `{"text": ...}` so the one-line-per-response protocol holds.
@@ -67,9 +71,13 @@ pub fn parse_command(line: &str) -> ControlCommand {
             (Some(Ok(id)), None) => ControlCommand::Job(id),
             _ => ControlCommand::Invalid("usage: job <id>".to_string()),
         },
+        Some("what-if") => match (parts.next().map(str::parse::<u64>), parts.next()) {
+            (Some(Ok(id)), None) => ControlCommand::WhatIf(id),
+            _ => ControlCommand::Invalid("usage: what-if <id>".to_string()),
+        },
         _ => ControlCommand::Invalid(format!(
-            "unknown command '{}' (try: fleet-report | job <id> | metrics | metrics-prom | \
-             self-report | snapshot | shutdown)",
+            "unknown command '{}' (try: fleet-report | job <id> | what-if <id> | metrics | \
+             metrics-prom | self-report | snapshot | shutdown)",
             line.trim()
         )),
     }
@@ -352,6 +360,16 @@ pub fn fleet_report_json(r: &FleetReport) -> Json {
             ])
         })
         .collect();
+    let estimated_savings: Vec<Json> = r
+        .estimated_savings
+        .iter()
+        .map(|(kind, saved)| {
+            Json::from_pairs(vec![
+                ("feature", kind.name().into()),
+                ("saved_secs", Json::Num(*saved)),
+            ])
+        })
+        .collect();
     let baselines: Vec<Json> = r
         .baselines
         .iter()
@@ -378,6 +396,7 @@ pub fn fleet_report_json(r: &FleetReport) -> Json {
         ("shuffle_heavy_gc", r.shuffle_heavy_gc.into()),
         ("shuffle_heavy_gc_fraction", Json::Num(r.shuffle_heavy_gc_fraction())),
         ("cause_incidence", Json::Arr(cause_incidence)),
+        ("estimated_savings", Json::Arr(estimated_savings)),
         ("baselines", Json::Arr(baselines)),
     ])
 }
@@ -437,10 +456,28 @@ pub fn job_summary_json(j: &CompletedJob) -> Json {
         ("causes", causes.into()),
         ("fleet_flags", j.fleet_flags.len().into()),
         (
+            "estimated_savings",
+            match &j.whatif {
+                Some(w) => w.to_json(),
+                None => Json::Null,
+            },
+        ),
+        (
             "incomplete",
             Json::Arr(j.incomplete.iter().map(|s| Json::Str(s.to_string())).collect()),
         ),
     ])
+}
+
+/// The `what-if <id>` verb's response body: the retired job's full
+/// [`WhatIfReport`](crate::analysis::whatif::WhatIfReport), or an error
+/// shape explaining why there is none (never retired / no analyzed
+/// stages).
+pub fn whatif_json(j: &CompletedJob) -> Result<Json, String> {
+    match &j.whatif {
+        Some(w) => Ok(w.to_json()),
+        None => Err(format!("job {} retired with no analyzed stages", j.job_id)),
+    }
 }
 
 #[cfg(test)]
@@ -457,9 +494,12 @@ mod tests {
         assert_eq!(parse_command("snapshot"), ControlCommand::Snapshot);
         assert_eq!(parse_command("shutdown"), ControlCommand::Shutdown);
         assert_eq!(parse_command("job 42"), ControlCommand::Job(42));
+        assert_eq!(parse_command("what-if 42"), ControlCommand::WhatIf(42));
         assert!(matches!(parse_command("job"), ControlCommand::Invalid(_)));
         assert!(matches!(parse_command("job x"), ControlCommand::Invalid(_)));
         assert!(matches!(parse_command("job 1 2"), ControlCommand::Invalid(_)));
+        assert!(matches!(parse_command("what-if"), ControlCommand::Invalid(_)));
+        assert!(matches!(parse_command("what-if x"), ControlCommand::Invalid(_)));
         assert!(matches!(parse_command("bogus"), ControlCommand::Invalid(_)));
         assert!(matches!(parse_command("fleet-report extra"), ControlCommand::Invalid(_)));
     }
@@ -530,6 +570,49 @@ mod tests {
         let third = Json::parse(lines[2].trim()).unwrap();
         assert_eq!(third.get("ok").as_bool(), Some(false));
         assert_eq!(srv.requests_served(), 3);
+    }
+
+    #[test]
+    fn whatif_json_shapes() {
+        use crate::analysis::features::FeatureKind;
+        use crate::analysis::whatif::{CauseSavings, WhatIfReport};
+        let mut job = CompletedJob {
+            job_id: 9,
+            incarnation: 0,
+            ended: true,
+            evicted_live: false,
+            analyses: Vec::new(),
+            fleet_flags: Vec::new(),
+            whatif: None,
+            incomplete: Vec::new(),
+        };
+        // No verdict → the verb errors, and the job summary carries null.
+        assert!(whatif_json(&job).is_err());
+        assert!(matches!(job_summary_json(&job).get("estimated_savings"), Json::Null));
+        job.whatif = Some(WhatIfReport {
+            job: "job-9".into(),
+            seed: 42,
+            slots_per_node: 12,
+            baseline_secs: 30.0,
+            rows: vec![CauseSavings {
+                kind: FeatureKind::JvmGcTime,
+                tasks_affected: 2,
+                stages_affected: 1,
+                counterfactual_secs: 25.0,
+                saved_secs: 5.0,
+                saved_frac: 5.0 / 30.0,
+            }],
+        });
+        let w = whatif_json(&job).expect("verdict present");
+        assert_eq!(w.get("job").as_str(), Some("job-9"));
+        let rows = w.get("rows").as_arr().expect("rows");
+        assert_eq!(rows[0].get("cause").as_str(), Some("jvm_gc_time"));
+        assert_eq!(rows[0].get("saved_secs").as_f64(), Some(5.0));
+        let summary = job_summary_json(&job);
+        assert_eq!(
+            summary.get("estimated_savings").get("baseline_secs").as_f64(),
+            Some(30.0)
+        );
     }
 
     #[test]

@@ -53,8 +53,10 @@ use std::time::Instant;
 
 use crate::analysis::bigroots::{analyze_stage_with_stats, BigRootsConfig, StageAnalysis};
 use crate::analysis::cache::{SharedCachedBackend, SharedStatsCache};
+use crate::analysis::features::StageFeatures;
 use crate::analysis::router::RoutingBackend;
 use crate::analysis::stats::{NativeBackend, StatsBackend};
+use crate::analysis::whatif::{self, WhatIfConfig, WhatIfReport};
 use crate::live::lifecycle::{Lifecycle, LifecycleConfig};
 use crate::live::registry::{FleetFlag, FleetRegistry, FleetReport};
 use crate::obs::{self, SpanKind};
@@ -90,6 +92,10 @@ pub struct LiveConfig {
     pub bigroots: BigRootsConfig,
     /// Fleet-verdict cold-start guard (min observations per baseline).
     pub fleet_min_samples: usize,
+    /// Counterfactual what-if replay knobs — each retiring job gets a
+    /// [`WhatIfReport`] computed against the fleet baseline of that
+    /// moment.
+    pub whatif: WhatIfConfig,
 }
 
 impl Default for LiveConfig {
@@ -104,6 +110,7 @@ impl Default for LiveConfig {
             route_large_tasks: 0,
             bigroots: BigRootsConfig::default(),
             fleet_min_samples: 64,
+            whatif: WhatIfConfig::default(),
         }
     }
 }
@@ -154,6 +161,11 @@ pub struct CompletedJob {
     pub analyses: Vec<StageAnalysis>,
     /// Second-pass flags versus the fleet baseline at retirement time.
     pub fleet_flags: Vec<FleetFlag>,
+    /// Counterfactual verdict: detected causes ranked by estimated
+    /// completion-time saved, computed at retirement against the fleet
+    /// baseline of that moment. `None` for jobs that retired with no
+    /// analyzed stages.
+    pub whatif: Option<WhatIfReport>,
     /// Announced stages that never completed.
     pub incomplete: Vec<u64>,
 }
@@ -255,8 +267,11 @@ pub struct LiveServer {
     source_dropped_partial_lines: usize,
     /// Cumulative parse failures reported by the event source.
     source_parse_errors: usize,
-    /// (job id, incarnation) → collected (seq, analysis, fleet flags).
-    collected: HashMap<(u64, u32), Vec<(u64, StageAnalysis, Vec<FleetFlag>)>>,
+    /// (job id, incarnation) → collected (seq, features, analysis, fleet
+    /// flags). Features stay resident until the job retires — the
+    /// counterfactual replay needs the full per-task matrices — and are
+    /// dropped with the job.
+    collected: HashMap<(u64, u32), Vec<(u64, StageFeatures, StageAnalysis, Vec<FleetFlag>)>>,
     completed: Vec<CompletedJob>,
     jobs_completed: usize,
     evictions_live: usize,
@@ -443,18 +458,37 @@ impl LiveServer {
                 self.collected
                     .entry((job_id, incarnation))
                     .or_default()
-                    .push((seq, analysis, flags));
+                    .push((seq, features, analysis, flags));
             }
             LiveMsg::Evicted { job_id, incarnation, ended, incomplete, live } => {
                 let mut rows =
                     self.collected.remove(&(job_id, incarnation)).unwrap_or_default();
-                rows.sort_by_key(|(seq, _, _)| *seq);
-                let mut analyses = Vec::with_capacity(rows.len());
+                rows.sort_by_key(|(seq, _, _, _)| *seq);
+                let mut per_stage = Vec::with_capacity(rows.len());
                 let mut fleet_flags = Vec::new();
-                for (_, a, flags) in rows {
-                    analyses.push(a);
+                for (_, sf, a, flags) in rows {
+                    per_stage.push((sf, a));
                     fleet_flags.extend(flags);
                 }
+                // Counterfactual verdict against the fleet baseline as of
+                // retirement; its savings feed back into the registry so
+                // the fleet report ranks causes by total time lost.
+                let whatif_report = if per_stage.is_empty() {
+                    None
+                } else {
+                    let fleet = self.registry.report();
+                    let r = whatif::analyze_job(
+                        &format!("job-{job_id}"),
+                        &per_stage,
+                        Some(&fleet),
+                        &self.cfg.whatif,
+                    );
+                    self.registry.fold_whatif(&r);
+                    Some(r)
+                };
+                // Features drop here; only the analyses stay resident.
+                let analyses: Vec<StageAnalysis> =
+                    per_stage.into_iter().map(|(_, a)| a).collect();
                 if ended {
                     self.registry.job_completed();
                 }
@@ -469,6 +503,7 @@ impl LiveServer {
                     evicted_live: live,
                     analyses,
                     fleet_flags,
+                    whatif: whatif_report,
                     incomplete,
                 });
             }
@@ -864,5 +899,28 @@ mod tests {
         assert_eq!(got_causes, want_causes);
         let want_stragglers: usize = report.total_stragglers();
         assert_eq!(report.fleet.straggler_tasks, want_stragglers);
+    }
+
+    #[test]
+    fn retired_jobs_carry_a_whatif_verdict() {
+        let specs = round_robin_specs(3, 0.12, 404);
+        let (_, events) = interleaved_workload(&specs);
+        let report = run_live(&events, LiveConfig::default());
+        let mut fleet_total = 0.0;
+        for job in &report.jobs {
+            let w = job.whatif.as_ref().expect("analyzed job has a what-if verdict");
+            assert!(w.baseline_secs > 0.0);
+            for r in &w.rows {
+                assert!(r.saved_secs >= 0.0);
+            }
+            // Ranked descending.
+            for pair in w.rows.windows(2) {
+                assert!(pair[0].saved_secs >= pair[1].saved_secs);
+            }
+            fleet_total += w.rows.iter().map(|r| r.saved_secs).sum::<f64>();
+        }
+        // The registry accumulated exactly the per-job savings.
+        let got: f64 = report.fleet.estimated_savings.iter().map(|(_, s)| s).sum();
+        assert!((got - fleet_total).abs() < 1e-6, "{got} vs {fleet_total}");
     }
 }

@@ -29,7 +29,12 @@ use crate::util::json::Json;
 use crate::util::stats::{P2Quantile, Welford};
 
 /// Current snapshot document version. Bump on any layout change.
-pub const SNAPSHOT_VERSION: u64 = 1;
+/// v2 added the per-cause `whatif_saved` accumulator; v1 documents are
+/// still accepted and restore with zeroed savings.
+pub const SNAPSHOT_VERSION: u64 = 2;
+
+/// Oldest document version this build can still restore.
+pub const SNAPSHOT_MIN_VERSION: u64 = 1;
 
 /// Document kind marker, so a stray JSON file is rejected early.
 pub const SNAPSHOT_KIND: &str = "bigroots-fleet-snapshot";
@@ -64,6 +69,14 @@ fn read_fbits5(j: &Json, what: &str) -> Result<[f64; 5], String> {
         out[i] = read_fbits(v, what)?;
     }
     Ok(out)
+}
+
+fn read_fbits_vec(j: &Json, want: usize, what: &str) -> Result<Vec<f64>, String> {
+    let arr = j.as_arr().ok_or_else(|| format!("{what}: expected an array"))?;
+    if arr.len() != want {
+        return Err(format!("{what}: expected {want} elements, got {}", arr.len()));
+    }
+    arr.iter().map(|v| read_fbits(v, what)).collect()
 }
 
 // Counters travel as decimal *strings*, not JSON numbers: `Json::Num` is
@@ -182,6 +195,7 @@ pub fn encode_registry(reg: &FleetRegistry) -> Json {
         ("shuffle_heavy_gc", count_json(reg.shuffle_heavy_gc as u64)),
         ("stage_medians", encode_sketch(&reg.stage_medians)),
         ("features", Json::Arr(features)),
+        ("whatif_saved", fbits_arr(&reg.whatif_saved)),
     ]);
     Json::from_pairs(vec![
         ("kind", SNAPSHOT_KIND.into()),
@@ -201,9 +215,10 @@ pub fn decode_registry(j: &Json) -> Result<FleetRegistry, String> {
         return Err(format!("unexpected document kind '{kind}' (want '{SNAPSHOT_KIND}')"));
     }
     let version = read_u64(j, "version")?;
-    if version != SNAPSHOT_VERSION {
+    if !(SNAPSHOT_MIN_VERSION..=SNAPSHOT_VERSION).contains(&version) {
         return Err(format!(
-            "snapshot version {version} not supported (this build reads {SNAPSHOT_VERSION})"
+            "snapshot version {version} not supported (this build reads \
+             {SNAPSHOT_MIN_VERSION}..={SNAPSHOT_VERSION})"
         ));
     }
     let fleet = j.get("fleet");
@@ -254,6 +269,12 @@ pub fn decode_registry(j: &Json) -> Result<FleetRegistry, String> {
         stage_medians: decode_sketch(fleet.get("stage_medians"))?,
         shuffle_heavy: read_count(fleet, "shuffle_heavy")?,
         shuffle_heavy_gc: read_count(fleet, "shuffle_heavy_gc")?,
+        whatif_saved: if version >= 2 {
+            read_fbits_vec(fleet.get("whatif_saved"), FeatureKind::COUNT, "whatif_saved")?
+        } else {
+            // v1 predates the what-if accumulator: restore with zeros.
+            vec![0.0; FeatureKind::COUNT]
+        },
     })
 }
 
@@ -350,6 +371,46 @@ mod tests {
             encode_registry(&reg).to_string(),
             encode_registry(&restored).to_string()
         );
+    }
+
+    #[test]
+    fn whatif_savings_roundtrip_bit_exactly() {
+        use crate::analysis::whatif::{CauseSavings, WhatIfReport};
+        let mut reg = folded_registry(1);
+        reg.fold_whatif(&WhatIfReport {
+            job: "persist-whatif".into(),
+            seed: 3,
+            slots_per_node: 12,
+            baseline_secs: 100.0,
+            rows: vec![CauseSavings {
+                kind: FeatureKind::Cpu,
+                tasks_affected: 4,
+                stages_affected: 2,
+                counterfactual_secs: 87.5,
+                saved_secs: 12.5,
+                saved_frac: 0.125,
+            }],
+        });
+        let restored = decode_registry(&encode_registry(&reg)).expect("decode");
+        assert_eq!(reg.report(), restored.report());
+        assert_eq!(restored.report().estimated_saving(FeatureKind::Cpu), 12.5);
+    }
+
+    #[test]
+    fn v1_snapshot_restores_with_zeroed_savings() {
+        let reg = folded_registry(1);
+        let mut doc = encode_registry(&reg);
+        // Rewrite the document as a v1 snapshot: no whatif_saved field.
+        doc.set("version", 1u64.into());
+        let mut fleet = doc.get("fleet").clone();
+        if let Json::Obj(m) = &mut fleet {
+            m.remove("whatif_saved");
+        }
+        doc.set("fleet", fleet);
+        let restored = decode_registry(&doc).expect("v1 decode");
+        assert!(restored.report().estimated_savings.is_empty());
+        // Everything else still matches the original.
+        assert_eq!(reg.report(), restored.report());
     }
 
     #[test]

@@ -27,6 +27,7 @@
 
 use crate::analysis::bigroots::StageAnalysis;
 use crate::analysis::features::{FeatureCategory, FeatureKind, StageFeatures};
+use crate::analysis::whatif::WhatIfReport;
 use crate::util::stats::{median, P2Quantile, Welford};
 use crate::util::table::{fnum, pct, Align, Table};
 
@@ -144,6 +145,10 @@ pub struct FleetRegistry {
     pub(crate) shuffle_heavy: usize,
     /// …of those, how many had a JVM-GC root cause.
     pub(crate) shuffle_heavy_gc: usize,
+    /// Cumulative what-if savings (seconds of estimated completion time
+    /// that removing each cause would have bought), indexed by
+    /// [`FeatureKind::index`]. Folded from per-job [`WhatIfReport`]s.
+    pub(crate) whatif_saved: Vec<f64>,
 }
 
 impl FleetRegistry {
@@ -166,6 +171,7 @@ impl FleetRegistry {
             stage_medians: QuantileSketch::new(),
             shuffle_heavy: 0,
             shuffle_heavy_gc: 0,
+            whatif_saved: vec![0.0; FeatureKind::COUNT],
         }
     }
 
@@ -207,6 +213,17 @@ impl FleetRegistry {
     /// Mark one job fully analyzed (lifecycle eviction or stream end).
     pub fn job_completed(&mut self) {
         self.jobs_completed += 1;
+    }
+
+    /// Fold one job's counterfactual verdict into the fleet accumulator:
+    /// each cause's estimated seconds saved adds to its running total, so
+    /// the fleet report can rank causes by *total estimated time lost*,
+    /// not just incidence. Plain commutative sums — shard arrival order
+    /// does not matter.
+    pub fn fold_whatif(&mut self, report: &WhatIfReport) {
+        for row in &report.rows {
+            self.whatif_saved[row.kind.index()] += row.saved_secs;
+        }
     }
 
     /// Second verdict pass: straggler features that clear the fleet P95
@@ -274,6 +291,13 @@ impl FleetRegistry {
             .map(|b| (b.kind, b.cause_count))
             .collect();
         cause_incidence.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.index().cmp(&b.0.index())));
+        let mut estimated_savings: Vec<(FeatureKind, f64)> = FeatureKind::ALL
+            .iter()
+            .map(|&k| (k, self.whatif_saved[k.index()]))
+            .filter(|(_, s)| *s > 0.0)
+            .collect();
+        estimated_savings
+            .sort_by(|a, b| b.1.total_cmp(&a.1).then_with(|| a.0.index().cmp(&b.0.index())));
         FleetReport {
             jobs_completed: self.jobs_completed,
             stages: self.stages,
@@ -296,6 +320,7 @@ impl FleetRegistry {
             stage_median_p95: self.stage_medians.p95(),
             shuffle_heavy: self.shuffle_heavy,
             shuffle_heavy_gc: self.shuffle_heavy_gc,
+            estimated_savings,
         }
     }
 }
@@ -334,6 +359,10 @@ pub struct FleetReport {
     pub stage_median_p95: f64,
     pub shuffle_heavy: usize,
     pub shuffle_heavy_gc: usize,
+    /// (feature, cumulative estimated completion-time saved in seconds)
+    /// from the per-job what-if verdicts, largest saving first. Empty
+    /// until the first what-if report is folded.
+    pub estimated_savings: Vec<(FeatureKind, f64)>,
 }
 
 impl FleetReport {
@@ -354,6 +383,16 @@ impl FleetReport {
         } else {
             self.shuffle_heavy_gc as f64 / self.shuffle_heavy as f64
         }
+    }
+
+    /// Cumulative estimated completion-time saved (s) for one cause kind,
+    /// from the folded what-if verdicts; 0 when never implicated.
+    pub fn estimated_saving(&self, kind: FeatureKind) -> f64 {
+        self.estimated_savings
+            .iter()
+            .find(|(k, _)| *k == kind)
+            .map(|(_, s)| *s)
+            .unwrap_or(0.0)
     }
 
     /// Fraction of all identified root causes attributed to `kind`.
@@ -394,13 +433,14 @@ impl FleetReport {
         }
         if !self.cause_incidence.is_empty() {
             let mut t = Table::new("Fleet root-cause incidence")
-                .header(&["feature", "causes", "share"])
-                .aligns(&[Align::Left, Align::Right, Align::Right]);
+                .header(&["feature", "causes", "share", "est. saved s"])
+                .aligns(&[Align::Left, Align::Right, Align::Right, Align::Right]);
             for (kind, n) in &self.cause_incidence {
                 t.row(vec![
                     kind.name().to_string(),
                     n.to_string(),
                     pct(self.cause_fraction(*kind)),
+                    fnum(self.estimated_saving(*kind), 2),
                 ]);
             }
             out.push_str(&t.render());
@@ -557,6 +597,41 @@ mod tests {
         assert!((s.mean() - 499.5).abs() < 1e-9);
         assert!((s.p50() - 499.5).abs() < 25.0);
         assert!((s.p95() - 949.0).abs() < 25.0);
+    }
+
+    #[test]
+    fn whatif_savings_accumulate_and_rank() {
+        use crate::analysis::whatif::{CauseSavings, WhatIfReport};
+        let mut reg = FleetRegistry::new(8);
+        let mk = |kind: FeatureKind, saved: f64| CauseSavings {
+            kind,
+            tasks_affected: 1,
+            stages_affected: 1,
+            counterfactual_secs: 10.0 - saved,
+            saved_secs: saved,
+            saved_frac: saved / 10.0,
+        };
+        reg.fold_whatif(&WhatIfReport {
+            job: "a".into(),
+            seed: 1,
+            slots_per_node: 12,
+            baseline_secs: 10.0,
+            rows: vec![mk(FeatureKind::JvmGcTime, 2.0), mk(FeatureKind::Cpu, 3.0)],
+        });
+        reg.fold_whatif(&WhatIfReport {
+            job: "b".into(),
+            seed: 1,
+            slots_per_node: 12,
+            baseline_secs: 10.0,
+            rows: vec![mk(FeatureKind::Cpu, 4.0)],
+        });
+        let r = reg.report();
+        assert_eq!(
+            r.estimated_savings,
+            vec![(FeatureKind::Cpu, 7.0), (FeatureKind::JvmGcTime, 2.0)]
+        );
+        assert_eq!(r.estimated_saving(FeatureKind::Cpu), 7.0);
+        assert_eq!(r.estimated_saving(FeatureKind::Locality), 0.0);
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! ```text
 //! bigroots simulate   — run a workload on the simulated cluster → trace.json
 //! bigroots analyze    — offline root-cause analysis of a trace file
+//! bigroots whatif     — counterfactual ranking: completion time saved per removed cause
 //! bigroots stream     — streaming analysis of an event log (ndjson)
 //! bigroots verify     — Table III single-AG verification (BigRoots vs PCC)
 //! bigroots multi      — Tables IV+V multi-node anomaly schedule
@@ -42,6 +43,25 @@ fn main() {
                 .flag("verbose", "print every straggler with its causes"),
         )
         .subcommand(
+            Command::new(
+                "whatif",
+                "counterfactual what-if: rank detected causes by estimated completion-time saved",
+            )
+            .opt("input", "", "trace file to analyze (omit to simulate --workload instead)")
+            .opt("workload", "NaiveBayes", "workload to simulate when no --input is given")
+            .opt("scale", "1.0", "task-count scale factor (simulated trace)")
+            .opt("seed", "42", "rng seed (simulated trace)")
+            .opt("inject", "cpu", "anomaly for the simulated trace: none | cpu | io | network")
+            .opt("node", "1", "injection target node (simulated trace)")
+            .opt("backend", "auto", "stats backend: auto | native | xla")
+            .opt(
+                "snapshot",
+                "",
+                "fleet-baseline snapshot (from `serve --snapshot-path`) supplying \
+                 fleet-median neutralization targets",
+            ),
+        )
+        .subcommand(
             Command::new("stream", "streaming analysis of an ndjson event log")
                 .opt_req("input", "event log path"),
         )
@@ -66,8 +86,8 @@ fn main() {
                     "control-port",
                     "",
                     "line-delimited JSON control/query socket (fleet-report | job <id> | \
-                     metrics | metrics-prom | self-report | snapshot | shutdown), \
-                     e.g. 127.0.0.1:7172",
+                     what-if <id> | metrics | metrics-prom | self-report | snapshot | \
+                     shutdown), e.g. 127.0.0.1:7172",
                 )
                 .opt(
                     "metrics-port",
@@ -129,6 +149,7 @@ fn main() {
     let code = match sub.as_str() {
         "simulate" => cmd_simulate(&args),
         "analyze" => cmd_analyze(&args),
+        "whatif" => cmd_whatif(&args),
         "stream" => cmd_stream(&args),
         "serve" => cmd_serve(&args),
         "verify" => cmd_verify(&args),
@@ -286,6 +307,73 @@ fn cmd_analyze(args: &bigroots::util::cli::Args) -> i32 {
         let pcc_causes: usize = analysis.pcc_per_stage.iter().map(|a| a.causes.len()).sum();
         println!("PCC baseline: {pcc_causes} causes (vs BigRoots {})", analysis.total_causes());
     }
+    0
+}
+
+fn cmd_whatif(args: &bigroots::util::cli::Args) -> i32 {
+    use bigroots::analysis::whatif::{self, WhatIfConfig};
+
+    let input = args.get_or("input", "");
+    let trace = if input.is_empty() {
+        let name = args.get_or("workload", "NaiveBayes");
+        let scale = args.get_f64("scale", 1.0);
+        let seed = args.get_u64("seed", 42);
+        let Some(w) = workloads::by_name(&name, scale) else {
+            eprintln!("unknown workload '{name}'");
+            return 2;
+        };
+        let inject = args.get_or("inject", "cpu");
+        let node = args.get_usize("node", 1);
+        let horizon = 400.0 * scale.max(0.25);
+        let plan = match inject.as_str() {
+            "none" => bigroots::sim::InjectionPlan::none(),
+            "cpu" => bigroots::sim::InjectionPlan::intermittent(AnomalyKind::Cpu, node, 15.0, 10.0, horizon),
+            "io" => bigroots::sim::InjectionPlan::intermittent(AnomalyKind::Io, node, 15.0, 10.0, horizon),
+            "network" | "net" => {
+                bigroots::sim::InjectionPlan::intermittent(AnomalyKind::Network, node, 15.0, 10.0, horizon)
+            }
+            other => {
+                eprintln!("unknown injection '{other}'");
+                return 2;
+            }
+        };
+        let mut eng = Engine::new(bigroots::sim::SimConfig { seed, ..Default::default() });
+        eng.run(&format!("{name}-{inject}"), w.name, &w.stages, &plan)
+    } else {
+        match codec::load(&input) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("loading {input}: {e:#}");
+                return 1;
+            }
+        }
+    };
+    let mut pipeline = match make_pipeline(&args.get_or("backend", "auto")) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    pipeline.pcc = None;
+    let analysis = pipeline.analyze(&trace, "-");
+    // Optional fleet baseline for the neutralization targets: the same
+    // snapshot file `serve --snapshot-path` writes.
+    let snapshot = args.get_or("snapshot", "");
+    let fleet = if snapshot.is_empty() {
+        None
+    } else {
+        match bigroots::live::persist::load_snapshot(&snapshot) {
+            Ok(reg) => Some(reg.report()),
+            Err(e) => {
+                eprintln!("loading snapshot {snapshot}: {e}");
+                return 1;
+            }
+        }
+    };
+    let cfg = WhatIfConfig { seed: args.get_u64("seed", 42), ..Default::default() };
+    let report = whatif::analyze_trace(&trace, &analysis.per_stage, fleet.as_ref(), &cfg);
+    print!("{}", report.render());
     0
 }
 
@@ -479,8 +567,21 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
     let print_job = |j: &CompletedJob| {
         let stragglers: usize = j.analyses.iter().map(|a| a.stragglers.rows.len()).sum();
         let causes: usize = j.analyses.iter().map(|a| a.causes.len()).sum();
+        let best_fix = j
+            .whatif
+            .as_ref()
+            .and_then(|w| w.top())
+            .filter(|top| top.saved_secs > 0.0)
+            .map(|top| {
+                format!(
+                    " — best fix: {} (est. {:.1}s saved)",
+                    top.kind.name(),
+                    top.saved_secs
+                )
+            })
+            .unwrap_or_default();
         println!(
-            "job {}{}: {} stages, {} stragglers, {} causes, {} fleet flags{}{}",
+            "job {}{}: {} stages, {} stragglers, {} causes, {} fleet flags{}{}{}",
             j.job_id,
             if j.incarnation > 0 { format!(" (incarnation {})", j.incarnation) } else { String::new() },
             j.analyses.len(),
@@ -493,6 +594,7 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
             } else {
                 format!(" — incomplete stages {:?}", j.incomplete)
             },
+            best_fix,
         );
     };
 
@@ -505,6 +607,10 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
     // retirements age out once the cap is hit.
     const MAX_JOB_SUMMARIES: usize = 4096;
     let mut job_summaries: std::collections::HashMap<u64, Json> =
+        std::collections::HashMap::new();
+    // The full what-if verdict per retired job, for the `what-if <id>`
+    // verb. Same bound and age-out as the summaries.
+    let mut job_whatifs: std::collections::HashMap<u64, Json> =
         std::collections::HashMap::new();
     let mut job_summary_order: std::collections::VecDeque<u64> =
         std::collections::VecDeque::new();
@@ -560,10 +666,21 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
                     job_summary_order.remove(pos);
                 }
             }
+            match &j.whatif {
+                Some(w) => {
+                    job_whatifs.insert(j.job_id, w.to_json());
+                }
+                None => {
+                    // A revived incarnation with no analyzed stages must
+                    // not serve the previous incarnation's verdict.
+                    job_whatifs.remove(&j.job_id);
+                }
+            }
             job_summary_order.push_back(j.job_id);
             while job_summary_order.len() > MAX_JOB_SUMMARIES {
                 if let Some(old) = job_summary_order.pop_front() {
                     job_summaries.remove(&old);
+                    job_whatifs.remove(&old);
                 }
             }
             print_job(&j);
@@ -615,6 +732,13 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
                     }
                     ControlCommand::Job(id) => match job_summaries.get(id) {
                         Some(j) => control::ok_response("job", j.clone()),
+                        None => control::err_response(&format!("job {id} has not retired")),
+                    },
+                    ControlCommand::WhatIf(id) => match job_whatifs.get(id) {
+                        Some(w) => control::ok_response("what-if", w.clone()),
+                        None if job_summaries.contains_key(id) => control::err_response(
+                            &format!("job {id} retired with no analyzed stages"),
+                        ),
                         None => control::err_response(&format!("job {id} has not retired")),
                     },
                     ControlCommand::Snapshot => {

@@ -9,11 +9,14 @@
 //! - [`sampler`] — 1 Hz mpstat/iostat/sar equivalents (+ Table VII overhead)
 //! - [`workloads`] — the 11 HiBench workload models of Table VI
 //! - [`engine`] — the fluid-flow simulation loop producing [`crate::trace::JobTrace`]s
+//! - [`replay`] — deterministic slot-level replay of observed traces (the
+//!   counterfactual half of `analysis/whatif.rs`)
 
 pub mod anomaly;
 pub mod engine;
 pub mod event;
 pub mod multi;
+pub mod replay;
 pub mod resources;
 pub mod sampler;
 pub mod scheduler;

@@ -1,0 +1,201 @@
+//! Deterministic trace-replay scheduler — the simulation half of the
+//! counterfactual what-if engine (`crate::analysis::whatif`).
+//!
+//! The fluid engine (`sim/engine.rs`) materializes tasks from `StageSpec`s
+//! and *produces* traces; what-if analysis needs the opposite direction:
+//! take a trace that was already observed (durations, node placement) and
+//! re-derive the job completion time under a modified set of task
+//! durations. This module is that replay: a slot-level list scheduler that
+//! mirrors the engine's execution discipline —
+//!
+//! - stages run **sequentially** with a barrier between them, exactly as
+//!   the engine runs them (stage *s+1* starts when every task of stage *s*
+//!   finished);
+//! - within a stage each task runs on its **recorded node** (placement is
+//!   not a counterfactual here), on one of `slots_per_node` parallel task
+//!   slots, assigned greedily in input order to the earliest-free slot;
+//! - the stage completes when its last slot drains; the job completion
+//!   time is the sum of stage makespans.
+//!
+//! Everything is plain `f64` arithmetic over the inputs in a fixed order:
+//! replaying the same `(stages, slots_per_node)` twice is **bit-identical**,
+//! which is what makes what-if savings exactly testable.
+
+use crate::trace::JobTrace;
+
+/// One task to replay: where it ran and how long it took (possibly a
+/// counterfactually adjusted duration).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReplayTask {
+    pub node: usize,
+    pub duration: f64,
+}
+
+/// One stage of the replayed job, in scheduling order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplayStage {
+    pub stage_id: u64,
+    pub tasks: Vec<ReplayTask>,
+}
+
+/// Makespan of one stage under the slot model: tasks are assigned in input
+/// order to the earliest-free of `slots_per_node` slots on their node.
+pub fn stage_makespan(tasks: &[ReplayTask], slots_per_node: usize) -> f64 {
+    let slots = slots_per_node.max(1);
+    let nodes = tasks.iter().map(|t| t.node + 1).max().unwrap_or(0);
+    // Per-node slot free times, flat: node n owns [n*slots, (n+1)*slots).
+    let mut free = vec![0.0f64; nodes * slots];
+    for t in tasks {
+        let lane = &mut free[t.node * slots..(t.node + 1) * slots];
+        // Earliest-free slot; first-wins on ties keeps this deterministic.
+        let mut best = 0usize;
+        for (i, &f) in lane.iter().enumerate() {
+            if f < lane[best] {
+                best = i;
+            }
+        }
+        lane[best] += t.duration.max(0.0);
+    }
+    free.iter().fold(0.0f64, |acc, &f| acc.max(f))
+}
+
+/// Job completion time: stage barriers, so the sum of stage makespans.
+pub fn job_completion(stages: &[ReplayStage], slots_per_node: usize) -> f64 {
+    stages.iter().map(|s| stage_makespan(&s.tasks, slots_per_node)).sum()
+}
+
+/// Infer the effective per-node task-slot count from an observed trace:
+/// the maximum number of tasks that ever ran concurrently on any node.
+/// Deterministic (interval sweep with total-order tie-breaking); at least 1.
+pub fn infer_slots_per_node(trace: &JobTrace) -> usize {
+    let nodes = trace.cluster.nodes.max(1);
+    let mut best = 1usize;
+    for node in 0..nodes {
+        // (+1 at start, -1 at finish); finishes sort before starts at the
+        // same instant so back-to-back waves don't double-count.
+        let mut edges: Vec<(f64, i32)> = Vec::new();
+        for t in trace.tasks.iter().filter(|t| t.node == node) {
+            edges.push((t.start, 1));
+            edges.push((t.finish, -1));
+        }
+        edges.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let mut cur = 0i64;
+        let mut peak = 0i64;
+        for (_, d) in edges {
+            cur += d as i64;
+            peak = peak.max(cur);
+        }
+        best = best.max(peak.max(1) as usize);
+    }
+    best
+}
+
+/// Build the baseline replay stages straight from a trace: observed
+/// durations on observed nodes, stages in id order, tasks in id order.
+pub fn stages_from_trace(trace: &JobTrace) -> Vec<ReplayStage> {
+    let mut out: Vec<ReplayStage> = Vec::with_capacity(trace.stages.len());
+    for stage in &trace.stages {
+        let mut tasks: Vec<(u64, ReplayTask)> = trace
+            .tasks
+            .iter()
+            .filter(|t| t.stage_id == stage.stage_id)
+            .map(|t| (t.task_id, ReplayTask { node: t.node, duration: t.duration() }))
+            .collect();
+        tasks.sort_by_key(|(id, _)| *id);
+        out.push(ReplayStage {
+            stage_id: stage.stage_id,
+            tasks: tasks.into_iter().map(|(_, t)| t).collect(),
+        });
+    }
+    out.sort_by_key(|s| s.stage_id);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{workloads, Engine, InjectionPlan, SimConfig};
+
+    #[test]
+    fn single_slot_serializes_a_node() {
+        let tasks = vec![
+            ReplayTask { node: 0, duration: 1.0 },
+            ReplayTask { node: 0, duration: 2.0 },
+            ReplayTask { node: 0, duration: 3.0 },
+        ];
+        assert_eq!(stage_makespan(&tasks, 1), 6.0);
+        // Three slots: all parallel, bound by the longest task.
+        assert_eq!(stage_makespan(&tasks, 3), 3.0);
+    }
+
+    #[test]
+    fn nodes_run_independently() {
+        let tasks = vec![
+            ReplayTask { node: 0, duration: 5.0 },
+            ReplayTask { node: 1, duration: 1.0 },
+            ReplayTask { node: 1, duration: 1.0 },
+        ];
+        assert_eq!(stage_makespan(&tasks, 1), 5.0);
+    }
+
+    #[test]
+    fn empty_stage_is_zero() {
+        assert_eq!(stage_makespan(&[], 4), 0.0);
+        assert_eq!(job_completion(&[], 4), 0.0);
+    }
+
+    #[test]
+    fn job_completion_sums_stage_barriers() {
+        let stages = vec![
+            ReplayStage { stage_id: 0, tasks: vec![ReplayTask { node: 0, duration: 2.0 }] },
+            ReplayStage {
+                stage_id: 1,
+                tasks: vec![
+                    ReplayTask { node: 0, duration: 1.0 },
+                    ReplayTask { node: 1, duration: 4.0 },
+                ],
+            },
+        ];
+        assert_eq!(job_completion(&stages, 2), 6.0);
+    }
+
+    #[test]
+    fn shrinking_a_task_never_grows_a_single_stage_much() {
+        // Replay the same stage with one straggler shortened: the makespan
+        // must not increase (greedy keeps assignment order fixed).
+        let tasks: Vec<ReplayTask> = (0..40)
+            .map(|i| ReplayTask { node: i % 4, duration: 1.0 + (i == 13) as usize as f64 * 9.0 })
+            .collect();
+        let base = stage_makespan(&tasks, 3);
+        let mut fixed = tasks.clone();
+        fixed[13].duration = 1.0;
+        assert!(stage_makespan(&fixed, 3) <= base);
+    }
+
+    #[test]
+    fn replay_of_a_real_trace_is_deterministic() {
+        let w = workloads::wordcount(0.3);
+        let mut eng = Engine::new(SimConfig { seed: 9, ..Default::default() });
+        let t = eng.run("replay-det", w.name, &w.stages, &InjectionPlan::none());
+        let slots = infer_slots_per_node(&t);
+        assert!(slots >= 1);
+        let s1 = stages_from_trace(&t);
+        let s2 = stages_from_trace(&t);
+        assert_eq!(s1, s2);
+        let c1 = job_completion(&s1, slots);
+        let c2 = job_completion(&s2, slots);
+        assert_eq!(c1.to_bits(), c2.to_bits(), "replay must be bit-identical");
+        assert!(c1 > 0.0);
+    }
+
+    #[test]
+    fn inferred_slots_bounded_by_config() {
+        let w = workloads::wordcount(0.3);
+        let cfg = SimConfig { seed: 10, ..Default::default() };
+        let slots_cfg = cfg.slots;
+        let mut eng = Engine::new(cfg);
+        let t = eng.run("replay-slots", w.name, &w.stages, &InjectionPlan::none());
+        let got = infer_slots_per_node(&t);
+        assert!(got >= 1 && got <= slots_cfg, "inferred {got}, config {slots_cfg}");
+    }
+}

@@ -131,10 +131,12 @@ impl Bench {
 
     /// Merge this run's results into a machine-readable JSON file so the
     /// perf trajectory is tracked across PRs. The file maps `section` →
-    /// bench name → `{mean_secs, p50_secs, p99_secs, items_per_sec?}`;
-    /// other sections already in the file are preserved, so several bench
-    /// binaries can share one report (e.g. `BENCH_multi_job.json` at the
-    /// repo root).
+    /// bench name → `{mean_secs, p50_secs, p99_secs, items_per_sec?}`.
+    /// The merge is row-level: other sections are preserved untouched, and
+    /// within `section` only the benches this run actually executed are
+    /// overwritten — a partial rerun (e.g. one bench binary under
+    /// `--quick`) never deletes its siblings' rows (e.g. in
+    /// `BENCH_multi_job.json` at the repo root).
     pub fn write_json(&self, path: &str, section: &str) -> std::io::Result<()> {
         use crate::util::json::Json;
         let mut root = std::fs::read_to_string(path)
@@ -142,7 +144,10 @@ impl Bench {
             .and_then(|t| Json::parse(&t).ok())
             .filter(|j| j.as_obj().is_some())
             .unwrap_or_else(Json::obj);
-        let mut sec = Json::obj();
+        let mut sec = match root.get(section) {
+            prior if prior.as_obj().is_some() => prior.clone(),
+            _ => Json::obj(),
+        };
         for r in &self.results {
             let mut o = Json::obj();
             o.set("mean_secs", r.mean().into());
@@ -235,6 +240,18 @@ mod tests {
             std::hint::black_box(2 + 2);
         });
         b.write_json(&path, "second").unwrap();
+        // A partial rerun of the *same* section must merge at row level:
+        // "gamma" lands beside "alpha", which it did not re-run.
+        let mut c = Bench {
+            warmup: Duration::from_millis(1),
+            samples: 3,
+            quick: true,
+            results: Vec::new(),
+        };
+        c.run("gamma", 0.0, || {
+            std::hint::black_box(3 + 3);
+        });
+        c.write_json(&path, "first").unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         let j = crate::util::json::Json::parse(&text).unwrap();
         let obj = j.as_obj().unwrap();
@@ -242,6 +259,14 @@ mod tests {
         assert!(obj.contains_key("second"));
         assert!(j.get("first").get("alpha").get("items_per_sec").as_f64().is_some());
         assert!(j.get("second").get("beta").get("mean_secs").as_f64().is_some());
+        assert!(
+            j.get("first").get("gamma").get("mean_secs").as_f64().is_some(),
+            "partial rerun adds its row"
+        );
+        assert!(
+            j.get("first").get("alpha").get("mean_secs").as_f64().is_some(),
+            "partial rerun of a section keeps rows it did not re-run"
+        );
         let _ = std::fs::remove_file(&path);
     }
 
