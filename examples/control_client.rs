@@ -1,19 +1,29 @@
 //! Scripted control-plane client — the CI end-to-end driver for
 //! `bigroots serve --listen --control-port`.
 //!
-//! 1. connects to the event port and streams two simulated jobs;
-//! 2. polls `fleet-report` on the control port until both jobs retired;
+//! 1. connects to the event port and streams three simulated jobs (the
+//!    third suffers an injected CPU anomaly, so a straggler verdict —
+//!    and with it a frozen flight window — is guaranteed);
+//! 2. polls `fleet-report` on the control port until all jobs retired;
 //! 3. queries `metrics` and `job <id>`;
-//! 4. queries `what-if <id>` and gates on a well-formed ranked
+//! 4. drives `jobs limit=1` keyset pagination to exhaustion and gates on
+//!    seeing every retired job exactly once;
+//! 5. queries `explain <id>` for a flagged job and gates on a well-formed
+//!    provenance document (bounded confidence, causes named);
+//! 6. requests `explain <id> dump <path>`, re-parses the NDJSON dump and
+//!    gates on the replay reproducing the recorded verdict bit-identically
+//!    (CI additionally replays it through `bigroots explain --replay`);
+//! 7. queries `what-if <id>` and gates on a well-formed ranked
 //!    counterfactual response (descending `saved_secs`, bounded by the
 //!    replay baseline);
-//! 5. queries `metrics-prom` and gates on the required metric families
-//!    (and nonzero span counts for the instrumented hot-path phases);
-//! 6. queries `self-report` (tolerating a warming-up refusal);
-//! 7. if a third address is given, HTTP-scrapes the `--metrics-port`
-//!    endpoint and gates on the exposition;
-//! 8. requests a `snapshot` (the server writes its `--snapshot-path`);
-//! 9. sends `shutdown` and exits.
+//! 8. queries `metrics-prom` and gates on the required metric families
+//!    (including the verdict-provenance counters, and nonzero span counts
+//!    for the instrumented hot-path phases);
+//! 9. queries `self-report` (tolerating a warming-up refusal);
+//! 10. if a third address is given, HTTP-scrapes the `--metrics-port`
+//!     endpoint and gates on the exposition;
+//! 11. requests a `snapshot` (the server writes its `--snapshot-path`);
+//! 12. sends `shutdown` and exits.
 //!
 //! Any protocol violation (non-ok response, timeout, missing snapshot
 //! file, missing metric family) exits non-zero, so a workflow step can
@@ -97,8 +107,11 @@ fn main() {
     let control_addr = argv.next().unwrap_or_else(|| "127.0.0.1:7172".to_string());
     let metrics_addr = argv.next(); // optional --metrics-port endpoint to scrape
 
-    // Stream two simulated jobs into the event port.
-    let specs = round_robin_specs(2, 0.15, 7);
+    // Stream three simulated jobs into the event port; job 2 gets an
+    // injected CPU anomaly (round_robin_specs injects every third job),
+    // so at least one straggler verdict — and one frozen flight window —
+    // is guaranteed downstream.
+    let specs = round_robin_specs(3, 0.15, 7);
     let (traces, events) = interleaved_workload(&specs);
     let job_id = traces[0].0;
     let mut ev = connect_retry(&event_addr, "event port");
@@ -151,6 +164,118 @@ fn main() {
     if matches!(job.get("data").get("estimated_savings"), Json::Null) {
         fail(&format!("job {job_id} summary carries no estimated_savings"));
     }
+
+    // Keyset pagination: page size 1 forces one round trip per job, the
+    // cursor must walk every retired job exactly once and then report
+    // end-of-list with a null cursor.
+    let mut paged: Vec<Json> = Vec::new();
+    let mut cursor: Option<String> = None;
+    loop {
+        let req = match &cursor {
+            Some(c) => format!("jobs limit=1 cursor={c}"),
+            None => "jobs limit=1".to_string(),
+        };
+        let page = query(&mut ctrl, &req);
+        let rows = page
+            .get("data")
+            .get("jobs")
+            .as_arr()
+            .unwrap_or_else(|| fail("jobs response carries no jobs array"))
+            .to_vec();
+        if rows.len() > 1 {
+            fail(&format!("jobs limit=1 returned {} rows", rows.len()));
+        }
+        paged.extend(rows);
+        match page.get("data").get("next_cursor").as_str() {
+            Some(c) => cursor = Some(c.to_string()),
+            None => break,
+        }
+    }
+    let mut seen_ids: Vec<String> = paged
+        .iter()
+        .map(|j| j.get("job_id").as_str().unwrap_or("?").to_string())
+        .collect();
+    if seen_ids.len() != traces.len() {
+        fail(&format!(
+            "jobs pagination returned {} jobs, expected {}",
+            seen_ids.len(),
+            traces.len()
+        ));
+    }
+    let unique = seen_ids.len();
+    seen_ids.dedup();
+    if seen_ids.len() != unique {
+        fail("jobs pagination repeated a job across pages");
+    }
+    println!("jobs pagination: walked {} jobs one page at a time", unique);
+
+    // Pick a flagged job — one with a frozen flight window AND identified
+    // causes — for the provenance steps; the injected anomaly guarantees
+    // at least one.
+    let flagged = paged
+        .iter()
+        .find(|j| {
+            !matches!(j.get("flight"), Json::Null)
+                && j.get("causes").as_usize().unwrap_or(0) > 0
+        })
+        .unwrap_or_else(|| fail("no retired job carries a flight window with causes"));
+    let flagged_id = flagged
+        .get("job_id")
+        .as_str()
+        .unwrap_or_else(|| fail("job summary carries no job_id"))
+        .to_string();
+
+    // The verdict provenance document.
+    let ex = query(&mut ctrl, &format!("explain {flagged_id}"));
+    let conf = ex
+        .get("data")
+        .get("max_confidence")
+        .as_f64()
+        .unwrap_or_else(|| fail("explain response carries no max_confidence"));
+    if !(0.0..=1.0).contains(&conf) {
+        fail(&format!("explain max_confidence {conf} outside [0, 1]"));
+    }
+    let ex_stages = ex
+        .get("data")
+        .get("stages")
+        .as_arr()
+        .unwrap_or_else(|| fail("explain response carries no stages"))
+        .len();
+    let ex_causes = ex
+        .get("data")
+        .get("causes")
+        .as_arr()
+        .unwrap_or_else(|| fail("explain response carries no causes"))
+        .len();
+    if ex_causes == 0 {
+        fail(&format!("explain {flagged_id}: flagged job names no causes"));
+    }
+    println!(
+        "explain {flagged_id}: {ex_stages} stages, {ex_causes} cause kinds, \
+         max confidence {conf:.3}"
+    );
+
+    // Dump the flight window server-side, then re-parse and replay it
+    // here: the reproduced verdict must match the recorded one byte for
+    // byte.
+    let dump_path = "flight_dump.ndjson";
+    let dumped = query(&mut ctrl, &format!("explain {flagged_id} dump {dump_path}"));
+    let written = dumped
+        .get("data")
+        .get("path")
+        .as_str()
+        .unwrap_or_else(|| fail("explain-dump response carries no path"))
+        .to_string();
+    let text = std::fs::read_to_string(&written)
+        .unwrap_or_else(|e| fail(&format!("reading dump {written}: {e}")));
+    let dump = bigroots::analysis::explain::FlightDump::parse(&text)
+        .unwrap_or_else(|e| fail(&format!("parsing dump {written}: {e}")));
+    dump.verify()
+        .unwrap_or_else(|e| fail(&format!("flight replay mismatch: {e}")));
+    println!(
+        "explain dump: {} events replayed, verdict reproduced bit-identically",
+        dump.events.len()
+    );
 
     // The counterfactual what-if verdict: a well-formed ranked response —
     // positive replay baseline, rows sorted by saved_secs descending, and
@@ -208,10 +333,16 @@ fn main() {
         "bigroots_span_quantile_seconds",
         "bigroots_source_parse_errors_total",
         "bigroots_fleet_jobs_completed",
+        "bigroots_jobs_retired_total",
+        "bigroots_verdicts_total",
     ] {
         if !text.contains(&format!("# TYPE {family} ")) {
             fail(&format!("metrics-prom exposition missing family {family}"));
         }
+    }
+    // A flagged job retired, so at least one cause accumulated a verdict.
+    if !text.contains("bigroots_verdicts_total{cause=") {
+        fail("metrics-prom shows no bigroots_verdicts_total samples despite a flagged job");
     }
     for span in ["source_poll", "decode", "stats_kernel", "cache_lookup", "control"] {
         if span_count(&text, span) <= 0.0 {

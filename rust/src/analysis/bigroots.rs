@@ -27,8 +27,10 @@ use super::stats::{StageStats, StatsBackend};
 use super::straggler::{detect, StragglerSet};
 
 /// All thresholds of the method (paper defaults; the ROC benches sweep
-/// `lambda_q` and `lambda_p`).
-#[derive(Debug, Clone, Copy)]
+/// `lambda_q` and `lambda_p`). `PartialEq` lets the flight-recorder replay
+/// ([`crate::analysis::explain`]) assert the dumped config round-trips
+/// bit-exactly.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct BigRootsConfig {
     /// Straggler definition: duration > ratio × stage median.
     pub straggler_ratio: f64,
@@ -79,6 +81,18 @@ pub enum PeerEvidence {
     Both,
     /// Locality rule (Eq. 7) — no peer-mean comparison involved.
     LocalityVote,
+}
+
+impl PeerEvidence {
+    /// Stable wire name, used by the verdict provenance traces.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PeerEvidence::InterNode => "inter_node",
+            PeerEvidence::IntraNode => "intra_node",
+            PeerEvidence::Both => "both",
+            PeerEvidence::LocalityVote => "locality_vote",
+        }
+    }
 }
 
 /// One identified root cause: feature `kind` explains straggler `row`.

@@ -98,6 +98,12 @@ impl FeatureKind {
         }
     }
 
+    /// Inverse of [`FeatureKind::name`] — resolves user-supplied filter
+    /// strings (control-socket `jobs cause=...`, CLI flags) back to a kind.
+    pub fn from_name(s: &str) -> Option<FeatureKind> {
+        Self::ALL.iter().copied().find(|k| k.name() == s)
+    }
+
     /// The anomaly-generator kind whose injection this feature should flag
     /// (ground-truth mapping for TP/FP scoring); None for framework features.
     pub fn matching_anomaly(self) -> Option<crate::trace::AnomalyKind> {

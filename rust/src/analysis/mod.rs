@@ -19,10 +19,14 @@
 //! - [`report`] — straggler annotations, Table VI summaries, figure CSVs
 //! - [`whatif`] — counterfactual what-if engine: rank detected causes by
 //!   estimated completion-time saved via deterministic trace replay
+//! - [`explain`] — verdict provenance: per-cause thresholds, stage
+//!   baselines, fleet percentiles, confidence scores, co-occurrence
+//!   groups, and bit-identical flight-dump replay
 
 pub mod bigroots;
 pub mod cache;
 pub mod correlation;
+pub mod explain;
 pub mod features;
 pub mod pcc;
 pub mod report;
@@ -35,6 +39,7 @@ pub mod whatif;
 pub use bigroots::{analyze_stage, BigRootsConfig, RootCause, StageAnalysis};
 pub use cache::{CacheCounters, CachedBackend, SharedCachedBackend, SharedStatsCache};
 pub use correlation::{feature_correlations, joint_causes, FeatureCorrelations, JointCause};
+pub use explain::{explain_stage, job_verdict_json, CauseTrace, FlightDump, VerdictTrace};
 pub use features::{extract_all, extract_stage, FeatureCategory, FeatureKind, StageFeatures};
 pub use pcc::PccConfig;
 pub use roc::{ground_truth, score, Confusion, GroundTruth};

@@ -145,6 +145,61 @@ pub fn render_table6(rows: &[WorkloadSummary]) -> String {
     t.render()
 }
 
+/// Render a verdict provenance document ([`super::explain::job_verdict_json`])
+/// as a human-readable table — one row per flagged task/cause pair, with
+/// the threshold, baselines and confidence that convicted it. Takes the
+/// JSON form so the CLI can render replayed dumps and control-socket
+/// responses alike.
+pub fn render_explain(doc: &crate::util::json::Json) -> String {
+    use crate::util::json::Json;
+    let job = doc.get("job").as_str().unwrap_or("?");
+    let conf = doc.get("max_confidence").as_f64().unwrap_or(0.0);
+    let mut t = Table::new(&format!(
+        "Verdict provenance: job {job} (max confidence {})",
+        fnum(conf, 3)
+    ))
+    .header(&[
+        "stage", "task", "cause", "value", "threshold", "peer", "stage med", "MAD",
+        "fleet pct", "conf", "grp",
+    ])
+    .aligns(&[
+        Align::Right,
+        Align::Right,
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ]);
+    let empty: [Json; 0] = [];
+    for stage in doc.get("stages").as_arr().unwrap_or(&empty) {
+        let sid = stage.get("stage").as_usize().unwrap_or(0);
+        for c in stage.get("causes").as_arr().unwrap_or(&empty) {
+            t.row(vec![
+                sid.to_string(),
+                c.get("task").as_usize().unwrap_or(0).to_string(),
+                c.get("cause").as_str().unwrap_or("?").to_string(),
+                fnum(c.get("value").as_f64().unwrap_or(0.0), 3),
+                fnum(c.get("threshold").as_f64().unwrap_or(0.0), 3),
+                c.get("peer").as_str().unwrap_or("?").to_string(),
+                fnum(c.get("stage_median").as_f64().unwrap_or(0.0), 3),
+                fnum(c.get("stage_mad").as_f64().unwrap_or(0.0), 3),
+                match c.get("fleet_percentile").as_f64() {
+                    Some(p) => fnum(p, 3),
+                    None => "-".to_string(),
+                },
+                fnum(c.get("confidence").as_f64().unwrap_or(0.0), 3),
+                c.get("group").as_usize().unwrap_or(0).to_string(),
+            ]);
+        }
+    }
+    t.render()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -165,6 +220,39 @@ mod tests {
             })
             .collect();
         (trace, per_stage)
+    }
+
+    #[test]
+    fn render_explain_tables_every_cause_row() {
+        use crate::analysis::explain::{explain_stage, job_verdict_json};
+        let w = workloads::wordcount(0.25);
+        let mut eng = Engine::new(SimConfig { seed: 17, ..Default::default() });
+        let plan = crate::sim::InjectionPlan::intermittent(
+            crate::trace::AnomalyKind::Cpu,
+            1,
+            15.0,
+            10.0,
+            300.0,
+        );
+        let trace = eng.run("j", w.name, &w.stages, &plan);
+        let cfg = BigRootsConfig::default();
+        let traces: Vec<_> = extract_all(&trace, cfg.edge_width)
+            .into_iter()
+            .map(|sf| {
+                let a = analyze_stage(&sf, &mut NativeBackend::new(), &cfg);
+                explain_stage(&sf, &a, &[])
+            })
+            .collect();
+        let total: usize = traces.iter().map(|t| t.causes.len()).sum();
+        assert!(total > 0, "injected run should convict at least one cause");
+        let doc = job_verdict_json(7, 0, &traces);
+        let text = render_explain(&doc);
+        assert!(text.contains("Verdict provenance: job 7"));
+        for tr in &traces {
+            for c in &tr.causes {
+                assert!(text.contains(c.kind.name()));
+            }
+        }
     }
 
     #[test]

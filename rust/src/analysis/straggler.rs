@@ -21,6 +21,12 @@ impl StragglerSet {
         self.rows.binary_search(&row).is_ok()
     }
 
+    /// Task ids of the flagged rows, in row order — the provenance layer
+    /// ([`crate::analysis::explain`]) records these with every verdict.
+    pub fn flagged_task_ids(&self, sf: &StageFeatures) -> Vec<u64> {
+        self.rows.iter().map(|&r| sf.task_ids[r]).collect()
+    }
+
     /// Straggler *scale* of a task: duration / median (the right-hand y-axis
     /// of Figures 3–6).
     pub fn scale(&self, duration: f64) -> f64 {

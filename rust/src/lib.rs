@@ -47,13 +47,27 @@
 //!   baseline — and **survives restarts** through versioned, bit-exact,
 //!   atomically-written snapshots ([`live::persist`], restore-on-boot);
 //!   a line-delimited TCP **control socket** ([`live::control`]:
-//!   `fleet-report`, `job <id>`, `what-if <id>`, `metrics`,
-//!   `metrics-prom`, `self-report`, `snapshot`, `shutdown`) shares one
-//!   query path with the CLI's periodic snapshot printing and gives
-//!   `bigroots serve` a clean drain-then-snapshot shutdown.
+//!   `fleet-report`, `jobs` with cause/confidence/time filters and a
+//!   keyset cursor, `job <id>`, `explain <id> [dump <path>]`,
+//!   `what-if <id>`, `metrics`, `metrics-prom`, `self-report`,
+//!   `snapshot`, `shutdown`) shares one query path with the CLI's
+//!   periodic snapshot printing and gives `bigroots serve` a clean
+//!   drain-then-snapshot shutdown.
 //!   `bigroots serve --tail/--listen --control-port --snapshot-path`,
 //!   `examples/live_tail.rs` and `examples/control_client.rs` drive it
 //!   end to end.
+//! - the **verdict provenance layer** ([`analysis::explain`] +
+//!   [`obs::flight`]): every flagged task/cause pair carries the feature
+//!   value, the Eq. 5 threshold it crossed, the stage median/MAD
+//!   baseline, its percentile against the fleet baseline and an
+//!   effect-size-derived confidence in `[0, 1]`, with co-occurring
+//!   causes grouped; a bounded per-shard flight recorder freezes the
+//!   implicated job's raw event window when a straggler verdict fires,
+//!   and the `explain <id> dump <path>` NDJSON dump replays offline
+//!   through `bigroots explain --replay` to the recorded verdict
+//!   bit-identically. Per-cause confidence aggregates persist in
+//!   snapshot v3 and export as `bigroots_verdicts_total{cause}`. See
+//!   `docs/EXPLAIN.md`.
 //! - the **counterfactual what-if engine** ([`analysis::whatif`] over
 //!   the deterministic replay scheduler [`sim::replay`]): every detected
 //!   cause is neutralized in turn (GC zeroed, bytes normalized to the

@@ -8,13 +8,22 @@
 //! | request        | response `data`                                   |
 //! |----------------|---------------------------------------------------|
 //! | `fleet-report` | the [`FleetReport`] (counters, quantiles, shares) |
+//! | `jobs [cause=<feature>] [min-confidence=<x>] [since=<t>] [until=<t>] [limit=<n>] [cursor=<id>]` | filtered page of retired-job summaries with a keyset cursor ([`jobs_page`]) |
 //! | `job <id>`     | summary of a retired job (stages, causes, flags)  |
+//! | `explain <id>` | the job's verdict provenance trace ([`crate::analysis::explain`]): per-cause values, thresholds, baselines, confidence, co-occurrence groups |
+//! | `explain <id> dump <path>` | writes the job's flight-recorder window + frozen context as NDJSON to `<path>` (server-side, like `snapshot`), for `bigroots explain --replay` |
 //! | `what-if <id>` | a retired job's counterfactual verdict: causes ranked by estimated completion-time saved |
 //! | `metrics`      | [`LiveMetrics`] incl. per-shard counters          |
 //! | `metrics-prom` | `{"text": ...}` — Prometheus exposition text      |
 //! | `self-report`  | BigRoots-on-BigRoots verdict on the server itself |
 //! | `snapshot`     | writes the fleet snapshot file, returns its path  |
 //! | `shutdown`     | asks the server to drain, snapshot and exit       |
+//!
+//! `jobs` pages by *keyset*, not offset: `cursor` is the last job id of
+//! the previous page and the next page starts strictly after it, so a
+//! listing stays stable while jobs retire (and age out) concurrently —
+//! an entry that existed when its page was read is never repeated, and
+//! survivors are never skipped.
 //!
 //! Every response is `{"ok":true,"kind":...,"data":...}` or
 //! `{"ok":false,"error":...}`. Unknown verbs get an error response, never
@@ -27,9 +36,12 @@
 //! so one driver thread multiplexes event ingest, control traffic and
 //! snapshot cadence.
 
+use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 
+use crate::analysis::explain::{job_verdict_json, max_confidence, FlightDump};
+use crate::analysis::features::FeatureKind;
 use crate::live::ingest::{CompletedJob, LiveMetrics, LiveServer};
 use crate::live::registry::FleetReport;
 use crate::util::json::Json;
@@ -39,7 +51,17 @@ use crate::util::json::Json;
 #[derive(Debug, Clone, PartialEq)]
 pub enum ControlCommand {
     FleetReport,
+    /// Filtered, keyset-paginated listing of retired-job summaries.
+    Jobs(JobsQuery),
     Job(u64),
+    /// A retired job's verdict provenance trace
+    /// ([`crate::analysis::explain`]).
+    Explain(u64),
+    /// Write the job's flight-recorder dump to a server-side path
+    /// (embedding raw event windows in a one-line response would trip the
+    /// [`MAX_PENDING_OUT`] guard; the `snapshot` verb makes the same
+    /// call).
+    ExplainDump(u64, String),
     /// A retired job's what-if verdict ([`crate::analysis::whatif`]):
     /// detected causes ranked by estimated completion-time saved.
     WhatIf(u64),
@@ -55,6 +77,90 @@ pub enum ControlCommand {
     Invalid(String),
 }
 
+/// Filters + keyset cursor for the `jobs` verb. All filters are ANDed;
+/// the page never exceeds [`MAX_JOBS_PAGE`] entries.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobsQuery {
+    /// Only jobs whose verdict traces implicate this cause kind (a
+    /// [`FeatureKind::name`], validated at parse time).
+    pub cause: Option<String>,
+    /// Only jobs whose highest cause confidence reaches this value.
+    pub min_confidence: Option<f64>,
+    /// Only jobs retired at/after this unix time (seconds).
+    pub since: Option<f64>,
+    /// Only jobs retired at/before this unix time (seconds).
+    pub until: Option<f64>,
+    /// Page size (clamped to 1..=[`MAX_JOBS_PAGE`]).
+    pub limit: usize,
+    /// Keyset cursor: the last job id of the previous page; this page
+    /// starts strictly after it.
+    pub cursor: Option<u64>,
+}
+
+impl Default for JobsQuery {
+    fn default() -> Self {
+        JobsQuery {
+            cause: None,
+            min_confidence: None,
+            since: None,
+            until: None,
+            limit: 32,
+            cursor: None,
+        }
+    }
+}
+
+const JOBS_USAGE: &str = "usage: jobs [cause=<feature>] [min-confidence=<x>] [since=<t>] \
+     [until=<t>] [limit=<n>] [cursor=<id>]";
+
+fn parse_jobs_query<'a>(parts: impl Iterator<Item = &'a str>) -> Result<JobsQuery, String> {
+    let mut q = JobsQuery::default();
+    for tok in parts {
+        let (key, value) = tok
+            .split_once('=')
+            .ok_or_else(|| format!("bad filter '{tok}' ({JOBS_USAGE})"))?;
+        match key {
+            "cause" => {
+                if FeatureKind::from_name(value).is_none() {
+                    return Err(format!("unknown cause '{value}' (a feature name)"));
+                }
+                q.cause = Some(value.to_string());
+            }
+            "min-confidence" => {
+                let x: f64 = value
+                    .parse()
+                    .map_err(|_| format!("bad min-confidence '{value}'"))?;
+                if !(0.0..=1.0).contains(&x) {
+                    return Err(format!("min-confidence {value} outside [0, 1]"));
+                }
+                q.min_confidence = Some(x);
+            }
+            "since" => {
+                q.since =
+                    Some(value.parse().map_err(|_| format!("bad since '{value}'"))?);
+            }
+            "until" => {
+                q.until =
+                    Some(value.parse().map_err(|_| format!("bad until '{value}'"))?);
+            }
+            "limit" => {
+                let n: usize =
+                    value.parse().map_err(|_| format!("bad limit '{value}'"))?;
+                if n == 0 {
+                    return Err("limit must be at least 1".to_string());
+                }
+                q.limit = n;
+            }
+            "cursor" => {
+                q.cursor =
+                    Some(value.parse().map_err(|_| format!("bad cursor '{value}'"))?);
+            }
+            _ => return Err(format!("unknown filter '{key}' ({JOBS_USAGE})")),
+        }
+    }
+    Ok(q)
+}
+
 /// Parse one request line. Never fails — unparseable input becomes
 /// [`ControlCommand::Invalid`] so the response stream stays aligned with
 /// the request stream.
@@ -67,17 +173,32 @@ pub fn parse_command(line: &str) -> ControlCommand {
         Some("self-report") if parts.next().is_none() => ControlCommand::SelfReport,
         Some("snapshot") if parts.next().is_none() => ControlCommand::Snapshot,
         Some("shutdown") if parts.next().is_none() => ControlCommand::Shutdown,
+        Some("jobs") => match parse_jobs_query(parts) {
+            Ok(q) => ControlCommand::Jobs(q),
+            Err(e) => ControlCommand::Invalid(e),
+        },
         Some("job") => match (parts.next().map(str::parse::<u64>), parts.next()) {
             (Some(Ok(id)), None) => ControlCommand::Job(id),
             _ => ControlCommand::Invalid("usage: job <id>".to_string()),
         },
+        Some("explain") => {
+            match (parts.next().map(str::parse::<u64>), parts.next(), parts.next(), parts.next())
+            {
+                (Some(Ok(id)), None, None, None) => ControlCommand::Explain(id),
+                (Some(Ok(id)), Some("dump"), Some(path), None) => {
+                    ControlCommand::ExplainDump(id, path.to_string())
+                }
+                _ => ControlCommand::Invalid("usage: explain <id> [dump <path>]".to_string()),
+            }
+        }
         Some("what-if") => match (parts.next().map(str::parse::<u64>), parts.next()) {
             (Some(Ok(id)), None) => ControlCommand::WhatIf(id),
             _ => ControlCommand::Invalid("usage: what-if <id>".to_string()),
         },
         _ => ControlCommand::Invalid(format!(
-            "unknown command '{}' (try: fleet-report | job <id> | what-if <id> | metrics | \
-             metrics-prom | self-report | snapshot | shutdown)",
+            "unknown command '{}' (try: fleet-report | jobs [filters] | job <id> | \
+             explain <id> [dump <path>] | what-if <id> | metrics | metrics-prom | \
+             self-report | snapshot | shutdown)",
             line.trim()
         )),
     }
@@ -91,9 +212,10 @@ pub struct ControlRequest {
     pub command: ControlCommand,
 }
 
-/// A request line longer than this is not a control command — drop the
-/// connection instead of buffering without bound (e.g. an event stream
-/// mistakenly pointed at the control port).
+/// A request line longer than this is not a control command (e.g. an
+/// event stream mistakenly pointed at the control port). The offending
+/// connection gets one JSON error envelope and is closed after it drains
+/// — never buffered without bound, never silently cut.
 const MAX_REQUEST_LINE: usize = 64 * 1024;
 
 /// Bytes read per connection per poll — bounds how long one fast writer
@@ -275,20 +397,27 @@ impl ControlServer {
                 });
             }
             // A "line" that long is not a control command (an event stream
-            // pointed at the wrong port, most likely): cut the connection
-            // instead of buffering without bound.
-            if conn.open && conn.buf.len() > MAX_REQUEST_LINE {
+            // pointed at the wrong port, most likely): answer with a JSON
+            // error envelope, stop reading, and close once the reply has
+            // drained — the client learns *why* instead of seeing a reset.
+            if conn.open && !conn.read_closed && conn.buf.len() > MAX_REQUEST_LINE {
                 crate::obs::log::log(
                     crate::obs::log::Level::Warn,
                     "live.control",
-                    "client sent an over-long line with no newline; dropping connection",
+                    "client sent an over-long line with no newline; rejecting",
                     &[
                         ("addr", addr.clone()),
                         ("peer", conn.peer.clone()),
                         ("bytes", conn.buf.len().to_string()),
                     ],
                 );
-                conn.open = false;
+                let err = err_response(&format!(
+                    "request line exceeds {MAX_REQUEST_LINE} bytes; closing connection"
+                ));
+                conn.out.extend_from_slice(format!("{}\n", err.to_string()).as_bytes());
+                conn.buf.clear();
+                conn.read_closed = true;
+                try_flush(conn);
             }
         }
         self.conns.retain(|c| c.open);
@@ -446,6 +575,10 @@ pub fn live_metrics_json(m: &LiveMetrics) -> Json {
 pub fn job_summary_json(j: &CompletedJob) -> Json {
     let stragglers: usize = j.analyses.iter().map(|a| a.stragglers.rows.len()).sum();
     let causes: usize = j.analyses.iter().map(|a| a.causes.len()).sum();
+    let cause_kinds: Vec<Json> = crate::analysis::explain::cause_kinds(&j.traces)
+        .iter()
+        .map(|k| k.name().into())
+        .collect();
     Json::from_pairs(vec![
         ("job_id", j.job_id.to_string().into()),
         ("incarnation", j.incarnation.into()),
@@ -454,7 +587,19 @@ pub fn job_summary_json(j: &CompletedJob) -> Json {
         ("stages", j.analyses.len().into()),
         ("stragglers", stragglers.into()),
         ("causes", causes.into()),
+        ("cause_kinds", Json::Arr(cause_kinds)),
+        ("max_confidence", Json::Num(max_confidence(&j.traces))),
         ("fleet_flags", j.fleet_flags.len().into()),
+        (
+            "flight",
+            match &j.flight {
+                Some(w) => Json::from_pairs(vec![
+                    ("events", w.events.len().into()),
+                    ("complete", w.complete().into()),
+                ]),
+                None => Json::Null,
+            },
+        ),
         (
             "estimated_savings",
             match &j.whatif {
@@ -466,6 +611,116 @@ pub fn job_summary_json(j: &CompletedJob) -> Json {
             "incomplete",
             Json::Arr(j.incomplete.iter().map(|s| Json::Str(s.to_string())).collect()),
         ),
+    ])
+}
+
+/// The `explain <id>` verb's response body: the retired job's verdict
+/// provenance document ([`job_verdict_json`]) plus flight-window
+/// availability, or why there is none.
+pub fn explain_json(j: &CompletedJob) -> Result<Json, String> {
+    if j.analyses.is_empty() {
+        return Err(format!("job {} retired with no analyzed stages", j.job_id));
+    }
+    let mut doc = job_verdict_json(j.job_id, j.incarnation, &j.traces);
+    doc.set(
+        "flight",
+        match &j.flight {
+            Some(w) => Json::from_pairs(vec![
+                ("events", w.events.len().into()),
+                ("complete", w.complete().into()),
+            ]),
+            None => Json::Null,
+        },
+    );
+    Ok(doc)
+}
+
+/// Assemble the flight dump for a retired job: the recorded verdict, the
+/// analyzer config and fleet baselines it was derived under, and the
+/// frozen raw-event window ([`crate::analysis::explain::FlightDump`]).
+/// Errors when no straggler verdict ever froze a window for the job.
+pub fn flight_dump(
+    j: &CompletedJob,
+    config: &crate::analysis::bigroots::BigRootsConfig,
+) -> Result<FlightDump, String> {
+    let w = j.flight.as_ref().ok_or_else(|| {
+        format!("job {} has no flight window (no straggler verdict fired)", j.job_id)
+    })?;
+    Ok(FlightDump {
+        job_id: j.job_id,
+        incarnation: j.incarnation,
+        complete: w.complete(),
+        config: *config,
+        baselines: j.baselines.clone(),
+        verdict: job_verdict_json(j.job_id, j.incarnation, &j.traces),
+        events: w.events.clone(),
+    })
+}
+
+/// Hard cap on a `jobs` page.
+pub const MAX_JOBS_PAGE: usize = 256;
+
+fn summary_matches(s: &Json, q: &JobsQuery) -> bool {
+    if let Some(cause) = &q.cause {
+        let has = s
+            .get("cause_kinds")
+            .as_arr()
+            .map(|a| a.iter().any(|k| k.as_str() == Some(cause.as_str())))
+            .unwrap_or(false);
+        if !has {
+            return false;
+        }
+    }
+    if let Some(min) = q.min_confidence {
+        if s.get("max_confidence").as_f64().unwrap_or(0.0) < min {
+            return false;
+        }
+    }
+    if q.since.is_some() || q.until.is_some() {
+        // `retired_at` is stamped by the driver when it stores the
+        // summary (wall-clock retirement time, unix seconds).
+        let at = s.get("retired_at").as_f64().unwrap_or(0.0);
+        if q.since.map_or(false, |t| at < t) || q.until.map_or(false, |t| at > t) {
+            return false;
+        }
+    }
+    true
+}
+
+/// One page of the `jobs` listing: filter, then walk the id-ordered store
+/// strictly past the cursor. Returns
+/// `{"jobs": [...], "count": n, "next_cursor": <id-string> | null}`;
+/// `next_cursor` is the last id included, present only when more matches
+/// remain. Keyset semantics make the page stable under concurrent
+/// retirement: ids only ever *enter* past the tail and *leave* anywhere,
+/// and a departed id simply stops matching — never renumbering what
+/// offset pagination would.
+pub fn jobs_page(entries: &BTreeMap<u64, Json>, q: &JobsQuery) -> Json {
+    let limit = q.limit.clamp(1, MAX_JOBS_PAGE);
+    let mut jobs: Vec<Json> = Vec::new();
+    let mut last_id: Option<u64> = None;
+    let mut next_cursor = Json::Null;
+    let range = match q.cursor {
+        Some(c) => entries.range((std::ops::Bound::Excluded(c), std::ops::Bound::Unbounded)),
+        None => entries.range(..),
+    };
+    for (id, s) in range {
+        if !summary_matches(s, q) {
+            continue;
+        }
+        if jobs.len() == limit {
+            // A further match exists: the page is full, resume after its
+            // last entry.
+            next_cursor = Json::Str(last_id.expect("page has entries").to_string());
+            break;
+        }
+        jobs.push(s.clone());
+        last_id = Some(*id);
+    }
+    Json::from_pairs(vec![
+        ("count", jobs.len().into()),
+        ("jobs", Json::Arr(jobs)),
+        ("next_cursor", next_cursor),
     ])
 }
 
@@ -502,6 +757,177 @@ mod tests {
         assert!(matches!(parse_command("what-if x"), ControlCommand::Invalid(_)));
         assert!(matches!(parse_command("bogus"), ControlCommand::Invalid(_)));
         assert!(matches!(parse_command("fleet-report extra"), ControlCommand::Invalid(_)));
+        assert_eq!(parse_command("explain 7"), ControlCommand::Explain(7));
+        assert_eq!(
+            parse_command("explain 7 dump /tmp/w.ndjson"),
+            ControlCommand::ExplainDump(7, "/tmp/w.ndjson".to_string())
+        );
+        assert!(matches!(parse_command("explain"), ControlCommand::Invalid(_)));
+        assert!(matches!(parse_command("explain x"), ControlCommand::Invalid(_)));
+        assert!(matches!(parse_command("explain 7 dump"), ControlCommand::Invalid(_)));
+        assert!(matches!(parse_command("explain 7 dump a b"), ControlCommand::Invalid(_)));
+        assert_eq!(parse_command("jobs"), ControlCommand::Jobs(JobsQuery::default()));
+        let q = match parse_command("jobs cause=cpu min-confidence=0.5 limit=3 cursor=12") {
+            ControlCommand::Jobs(q) => q,
+            other => panic!("expected Jobs, got {other:?}"),
+        };
+        assert_eq!(q.cause.as_deref(), Some("cpu"));
+        assert_eq!(q.min_confidence, Some(0.5));
+        assert_eq!(q.limit, 3);
+        assert_eq!(q.cursor, Some(12));
+        assert!(matches!(parse_command("jobs cause=nope"), ControlCommand::Invalid(_)));
+        assert!(matches!(parse_command("jobs min-confidence=2"), ControlCommand::Invalid(_)));
+        assert!(matches!(parse_command("jobs limit=0"), ControlCommand::Invalid(_)));
+        assert!(matches!(parse_command("jobs froz=1"), ControlCommand::Invalid(_)));
+    }
+
+    fn summary_fixture(id: u64, cause: &str, conf: f64, retired_at: f64) -> Json {
+        Json::from_pairs(vec![
+            ("job_id", id.to_string().into()),
+            ("cause_kinds", Json::Arr(vec![cause.into()])),
+            ("max_confidence", Json::Num(conf)),
+            ("retired_at", Json::Num(retired_at)),
+        ])
+    }
+
+    #[test]
+    fn jobs_pagination_walks_to_exhaustion() {
+        let mut store: BTreeMap<u64, Json> = BTreeMap::new();
+        for id in 1..=5u64 {
+            store.insert(id, summary_fixture(id, "cpu", 0.9, id as f64));
+        }
+        let mut q = JobsQuery { limit: 2, ..JobsQuery::default() };
+        let mut seen = Vec::new();
+        loop {
+            let page = jobs_page(&store, &q);
+            for j in page.get("jobs").as_arr().unwrap() {
+                seen.push(j.get("job_id").as_str().unwrap().to_string());
+            }
+            match page.get("next_cursor").as_str() {
+                Some(c) => q.cursor = Some(c.parse().unwrap()),
+                None => break,
+            }
+        }
+        assert_eq!(seen, vec!["1", "2", "3", "4", "5"]);
+        // Past the end: an empty page with a null cursor, not an error.
+        let empty = jobs_page(&store, &JobsQuery { cursor: Some(5), ..JobsQuery::default() });
+        assert_eq!(empty.get("count").as_usize(), Some(0));
+        assert!(matches!(empty.get("next_cursor"), Json::Null));
+    }
+
+    #[test]
+    fn jobs_cursor_stable_under_concurrent_retirement() {
+        let mut store: BTreeMap<u64, Json> = BTreeMap::new();
+        for id in 1..=6u64 {
+            store.insert(id, summary_fixture(id, "cpu", 0.9, id as f64));
+        }
+        let page1 = jobs_page(&store, &JobsQuery { limit: 3, ..JobsQuery::default() });
+        let cursor: u64 = page1.get("next_cursor").as_str().unwrap().parse().unwrap();
+        assert_eq!(cursor, 3);
+        // Between pages: an already-returned job ages out and a new one
+        // retires. Keyset resumption neither re-serves nor skips.
+        store.remove(&2);
+        store.insert(7, summary_fixture(7, "cpu", 0.9, 7.0));
+        let page2 =
+            jobs_page(&store, &JobsQuery { limit: 3, cursor: Some(cursor), ..JobsQuery::default() });
+        let ids: Vec<&str> = page2
+            .get("jobs")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|j| j.get("job_id").as_str().unwrap())
+            .collect();
+        assert_eq!(ids, vec!["4", "5", "6"]);
+        let cursor2: u64 = page2.get("next_cursor").as_str().unwrap().parse().unwrap();
+        let page3 =
+            jobs_page(&store, &JobsQuery { limit: 3, cursor: Some(cursor2), ..JobsQuery::default() });
+        let ids3: Vec<&str> = page3
+            .get("jobs")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|j| j.get("job_id").as_str().unwrap())
+            .collect();
+        assert_eq!(ids3, vec!["7"]);
+        assert!(matches!(page3.get("next_cursor"), Json::Null));
+    }
+
+    #[test]
+    fn jobs_filters_compose_with_cursor() {
+        let mut store: BTreeMap<u64, Json> = BTreeMap::new();
+        store.insert(1, summary_fixture(1, "cpu", 0.9, 10.0));
+        store.insert(2, summary_fixture(2, "network_in", 0.9, 20.0));
+        store.insert(3, summary_fixture(3, "cpu", 0.2, 30.0));
+        store.insert(4, summary_fixture(4, "cpu", 0.8, 40.0));
+        store.insert(5, summary_fixture(5, "cpu", 0.7, 50.0));
+        let q = JobsQuery {
+            cause: Some("cpu".into()),
+            min_confidence: Some(0.5),
+            since: Some(15.0),
+            limit: 1,
+            ..JobsQuery::default()
+        };
+        // Jobs 2 (cause), 3 (confidence) and 1 (since) are filtered out.
+        let page = jobs_page(&store, &q);
+        let ids: Vec<&str> = page
+            .get("jobs")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|j| j.get("job_id").as_str().unwrap())
+            .collect();
+        assert_eq!(ids, vec!["4"]);
+        let cursor: u64 = page.get("next_cursor").as_str().unwrap().parse().unwrap();
+        assert_eq!(cursor, 4);
+        let page2 = jobs_page(&store, &JobsQuery { cursor: Some(cursor), ..q });
+        let ids2: Vec<&str> = page2
+            .get("jobs")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|j| j.get("job_id").as_str().unwrap())
+            .collect();
+        assert_eq!(ids2, vec!["5"]);
+        assert!(matches!(page2.get("next_cursor"), Json::Null));
+        // until filter: only the earliest survivor.
+        let until = JobsQuery {
+            cause: Some("cpu".into()),
+            until: Some(15.0),
+            ..JobsQuery::default()
+        };
+        assert_eq!(jobs_page(&store, &until).get("count").as_usize(), Some(1));
+    }
+
+    #[test]
+    fn oversized_request_line_gets_error_envelope() {
+        use std::io::{BufRead, BufReader, Write as _};
+        let mut srv = match ControlServer::bind("127.0.0.1:0") {
+            Ok(s) => s,
+            Err(_) => return,
+        };
+        let addr = srv.local_addr().to_string();
+        let client = std::thread::spawn(move || {
+            let mut c = TcpStream::connect(&addr).unwrap();
+            // One newline-free blob larger than the request-line cap.
+            let blob = vec![b'x'; MAX_REQUEST_LINE + 1024];
+            let _ = c.write_all(&blob);
+            let mut reader = BufReader::new(c);
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            line
+        });
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let line = loop {
+            assert!(Instant::now() < deadline, "oversized-line test timed out");
+            let _ = srv.poll().unwrap();
+            if client.is_finished() {
+                break client.join().unwrap();
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        };
+        let resp = Json::parse(line.trim()).expect("error envelope, not a silent drop");
+        assert_eq!(resp.get("ok").as_bool(), Some(false));
+        assert!(resp.get("error").as_str().unwrap().contains("exceeds"));
     }
 
     #[test]
@@ -582,6 +1008,9 @@ mod tests {
             ended: true,
             evicted_live: false,
             analyses: Vec::new(),
+            traces: Vec::new(),
+            baselines: Vec::new(),
+            flight: None,
             fleet_flags: Vec::new(),
             whatif: None,
             incomplete: Vec::new(),

@@ -53,12 +53,14 @@ use std::time::Instant;
 
 use crate::analysis::bigroots::{analyze_stage_with_stats, BigRootsConfig, StageAnalysis};
 use crate::analysis::cache::{SharedCachedBackend, SharedStatsCache};
+use crate::analysis::explain::{explain_stage, VerdictTrace};
 use crate::analysis::features::StageFeatures;
 use crate::analysis::router::RoutingBackend;
 use crate::analysis::stats::{NativeBackend, StatsBackend};
 use crate::analysis::whatif::{self, WhatIfConfig, WhatIfReport};
 use crate::live::lifecycle::{Lifecycle, LifecycleConfig};
-use crate::live::registry::{FleetFlag, FleetRegistry, FleetReport};
+use crate::live::registry::{FeatureSnapshot, FleetFlag, FleetRegistry, FleetReport};
+use crate::obs::flight::{FlightRecorder, FlightWindow};
 use crate::obs::{self, SpanKind};
 use crate::trace::eventlog::TaggedEvent;
 use crate::util::queue::{bounded, BoundedSender};
@@ -96,6 +98,11 @@ pub struct LiveConfig {
     /// [`WhatIfReport`] computed against the fleet baseline of that
     /// moment.
     pub whatif: WhatIfConfig,
+    /// Per-shard flight-recorder ring capacity in raw events
+    /// ([`crate::obs::flight::FlightRecorder`]): how much recent history a
+    /// straggler verdict can freeze for bit-identical replay. 0 disables
+    /// event buffering (verdict windows come back empty and incomplete).
+    pub flight_capacity: usize,
 }
 
 impl Default for LiveConfig {
@@ -111,6 +118,7 @@ impl Default for LiveConfig {
             bigroots: BigRootsConfig::default(),
             fleet_min_samples: 64,
             whatif: WhatIfConfig::default(),
+            flight_capacity: 16_384,
         }
     }
 }
@@ -144,6 +152,9 @@ enum LiveMsg {
         incomplete: Vec<u64>,
         /// Evicted while the stream was still flowing (vs end-of-stream).
         live: bool,
+        /// The frozen flight-recorder window, when a straggler verdict
+        /// fired for this job.
+        flight: Option<FlightWindow>,
     },
 }
 
@@ -166,12 +177,24 @@ pub struct CompletedJob {
     /// baseline of that moment. `None` for jobs that retired with no
     /// analyzed stages.
     pub whatif: Option<WhatIfReport>,
+    /// Verdict provenance, one trace per analyzed stage (same order as
+    /// `analyses`): per-cause thresholds, stage baselines, fleet
+    /// percentiles, confidence scores and co-occurrence groups
+    /// ([`crate::analysis::explain`]).
+    pub traces: Vec<VerdictTrace>,
+    /// The fleet per-feature baselines the traces were derived against —
+    /// frozen here because the live registry keeps evolving; a flight
+    /// dump carries these for bit-identical replay.
+    pub baselines: Vec<FeatureSnapshot>,
+    /// The frozen flight-recorder event window, present when a straggler
+    /// verdict fired for this job ([`crate::obs::flight`]).
+    pub flight: Option<FlightWindow>,
     /// Announced stages that never completed.
     pub incomplete: Vec<u64>,
 }
 
 /// Snapshot of live-server throughput and GC behavior.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct LiveMetrics {
     pub events_total: usize,
     pub jobs_completed: usize,
@@ -299,6 +322,7 @@ impl LiveServer {
             let lifecycle = cfg.lifecycle.clone();
             let worker_cache = Arc::clone(&shared_cache);
             let route_large_tasks = cfg.route_large_tasks;
+            let flight_capacity = cfg.flight_capacity;
             workers.push(std::thread::spawn(move || {
                 shard_worker(
                     shard,
@@ -309,6 +333,7 @@ impl LiveServer {
                     lifecycle,
                     worker_cache,
                     route_large_tasks,
+                    flight_capacity,
                 );
             }));
             senders.push(tx);
@@ -460,7 +485,7 @@ impl LiveServer {
                     .or_default()
                     .push((seq, features, analysis, flags));
             }
-            LiveMsg::Evicted { job_id, incarnation, ended, incomplete, live } => {
+            LiveMsg::Evicted { job_id, incarnation, ended, incomplete, live, flight } => {
                 let mut rows =
                     self.collected.remove(&(job_id, incarnation)).unwrap_or_default();
                 rows.sort_by_key(|(seq, _, _, _)| *seq);
@@ -470,13 +495,24 @@ impl LiveServer {
                     per_stage.push((sf, a));
                     fleet_flags.extend(flags);
                 }
-                // Counterfactual verdict against the fleet baseline as of
-                // retirement; its savings feed back into the registry so
-                // the fleet report ranks causes by total time lost.
-                let whatif_report = if per_stage.is_empty() {
-                    None
+                // One fleet snapshot for everything derived at retirement:
+                // provenance traces, the counterfactual verdict, and the
+                // baselines a flight dump freezes for replay.
+                let (whatif_report, traces, baselines) = if per_stage.is_empty() {
+                    (None, Vec::new(), Vec::new())
                 } else {
                     let fleet = self.registry.report();
+                    // Verdict provenance per stage, derived against the
+                    // baseline as of this moment; the confidence scores
+                    // fold back into the registry's per-cause aggregates.
+                    let traces: Vec<VerdictTrace> = per_stage
+                        .iter()
+                        .map(|(sf, a)| explain_stage(sf, a, &fleet.baselines))
+                        .collect();
+                    self.registry.fold_traces(&traces);
+                    // Counterfactual verdict against the same baseline;
+                    // its savings feed back into the registry so the
+                    // fleet report ranks causes by total time lost.
                     let r = whatif::analyze_job(
                         &format!("job-{job_id}"),
                         &per_stage,
@@ -484,7 +520,7 @@ impl LiveServer {
                         &self.cfg.whatif,
                     );
                     self.registry.fold_whatif(&r);
-                    Some(r)
+                    (Some(r), traces, fleet.baselines)
                 };
                 // Features drop here; only the analyses stay resident.
                 let analyses: Vec<StageAnalysis> =
@@ -504,6 +540,9 @@ impl LiveServer {
                     analyses,
                     fleet_flags,
                     whatif: whatif_report,
+                    traces,
+                    baselines,
+                    flight,
                     incomplete,
                 });
             }
@@ -592,6 +631,7 @@ impl LiveServer {
 /// when routing is enabled. Hit/miss counters (this worker's lookups)
 /// publish to [`ShardStats`] after every ingest batch so snapshots stay
 /// live.
+#[allow(clippy::too_many_arguments)]
 fn shard_worker(
     shard: usize,
     rx: crate::util::queue::BoundedReceiver<Vec<TaggedEvent>>,
@@ -601,6 +641,7 @@ fn shard_worker(
     lifecycle_cfg: LifecycleConfig,
     cache: Arc<SharedStatsCache>,
     route_large_tasks: usize,
+    flight_capacity: usize,
 ) {
     // Built inside the worker thread, so the large-stage backend never has
     // to cross a thread boundary.
@@ -615,6 +656,11 @@ fn shard_worker(
     };
     let mut backend = SharedCachedBackend::new(inner, cache);
     let mut lc = Lifecycle::new(lifecycle_cfg, bigroots.edge_width);
+    // Per-shard flight recorder: every event passes through it, and the
+    // moment a stage verdict flags stragglers the job's recent window is
+    // frozen for bit-identical replay. Single-threaded with the shard, so
+    // recording never contends.
+    let mut flight = FlightRecorder::new(flight_capacity);
     let analyze_and_send =
         |job_id: u64,
          incarnation: u32,
@@ -622,6 +668,7 @@ fn shard_worker(
          backend: &mut SharedCachedBackend<Box<dyn StatsBackend + Send>>,
          stats: &ShardStats,
          tx: &Sender<LiveMsg>,
+         flight: &mut FlightRecorder,
          kernel_secs: &mut f64| {
             for r in ready {
                 let t0 = obs::enabled().then(Instant::now);
@@ -632,6 +679,11 @@ fn shard_worker(
                     *kernel_secs += d.as_secs_f64();
                 }
                 let analysis = analyze_stage_with_stats(&r.features, &st, &bigroots);
+                if !analysis.stragglers.rows.is_empty() {
+                    // A straggler verdict fired: pin this job's raw-event
+                    // window before the ring can evict it.
+                    flight.freeze(job_id);
+                }
                 stats.stages.fetch_add(1, Ordering::Relaxed);
                 let _ = tx.send(LiveMsg::Stage {
                     job_id,
@@ -675,14 +727,17 @@ fn shard_worker(
                     &mut backend,
                     &stats,
                     &tx,
+                    &mut flight,
                     &mut kernel,
                 );
+                let window = flight.take(e.job_id);
                 let _ = tx.send(LiveMsg::Evicted {
                     job_id: e.job_id,
                     incarnation: e.incarnation,
                     ended: e.ended,
                     incomplete: e.incomplete,
                     live: true,
+                    flight: window,
                 });
             }
             publish(&backend, &lc, &stats);
@@ -699,6 +754,9 @@ fn shard_worker(
         for ev in batch {
             stats.events.fetch_add(1, Ordering::Relaxed);
             let job_id = ev.job_id;
+            // Recorded before analysis so a verdict triggered by this very
+            // event freezes a window that includes it.
+            flight.record(&ev);
             if let Some((incarnation, ready)) = lc.feed(&ev) {
                 if !ready.is_empty() {
                     analyze_and_send(
@@ -708,6 +766,7 @@ fn shard_worker(
                         &mut backend,
                         &stats,
                         &tx,
+                        &mut flight,
                         &mut kernel,
                     );
                 }
@@ -720,14 +779,17 @@ fn shard_worker(
                     &mut backend,
                     &stats,
                     &tx,
+                    &mut flight,
                     &mut kernel,
                 );
+                let window = flight.take(e.job_id);
                 let _ = tx.send(LiveMsg::Evicted {
                     job_id: e.job_id,
                     incarnation: e.incarnation,
                     ended: e.ended,
                     incomplete: e.incomplete,
                     live: true,
+                    flight: window,
                 });
             }
         }
@@ -755,14 +817,17 @@ fn shard_worker(
             &mut backend,
             &stats,
             &tx,
+            &mut flight,
             &mut kernel,
         );
+        let window = flight.take(e.job_id);
         let _ = tx.send(LiveMsg::Evicted {
             job_id: e.job_id,
             incarnation: e.incarnation,
             ended: e.ended,
             incomplete: e.incomplete,
             live: false,
+            flight: window,
         });
     }
     publish(&backend, &lc, &stats);
@@ -899,6 +964,49 @@ mod tests {
         assert_eq!(got_causes, want_causes);
         let want_stragglers: usize = report.total_stragglers();
         assert_eq!(report.fleet.straggler_tasks, want_stragglers);
+    }
+
+    #[test]
+    fn retired_jobs_carry_traces_and_frozen_windows() {
+        let specs = round_robin_specs(3, 0.12, 606);
+        let (_, events) = interleaved_workload(&specs);
+        let report = run_live(&events, LiveConfig::default());
+        assert_eq!(report.jobs.len(), 3);
+        let mut saw_window = false;
+        for job in &report.jobs {
+            // One provenance trace per analyzed stage, same order.
+            assert_eq!(job.traces.len(), job.analyses.len());
+            for (t, a) in job.traces.iter().zip(&job.analyses) {
+                assert_eq!(t.stage_id, a.stage_id);
+                assert_eq!(t.causes.len(), a.causes.len());
+                assert_eq!(t.flagged.len(), a.stragglers.rows.len());
+                for c in &t.causes {
+                    assert!((0.0..=1.0).contains(&c.confidence));
+                }
+            }
+            assert_eq!(job.baselines.len(), crate::analysis::FeatureKind::COUNT);
+            let has_stragglers =
+                job.analyses.iter().any(|a| !a.stragglers.rows.is_empty());
+            // A window is frozen exactly when some stage verdict flagged
+            // stragglers.
+            assert_eq!(job.flight.is_some(), has_stragglers);
+            if let Some(w) = &job.flight {
+                assert_eq!(w.job_id, job.job_id);
+                assert!(w.complete(), "default capacity holds the whole job");
+                assert!(w.events.iter().all(|e| e.job_id == job.job_id));
+                saw_window = true;
+            }
+        }
+        assert!(saw_window, "workload produced no straggler verdicts");
+        // The registry's confidence aggregates saw every cause trace.
+        let want: usize = report
+            .jobs
+            .iter()
+            .flat_map(|j| j.traces.iter())
+            .map(|t| t.causes.len())
+            .sum();
+        let got: usize = report.fleet.baselines.iter().map(|b| b.verdicts).sum();
+        assert_eq!(got, want);
     }
 
     #[test]

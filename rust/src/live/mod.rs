@@ -34,9 +34,14 @@
 //!   write-temp-rename; restore on boot), so the baseline survives server
 //!   restarts;
 //! - [`control`] — [`control::ControlServer`]: a line-delimited TCP
-//!   control/query protocol (`fleet-report`, `job <id>`, `metrics`,
-//!   `metrics-prom`, `self-report`, `snapshot`, `shutdown`) sharing one
-//!   query path with the CLI's periodic snapshot printing.
+//!   control/query protocol (`fleet-report`, `jobs`, `job <id>`,
+//!   `explain <id>`, `what-if <id>`, `metrics`, `metrics-prom`,
+//!   `self-report`, `snapshot`, `shutdown`) sharing one query path with
+//!   the CLI's periodic snapshot printing — `jobs` paginates with a
+//!   keyset cursor and filters by cause/confidence/time, `explain`
+//!   returns the verdict provenance trace and can dump the frozen
+//!   flight-recorder window for offline bit-identical replay
+//!   (`bigroots explain --replay`).
 //!
 //! Every layer is instrumented through [`crate::obs`]: spans time source
 //! polls, decode, queue waits, the stats kernel, cache lookups, registry
@@ -57,9 +62,9 @@ pub mod persist;
 pub mod registry;
 pub mod source;
 
-pub use control::{ControlCommand, ControlRequest, ControlServer};
+pub use control::{ControlCommand, ControlRequest, ControlServer, JobsQuery};
 pub use ingest::{CompletedJob, LiveConfig, LiveMetrics, LiveReport, LiveServer};
 pub use lifecycle::{Lifecycle, LifecycleConfig};
 pub use persist::{load_snapshot, save_snapshot};
-pub use registry::{FleetFlag, FleetRegistry, FleetReport, QuantileSketch};
+pub use registry::{FeatureSnapshot, FleetFlag, FleetRegistry, FleetReport, QuantileSketch};
 pub use source::{EventSource, MemorySource, SourcePoll, StdinSource, TailSource, TcpSource};

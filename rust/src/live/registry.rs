@@ -26,6 +26,7 @@
 //! approximation level.
 
 use crate::analysis::bigroots::StageAnalysis;
+use crate::analysis::explain::VerdictTrace;
 use crate::analysis::features::{FeatureCategory, FeatureKind, StageFeatures};
 use crate::analysis::whatif::WhatIfReport;
 use crate::util::stats::{median, P2Quantile, Welford};
@@ -149,6 +150,11 @@ pub struct FleetRegistry {
     /// that removing each cause would have bought), indexed by
     /// [`FeatureKind::index`]. Folded from per-job [`WhatIfReport`]s.
     pub(crate) whatif_saved: Vec<f64>,
+    /// Running confidence distribution per cause kind, indexed by
+    /// [`FeatureKind::index`] and folded from per-job verdict traces
+    /// ([`FleetRegistry::fold_traces`]). `n` doubles as the fleet-wide
+    /// verdict count behind `bigroots_verdicts_total{cause=…}`.
+    pub(crate) confidence: Vec<Welford>,
 }
 
 impl FleetRegistry {
@@ -172,6 +178,7 @@ impl FleetRegistry {
             shuffle_heavy: 0,
             shuffle_heavy_gc: 0,
             whatif_saved: vec![0.0; FeatureKind::COUNT],
+            confidence: vec![Welford::new(); FeatureKind::COUNT],
         }
     }
 
@@ -223,6 +230,18 @@ impl FleetRegistry {
     pub fn fold_whatif(&mut self, report: &WhatIfReport) {
         for row in &report.rows {
             self.whatif_saved[row.kind.index()] += row.saved_secs;
+        }
+    }
+
+    /// Fold one job's verdict provenance traces: each cause's confidence
+    /// joins its kind's running distribution. Welford pushes commute up to
+    /// f64 rounding, and the counts are exact — arrival order across
+    /// shards does not change what the verdict counters report.
+    pub fn fold_traces(&mut self, traces: &[VerdictTrace]) {
+        for t in traces {
+            for c in &t.causes {
+                self.confidence[c.kind.index()].push(c.confidence);
+            }
         }
     }
 
@@ -314,6 +333,8 @@ impl FleetRegistry {
                     p95: b.all.p95(),
                     straggler_p50: b.stragglers.p50(),
                     cause_count: b.cause_count,
+                    mean_confidence: self.confidence[b.kind.index()].mean(),
+                    verdicts: self.confidence[b.kind.index()].count() as usize,
                 })
                 .collect(),
             stage_median_p50: self.stage_medians.p50(),
@@ -343,6 +364,11 @@ pub struct FeatureSnapshot {
     pub p95: f64,
     pub straggler_p50: f64,
     pub cause_count: usize,
+    /// Mean verdict-trace confidence for this cause kind (0 when never
+    /// implicated).
+    pub mean_confidence: f64,
+    /// Fleet-wide count of cause verdicts folded for this kind.
+    pub verdicts: usize,
 }
 
 /// Queryable point-in-time snapshot of the fleet baseline.
@@ -632,6 +658,51 @@ mod tests {
         );
         assert_eq!(r.estimated_saving(FeatureKind::Cpu), 7.0);
         assert_eq!(r.estimated_saving(FeatureKind::Locality), 0.0);
+    }
+
+    #[test]
+    fn trace_confidence_folds_into_baselines() {
+        use crate::analysis::explain::{CauseTrace, VerdictTrace};
+        let mut reg = FleetRegistry::new(8);
+        let mk = |kind: FeatureKind, confidence: f64| CauseTrace {
+            row: 0,
+            task_id: 0,
+            kind,
+            value: 1.0,
+            threshold: 0.5,
+            peer: "both",
+            stage_median: 0.2,
+            stage_mad: 0.1,
+            fleet_percentile: None,
+            confidence,
+            group: 0,
+        };
+        reg.fold_traces(&[VerdictTrace {
+            stage_id: 0,
+            duration_median: 1.0,
+            duration_threshold: 1.5,
+            flagged: vec![0],
+            causes: vec![mk(FeatureKind::Cpu, 0.8), mk(FeatureKind::JvmGcTime, 0.4)],
+            groups: vec![vec![FeatureKind::Cpu, FeatureKind::JvmGcTime]],
+        }]);
+        reg.fold_traces(&[VerdictTrace {
+            stage_id: 1,
+            duration_median: 1.0,
+            duration_threshold: 1.5,
+            flagged: vec![0],
+            causes: vec![mk(FeatureKind::Cpu, 0.6)],
+            groups: vec![vec![FeatureKind::Cpu]],
+        }]);
+        let r = reg.report();
+        let cpu = r.baselines.iter().find(|b| b.kind == FeatureKind::Cpu).unwrap();
+        assert_eq!(cpu.verdicts, 2);
+        assert!((cpu.mean_confidence - 0.7).abs() < 1e-12);
+        let gc = r.baselines.iter().find(|b| b.kind == FeatureKind::JvmGcTime).unwrap();
+        assert_eq!(gc.verdicts, 1);
+        assert_eq!(gc.mean_confidence, 0.4);
+        let disk = r.baselines.iter().find(|b| b.kind == FeatureKind::Disk).unwrap();
+        assert_eq!(disk.verdicts, 0);
+        assert_eq!(disk.mean_confidence, 0.0);
     }
 
     #[test]

@@ -7,6 +7,8 @@
 //! bigroots analyze    — offline root-cause analysis of a trace file
 //! bigroots whatif     — counterfactual ranking: completion time saved per removed cause
 //! bigroots stream     — streaming analysis of an event log (ndjson)
+//! bigroots explain    — replay a flight-recorder dump, verify the verdict reproduces
+
 //! bigroots verify     — Table III single-AG verification (BigRoots vs PCC)
 //! bigroots multi      — Tables IV+V multi-node anomaly schedule
 //! bigroots hibench    — Table VI case study over the 11 workloads
@@ -66,6 +68,19 @@ fn main() {
                 .opt_req("input", "event log path"),
         )
         .subcommand(
+            Command::new(
+                "explain",
+                "replay a flight-recorder dump offline and verify the recorded verdict \
+                 reproduces bit-identically",
+            )
+            .opt_req(
+                "replay",
+                "flight dump NDJSON path (written by `explain <id> dump <path>` on the \
+                 serve control socket)",
+            )
+            .flag("verbose", "print the full provenance document, not just the verdict line"),
+        )
+        .subcommand(
             Command::new("serve", "long-running multi-tenant analysis server (live/ subsystem)")
                 .opt("tail", "", "follow a growing job-tagged ndjson event log (live mode)")
                 .opt("listen", "", "accept line-delimited events over TCP, e.g. 127.0.0.1:7070")
@@ -85,9 +100,15 @@ fn main() {
                 .opt(
                     "control-port",
                     "",
-                    "line-delimited JSON control/query socket (fleet-report | job <id> | \
-                     what-if <id> | metrics | metrics-prom | self-report | snapshot | \
-                     shutdown), e.g. 127.0.0.1:7172",
+                    "line-delimited JSON control/query socket (fleet-report | jobs [filters] | \
+                     job <id> | explain <id> [dump <path>] | what-if <id> | metrics | \
+                     metrics-prom | self-report | snapshot | shutdown), e.g. 127.0.0.1:7172",
+                )
+                .opt(
+                    "flight-capacity",
+                    "16384",
+                    "per-shard flight-recorder ring capacity in raw events (0 disables \
+                     verdict window capture)",
                 )
                 .opt(
                     "metrics-port",
@@ -151,6 +172,7 @@ fn main() {
         "analyze" => cmd_analyze(&args),
         "whatif" => cmd_whatif(&args),
         "stream" => cmd_stream(&args),
+        "explain" => cmd_explain(&args),
         "serve" => cmd_serve(&args),
         "verify" => cmd_verify(&args),
         "multi" => cmd_multi(&args),
@@ -414,6 +436,66 @@ fn cmd_stream(args: &bigroots::util::cli::Args) -> i32 {
     }
 }
 
+/// `bigroots explain --replay <dump>` — the offline half of the verdict
+/// provenance loop: parse a flight-recorder dump, re-run the full
+/// pipeline over the frozen raw events under the frozen config and fleet
+/// baselines, and require the reproduced verdict to match the recorded
+/// one byte for byte.
+fn cmd_explain(args: &bigroots::util::cli::Args) -> i32 {
+    use bigroots::analysis::explain::FlightDump;
+
+    let path = args.get("replay").unwrap();
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("reading {path}: {e}");
+            return 1;
+        }
+    };
+    let dump = match FlightDump::parse(&text) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("parsing {path}: {e}");
+            return 1;
+        }
+    };
+    if !dump.complete {
+        eprintln!(
+            "warning: dump window is incomplete (ring evicted events before the verdict \
+             froze it); replay may not reproduce the recorded verdict"
+        );
+    }
+    let replayed = match dump.replay() {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("replay failed: {e}");
+            return 1;
+        }
+    };
+    let recorded = dump.verdict.to_string();
+    let reproduced = replayed.to_string();
+    if args.flag("verbose") {
+        print!("{}", bigroots::analysis::report::render_explain(&replayed));
+        println!("{reproduced}");
+    }
+    println!(
+        "job {} incarnation {}: {} events, {} stages in verdict",
+        dump.job_id,
+        dump.incarnation,
+        dump.events.len(),
+        replayed.get("stages").as_arr().map(|a| a.len()).unwrap_or(0),
+    );
+    if recorded == reproduced {
+        println!("replay verdict matches the recorded verdict bit-identically");
+        0
+    } else {
+        eprintln!("REPLAY MISMATCH");
+        eprintln!("recorded:   {recorded}");
+        eprintln!("reproduced: {reproduced}");
+        1
+    }
+}
+
 fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
     use bigroots::live::control::{self, ControlCommand, ControlServer};
     use bigroots::live::{
@@ -447,8 +529,12 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
         stats_cache_capacity: args.get_usize("stats-cache", 256),
         stats_cache_stripes: args.get_usize("cache-stripes", 8),
         route_large_tasks: args.get_usize("route-large", 0),
+        flight_capacity: args.get_usize("flight-capacity", 16384),
         ..Default::default()
     };
+    // The flight dump freezes the analyzer config the verdict ran under;
+    // keep a copy before the server takes ownership.
+    let analyzer_cfg = cfg.bigroots;
 
     // Pick the transport: tail / listen / stdin are live; --input replays
     // a file; with none of those, simulate an interleaved multi-job run.
@@ -602,18 +688,38 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
     let mut last_snapshot = std::time::Instant::now();
     let mut idle_since: Option<std::time::Instant> = None;
     // Latest summary per retired job id, for the control plane's `job`
-    // verb (retired jobs are drained out of the server as they complete).
-    // Bounded like everything else on the unbounded-stream path: oldest
-    // retirements age out once the cap is hit.
+    // and `jobs` verbs (retired jobs are drained out of the server as
+    // they complete). A BTreeMap so the `jobs` keyset cursor can resume
+    // in id order. Bounded like everything else on the unbounded-stream
+    // path: oldest retirements age out once the cap is hit.
     const MAX_JOB_SUMMARIES: usize = 4096;
-    let mut job_summaries: std::collections::HashMap<u64, Json> =
-        std::collections::HashMap::new();
+    let mut job_summaries: std::collections::BTreeMap<u64, Json> =
+        std::collections::BTreeMap::new();
     // The full what-if verdict per retired job, for the `what-if <id>`
     // verb. Same bound and age-out as the summaries.
     let mut job_whatifs: std::collections::HashMap<u64, Json> =
         std::collections::HashMap::new();
+    // The verdict provenance document per retired job (`explain <id>`).
+    let mut job_explains: std::collections::HashMap<u64, Json> =
+        std::collections::HashMap::new();
     let mut job_summary_order: std::collections::VecDeque<u64> =
         std::collections::VecDeque::new();
+    // Frozen flight windows are raw event buffers — orders of magnitude
+    // heavier than a summary line — so they get their own, much smaller
+    // retention window for `explain <id> dump <path>`.
+    const MAX_JOB_DUMPS: usize = 64;
+    let mut job_dumps: std::collections::HashMap<u64, bigroots::analysis::explain::FlightDump> =
+        std::collections::HashMap::new();
+    let mut job_dump_order: std::collections::VecDeque<u64> =
+        std::collections::VecDeque::new();
+    // Retirement wall-clock (unix seconds) stamped onto each summary for
+    // the `jobs since=/until=` filters.
+    let unix_now = || {
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs_f64())
+            .unwrap_or(0.0)
+    };
     let mut shutdown_requested = false;
     // Non-zero when the source died — the drain-then-snapshot exit still
     // runs (losing the registry on a disk error would defeat the point of
@@ -659,9 +765,11 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
         }
         server.record_source_stats(source.dropped_partial_lines(), source.parse_errors());
         for j in server.drain_completed() {
+            let mut summary = control::job_summary_json(&j);
+            summary.set("retired_at", unix_now().into());
             // A refreshed id (revived incarnation) moves to the back of
             // the age queue, so the newest summary is the last to go.
-            if job_summaries.insert(j.job_id, control::job_summary_json(&j)).is_some() {
+            if job_summaries.insert(j.job_id, summary).is_some() {
                 if let Some(pos) = job_summary_order.iter().position(|&id| id == j.job_id) {
                     job_summary_order.remove(pos);
                 }
@@ -676,11 +784,48 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
                     job_whatifs.remove(&j.job_id);
                 }
             }
+            // Same revival rule for the provenance document and the
+            // flight dump: a fresh incarnation supersedes or clears.
+            match control::explain_json(&j) {
+                Ok(doc) => {
+                    job_explains.insert(j.job_id, doc);
+                }
+                Err(_) => {
+                    job_explains.remove(&j.job_id);
+                }
+            }
+            match control::flight_dump(&j, &analyzer_cfg) {
+                Ok(dump) => {
+                    if job_dumps.insert(j.job_id, dump).is_some() {
+                        if let Some(pos) = job_dump_order.iter().position(|&id| id == j.job_id)
+                        {
+                            job_dump_order.remove(pos);
+                        }
+                    }
+                    job_dump_order.push_back(j.job_id);
+                    while job_dump_order.len() > MAX_JOB_DUMPS {
+                        if let Some(old) = job_dump_order.pop_front() {
+                            job_dumps.remove(&old);
+                        }
+                    }
+                }
+                Err(_) => {
+                    job_dumps.remove(&j.job_id);
+                    if let Some(pos) = job_dump_order.iter().position(|&id| id == j.job_id) {
+                        job_dump_order.remove(pos);
+                    }
+                }
+            }
             job_summary_order.push_back(j.job_id);
             while job_summary_order.len() > MAX_JOB_SUMMARIES {
                 if let Some(old) = job_summary_order.pop_front() {
                     job_summaries.remove(&old);
                     job_whatifs.remove(&old);
+                    job_explains.remove(&old);
+                    job_dumps.remove(&old);
+                    if let Some(pos) = job_dump_order.iter().position(|&id| id == old) {
+                        job_dump_order.remove(pos);
+                    }
                 }
             }
             print_job(&j);
@@ -732,6 +877,37 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
                     }
                     ControlCommand::Job(id) => match job_summaries.get(id) {
                         Some(j) => control::ok_response("job", j.clone()),
+                        None => control::err_response(&format!("job {id} has not retired")),
+                    },
+                    ControlCommand::Jobs(q) => {
+                        control::ok_response("jobs", control::jobs_page(&job_summaries, q))
+                    }
+                    ControlCommand::Explain(id) => match job_explains.get(id) {
+                        Some(doc) => control::ok_response("explain", doc.clone()),
+                        None if job_summaries.contains_key(id) => control::err_response(
+                            &format!("job {id} retired with no analyzed stages"),
+                        ),
+                        None => control::err_response(&format!("job {id} has not retired")),
+                    },
+                    ControlCommand::ExplainDump(id, path) => match job_dumps.get(id) {
+                        Some(dump) => match std::fs::write(path, dump.encode_ndjson()) {
+                            Ok(()) => control::ok_response(
+                                "explain-dump",
+                                Json::from_pairs(vec![
+                                    ("path", path.as_str().into()),
+                                    ("job_id", id.to_string().into()),
+                                    ("events", dump.events.len().into()),
+                                    ("complete", dump.complete.into()),
+                                ]),
+                            ),
+                            Err(e) => control::err_response(&format!("writing {path}: {e}")),
+                        },
+                        None if job_summaries.contains_key(id) => control::err_response(
+                            &format!(
+                                "job {id} has no flight window (no straggler verdict fired, \
+                                 or the dump aged out)"
+                            ),
+                        ),
                         None => control::err_response(&format!("job {id} has not retired")),
                     },
                     ControlCommand::WhatIf(id) => match job_whatifs.get(id) {

@@ -1,0 +1,292 @@
+//! Flight recorder — a bounded per-shard ring of recent raw events that
+//! freezes the implicated job's window the moment a straggler verdict
+//! fires.
+//!
+//! Postmortems need the *inputs*, not just the verdict: by the time an
+//! operator reads a straggler report the raw events have long been folded
+//! into sketches. Each ingest shard keeps a [`FlightRecorder`]; every
+//! event passes through [`FlightRecorder::record`] before analysis. When a
+//! stage verdict flags stragglers the shard calls
+//! [`FlightRecorder::freeze`], which moves the job's buffered events into
+//! a pinned [`FlightWindow`] that the ring can no longer evict; the window
+//! keeps absorbing the job's later events until eviction hands it to the
+//! collector ([`FlightRecorder::take`]), where it is attached to the
+//! [`crate::live::CompletedJob`] and dumpable as NDJSON
+//! ([`crate::analysis::explain::FlightDump`]) for bit-identical replay.
+//!
+//! The recorder is part of the shard pipeline (single-threaded, no locks)
+//! and unconditionally on: its cost is a bounded `VecDeque` push per
+//! event, inside the ingest-overhead budget measured by the
+//! `table7_overhead` bench. Jobs that never trigger a verdict cost only
+//! their ring residency — the window is materialized lazily on freeze.
+
+use crate::trace::eventlog::TaggedEvent;
+use std::collections::{HashMap, VecDeque};
+
+/// Hard cap on a frozen window, independent of the ring capacity — a
+/// runaway job cannot pin unbounded memory. Oldest events drop first and
+/// the window reports itself incomplete.
+pub const MAX_WINDOW_EVENTS: usize = 65_536;
+
+/// The frozen event window of one implicated job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlightWindow {
+    pub job_id: u64,
+    /// The job's events in arrival order.
+    pub events: Vec<TaggedEvent>,
+    /// Events of this job observed since its start (or since the recorder
+    /// first saw it).
+    pub seen: usize,
+    /// Events lost to ring/window bounds before or after the freeze.
+    pub dropped: usize,
+    /// Whether the job's `JobStart` was observed (a mid-flight restart or
+    /// ring eviction loses it).
+    pub saw_start: bool,
+}
+
+impl FlightWindow {
+    /// True when the window holds every event of the job from its start —
+    /// the precondition for bit-identical replay.
+    pub fn complete(&self) -> bool {
+        self.saw_start && self.dropped == 0 && self.events.len() == self.seen
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+struct JobMeta {
+    seen: usize,
+    dropped: usize,
+    saw_start: bool,
+}
+
+/// Bounded ring of recent events with per-job freeze. One per ingest
+/// shard; owned by the shard worker thread.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    cap: usize,
+    ring: VecDeque<TaggedEvent>,
+    meta: HashMap<u64, JobMeta>,
+    frozen: HashMap<u64, FlightWindow>,
+}
+
+impl FlightRecorder {
+    /// `capacity` bounds the shared ring (events across all unfrozen
+    /// jobs); 0 disables buffering entirely (freezes yield empty,
+    /// incomplete windows).
+    pub fn new(capacity: usize) -> Self {
+        FlightRecorder {
+            cap: capacity,
+            ring: VecDeque::with_capacity(capacity.min(1024)),
+            meta: HashMap::new(),
+            frozen: HashMap::new(),
+        }
+    }
+
+    /// Observe one event. A `JobStart` resets the job's bookkeeping (a new
+    /// incarnation supersedes whatever the ring still holds for the id).
+    pub fn record(&mut self, ev: &TaggedEvent) {
+        let job = ev.job_id;
+        if matches!(ev.event, crate::trace::eventlog::Event::JobStart { .. }) {
+            self.ring.retain(|e| e.job_id != job);
+            self.frozen.remove(&job);
+            self.meta.insert(job, JobMeta { seen: 0, dropped: 0, saw_start: true });
+        }
+        let meta = self.meta.entry(job).or_default();
+        meta.seen += 1;
+        if let Some(w) = self.frozen.get_mut(&job) {
+            w.seen = meta.seen;
+            if w.events.len() >= MAX_WINDOW_EVENTS {
+                w.dropped += 1;
+                meta.dropped += 1;
+                w.events.remove(0);
+            }
+            w.events.push(ev.clone());
+            return;
+        }
+        if self.cap == 0 {
+            meta.dropped += 1;
+            return;
+        }
+        while self.ring.len() >= self.cap {
+            if let Some(old) = self.ring.pop_front() {
+                if let Some(m) = self.meta.get_mut(&old.job_id) {
+                    m.dropped += 1;
+                }
+            }
+        }
+        self.ring.push_back(ev.clone());
+    }
+
+    /// Pin the job's buffered events into a frozen window the ring can no
+    /// longer evict. Idempotent — later verdicts for the same job keep the
+    /// existing window.
+    pub fn freeze(&mut self, job_id: u64) {
+        if self.frozen.contains_key(&job_id) {
+            return;
+        }
+        let mut events = Vec::new();
+        let mut kept = VecDeque::with_capacity(self.ring.len());
+        for e in self.ring.drain(..) {
+            if e.job_id == job_id {
+                events.push(e);
+            } else {
+                kept.push_back(e);
+            }
+        }
+        self.ring = kept;
+        let meta = self.meta.entry(job_id).or_default().clone();
+        self.frozen.insert(
+            job_id,
+            FlightWindow {
+                job_id,
+                events,
+                seen: meta.seen,
+                dropped: meta.dropped,
+                saw_start: meta.saw_start,
+            },
+        );
+    }
+
+    /// Whether the job currently has a frozen window.
+    pub fn is_frozen(&self, job_id: u64) -> bool {
+        self.frozen.contains_key(&job_id)
+    }
+
+    /// Release everything the recorder holds for a retired job, returning
+    /// the frozen window if a verdict ever fired for it.
+    pub fn take(&mut self, job_id: u64) -> Option<FlightWindow> {
+        self.ring.retain(|e| e.job_id != job_id);
+        self.meta.remove(&job_id);
+        self.frozen.remove(&job_id)
+    }
+
+    /// Events currently buffered (ring + frozen windows) — observability.
+    pub fn resident(&self) -> usize {
+        self.ring.len() + self.frozen.values().map(|w| w.events.len()).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::eventlog::Event;
+
+    fn ev(job: u64, time: f64) -> TaggedEvent {
+        TaggedEvent {
+            job_id: job,
+            event: Event::JobEnd { time },
+        }
+    }
+
+    fn start(job: u64) -> TaggedEvent {
+        TaggedEvent {
+            job_id: job,
+            event: Event::JobStart {
+                job_name: format!("j{job}"),
+                workload: "w".to_string(),
+                cluster: crate::trace::ClusterInfo {
+                    nodes: 4,
+                    cores_per_node: 8,
+                    executors_per_node: 1,
+                },
+            },
+        }
+    }
+
+    #[test]
+    fn freeze_pins_job_events_and_take_returns_them() {
+        let mut r = FlightRecorder::new(100);
+        r.record(&start(1));
+        r.record(&start(2));
+        for i in 0..5 {
+            r.record(&ev(1, i as f64));
+            r.record(&ev(2, i as f64));
+        }
+        r.freeze(1);
+        assert!(r.is_frozen(1));
+        // Post-freeze events keep accumulating into the window.
+        r.record(&ev(1, 99.0));
+        let w = r.take(1).expect("frozen window");
+        assert_eq!(w.events.len(), 7); // start + 5 + 1
+        assert_eq!(w.seen, 7);
+        assert!(w.saw_start);
+        assert!(w.complete());
+        assert!(w.events.iter().all(|e| e.job_id == 1));
+        // Job 2 untouched.
+        assert!(r.take(2).is_none());
+    }
+
+    #[test]
+    fn unfrozen_jobs_yield_nothing_and_ring_stays_bounded() {
+        let mut r = FlightRecorder::new(8);
+        r.record(&start(7));
+        for i in 0..100 {
+            r.record(&ev(7, i as f64));
+        }
+        assert!(r.resident() <= 8);
+        assert!(r.take(7).is_none());
+        assert_eq!(r.resident(), 0);
+    }
+
+    #[test]
+    fn eviction_before_freeze_marks_window_incomplete() {
+        let mut r = FlightRecorder::new(4);
+        r.record(&start(1));
+        for i in 0..10 {
+            r.record(&ev(1, i as f64)); // pushes the start out of the ring
+        }
+        r.freeze(1);
+        let w = r.take(1).unwrap();
+        assert_eq!(w.events.len(), 4);
+        assert_eq!(w.seen, 11);
+        assert!(w.dropped > 0);
+        assert!(!w.complete());
+    }
+
+    #[test]
+    fn freeze_is_idempotent() {
+        let mut r = FlightRecorder::new(16);
+        r.record(&start(1));
+        r.record(&ev(1, 1.0));
+        r.freeze(1);
+        r.record(&ev(1, 2.0));
+        r.freeze(1); // must not reset the window
+        let w = r.take(1).unwrap();
+        assert_eq!(w.events.len(), 3);
+        assert!(w.complete());
+    }
+
+    #[test]
+    fn restart_supersedes_previous_incarnation() {
+        let mut r = FlightRecorder::new(16);
+        r.record(&start(1));
+        r.record(&ev(1, 1.0));
+        r.freeze(1);
+        r.record(&start(1)); // new incarnation: old window discarded
+        assert!(!r.is_frozen(1));
+        r.record(&ev(1, 2.0));
+        r.freeze(1);
+        let w = r.take(1).unwrap();
+        assert_eq!(w.events.len(), 2); // new start + one event
+        assert!(w.complete());
+    }
+
+    #[test]
+    fn zero_capacity_disables_buffering() {
+        let mut r = FlightRecorder::new(0);
+        r.record(&start(1));
+        r.record(&ev(1, 1.0));
+        r.freeze(1);
+        let w = r.take(1).unwrap();
+        assert!(w.events.is_empty());
+        assert!(!w.complete());
+        // But a frozen window still accumulates directly.
+        let mut r = FlightRecorder::new(0);
+        r.record(&start(2));
+        r.freeze(2);
+        r.record(&ev(2, 1.0));
+        let w = r.take(2).unwrap();
+        assert_eq!(w.events.len(), 1);
+        assert!(!w.complete()); // the start was never buffered
+    }
+}

@@ -10,6 +10,7 @@
 //! | latency histograms | [`hist`] | lock-free sharded log2-bucket recorder, bit-exact merge |
 //! | span recorder | [`span`] | times every pipeline phase ([`SpanKind`]) behind a global enable flag |
 //! | structured logger | [`log`] | leveled, rate-limited, optional NDJSON diagnostics on stderr |
+//! | flight recorder | [`flight`] | bounded per-shard event ring, frozen per implicated job for bit-identical replay |
 //! | exposition | [`prom`] | Prometheus text for counters + histograms + P² quantiles, control verb `metrics-prom` and `--metrics-port` HTTP |
 //! | self-analysis | [`selfmon`] | feeds the server's own batch telemetry through [`crate::coordinator::service::AnalysisService`] |
 //!
@@ -19,12 +20,14 @@
 //! `bigroots serve` — each span site costs one relaxed atomic load.
 //! `benches/table7_overhead.rs` measures the enabled cost end to end.
 
+pub mod flight;
 pub mod hist;
 pub mod log;
 pub mod prom;
 pub mod selfmon;
 pub mod span;
 
+pub use flight::{FlightRecorder, FlightWindow};
 pub use hist::{HistSnapshot, LatencyHistogram};
 pub use prom::MetricsServer;
 pub use selfmon::{BatchSample, SelfReport, SelfTelemetry};

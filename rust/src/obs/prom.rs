@@ -108,9 +108,15 @@ pub fn render(obs: &Obs, metrics: Option<&LiveMetrics>, fleet: Option<&FleetRepo
     sample(&mut out, "bigroots_uptime_seconds", &[], obs.uptime_secs());
 
     if let Some(m) = metrics {
-        let counters: [(&str, &str, f64); 10] = [
+        let counters: [(&str, &str, f64); 11] = [
             ("bigroots_events_total", "Events ingested.", m.events_total as f64),
             ("bigroots_jobs_completed_total", "Jobs retired by lifecycle.", m.jobs_completed as f64),
+            (
+                "bigroots_jobs_retired_total",
+                "Jobs retired through the provenance pipeline (alias of jobs_completed, \
+                 named for the verdict-provenance dashboards).",
+                m.jobs_completed as f64,
+            ),
             ("bigroots_stages_analyzed_total", "Stage analyses produced.", m.stages_analyzed as f64),
             ("bigroots_events_dropped_total", "Stray post-eviction events dropped.", m.events_dropped as f64),
             ("bigroots_evictions_live_total", "Jobs evicted while still live.", m.evictions_live as f64),
@@ -224,6 +230,25 @@ pub fn render(obs: &Obs, metrics: Option<&LiveMetrics>, fleet: Option<&FleetRepo
         );
         for (kind, n) in &f.cause_incidence {
             sample(&mut out, "bigroots_fleet_cause_total", &[("feature", kind.name())], *n as f64);
+        }
+        // Verdict provenance: how many confidence-scored cause verdicts
+        // each feature has accumulated (the count behind the registry's
+        // mean-confidence aggregate).
+        family(
+            &mut out,
+            "bigroots_verdicts_total",
+            "counter",
+            "Confidence-scored cause verdicts folded into the fleet registry, by cause.",
+        );
+        for b in &f.baselines {
+            if b.verdicts > 0 {
+                sample(
+                    &mut out,
+                    "bigroots_verdicts_total",
+                    &[("cause", b.kind.name())],
+                    b.verdicts as f64,
+                );
+            }
         }
     }
 
@@ -454,6 +479,42 @@ mod tests {
         }
         // Quantiles exist for the kinds that recorded samples.
         assert!(text.contains("bigroots_span_quantile_seconds{quantile=\"0.5\",span=\"decode\"}"));
+    }
+
+    #[test]
+    fn exposition_carries_verdict_families() {
+        use crate::analysis::explain::{CauseTrace, VerdictTrace};
+        use crate::analysis::features::FeatureKind;
+        use crate::live::registry::FleetRegistry;
+        let mut reg = FleetRegistry::new(8);
+        reg.fold_traces(&[VerdictTrace {
+            stage_id: 0,
+            duration_median: 1.0,
+            duration_threshold: 1.5,
+            flagged: vec![0],
+            causes: vec![CauseTrace {
+                row: 0,
+                task_id: 0,
+                kind: FeatureKind::Cpu,
+                value: 1.0,
+                threshold: 0.5,
+                peer: "both",
+                stage_median: 0.2,
+                stage_mad: 0.1,
+                fleet_percentile: None,
+                confidence: 0.8,
+                group: 0,
+            }],
+            groups: vec![vec![FeatureKind::Cpu]],
+        }]);
+        let metrics = LiveMetrics { jobs_completed: 3, ..Default::default() };
+        let text = render(&obs_with_samples(), Some(&metrics), Some(&reg.report()));
+        validate_exposition(&text);
+        assert!(text.contains("# TYPE bigroots_verdicts_total counter"));
+        assert!(text.contains("bigroots_verdicts_total{cause=\"cpu\"} 1"));
+        // Features with no verdicts yet stay out of the family.
+        assert!(!text.contains("bigroots_verdicts_total{cause=\"disk\"}"));
+        assert!(text.contains("bigroots_jobs_retired_total 3"));
     }
 
     #[test]

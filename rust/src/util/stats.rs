@@ -58,6 +58,20 @@ pub fn median(xs: &[f64]) -> f64 {
     quantile(xs, 0.5)
 }
 
+/// Median absolute deviation: `median(|x - median(xs)|)`. The robust
+/// spread estimate behind verdict-trace effect sizes
+/// ([`crate::analysis::explain`]) — unlike stddev it ignores the very
+/// stragglers being scored. 0.0 for empty input, and for constant input
+/// (callers must guard the degenerate denominator themselves).
+pub fn mad(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = median(xs);
+    let devs: Vec<f64> = xs.iter().map(|x| (x - m).abs()).collect();
+    median(&devs)
+}
+
 /// Pearson correlation coefficient of two equal-length samples.
 /// Returns 0.0 when either side is constant (undefined correlation) — the
 /// PCC baseline treats "no variance" as "no linear relationship", which
@@ -315,6 +329,16 @@ mod tests {
     fn median_odd_even() {
         assert_eq!(median(&[5.0, 1.0, 3.0]), 3.0);
         assert_eq!(median(&[1.0, 2.0, 3.0, 10.0]), 2.5);
+    }
+
+    #[test]
+    fn mad_is_robust_spread() {
+        // median 3, |devs| = [2,1,0,1,2] → mad 1.
+        assert_eq!(mad(&[1.0, 2.0, 3.0, 4.0, 5.0]), 1.0);
+        // Robust to one wild outlier: median 3, devs [2,1,0,1,997] → 1.
+        assert_eq!(mad(&[1.0, 2.0, 3.0, 4.0, 1000.0]), 1.0);
+        assert_eq!(mad(&[7.0, 7.0, 7.0]), 0.0);
+        assert_eq!(mad(&[]), 0.0);
     }
 
     #[test]

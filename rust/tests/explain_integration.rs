@@ -1,0 +1,120 @@
+//! Integration: the verdict provenance layer end to end — a live
+//! multi-job run must retire flagged jobs with confidence-scored cause
+//! traces and a frozen flight-recorder window, and the NDJSON dump of
+//! that window must replay offline to the recorded verdict
+//! bit-identically (the PR's acceptance criterion).
+
+use bigroots::analysis::bigroots::BigRootsConfig;
+use bigroots::analysis::explain::FlightDump;
+use bigroots::live::control::{explain_json, flight_dump, job_summary_json, jobs_page};
+use bigroots::live::{JobsQuery, LiveConfig, LiveServer};
+use bigroots::sim::multi::{interleaved_workload, round_robin_specs};
+use bigroots::util::json::Json;
+use std::collections::BTreeMap;
+
+fn tmp_path(name: &str) -> String {
+    format!(
+        "{}/bigroots_explain_it_{}_{}",
+        std::env::temp_dir().display(),
+        std::process::id(),
+        name
+    )
+}
+
+/// Run an interleaved multi-job stream (every third job carries an
+/// injected anomaly) through the live server and return the retired jobs.
+fn retire_jobs() -> Vec<bigroots::live::CompletedJob> {
+    let specs = round_robin_specs(6, 0.12, 20260807);
+    let (_, events) = interleaved_workload(&specs);
+    let mut server = LiveServer::new(LiveConfig { shards: 3, ..Default::default() });
+    server.feed_all(&events);
+    server.finish().jobs
+}
+
+#[test]
+fn flight_dump_replays_bit_identically_through_the_ndjson_file() {
+    let jobs = retire_jobs();
+    // The injected anomalies guarantee at least one straggler verdict,
+    // which freezes a flight window on the job's shard.
+    let flagged: Vec<_> = jobs.iter().filter(|j| j.flight.is_some()).collect();
+    assert!(
+        !flagged.is_empty(),
+        "no job froze a flight window despite injected anomalies"
+    );
+    let cfg = BigRootsConfig::default();
+    for j in &flagged {
+        let dump = flight_dump(j, &cfg).expect("flagged job yields a dump");
+        assert!(dump.complete, "default ring capacity must hold a whole job");
+        assert!(!dump.events.is_empty());
+
+        // Through the wire format: encode → file → parse → replay. The
+        // reproduced verdict must equal the recorded one byte for byte.
+        let path = tmp_path(&format!("dump_{}.ndjson", j.job_id));
+        std::fs::write(&path, dump.encode_ndjson()).unwrap();
+        let parsed = FlightDump::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(parsed.job_id, j.job_id);
+        assert_eq!(parsed.events.len(), dump.events.len());
+        assert_eq!(
+            parsed.verdict.to_string(),
+            dump.verdict.to_string(),
+            "verdict must survive the NDJSON codec bit-exactly"
+        );
+        let replayed = parsed.verify().expect("replay must reproduce the verdict");
+        assert_eq!(replayed.to_string(), dump.verdict.to_string());
+    }
+}
+
+#[test]
+fn provenance_documents_and_pagination_cover_retired_jobs() {
+    let jobs = retire_jobs();
+    assert!(!jobs.is_empty());
+    let mut store: BTreeMap<u64, Json> = BTreeMap::new();
+    for j in &jobs {
+        let mut s = job_summary_json(j);
+        s.set("retired_at", Json::Num(j.job_id as f64));
+        store.insert(j.job_id, s);
+
+        let doc = explain_json(j).expect("every analyzed job explains");
+        let conf = doc.get("max_confidence").as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&conf), "confidence {conf} outside [0, 1]");
+        assert_eq!(
+            doc.get("stages").as_arr().unwrap().len(),
+            j.analyses.len(),
+            "one verdict trace per analyzed stage"
+        );
+        // Jobs whose analyses identified causes name them in the doc; a
+        // frozen window shows up in the summary the `jobs` filter sees.
+        let causes: usize = j.analyses.iter().map(|a| a.causes.len()).sum();
+        if causes > 0 {
+            assert!(!doc.get("causes").as_arr().unwrap().is_empty());
+        }
+        if j.flight.is_some() {
+            assert!(!matches!(store[&j.job_id].get("flight"), Json::Null));
+        }
+    }
+    // Keyset pagination at page size 1 walks every retired job exactly
+    // once, in id order, and terminates with a null cursor.
+    let mut q = JobsQuery { limit: 1, ..JobsQuery::default() };
+    let mut walked = Vec::new();
+    loop {
+        let page = jobs_page(&store, &q);
+        for row in page.get("jobs").as_arr().unwrap() {
+            walked.push(row.get("job_id").as_str().unwrap().parse::<u64>().unwrap());
+        }
+        match page.get("next_cursor").as_str() {
+            Some(c) => q.cursor = Some(c.parse().unwrap()),
+            None => break,
+        }
+    }
+    let expected: Vec<u64> = store.keys().copied().collect();
+    assert_eq!(walked, expected);
+    // A min-confidence filter at the ceiling excludes unflagged jobs.
+    let strict = jobs_page(
+        &store,
+        &JobsQuery { min_confidence: Some(1.0), ..JobsQuery::default() },
+    );
+    for row in strict.get("jobs").as_arr().unwrap() {
+        assert!(row.get("max_confidence").as_f64().unwrap() >= 1.0);
+    }
+}
