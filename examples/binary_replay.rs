@@ -1,0 +1,101 @@
+//! Binary-capture replay — the wire format's end-to-end demo and CI gate.
+//!
+//! Simulates a multi-job fleet, writes the event stream twice (canonical
+//! NDJSON and the `.bew` binary wire capture), re-ingests the binary file
+//! through the zero-copy [`MmapReplaySource`], and **exits non-zero** if
+//! the resulting `FleetReport` differs in any field from the NDJSON run —
+//! the "parser disappeared, nothing else changed" proof.
+//!
+//! ```sh
+//! cargo run --release --example binary_replay
+//! ```
+
+use bigroots::live::{EventSource, LiveConfig, LiveReport, LiveServer, MmapReplaySource, SourcePoll};
+use bigroots::sim::multi::{interleaved_workload, round_robin_specs};
+use bigroots::trace::eventlog::parse_tagged_events;
+use bigroots::trace::wire;
+
+fn main() {
+    let scale = std::env::args()
+        .skip_while(|a| a != "--scale")
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.15);
+
+    // A 4-job interleaved fleet: enough traffic to exercise every frame
+    // kind (job lifecycle, tasks, resource samples, injections).
+    let (_, events) = interleaved_workload(&round_robin_specs(4, scale, 11));
+    println!("simulated {} events across 4 jobs (scale {scale})", events.len());
+
+    let dir = std::env::temp_dir();
+    let ndjson_path = format!("{}/binary_replay_{}.ndjson", dir.display(), std::process::id());
+    let bew_path = format!("{}/binary_replay_{}.bew", dir.display(), std::process::id());
+
+    // Serialize both ways and report the size win.
+    let ndjson: String = events.iter().map(|e| e.encode().to_string() + "\n").collect();
+    let binary = wire::encode_stream(&events);
+    std::fs::write(&ndjson_path, &ndjson).expect("write ndjson");
+    std::fs::write(&bew_path, &binary).expect("write capture");
+    println!(
+        "ndjson: {} bytes → wire: {} bytes ({:.2}x smaller)",
+        ndjson.len(),
+        binary.len(),
+        ndjson.len() as f64 / binary.len() as f64
+    );
+
+    // Run 1: the text path — parse the NDJSON log, feed the server.
+    let parsed = parse_tagged_events(&ndjson).expect("ndjson parses");
+    let mut server = LiveServer::new(LiveConfig { shards: 4, ..Default::default() });
+    server.feed_all(&parsed);
+    let report_text = server.finish();
+
+    // Run 2: the binary path — mmap the capture, decode frames in place.
+    let mut source = MmapReplaySource::open(&bew_path).expect("open capture");
+    println!(
+        "replaying {} ({})",
+        bew_path,
+        if source.is_mapped() { "mmap'd" } else { "heap-read fallback" }
+    );
+    let mut server = LiveServer::new(LiveConfig { shards: 4, ..Default::default() });
+    loop {
+        match source.poll().expect("poll capture") {
+            SourcePoll::Events(evs) => {
+                for e in evs {
+                    server.feed(e);
+                }
+            }
+            SourcePoll::Idle => server.pump(),
+            SourcePoll::End => break,
+        }
+    }
+    let report_bin = server.finish();
+
+    let _ = std::fs::remove_file(&ndjson_path);
+    let _ = std::fs::remove_file(&bew_path);
+
+    print_summary("ndjson", &report_text);
+    print_summary("binary", &report_bin);
+
+    if report_bin.fleet != report_text.fleet {
+        eprintln!("FAIL: FleetReport diverged between NDJSON and binary ingest");
+        std::process::exit(1);
+    }
+    if report_bin.total_stages() != report_text.total_stages()
+        || report_bin.jobs.len() != report_text.jobs.len()
+    {
+        eprintln!("FAIL: job/stage totals diverged between NDJSON and binary ingest");
+        std::process::exit(1);
+    }
+    println!("OK: binary replay is indistinguishable from the NDJSON run");
+}
+
+fn print_summary(tag: &str, r: &LiveReport) {
+    println!(
+        "[{tag}] jobs={} stages={} tasks={} stragglers={} (rate {:.1}%)",
+        r.jobs.len(),
+        r.fleet.stages,
+        r.fleet.tasks,
+        r.fleet.straggler_tasks,
+        100.0 * r.fleet.straggler_tasks as f64 / r.fleet.tasks.max(1) as f64
+    );
+}

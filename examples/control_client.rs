@@ -36,6 +36,17 @@
 //! cargo run --release --example control_client -- \
 //!     127.0.0.1:7171 127.0.0.1:7172 127.0.0.1:9191
 //! ```
+//!
+//! Two extra modes support the binary-ingest e2e:
+//!
+//! - `--emit <path>` writes the exact 3-job stream this client would
+//!   stream, as a `.bew` wire capture, and exits — so a workflow can feed
+//!   the same events through `bigroots serve --input <path>` (mmap'd
+//!   binary replay) instead of the TCP event port;
+//! - an event address of `-` skips the streaming step (the server is
+//!   ingesting its own source); every control-plane gate still runs and
+//!   expects the same three jobs, and the flight dump is requested as a
+//!   binary `.bew` container to exercise that parse path.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
@@ -104,23 +115,49 @@ fn span_count(text: &str, span: &str) -> f64 {
 fn main() {
     let mut argv = std::env::args().skip(1);
     let event_addr = argv.next().unwrap_or_else(|| "127.0.0.1:7171".to_string());
-    let control_addr = argv.next().unwrap_or_else(|| "127.0.0.1:7172".to_string());
-    let metrics_addr = argv.next(); // optional --metrics-port endpoint to scrape
 
-    // Stream three simulated jobs into the event port; job 2 gets an
+    // The canonical 3-job stream every mode shares; job 2 gets an
     // injected CPU anomaly (round_robin_specs injects every third job),
     // so at least one straggler verdict — and one frozen flight window —
     // is guaranteed downstream.
     let specs = round_robin_specs(3, 0.15, 7);
     let (traces, events) = interleaved_workload(&specs);
     let job_id = traces[0].0;
-    let mut ev = connect_retry(&event_addr, "event port");
-    for e in &events {
-        ev.write_all(format!("{}\n", e.encode().to_string()).as_bytes())
-            .unwrap_or_else(|err| fail(&format!("streaming events: {err}")));
+
+    // `--emit <path>`: write the stream as a wire capture and exit, so a
+    // workflow can replay the identical events via `serve --input`.
+    if event_addr == "--emit" {
+        let path = argv.next().unwrap_or_else(|| fail("--emit requires a path"));
+        std::fs::write(&path, bigroots::trace::wire::encode_stream(&events))
+            .unwrap_or_else(|e| fail(&format!("writing capture {path}: {e}")));
+        println!(
+            "emitted {} events for {} jobs to {path}",
+            events.len(),
+            traces.len()
+        );
+        return;
     }
-    drop(ev); // clean disconnect: the server keeps serving (persistent mode)
-    println!("streamed {} events for {} jobs", events.len(), traces.len());
+
+    let control_addr = argv.next().unwrap_or_else(|| "127.0.0.1:7172".to_string());
+    let metrics_addr = argv.next(); // optional --metrics-port endpoint to scrape
+
+    // Stream the jobs into the event port — unless the server is feeding
+    // itself (event address `-`), e.g. replaying an `--emit` capture.
+    let streamed = event_addr != "-";
+    if streamed {
+        let mut ev = connect_retry(&event_addr, "event port");
+        for e in &events {
+            ev.write_all(format!("{}\n", e.encode().to_string()).as_bytes())
+                .unwrap_or_else(|err| fail(&format!("streaming events: {err}")));
+        }
+        drop(ev); // clean disconnect: the server keeps serving (persistent mode)
+        println!("streamed {} events for {} jobs", events.len(), traces.len());
+    } else {
+        println!(
+            "event streaming skipped — server ingests its own source ({} events expected)",
+            events.len()
+        );
+    }
 
     let mut ctrl = BufReader::new(connect_retry(&control_addr, "control port"));
 
@@ -257,8 +294,9 @@ fn main() {
 
     // Dump the flight window server-side, then re-parse and replay it
     // here: the reproduced verdict must match the recorded one byte for
-    // byte.
-    let dump_path = "flight_dump.ndjson";
+    // byte. In self-ingest mode request the binary container instead, so
+    // the `.bew` dump write + sniffing parse path gets end-to-end cover.
+    let dump_path = if streamed { "flight_dump.ndjson" } else { "flight_dump.bew" };
     let dumped = query(&mut ctrl, &format!("explain {flagged_id} dump {dump_path}"));
     let written = dumped
         .get("data")
@@ -266,14 +304,15 @@ fn main() {
         .as_str()
         .unwrap_or_else(|| fail("explain-dump response carries no path"))
         .to_string();
-    let text = std::fs::read_to_string(&written)
+    let bytes = std::fs::read(&written)
         .unwrap_or_else(|e| fail(&format!("reading dump {written}: {e}")));
-    let dump = bigroots::analysis::explain::FlightDump::parse(&text)
+    let dump = bigroots::analysis::explain::FlightDump::parse_any(&bytes)
         .unwrap_or_else(|e| fail(&format!("parsing dump {written}: {e}")));
     dump.verify()
         .unwrap_or_else(|e| fail(&format!("flight replay mismatch: {e}")));
     println!(
-        "explain dump: {} events replayed, verdict reproduced bit-identically",
+        "explain dump ({}): {} events replayed, verdict reproduced bit-identically",
+        if streamed { "ndjson" } else { "binary" },
         dump.events.len()
     );
 

@@ -7,7 +7,9 @@
 //!
 //! - **decode**: NDJSON event lines through the borrowed-token decoder
 //!   (`codec::decode_event_line`) vs the generic `Json` DOM path
-//!   (`Json::parse` + `Event::decode`) — the all-unique workload's win.
+//!   (`Json::parse` + `Event::decode`) — the all-unique workload's win —
+//!   vs the binary wire format (`trace/wire.rs`), which drops the text
+//!   scan and float parse entirely (`decode/binary`).
 //! - **stats**: the reconstructed pre-PR kernel (full stable sort per
 //!   column, `Vec::position` node slots, fresh buffers — `LegacyKernel`
 //!   below) vs the scratch-reusing `NativeBackend` vs a `CachedBackend`
@@ -32,6 +34,7 @@ use bigroots::sim::multi::{interleaved_workload, round_robin_specs, MultiJobSpec
 use bigroots::testing::bench::{black_box, Bench};
 use bigroots::trace::codec::decode_event_line;
 use bigroots::trace::eventlog::{parse_tagged_events, Event, TaggedEvent};
+use bigroots::trace::wire;
 use bigroots::util::json::Json;
 
 /// The pre-PR stats kernel, reconstructed for the baseline leg: fresh
@@ -180,6 +183,20 @@ fn main() {
     bench.run("decode/parse_tagged_events", unique.len() as f64, || {
         black_box(parse_tagged_events(&unique_text).expect("valid stream"));
     });
+    // The binary wire format: no text scan, no float parse — frames are
+    // bounds-checked fixed-width reads (trace/wire.rs). Same logical
+    // stream as the NDJSON rows, so the rows compare directly.
+    let unique_wire = wire::encode_stream(&unique);
+    assert_eq!(
+        wire::decode_stream(&unique_wire).expect("valid capture"),
+        unique,
+        "wire decode parity"
+    );
+    bench.run("decode/binary", unique.len() as f64, || {
+        let ev = wire::decode_stream(&unique_wire).expect("valid capture");
+        assert_eq!(ev.len(), unique.len());
+        black_box(ev);
+    });
 
     // --- stats kernel: fresh scratch vs reuse vs memo ---------------------
     let sf = {
@@ -243,6 +260,16 @@ fn main() {
         let ev = parse_tagged_events(&repeated_text).expect("valid stream");
         assert_eq!(live_run(&ev, 256).0, want_repeated);
     });
+    // Binary ingest end to end: wire decode instead of any text parse.
+    let repeated_wire = wire::encode_stream(&repeated);
+    bench.run("e2e/unique/binary", unique.len() as f64, || {
+        let ev = wire::decode_stream(&unique_wire).expect("valid capture");
+        assert_eq!(live_run(&ev, 256).0, want_unique);
+    });
+    bench.run("e2e/repeated/binary", repeated.len() as f64, || {
+        let ev = wire::decode_stream(&repeated_wire).expect("valid capture");
+        assert_eq!(live_run(&ev, 256).0, want_repeated);
+    });
 
     // --- headline ratios ----------------------------------------------------
     let tp = |name: &str| {
@@ -257,6 +284,17 @@ fn main() {
     let fast = tp("decode/zero-alloc");
     if dom > 0.0 {
         println!("\nzero-alloc decode vs Json DOM: {:.2}x events/sec", fast / dom);
+    }
+    let binary = tp("decode/binary");
+    if fast > 0.0 {
+        println!(
+            "binary wire decode vs zero-alloc NDJSON: {:.2}x events/sec \
+             ({} wire bytes vs {} NDJSON bytes, {:.2}x smaller)",
+            binary / fast,
+            unique_wire.len(),
+            unique_text.len(),
+            unique_text.len() as f64 / unique_wire.len() as f64
+        );
     }
     let legacy = tp("stats/legacy-sort");
     let scratch = tp("stats/scratch-reuse");

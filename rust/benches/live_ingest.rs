@@ -11,10 +11,11 @@
 //! Run: `cargo bench --bench live_ingest [-- --quick]`
 
 use bigroots::coordinator::{AnalysisService, ServiceConfig};
-use bigroots::live::{LiveConfig, LiveServer};
+use bigroots::live::{EventSource, LiveConfig, LiveServer, MmapReplaySource, SourcePoll};
 use bigroots::sim::multi::{interleaved_workload, round_robin_specs};
 use bigroots::testing::bench::{black_box, Bench};
 use bigroots::trace::eventlog::TaggedEvent;
+use bigroots::trace::wire;
 
 fn service_run(events: &[TaggedEvent], workers: usize) -> usize {
     let mut svc = AnalysisService::new(ServiceConfig {
@@ -57,6 +58,38 @@ fn main() {
             black_box(live_run(&eight_jobs, shards));
         });
     }
+
+    // --- binary capture replay through the mmap source ----------------------
+    // The same stream as a wire capture on disk, ingested through
+    // `MmapReplaySource` (zero-copy frame decode off the mapped pages)
+    // into the same 4-shard server — the parser-free ingest row.
+    let capture_path = {
+        let dir = std::env::temp_dir();
+        format!("{}/bigroots_bench_{}.bew", dir.display(), std::process::id())
+    };
+    std::fs::write(&capture_path, wire::encode_stream(&eight_jobs))
+        .expect("write bench capture");
+    let mmap_run = |path: &str| -> usize {
+        let mut source = MmapReplaySource::open(path).expect("open capture");
+        let mut server = LiveServer::new(LiveConfig { shards: 4, ..Default::default() });
+        loop {
+            match source.poll().expect("poll capture") {
+                SourcePoll::Events(evs) => {
+                    for e in evs {
+                        server.feed(e);
+                    }
+                }
+                SourcePoll::Idle => server.pump(),
+                SourcePoll::End => break,
+            }
+        }
+        server.finish().total_stages()
+    };
+    assert_eq!(mmap_run(&capture_path), want, "mmap-replay stage-count parity");
+    bench.run("ingest/live/mmap-replay", n, || {
+        black_box(mmap_run(&capture_path));
+    });
+    let _ = std::fs::remove_file(&capture_path);
 
     // --- headline comparison ------------------------------------------------
     let results = bench.results();

@@ -45,6 +45,7 @@ use super::features::{extract_all, FeatureKind, StageFeatures};
 use super::stats::{NativeBackend, StatsBackend};
 use crate::live::registry::FeatureSnapshot;
 use crate::trace::eventlog::{events_to_trace, parse_tagged_events, TaggedEvent};
+use crate::trace::wire;
 use crate::util::json::Json;
 use crate::util::stats::{mad, median};
 
@@ -334,6 +335,9 @@ pub fn job_verdict_json(job_id: u64, incarnation: u32, traces: &[VerdictTrace]) 
 
 const DUMP_KIND: &str = "bigroots-flight-dump";
 const DUMP_VERSION: u64 = 1;
+/// Magic prefix of the *binary* dump container (`.bew` dumps): the JSON
+/// header travels length-prefixed, the event window as wire frames.
+const DUMP_MAGIC: [u8; 4] = *b"BGRD";
 
 /// f64 → bit-exact hex string (same codec as [`crate::live::persist`]).
 fn fbits(x: f64) -> Json {
@@ -429,9 +433,8 @@ pub struct FlightDump {
 }
 
 impl FlightDump {
-    /// Serialize: one header line, then one NDJSON line per event.
-    pub fn encode_ndjson(&self) -> String {
-        let header = Json::from_pairs(vec![
+    fn header_json(&self) -> Json {
+        Json::from_pairs(vec![
             ("kind", DUMP_KIND.into()),
             ("version", DUMP_VERSION.into()),
             ("job", self.job_id.into()),
@@ -443,21 +446,10 @@ impl FlightDump {
                 Json::Arr(self.baselines.iter().map(encode_baseline).collect()),
             ),
             ("verdict", self.verdict.clone()),
-        ]);
-        let mut out = header.to_string();
-        out.push('\n');
-        for e in &self.events {
-            out.push_str(&e.encode().to_string());
-            out.push('\n');
-        }
-        out
+        ])
     }
 
-    /// Parse a dump file's text back into its parts.
-    pub fn parse(text: &str) -> Result<FlightDump, String> {
-        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
-        let header_line = lines.next().ok_or("empty flight dump")?;
-        let header = Json::parse(header_line).map_err(|e| format!("dump header: {e}"))?;
+    fn from_header(header: &Json, events: Vec<TaggedEvent>) -> Result<FlightDump, String> {
         if header.get("kind").as_str() != Some(DUMP_KIND) {
             return Err(format!("not a flight dump (kind != {DUMP_KIND})"));
         }
@@ -472,12 +464,6 @@ impl FlightDump {
                 .collect::<Result<Vec<_>, _>>()?,
             _ => return Err("dump header: baselines must be an array".to_string()),
         };
-        let body: String = lines.fold(String::new(), |mut acc, l| {
-            acc.push_str(l);
-            acc.push('\n');
-            acc
-        });
-        let events = parse_tagged_events(&body).map_err(|e| format!("dump events: {e}"))?;
         Ok(FlightDump {
             job_id: header.get("job").as_u64().ok_or("dump header: missing job")?,
             incarnation: header
@@ -490,6 +476,82 @@ impl FlightDump {
             verdict: header.get("verdict").clone(),
             events,
         })
+    }
+
+    /// Serialize: one header line, then one NDJSON line per event.
+    pub fn encode_ndjson(&self) -> String {
+        let mut out = self.header_json().to_string();
+        out.push('\n');
+        for e in &self.events {
+            out.push_str(&e.encode().to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Serialize the binary container: `BGRD` magic, u32 LE length of the
+    /// JSON header, the header bytes, then the event window as a wire
+    /// stream (`trace/wire.rs` frames). Same information as
+    /// [`FlightDump::encode_ndjson`], parser-free event decode.
+    pub fn encode_binary(&self) -> Vec<u8> {
+        let header = self.header_json().to_string();
+        let stream = wire::encode_stream(&self.events);
+        let mut out = Vec::with_capacity(8 + header.len() + stream.len());
+        out.extend_from_slice(&DUMP_MAGIC);
+        out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        out.extend_from_slice(&stream);
+        out
+    }
+
+    /// Parse a dump file's text back into its parts.
+    pub fn parse(text: &str) -> Result<FlightDump, String> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header_line = lines.next().ok_or("empty flight dump")?;
+        let header = Json::parse(header_line).map_err(|e| format!("dump header: {e}"))?;
+        let body: String = lines.fold(String::new(), |mut acc, l| {
+            acc.push_str(l);
+            acc.push('\n');
+            acc
+        });
+        let events = parse_tagged_events(&body).map_err(|e| format!("dump events: {e}"))?;
+        Self::from_header(&header, events)
+    }
+
+    /// Does this buffer hold a binary flight dump?
+    pub fn is_binary(bytes: &[u8]) -> bool {
+        bytes.len() >= 4 && bytes[..4] == DUMP_MAGIC
+    }
+
+    /// Parse a binary dump produced by [`FlightDump::encode_binary`].
+    pub fn parse_binary(bytes: &[u8]) -> Result<FlightDump, String> {
+        if !Self::is_binary(bytes) {
+            return Err("not a binary flight dump (bad magic)".to_string());
+        }
+        let len_bytes = bytes
+            .get(4..8)
+            .ok_or("binary dump truncated before header length")?;
+        let header_len = u32::from_le_bytes(len_bytes.try_into().expect("4-byte slice")) as usize;
+        let header_bytes = bytes
+            .get(8..8 + header_len)
+            .ok_or("binary dump truncated inside header")?;
+        let header_text = std::str::from_utf8(header_bytes)
+            .map_err(|e| format!("dump header not UTF-8: {e}"))?;
+        let header = Json::parse(header_text).map_err(|e| format!("dump header: {e}"))?;
+        let events = wire::decode_stream(&bytes[8 + header_len..])
+            .map_err(|e| format!("dump events: {e}"))?;
+        Self::from_header(&header, events)
+    }
+
+    /// Parse either container, sniffing the magic.
+    pub fn parse_any(bytes: &[u8]) -> Result<FlightDump, String> {
+        if Self::is_binary(bytes) {
+            Self::parse_binary(bytes)
+        } else {
+            let text =
+                std::str::from_utf8(bytes).map_err(|e| format!("dump not UTF-8: {e}"))?;
+            Self::parse(text)
+        }
     }
 
     /// Re-run the full pipeline over the dumped event window — rebuild the
@@ -736,6 +798,54 @@ mod tests {
         assert!(FlightDump::parse("").is_err());
         assert!(FlightDump::parse("{\"kind\":\"nope\"}\n").is_err());
         assert!(FlightDump::parse("not json\n").is_err());
+    }
+
+    #[test]
+    fn binary_dump_roundtrips_and_sniffs() {
+        let w = workloads::wordcount(0.25);
+        let mut eng = Engine::new(SimConfig { seed: 29, ..Default::default() });
+        let t = eng.run(
+            "bindump-test",
+            w.name,
+            &w.stages,
+            &InjectionPlan::intermittent(AnomalyKind::Cpu, 1, 15.0, 10.0, 300.0),
+        );
+        let events: Vec<TaggedEvent> = crate::trace::eventlog::trace_to_events(&t)
+            .into_iter()
+            .map(|event| TaggedEvent { job_id: 4, event })
+            .collect();
+        let dump0 = FlightDump {
+            job_id: 4,
+            incarnation: 2,
+            complete: true,
+            config: BigRootsConfig::default(),
+            baselines: Vec::new(),
+            verdict: Json::Null,
+            events,
+        };
+        let verdict = dump0.replay().expect("replay");
+        let dump = FlightDump { verdict, ..dump0 };
+
+        let bytes = dump.encode_binary();
+        assert!(FlightDump::is_binary(&bytes));
+        assert!(!FlightDump::is_binary(dump.encode_ndjson().as_bytes()));
+        let back = FlightDump::parse_binary(&bytes).expect("parse_binary");
+        assert_eq!(back, dump);
+        back.verify().expect("bit-identical replay from binary dump");
+
+        // parse_any picks the right container for both encodings.
+        assert_eq!(FlightDump::parse_any(&bytes).unwrap(), dump);
+        assert_eq!(
+            FlightDump::parse_any(dump.encode_ndjson().as_bytes()).unwrap(),
+            dump
+        );
+        // Re-encode is byte-identical: the container is canonical.
+        assert_eq!(back.encode_binary(), bytes);
+
+        // Truncations error, never panic.
+        for cut in [0, 3, 6, 9, bytes.len() - 1] {
+            assert!(FlightDump::parse_binary(&bytes[..cut]).is_err());
+        }
     }
 
     #[test]

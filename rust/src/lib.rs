@@ -100,6 +100,21 @@
 //!   routing uses rendezvous hashing ([`util::shard`]), so skewed tenant
 //!   id schemes spread evenly. `benches/hotpath.rs` tracks decode-only,
 //!   stats-only and end-to-end events/sec in `BENCH_hotpath.json`.
+//! - [`trace::wire`] — the **compact binary event wire format**: a
+//!   length-prefixed frame per event (fixed-width LE ids and raw
+//!   `f64::to_bits` floats, varint-prefixed strings, per-frame kind tag,
+//!   `BGRW` magic + version header with a tagged/untagged flag), with a
+//!   bit-identical `Event` round-trip and an [`trace::wire::EventCodec`]
+//!   seam shared by the NDJSON and binary paths. On replay the parser
+//!   disappears entirely: [`live::MmapReplaySource`] maps a `.bew`
+//!   capture (raw `mmap(2)`, heap-read fallback) and decodes frames
+//!   straight off the mapped pages, [`live::BinaryTailSource`] follows a
+//!   growing capture with partial-frame resync and rotation detection,
+//!   and `bigroots convert` streams between encodings (`--format`
+//!   plumbs through `serve`/`explain`/`whatif`). Round-trip, NaN-bit
+//!   and corruption properties live in `rust/tests/wire_roundtrip.rs`;
+//!   `rust/tests/wire_integration.rs` pins FleetReport equality between
+//!   NDJSON and binary ingest. See `docs/WIRE_FORMAT.md`.
 //! - **L2 (python/compile/model.py)** — the batched per-stage feature
 //!   statistics graph in JAX, lowered once to HLO text.
 //! - **L1 (python/compile/kernels/)** — Pallas kernels for the fused

@@ -11,9 +11,12 @@
 //! ```
 //!
 //! - [`source`] — pluggable transports ([`source::EventSource`]): tail a
-//!   growing NDJSON file with rotation detection, accept line-delimited
-//!   TCP clients (mid-line disconnects are logged and counted, never
-//!   silently dropped), read stdin, or replay memory;
+//!   growing NDJSON *or binary* capture with rotation detection (binary
+//!   frames resync across partial appends), accept line-delimited TCP
+//!   clients (mid-line disconnects are logged and counted, never
+//!   silently dropped), read stdin, replay memory, or walk an mmap'd
+//!   binary capture with zero-copy frame decode
+//!   ([`source::MmapReplaySource`]);
 //! - [`ingest`] — [`ingest::LiveServer`]: one worker thread per shard
 //!   behind a bounded queue (per-shard backpressure), each running demux,
 //!   watermark accounting, feature extraction and the BigRoots rules for
@@ -67,4 +70,7 @@ pub use ingest::{CompletedJob, LiveConfig, LiveMetrics, LiveReport, LiveServer};
 pub use lifecycle::{Lifecycle, LifecycleConfig};
 pub use persist::{load_snapshot, save_snapshot};
 pub use registry::{FeatureSnapshot, FleetFlag, FleetRegistry, FleetReport, QuantileSketch};
-pub use source::{EventSource, MemorySource, SourcePoll, StdinSource, TailSource, TcpSource};
+pub use source::{
+    BinaryTailSource, EventSource, MemorySource, MmapReplaySource, SourcePoll, StdinSource,
+    TailSource, TcpSource,
+};

@@ -7,6 +7,7 @@
 //! bigroots analyze    — offline root-cause analysis of a trace file
 //! bigroots whatif     — counterfactual ranking: completion time saved per removed cause
 //! bigroots stream     — streaming analysis of an event log (ndjson)
+//! bigroots convert    — NDJSON ↔ compact binary wire format (trace/wire.rs)
 //! bigroots explain    — replay a flight-recorder dump, verify the verdict reproduces
 
 //! bigroots verify     — Table III single-AG verification (BigRoots vs PCC)
@@ -50,6 +51,12 @@ fn main() {
                 "counterfactual what-if: rank detected causes by estimated completion-time saved",
             )
             .opt("input", "", "trace file to analyze (omit to simulate --workload instead)")
+            .opt(
+                "format",
+                "auto",
+                "--input format: auto (sniffed) | trace (trace.json) | ndjson (event log) \
+                 | binary (.bew event capture)",
+            )
             .opt("workload", "NaiveBayes", "workload to simulate when no --input is given")
             .opt("scale", "1.0", "task-count scale factor (simulated trace)")
             .opt("seed", "42", "rng seed (simulated trace)")
@@ -69,15 +76,26 @@ fn main() {
         )
         .subcommand(
             Command::new(
+                "convert",
+                "convert an event capture between NDJSON and the compact binary wire \
+                 format (streaming; reports the compression ratio)",
+            )
+            .opt_req("input", "source capture: NDJSON event log or binary (.bew)")
+            .opt_req("out", "destination path")
+            .opt("to", "auto", "target format: auto (the opposite of the input) | binary | ndjson"),
+        )
+        .subcommand(
+            Command::new(
                 "explain",
                 "replay a flight-recorder dump offline and verify the recorded verdict \
                  reproduces bit-identically",
             )
             .opt_req(
                 "replay",
-                "flight dump NDJSON path (written by `explain <id> dump <path>` on the \
-                 serve control socket)",
+                "flight dump path (written by `explain <id> dump <path>` on the serve \
+                 control socket; NDJSON, or binary when dumped to a .bew path)",
             )
+            .opt("format", "auto", "dump container: auto (sniffed) | ndjson | binary")
             .flag("verbose", "print the full provenance document, not just the verdict line"),
         )
         .subcommand(
@@ -85,7 +103,14 @@ fn main() {
                 .opt("tail", "", "follow a growing job-tagged ndjson event log (live mode)")
                 .opt("listen", "", "accept line-delimited events over TCP, e.g. 127.0.0.1:7070")
                 .flag("stdin", "read the event stream from stdin (live mode)")
-                .opt("input", "", "replay a job-tagged ndjson event log (omit to simulate --jobs)")
+                .opt("input", "", "replay a job-tagged event capture (omit to simulate --jobs)")
+                .opt(
+                    "format",
+                    "auto",
+                    "--tail/--input encoding: auto (sniffed; .bew implies binary) | \
+                     ndjson | binary — binary --input replays through the zero-copy \
+                     mmap source",
+                )
                 .opt("jobs", "8", "jobs to simulate when no input/tail/listen is given")
                 .opt("scale", "0.3", "workload scale for simulated jobs")
                 .opt("seed", "42", "base seed for simulated jobs")
@@ -172,6 +197,7 @@ fn main() {
         "analyze" => cmd_analyze(&args),
         "whatif" => cmd_whatif(&args),
         "stream" => cmd_stream(&args),
+        "convert" => cmd_convert(&args),
         "explain" => cmd_explain(&args),
         "serve" => cmd_serve(&args),
         "verify" => cmd_verify(&args),
@@ -362,10 +388,10 @@ fn cmd_whatif(args: &bigroots::util::cli::Args) -> i32 {
         let mut eng = Engine::new(bigroots::sim::SimConfig { seed, ..Default::default() });
         eng.run(&format!("{name}-{inject}"), w.name, &w.stages, &plan)
     } else {
-        match codec::load(&input) {
+        match load_input_trace(&input, &args.get_or("format", "auto")) {
             Ok(t) => t,
             Err(e) => {
-                eprintln!("loading {input}: {e:#}");
+                eprintln!("loading {input}: {e}");
                 return 1;
             }
         }
@@ -396,6 +422,286 @@ fn cmd_whatif(args: &bigroots::util::cli::Args) -> i32 {
     let cfg = WhatIfConfig { seed: args.get_u64("seed", 42), ..Default::default() };
     let report = whatif::analyze_trace(&trace, &analysis.per_stage, fleet.as_ref(), &cfg);
     print!("{}", report.render());
+    0
+}
+
+/// Load an offline input as a [`bigroots::trace::JobTrace`], whatever its
+/// container: a `trace.json`, an NDJSON event log, or a binary wire
+/// capture. Event logs must hold exactly one job's stream.
+fn load_input_trace(input: &str, format: &str) -> Result<bigroots::trace::JobTrace, String> {
+    use bigroots::trace::wire;
+
+    let events_to_single_trace =
+        |events: Vec<eventlog::TaggedEvent>| -> Result<bigroots::trace::JobTrace, String> {
+            let mut jobs: Vec<u64> = events.iter().map(|e| e.job_id).collect();
+            jobs.sort_unstable();
+            jobs.dedup();
+            if jobs.len() > 1 {
+                return Err(format!(
+                    "event log holds {} jobs ({:?}…) — whatif analyzes one; demux it or \
+                     use `bigroots serve`",
+                    jobs.len(),
+                    &jobs[..jobs.len().min(4)]
+                ));
+            }
+            let plain: Vec<_> = events.into_iter().map(|e| e.event).collect();
+            eventlog::events_to_trace(&plain)
+        };
+    match format {
+        "trace" => codec::load(input).map_err(|e| format!("{e:#}")),
+        "ndjson" => {
+            let text = std::fs::read_to_string(input).map_err(|e| e.to_string())?;
+            let events = eventlog::parse_tagged_events(&text).map_err(|e| e.to_string())?;
+            events_to_single_trace(events)
+        }
+        "binary" => {
+            let bytes = std::fs::read(input).map_err(|e| e.to_string())?;
+            let events = wire::decode_stream(&bytes).map_err(|e| e.to_string())?;
+            events_to_single_trace(events)
+        }
+        "auto" => {
+            let bytes = std::fs::read(input).map_err(|e| e.to_string())?;
+            if wire::is_binary(&bytes) {
+                let events = wire::decode_stream(&bytes).map_err(|e| e.to_string())?;
+                return events_to_single_trace(events);
+            }
+            let text = String::from_utf8(bytes).map_err(|e| format!("not UTF-8: {e}"))?;
+            // An event log's first line carries an "event" key; a trace
+            // file is one big object with "tasks"/"stages".
+            let first = text.lines().find(|l| !l.trim().is_empty()).unwrap_or("");
+            let looks_like_events = bigroots::util::json::Json::parse(first.trim())
+                .map(|j| j.get("event").as_str().is_some())
+                .unwrap_or(false);
+            if looks_like_events {
+                let events = eventlog::parse_tagged_events(&text).map_err(|e| e.to_string())?;
+                events_to_single_trace(events)
+            } else {
+                codec::load(input).map_err(|e| format!("{e:#}"))
+            }
+        }
+        other => Err(format!("unknown format '{other}' (auto | trace | ndjson | binary)")),
+    }
+}
+
+/// `bigroots convert` — stream an event capture from one encoding to the
+/// other through the incremental readers (`NdjsonTail` / `BinaryTail`),
+/// never holding the whole input in memory as events, and preserve the
+/// source's tag mode (a job-tagged stream stays tagged, an untagged one
+/// stays untagged — byte-identical double round-trips depend on it).
+fn cmd_convert(args: &bigroots::util::cli::Args) -> i32 {
+    use bigroots::trace::eventlog::{NdjsonTail, TaggedEvent};
+    use bigroots::trace::wire::{self, BinaryTail};
+    use std::io::{Read, Write};
+
+    let input = args.get("input").unwrap();
+    let out_path = args.get("out").unwrap();
+    let to = args.get_or("to", "auto");
+
+    let mut infile = match std::fs::File::open(input) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("open {input}: {e}");
+            return 1;
+        }
+    };
+    // Sniff the input encoding from the first chunk.
+    let mut chunk = vec![0u8; 64 * 1024];
+    let first_n = match infile.read(&mut chunk) {
+        Ok(n) => n,
+        Err(e) => {
+            eprintln!("reading {input}: {e}");
+            return 1;
+        }
+    };
+    let in_binary = wire::is_binary(&chunk[..first_n]);
+    let out_binary = match to.as_str() {
+        "auto" => !in_binary,
+        "binary" => true,
+        "ndjson" => false,
+        other => {
+            eprintln!("unknown target format '{other}' (auto | binary | ndjson)");
+            return 2;
+        }
+    };
+
+    enum InParser {
+        Nd(NdjsonTail),
+        Bin(BinaryTail),
+    }
+    let mut parser = if in_binary {
+        InParser::Bin(BinaryTail::new())
+    } else {
+        InParser::Nd(NdjsonTail::new())
+    };
+
+    let outfile = match std::fs::File::create(out_path) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("create {out_path}: {e}");
+            return 1;
+        }
+    };
+    let mut out = std::io::BufWriter::new(outfile);
+
+    // The binary stream header needs the tag mode, which NDJSON input
+    // only reveals at its first event — so the header write is deferred
+    // until then. `None` = not yet known.
+    let mut tagged: Option<bool> = None;
+    let mut events_total = 0usize;
+    let mut bytes_in = 0u64;
+    let mut bytes_out = 0u64;
+    let mut frame_buf = Vec::new();
+
+    let mut emit = |events: Vec<TaggedEvent>,
+                    tagged: &mut Option<bool>,
+                    out: &mut std::io::BufWriter<std::fs::File>,
+                    src_tagged: bool|
+     -> Result<u64, String> {
+        let mut wrote = 0u64;
+        if events.is_empty() {
+            return Ok(wrote);
+        }
+        if tagged.is_none() {
+            *tagged = Some(src_tagged);
+            if out_binary {
+                let h = wire::encode_header(src_tagged);
+                out.write_all(&h).map_err(|e| e.to_string())?;
+                wrote += h.len() as u64;
+            }
+        }
+        let is_tagged = tagged.expect("set above");
+        for e in &events {
+            if out_binary {
+                frame_buf.clear();
+                wire::encode_frame_into(
+                    &mut frame_buf,
+                    if is_tagged { Some(e.job_id) } else { None },
+                    &e.event,
+                );
+                out.write_all(&frame_buf).map_err(|er| er.to_string())?;
+                wrote += frame_buf.len() as u64;
+            } else {
+                // Untagged streams re-encode without the "job" field, so
+                // NDJSON→binary→NDJSON is byte-identical on canonical
+                // input in both tag modes.
+                let line = if is_tagged {
+                    e.encode().to_string()
+                } else {
+                    e.event.encode().to_string()
+                };
+                out.write_all(line.as_bytes()).map_err(|er| er.to_string())?;
+                out.write_all(b"\n").map_err(|er| er.to_string())?;
+                wrote += line.len() as u64 + 1;
+            }
+        }
+        Ok(wrote)
+    };
+
+    let mut n = first_n;
+    loop {
+        if n > 0 {
+            bytes_in += n as u64;
+            let fed = match &mut parser {
+                InParser::Nd(p) => {
+                    let evs = match p.feed(&chunk[..n]) {
+                        Ok(evs) => evs,
+                        Err(e) => {
+                            eprintln!("parsing {input}: {e}");
+                            return 1;
+                        }
+                    };
+                    let src_tagged = p.tag_mode().unwrap_or(true);
+                    (evs, src_tagged)
+                }
+                InParser::Bin(p) => {
+                    let evs = match p.feed(&chunk[..n]) {
+                        Ok(evs) => evs,
+                        Err(e) => {
+                            eprintln!("parsing {input}: {e}");
+                            return 1;
+                        }
+                    };
+                    let src_tagged = p.header().map(|h| h.tagged).unwrap_or(true);
+                    (evs, src_tagged)
+                }
+            };
+            events_total += fed.0.len();
+            match emit(fed.0, &mut tagged, &mut out, fed.1) {
+                Ok(w) => bytes_out += w,
+                Err(e) => {
+                    eprintln!("writing {out_path}: {e}");
+                    return 1;
+                }
+            }
+        }
+        n = loop {
+            match infile.read(&mut chunk) {
+                Ok(m) => break m,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    eprintln!("reading {input}: {e}");
+                    return 1;
+                }
+            }
+        };
+        if n == 0 {
+            break;
+        }
+    }
+    // Flush the readers: NDJSON may hold a trailing unterminated line; a
+    // binary capture ending mid-frame is truncation.
+    let trailing = match &mut parser {
+        InParser::Nd(p) => match p.finish() {
+            Ok(ev) => {
+                let src_tagged = p.tag_mode().unwrap_or(true);
+                ev.map(|e| (vec![e], src_tagged))
+            }
+            Err(e) => {
+                eprintln!("parsing {input}: {e}");
+                return 1;
+            }
+        },
+        InParser::Bin(p) => match p.finish() {
+            Ok(()) => None,
+            Err(e) => {
+                eprintln!("parsing {input}: {e}");
+                return 1;
+            }
+        },
+    };
+    if let Some((evs, src_tagged)) = trailing {
+        events_total += evs.len();
+        match emit(evs, &mut tagged, &mut out, src_tagged) {
+            Ok(w) => bytes_out += w,
+            Err(e) => {
+                eprintln!("writing {out_path}: {e}");
+                return 1;
+            }
+        }
+    }
+    // An empty capture still gets a valid (tagged) binary header, so the
+    // output is always readable by the replay sources.
+    if tagged.is_none() && out_binary {
+        let h = wire::encode_header(true);
+        if let Err(e) = out.write_all(&h) {
+            eprintln!("writing {out_path}: {e}");
+            return 1;
+        }
+        bytes_out += h.len() as u64;
+    }
+    if let Err(e) = out.flush() {
+        eprintln!("writing {out_path}: {e}");
+        return 1;
+    }
+    let (in_fmt, out_fmt) = (
+        if in_binary { "binary" } else { "ndjson" },
+        if out_binary { "binary" } else { "ndjson" },
+    );
+    let ratio = if bytes_out > 0 { bytes_in as f64 / bytes_out as f64 } else { 0.0 };
+    println!(
+        "{input} ({in_fmt}, {bytes_in} bytes) → {out_path} ({out_fmt}, {bytes_out} bytes): \
+         {events_total} events, {ratio:.2}× size ratio",
+    );
     0
 }
 
@@ -445,14 +751,26 @@ fn cmd_explain(args: &bigroots::util::cli::Args) -> i32 {
     use bigroots::analysis::explain::FlightDump;
 
     let path = args.get("replay").unwrap();
-    let text = match std::fs::read_to_string(path) {
-        Ok(t) => t,
+    let bytes = match std::fs::read(path) {
+        Ok(b) => b,
         Err(e) => {
             eprintln!("reading {path}: {e}");
             return 1;
         }
     };
-    let dump = match FlightDump::parse(&text) {
+    let parsed = match args.get_or("format", "auto").as_str() {
+        "auto" => FlightDump::parse_any(&bytes),
+        "binary" => FlightDump::parse_binary(&bytes),
+        "ndjson" => match std::str::from_utf8(&bytes) {
+            Ok(t) => FlightDump::parse(t),
+            Err(e) => Err(format!("not UTF-8: {e}")),
+        },
+        other => {
+            eprintln!("unknown format '{other}' (auto | ndjson | binary)");
+            return 2;
+        }
+    };
+    let dump = match parsed {
         Ok(d) => d,
         Err(e) => {
             eprintln!("parsing {path}: {e}");
@@ -499,12 +817,14 @@ fn cmd_explain(args: &bigroots::util::cli::Args) -> i32 {
 fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
     use bigroots::live::control::{self, ControlCommand, ControlServer};
     use bigroots::live::{
-        persist, CompletedJob, EventSource, LifecycleConfig, LiveConfig, LiveServer,
-        MemorySource, SourcePoll, StdinSource, TailSource, TcpSource,
+        persist, BinaryTailSource, CompletedJob, EventSource, LifecycleConfig, LiveConfig,
+        LiveServer, MemorySource, MmapReplaySource, SourcePoll, StdinSource, TailSource,
+        TcpSource,
     };
     use bigroots::obs;
     use bigroots::sim::multi;
     use bigroots::trace::eventlog::parse_tagged_events;
+    use bigroots::trace::wire;
     use bigroots::util::json::Json;
 
     if let Err(e) = obs::log::set_level_str(&args.get_or("log-level", "info")) {
@@ -540,8 +860,33 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
     // a file; with none of those, simulate an interleaved multi-job run.
     let tail = args.get_or("tail", "");
     let listen = args.get_or("listen", "");
+    let format = args.get_or("format", "auto");
+    if !matches!(format.as_str(), "auto" | "ndjson" | "binary") {
+        eprintln!("unknown --format '{format}' (auto | ndjson | binary)");
+        return 2;
+    }
+    // `auto`: the wire magic decides when the file already exists; the
+    // `.bew` extension decides for a capture a writer has yet to create.
+    let wants_binary = |path: &str| -> bool {
+        match format.as_str() {
+            "binary" => true,
+            "ndjson" => false,
+            _ => {
+                use std::io::Read;
+                let mut magic = [0u8; 4];
+                match std::fs::File::open(path).map(|mut f| f.read_exact(&mut magic)) {
+                    Ok(Ok(())) => wire::is_binary(&magic),
+                    _ => path.ends_with(".bew"),
+                }
+            }
+        }
+    };
     let mut source: Box<dyn EventSource> = if !tail.is_empty() {
-        Box::new(TailSource::new(&tail))
+        if wants_binary(&tail) {
+            Box::new(BinaryTailSource::new(&tail))
+        } else {
+            Box::new(TailSource::new(&tail))
+        }
     } else if !listen.is_empty() {
         // --idle-timeout 0 means "run forever": keep the socket open
         // across client generations instead of ending after the last
@@ -565,31 +910,43 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
         Box::new(StdinSource::new())
     } else {
         let input = args.get_or("input", "");
-        let events = if input.is_empty() {
-            let n = args.get_usize("jobs", 8);
-            let scale = args.get_f64("scale", 0.3);
-            let seed = args.get_u64("seed", 42);
-            println!("simulating {n} jobs (scale {scale}, seed {seed})…");
-            let specs = multi::round_robin_specs(n, scale, seed);
-            let (_, events) = multi::interleaved_workload(&specs);
-            events
-        } else {
-            let text = match std::fs::read_to_string(&input) {
-                Ok(t) => t,
+        if !input.is_empty() && wants_binary(&input) {
+            // Binary capture: replay straight off the mapped pages —
+            // frames decode with zero copy, no text parse anywhere.
+            match MmapReplaySource::open(&input) {
+                Ok(s) => Box::new(s) as Box<dyn EventSource>,
                 Err(e) => {
-                    eprintln!("reading {input}: {e}");
-                    return 1;
-                }
-            };
-            match parse_tagged_events(&text) {
-                Ok(ev) => ev,
-                Err(e) => {
-                    eprintln!("parsing {input}: {e}");
+                    eprintln!("{e}");
                     return 1;
                 }
             }
-        };
-        Box::new(MemorySource::new(events, 1024))
+        } else {
+            let events = if input.is_empty() {
+                let n = args.get_usize("jobs", 8);
+                let scale = args.get_f64("scale", 0.3);
+                let seed = args.get_u64("seed", 42);
+                println!("simulating {n} jobs (scale {scale}, seed {seed})…");
+                let specs = multi::round_robin_specs(n, scale, seed);
+                let (_, events) = multi::interleaved_workload(&specs);
+                events
+            } else {
+                let text = match std::fs::read_to_string(&input) {
+                    Ok(t) => t,
+                    Err(e) => {
+                        eprintln!("reading {input}: {e}");
+                        return 1;
+                    }
+                };
+                match parse_tagged_events(&text) {
+                    Ok(ev) => ev,
+                    Err(e) => {
+                        eprintln!("parsing {input}: {e}");
+                        return 1;
+                    }
+                }
+            };
+            Box::new(MemorySource::new(events, 1024))
+        }
     };
 
     println!("serving from {} over {} shards", source.describe(), cfg.shards);
@@ -753,7 +1110,23 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
                 }
                 std::thread::sleep(std::time::Duration::from_millis(20));
             }
-            Ok(SourcePoll::End) => break,
+            Ok(SourcePoll::End) => {
+                if control.is_some() {
+                    // The capture is exhausted but the control plane is
+                    // live: linger so operators (and the CI client) can
+                    // still query; exit via the idle timeout or the
+                    // `shutdown` verb.
+                    server.pump();
+                    let idle = idle_since.get_or_insert_with(std::time::Instant::now);
+                    if idle_timeout > 0.0 && idle.elapsed().as_secs_f64() >= idle_timeout {
+                        println!("(source ended; idle for {idle_timeout}s — stopping)");
+                        break;
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                } else {
+                    break;
+                }
+            }
             Err(e) => {
                 obs::log::error(
                     "serve",
@@ -890,7 +1263,13 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
                         None => control::err_response(&format!("job {id} has not retired")),
                     },
                     ControlCommand::ExplainDump(id, path) => match job_dumps.get(id) {
-                        Some(dump) => match std::fs::write(path, dump.encode_ndjson()) {
+                        // A `.bew` destination gets the binary container
+                        // (`bigroots explain --replay` sniffs either).
+                        Some(dump) => match if path.ends_with(".bew") {
+                            std::fs::write(path, dump.encode_binary())
+                        } else {
+                            std::fs::write(path, dump.encode_ndjson())
+                        } {
                             Ok(()) => control::ok_response(
                                 "explain-dump",
                                 Json::from_pairs(vec![

@@ -452,6 +452,20 @@ impl NdjsonTail {
     pub fn lines(&self) -> usize {
         self.lines
     }
+
+    /// Which tag mode the stream locked into: `Some(true)` once a tagged
+    /// line parsed, `Some(false)` once an untagged one did, `None` before
+    /// any event. `bigroots convert` uses this to mirror the source's tag
+    /// mode into the binary stream header.
+    pub fn tag_mode(&self) -> Option<bool> {
+        if self.saw_tagged {
+            Some(true)
+        } else if self.saw_untagged {
+            Some(false)
+        } else {
+            None
+        }
+    }
 }
 
 /// Split an interleaved stream into per-job event sequences, preserving

@@ -6,10 +6,14 @@
 //! - [`codec`] — whole-trace JSON file format (offline analysis workflow).
 //! - [`eventlog`] — Spark-style newline-delimited event stream (streaming
 //!   analysis workflow).
+//! - [`wire`] — compact length-prefixed binary event frames (the
+//!   parser-free hot-path encoding) and the [`wire::EventCodec`] seam that
+//!   puts NDJSON and binary behind one interface.
 
 pub mod codec;
 pub mod eventlog;
 pub mod model;
+pub mod wire;
 
 pub use model::{
     AnomalyKind, ClusterInfo, InjectionRecord, JobTrace, Locality, NodeSeries, StageRecord,

@@ -1,0 +1,1034 @@
+//! Compact binary event wire format — the parser-free ingest path.
+//!
+//! PR 4's zero-alloc NDJSON decoder still pays a UTF-8 scan plus a float
+//! parse for every event, so ingest throughput is parser-bound, not
+//! kernel-bound. This module fixes the structure in the *frame* instead
+//! of re-discovering it at parse time: a length-prefixed binary frame per
+//! event with fixed-width little-endian ids/timestamps/floats and
+//! varint-prefixed strings. Decode is bounds-checked reads — no text
+//! scan, no float parse, no transmute.
+//!
+//! ## Stream layout
+//!
+//! ```text
+//! ┌────────────────────────── stream header (8 bytes) ─────────────────────────┐
+//! │ magic "BGRW" (4) │ version u16 LE │ flags u16 LE (bit 0 = frames tagged)   │
+//! └────────────────────────────────────────────────────────────────────────────┘
+//! ┌───────────────────────────── frame (repeated) ─────────────────────────────┐
+//! │ payload_len u32 LE │ kind u8 │ [job u64 LE if tagged] │ kind-specific body │
+//! └────────────────────────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! Floats travel as raw IEEE-754 bit patterns (`f64::to_bits`, LE), so
+//! NaN payloads and ±inf round-trip bit-identically — the same
+//! bit-exactness contract [`crate::live::persist`] keeps with its hex
+//! convention. Strings are varint(LEB128)-length-prefixed UTF-8. The
+//! per-frame length prefix lets a reader skip, resync after a partial
+//! append, and walk an mmap'd capture with zero-copy frame views
+//! ([`crate::live::source::MmapReplaySource`]).
+//!
+//! Untagged streams (flag bit 0 clear) mirror the NDJSON convention: no
+//! per-frame job id, every event belongs to job 0.
+//!
+//! [`BinaryCodec`] and [`NdjsonCodec`] sit behind the [`EventCodec`]
+//! trait — one seam for every consumer that ships event streams
+//! (`bigroots convert`, the live sources, future federation snapshot
+//! shipping). [`BinaryTail`] is the incremental reader
+//! ([`crate::trace::eventlog::NdjsonTail`]'s binary twin): feed it byte
+//! chunks exactly as they come off a growing file, partial frames stay
+//! buffered until the rest arrives. See `docs/WIRE_FORMAT.md`.
+
+use super::eventlog::{parse_tagged_events, Event, TaggedEvent};
+use super::model::{AnomalyKind, ClusterInfo, InjectionRecord, Locality, TaskRecord};
+
+/// First four bytes of every binary capture.
+pub const MAGIC: [u8; 4] = *b"BGRW";
+/// Current wire version, written by every encoder.
+pub const WIRE_VERSION: u16 = 1;
+/// Oldest wire version this build still decodes.
+pub const MIN_WIRE_VERSION: u16 = 1;
+/// Stream-header flag bit: frames carry a u64 job id.
+pub const FLAG_TAGGED: u16 = 1;
+/// Stream header length in bytes (magic + version + flags).
+pub const HEADER_LEN: usize = 8;
+/// Upper bound on a single frame's payload: anything larger is treated
+/// as corruption (a flipped length prefix must not make a reader buffer
+/// gigabytes waiting for a frame that never completes).
+pub const MAX_FRAME_LEN: usize = 1 << 22;
+/// Upper bound on one varint-prefixed string.
+pub const MAX_STR_LEN: usize = 1 << 20;
+
+// Frame kind tags. Stable on the wire — append, never renumber.
+const K_JOB_START: u8 = 1;
+const K_STAGE_SUBMITTED: u8 = 2;
+const K_TASK_START: u8 = 3;
+const K_TASK_END: u8 = 4;
+const K_RESOURCE_SAMPLE: u8 = 5;
+const K_INJECTION: u8 = 6;
+const K_JOB_END: u8 = 7;
+
+/// Decode failure: byte offset (relative to the buffer handed in) plus a
+/// human-readable reason. Corrupt and truncated input always surfaces
+/// here — never as a panic.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireError {
+    pub offset: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "wire error at byte {}: {}", self.offset, self.message)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+fn err<T>(offset: usize, message: impl Into<String>) -> Result<T, WireError> {
+    Err(WireError { offset, message: message.into() })
+}
+
+/// Parsed stream header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamHeader {
+    pub version: u16,
+    /// Whether frames carry a u64 job id. Untagged streams decode with
+    /// every event assigned to job 0, mirroring the NDJSON convention.
+    pub tagged: bool,
+}
+
+/// Build the 8-byte stream header.
+pub fn encode_header(tagged: bool) -> [u8; HEADER_LEN] {
+    let mut h = [0u8; HEADER_LEN];
+    h[..4].copy_from_slice(&MAGIC);
+    h[4..6].copy_from_slice(&WIRE_VERSION.to_le_bytes());
+    let flags: u16 = if tagged { FLAG_TAGGED } else { 0 };
+    h[6..8].copy_from_slice(&flags.to_le_bytes());
+    h
+}
+
+/// Parse and validate a stream header. The buffer must hold at least
+/// [`HEADER_LEN`] bytes.
+pub fn decode_header(buf: &[u8]) -> Result<StreamHeader, WireError> {
+    if buf.len() < HEADER_LEN {
+        return err(0, format!("stream header needs {HEADER_LEN} bytes, have {}", buf.len()));
+    }
+    if buf[..4] != MAGIC {
+        return err(0, "bad magic (not a bigroots binary event capture)");
+    }
+    let version = u16::from_le_bytes([buf[4], buf[5]]);
+    if !(MIN_WIRE_VERSION..=WIRE_VERSION).contains(&version) {
+        return err(
+            4,
+            format!(
+                "unsupported wire version {version} (this build reads \
+                 {MIN_WIRE_VERSION}..={WIRE_VERSION})"
+            ),
+        );
+    }
+    let flags = u16::from_le_bytes([buf[6], buf[7]]);
+    if flags & !FLAG_TAGGED != 0 {
+        return err(6, format!("unknown header flags {flags:#06x}"));
+    }
+    Ok(StreamHeader { version, tagged: flags & FLAG_TAGGED != 0 })
+}
+
+/// Cheap sniff: does this buffer start like a binary capture? Used by the
+/// `--format auto` paths to pick a codec without a second file read.
+pub fn is_binary(buf: &[u8]) -> bool {
+    buf.len() >= 4 && buf[..4] == MAGIC
+}
+
+// ---------------------------------------------------------------------------
+// Encoding
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+fn put_varint(out: &mut Vec<u8>, mut v: u32) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    // MAX_STR_LEN bounds the decoder; encoders never emit longer strings
+    // in practice (job/stage names), but truncating silently would break
+    // round-trips, so a pathological name is kept and rejected on decode.
+    put_varint(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn locality_tag(l: Locality) -> u8 {
+    match l {
+        Locality::ProcessLocal => 0,
+        Locality::NodeLocal => 1,
+        Locality::RackLocal => 2,
+        Locality::Any => 3,
+        Locality::NoPref => 4,
+    }
+}
+
+fn locality_from_tag(t: u8) -> Option<Locality> {
+    Some(match t {
+        0 => Locality::ProcessLocal,
+        1 => Locality::NodeLocal,
+        2 => Locality::RackLocal,
+        3 => Locality::Any,
+        4 => Locality::NoPref,
+        _ => return None,
+    })
+}
+
+fn anomaly_tag(k: AnomalyKind) -> u8 {
+    match k {
+        AnomalyKind::Cpu => 0,
+        AnomalyKind::Io => 1,
+        AnomalyKind::Network => 2,
+    }
+}
+
+fn anomaly_from_tag(t: u8) -> Option<AnomalyKind> {
+    Some(match t {
+        0 => AnomalyKind::Cpu,
+        1 => AnomalyKind::Io,
+        2 => AnomalyKind::Network,
+        _ => return None,
+    })
+}
+
+/// Append one length-prefixed frame. `job` is `Some` exactly when the
+/// stream header declared [`FLAG_TAGGED`] — mixing is a caller bug and
+/// produces a capture the decoder rejects.
+pub fn encode_frame_into(out: &mut Vec<u8>, job: Option<u64>, event: &Event) {
+    let len_at = out.len();
+    out.extend_from_slice(&[0u8; 4]); // payload length backpatched below
+    let payload_at = out.len();
+    match event {
+        Event::JobStart { job_name, workload, cluster } => {
+            out.push(K_JOB_START);
+            if let Some(j) = job {
+                put_u64(out, j);
+            }
+            put_str(out, job_name);
+            put_str(out, workload);
+            put_u64(out, cluster.nodes as u64);
+            put_u64(out, cluster.cores_per_node as u64);
+            put_u64(out, cluster.executors_per_node as u64);
+        }
+        Event::StageSubmitted { stage_id, name, num_tasks } => {
+            out.push(K_STAGE_SUBMITTED);
+            if let Some(j) = job {
+                put_u64(out, j);
+            }
+            put_u64(out, *stage_id);
+            put_str(out, name);
+            put_u64(out, *num_tasks as u64);
+        }
+        Event::TaskStart { task_id, stage_id, node, executor, time, locality } => {
+            out.push(K_TASK_START);
+            if let Some(j) = job {
+                put_u64(out, j);
+            }
+            put_u64(out, *task_id);
+            put_u64(out, *stage_id);
+            put_u64(out, *node as u64);
+            put_u64(out, *executor as u64);
+            put_f64(out, *time);
+            out.push(locality_tag(*locality));
+        }
+        Event::TaskEnd(t) => {
+            out.push(K_TASK_END);
+            if let Some(j) = job {
+                put_u64(out, j);
+            }
+            put_u64(out, t.task_id);
+            put_u64(out, t.stage_id);
+            put_u64(out, t.node as u64);
+            put_u64(out, t.executor as u64);
+            put_f64(out, t.start);
+            put_f64(out, t.finish);
+            out.push(locality_tag(t.locality));
+            put_f64(out, t.bytes_read);
+            put_f64(out, t.shuffle_read_bytes);
+            put_f64(out, t.shuffle_write_bytes);
+            put_f64(out, t.memory_bytes_spilled);
+            put_f64(out, t.disk_bytes_spilled);
+            put_f64(out, t.jvm_gc_time);
+            put_f64(out, t.serialize_time);
+            put_f64(out, t.deserialize_time);
+        }
+        Event::ResourceSample { node, time, cpu, disk, net_bytes } => {
+            out.push(K_RESOURCE_SAMPLE);
+            if let Some(j) = job {
+                put_u64(out, j);
+            }
+            put_u64(out, *node as u64);
+            put_f64(out, *time);
+            put_f64(out, *cpu);
+            put_f64(out, *disk);
+            put_f64(out, *net_bytes);
+        }
+        Event::Injection(i) => {
+            out.push(K_INJECTION);
+            if let Some(j) = job {
+                put_u64(out, j);
+            }
+            put_u64(out, i.node as u64);
+            out.push(anomaly_tag(i.kind));
+            put_f64(out, i.t_start);
+            put_f64(out, i.t_end);
+        }
+        Event::JobEnd { time } => {
+            out.push(K_JOB_END);
+            if let Some(j) = job {
+                put_u64(out, j);
+            }
+            put_f64(out, *time);
+        }
+    }
+    let payload_len = (out.len() - payload_at) as u32;
+    out[len_at..len_at + 4].copy_from_slice(&payload_len.to_le_bytes());
+}
+
+// ---------------------------------------------------------------------------
+// Decoding
+
+/// Bounds-checked cursor over a frame payload. Every read either advances
+/// or returns a [`WireError`] carrying the absolute offset (`base + pos`).
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    /// Offset of `buf[0]` in the caller's buffer, for error messages.
+    base: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8], base: usize) -> Self {
+        Reader { buf, pos: 0, base }
+    }
+
+    fn at(&self) -> usize {
+        self.base + self.pos
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        match self.buf.get(self.pos) {
+            Some(&b) => {
+                self.pos += 1;
+                Ok(b)
+            }
+            None => err(self.at(), "frame truncated (u8)"),
+        }
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        match self.buf.get(self.pos..self.pos + 8) {
+            Some(b) => {
+                self.pos += 8;
+                Ok(u64::from_le_bytes(b.try_into().expect("8-byte slice")))
+            }
+            None => err(self.at(), "frame truncated (u64)"),
+        }
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        self.u64().map(f64::from_bits)
+    }
+
+    fn usize(&mut self) -> Result<usize, WireError> {
+        let at = self.at();
+        let v = self.u64()?;
+        usize::try_from(v).or_else(|_| err(at, format!("value {v} overflows usize")))
+    }
+
+    fn varint(&mut self) -> Result<u32, WireError> {
+        let at = self.at();
+        let mut v: u32 = 0;
+        for i in 0..5 {
+            let b = self.u8()?;
+            let bits = (b & 0x7f) as u32;
+            if i == 4 && bits > 0x0f {
+                return err(at, "varint overflows u32");
+            }
+            v |= bits << (7 * i);
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+        }
+        err(at, "varint longer than 5 bytes")
+    }
+
+    fn str(&mut self) -> Result<String, WireError> {
+        let at = self.at();
+        let n = self.varint()? as usize;
+        if n > MAX_STR_LEN {
+            return err(at, format!("string length {n} exceeds {MAX_STR_LEN}"));
+        }
+        match self.buf.get(self.pos..self.pos + n) {
+            Some(b) => {
+                self.pos += n;
+                std::str::from_utf8(b)
+                    .map(|s| s.to_string())
+                    .or_else(|_| err(at, "string is not valid UTF-8"))
+            }
+            None => err(self.at(), "frame truncated (string body)"),
+        }
+    }
+
+    fn locality(&mut self) -> Result<Locality, WireError> {
+        let at = self.at();
+        let t = self.u8()?;
+        locality_from_tag(t).ok_or_else(|| WireError {
+            offset: at,
+            message: format!("bad locality tag {t}"),
+        })
+    }
+}
+
+/// One frame successfully pulled off the buffer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecodedFrame {
+    /// Total bytes consumed, length prefix included.
+    pub consumed: usize,
+    /// The frame's job id (`None` on untagged streams).
+    pub job: Option<u64>,
+    pub event: Event,
+}
+
+/// Decode one frame from the front of `buf` (which must start at a frame
+/// boundary, i.e. past the stream header). Returns `Ok(None)` when the
+/// buffer holds only part of a frame — feed more bytes and retry; the
+/// partial-frame resync contract of the tailing readers. Corruption (bad
+/// kind/tag, implausible length, trailing bytes inside the frame) is an
+/// error, never a panic.
+pub fn decode_frame(buf: &[u8], tagged: bool) -> Result<Option<DecodedFrame>, WireError> {
+    let Some(len_bytes) = buf.get(..4) else {
+        return Ok(None);
+    };
+    let payload_len = u32::from_le_bytes(len_bytes.try_into().expect("4-byte slice")) as usize;
+    if payload_len == 0 {
+        return err(0, "zero-length frame");
+    }
+    if payload_len > MAX_FRAME_LEN {
+        return err(0, format!("frame length {payload_len} exceeds {MAX_FRAME_LEN} (corrupt?)"));
+    }
+    let Some(payload) = buf.get(4..4 + payload_len) else {
+        return Ok(None);
+    };
+    let mut r = Reader::new(payload, 4);
+    let kind = r.u8()?;
+    let job = if tagged { Some(r.u64()?) } else { None };
+    let event = match kind {
+        K_JOB_START => Event::JobStart {
+            job_name: r.str()?,
+            workload: r.str()?,
+            cluster: ClusterInfo {
+                nodes: r.usize()?,
+                cores_per_node: r.usize()?,
+                executors_per_node: r.usize()?,
+            },
+        },
+        K_STAGE_SUBMITTED => Event::StageSubmitted {
+            stage_id: r.u64()?,
+            name: r.str()?,
+            num_tasks: r.usize()?,
+        },
+        K_TASK_START => Event::TaskStart {
+            task_id: r.u64()?,
+            stage_id: r.u64()?,
+            node: r.usize()?,
+            executor: r.usize()?,
+            time: r.f64()?,
+            locality: r.locality()?,
+        },
+        K_TASK_END => Event::TaskEnd(TaskRecord {
+            task_id: r.u64()?,
+            stage_id: r.u64()?,
+            node: r.usize()?,
+            executor: r.usize()?,
+            start: r.f64()?,
+            finish: r.f64()?,
+            locality: r.locality()?,
+            bytes_read: r.f64()?,
+            shuffle_read_bytes: r.f64()?,
+            shuffle_write_bytes: r.f64()?,
+            memory_bytes_spilled: r.f64()?,
+            disk_bytes_spilled: r.f64()?,
+            jvm_gc_time: r.f64()?,
+            serialize_time: r.f64()?,
+            deserialize_time: r.f64()?,
+        }),
+        K_RESOURCE_SAMPLE => Event::ResourceSample {
+            node: r.usize()?,
+            time: r.f64()?,
+            cpu: r.f64()?,
+            disk: r.f64()?,
+            net_bytes: r.f64()?,
+        },
+        K_INJECTION => {
+            let node = r.usize()?;
+            let at = r.at();
+            let tag = r.u8()?;
+            let kind = anomaly_from_tag(tag).ok_or_else(|| WireError {
+                offset: at,
+                message: format!("bad anomaly tag {tag}"),
+            })?;
+            Event::Injection(InjectionRecord {
+                node,
+                kind,
+                t_start: r.f64()?,
+                t_end: r.f64()?,
+            })
+        }
+        K_JOB_END => Event::JobEnd { time: r.f64()? },
+        other => return err(4, format!("unknown frame kind {other}")),
+    };
+    if r.pos != payload_len {
+        return err(
+            4 + r.pos,
+            format!("frame length mismatch: payload {payload_len} bytes, decoded {}", r.pos),
+        );
+    }
+    Ok(Some(DecodedFrame { consumed: 4 + payload_len, job, event }))
+}
+
+/// Encode a job-tagged stream: header + one frame per event.
+pub fn encode_stream(events: &[TaggedEvent]) -> Vec<u8> {
+    // Frames average well under 160 bytes; reserving up front keeps the
+    // encoder allocation-quiet on large captures.
+    let mut out = Vec::with_capacity(HEADER_LEN + events.len() * 160);
+    out.extend_from_slice(&encode_header(true));
+    for e in events {
+        encode_frame_into(&mut out, Some(e.job_id), &e.event);
+    }
+    out
+}
+
+/// Encode an untagged single-job stream (no per-frame job ids).
+pub fn encode_untagged_stream(events: &[Event]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + events.len() * 160);
+    out.extend_from_slice(&encode_header(false));
+    for e in events {
+        encode_frame_into(&mut out, None, e);
+    }
+    out
+}
+
+/// Decode a whole capture. Untagged streams come back with every event
+/// assigned to job 0 (the NDJSON convention). A trailing partial frame is
+/// a truncation error — this is the strict whole-file path; use
+/// [`BinaryTail`] to follow a still-growing capture.
+pub fn decode_stream(bytes: &[u8]) -> Result<Vec<TaggedEvent>, WireError> {
+    let header = decode_header(bytes)?;
+    let mut out = Vec::new();
+    let mut pos = HEADER_LEN;
+    while pos < bytes.len() {
+        match decode_frame(&bytes[pos..], header.tagged) {
+            Ok(Some(f)) => {
+                out.push(TaggedEvent { job_id: f.job.unwrap_or(0), event: f.event });
+                pos += f.consumed;
+            }
+            Ok(None) => {
+                return err(
+                    pos,
+                    format!("truncated frame at end of capture ({} bytes left)", bytes.len() - pos),
+                );
+            }
+            Err(e) => {
+                return Err(WireError { offset: pos + e.offset, message: e.message });
+            }
+        }
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Incremental reader
+
+/// Incremental binary-capture reader — [`super::eventlog::NdjsonTail`]'s
+/// twin for the wire format, and the parsing half of the binary live
+/// sources. Feed it raw byte chunks exactly as they come off a growing
+/// file (chunks may end mid-frame, even mid-header); complete frames come
+/// back as events, a trailing partial frame stays buffered until the rest
+/// arrives (partial-frame resync). [`BinaryTail::reset`] (log rotation)
+/// starts a fresh stream — buffer *and* header are cleared.
+#[derive(Debug, Default)]
+pub struct BinaryTail {
+    buf: Vec<u8>,
+    header: Option<StreamHeader>,
+    frames: usize,
+}
+
+impl BinaryTail {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Consume one chunk; returns every event whose frame completed.
+    pub fn feed(&mut self, chunk: &[u8]) -> Result<Vec<TaggedEvent>, WireError> {
+        self.buf.extend_from_slice(chunk);
+        if self.header.is_none() {
+            if self.buf.len() < HEADER_LEN {
+                return Ok(Vec::new());
+            }
+            self.header = Some(decode_header(&self.buf)?);
+            self.buf.drain(..HEADER_LEN);
+        }
+        let tagged = self.header.expect("header parsed above").tagged;
+        let mut out = Vec::new();
+        let mut pos = 0;
+        loop {
+            match decode_frame(&self.buf[pos..], tagged) {
+                Ok(Some(f)) => {
+                    out.push(TaggedEvent { job_id: f.job.unwrap_or(0), event: f.event });
+                    pos += f.consumed;
+                    self.frames += 1;
+                }
+                Ok(None) => break,
+                Err(e) => {
+                    return Err(WireError { offset: pos + e.offset, message: e.message });
+                }
+            }
+        }
+        self.buf.drain(..pos);
+        Ok(out)
+    }
+
+    /// End of stream: a partial frame still buffered means the capture
+    /// was truncated mid-write — an error, unlike NDJSON where a trailing
+    /// unterminated line can still parse.
+    pub fn finish(&mut self) -> Result<(), WireError> {
+        let left = std::mem::take(&mut self.buf);
+        if left.is_empty() {
+            Ok(())
+        } else {
+            err(0, format!("stream ended inside a frame ({} bytes buffered)", left.len()))
+        }
+    }
+
+    /// Start over on a fresh stream (log rotation / reconnect).
+    pub fn reset(&mut self) {
+        self.buf.clear();
+        self.header = None;
+        self.frames = 0;
+    }
+
+    /// Bytes held for the current partial frame (or pre-header prefix).
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Complete frames decoded since creation or the last reset.
+    pub fn frames(&self) -> usize {
+        self.frames
+    }
+
+    /// The stream header, once enough bytes arrived to parse it.
+    pub fn header(&self) -> Option<StreamHeader> {
+        self.header
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The codec seam
+
+/// One interface over the two event-stream encodings, so every consumer
+/// that ships streams (`bigroots convert`, replay sources, federation
+/// snapshot shipping) binds to the seam instead of a concrete format.
+pub trait EventCodec {
+    /// Short format name for CLI flags and logs ("ndjson" / "binary").
+    fn name(&self) -> &'static str;
+
+    /// Serialize a job-tagged stream, container header included.
+    fn encode_stream(&self, events: &[TaggedEvent]) -> Vec<u8>;
+
+    /// Parse a capture produced by [`EventCodec::encode_stream`] (or any
+    /// valid stream in this encoding; untagged input maps to job 0).
+    fn decode_stream(&self, bytes: &[u8]) -> Result<Vec<TaggedEvent>, String>;
+
+    /// Does this capture look like this codec's format?
+    fn sniff(&self, bytes: &[u8]) -> bool;
+}
+
+/// Newline-delimited JSON (the PR-4 zero-alloc text path).
+pub struct NdjsonCodec;
+
+impl EventCodec for NdjsonCodec {
+    fn name(&self) -> &'static str {
+        "ndjson"
+    }
+
+    fn encode_stream(&self, events: &[TaggedEvent]) -> Vec<u8> {
+        let mut out = String::new();
+        for e in events {
+            out.push_str(&e.encode().to_string());
+            out.push('\n');
+        }
+        out.into_bytes()
+    }
+
+    fn decode_stream(&self, bytes: &[u8]) -> Result<Vec<TaggedEvent>, String> {
+        let text = std::str::from_utf8(bytes).map_err(|e| format!("not UTF-8: {e}"))?;
+        parse_tagged_events(text).map_err(|e| e.to_string())
+    }
+
+    fn sniff(&self, bytes: &[u8]) -> bool {
+        !is_binary(bytes)
+    }
+}
+
+/// The length-prefixed binary frame format defined by this module.
+pub struct BinaryCodec;
+
+impl EventCodec for BinaryCodec {
+    fn name(&self) -> &'static str {
+        "binary"
+    }
+
+    fn encode_stream(&self, events: &[TaggedEvent]) -> Vec<u8> {
+        encode_stream(events)
+    }
+
+    fn decode_stream(&self, bytes: &[u8]) -> Result<Vec<TaggedEvent>, String> {
+        decode_stream(bytes).map_err(|e| e.to_string())
+    }
+
+    fn sniff(&self, bytes: &[u8]) -> bool {
+        is_binary(bytes)
+    }
+}
+
+/// Pick the codec whose container format matches the capture's first
+/// bytes (binary magic wins; anything else is treated as NDJSON).
+pub fn codec_for(bytes: &[u8]) -> &'static dyn EventCodec {
+    if is_binary(bytes) {
+        &BinaryCodec
+    } else {
+        &NdjsonCodec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::multi::{interleaved_workload, round_robin_specs};
+    use crate::trace::eventlog::trace_to_events;
+    use crate::trace::model::StageRecord;
+    use crate::trace::{JobTrace, NodeSeries};
+
+    fn sample_events() -> Vec<TaggedEvent> {
+        let (_, events) = interleaved_workload(&round_robin_specs(3, 0.08, 11));
+        events
+    }
+
+    fn single_job_events() -> Vec<Event> {
+        let t = JobTrace {
+            job_name: "wire-j".into(),
+            workload: "wire-w".into(),
+            cluster: ClusterInfo { nodes: 2, cores_per_node: 2, executors_per_node: 1 },
+            stages: vec![StageRecord { stage_id: 0, name: "s0".into(), tasks: vec![0, 1] }],
+            tasks: vec![
+                TaskRecord {
+                    task_id: 0,
+                    stage_id: 0,
+                    node: 0,
+                    executor: 0,
+                    start: 0.0,
+                    finish: 1.5,
+                    locality: Locality::ProcessLocal,
+                    bytes_read: 11.0,
+                    shuffle_read_bytes: 1.0,
+                    shuffle_write_bytes: 2.0,
+                    memory_bytes_spilled: 0.0,
+                    disk_bytes_spilled: 0.0,
+                    jvm_gc_time: 0.1,
+                    serialize_time: 0.01,
+                    deserialize_time: 0.02,
+                },
+                TaskRecord {
+                    task_id: 1,
+                    stage_id: 0,
+                    node: 1,
+                    executor: 0,
+                    start: 0.25,
+                    finish: 2.0,
+                    locality: Locality::NoPref,
+                    bytes_read: 7.0,
+                    shuffle_read_bytes: 0.5,
+                    shuffle_write_bytes: 0.25,
+                    memory_bytes_spilled: 3.0,
+                    disk_bytes_spilled: 4.0,
+                    jvm_gc_time: 0.2,
+                    serialize_time: 0.03,
+                    deserialize_time: 0.04,
+                },
+            ],
+            node_series: vec![
+                NodeSeries {
+                    node: 0,
+                    period: 1.0,
+                    cpu: vec![0.1, 0.9],
+                    disk: vec![0.2, 0.8],
+                    net_bytes: vec![5.0, 6.0],
+                },
+                NodeSeries {
+                    node: 1,
+                    period: 1.0,
+                    cpu: vec![0.3, 0.7],
+                    disk: vec![0.4, 0.6],
+                    net_bytes: vec![7.0, 8.0],
+                },
+            ],
+            injections: vec![InjectionRecord {
+                node: 1,
+                kind: AnomalyKind::Network,
+                t_start: 0.5,
+                t_end: 1.0,
+            }],
+        };
+        trace_to_events(&t)
+    }
+
+    #[test]
+    fn header_roundtrip_and_sniff() {
+        for tagged in [true, false] {
+            let h = encode_header(tagged);
+            let parsed = decode_header(&h).unwrap();
+            assert_eq!(parsed.version, WIRE_VERSION);
+            assert_eq!(parsed.tagged, tagged);
+            assert!(is_binary(&h));
+        }
+        assert!(!is_binary(b"{\"event\":\"job_end\"}"));
+        assert!(!is_binary(b"BG"));
+    }
+
+    #[test]
+    fn tagged_stream_roundtrip() {
+        let events = sample_events();
+        let bytes = encode_stream(&events);
+        let back = decode_stream(&bytes).unwrap();
+        assert_eq!(events, back);
+    }
+
+    #[test]
+    fn untagged_stream_roundtrip_maps_to_job_zero() {
+        let events = single_job_events();
+        let bytes = encode_untagged_stream(&events);
+        assert!(!decode_header(&bytes).unwrap().tagged);
+        let back = decode_stream(&bytes).unwrap();
+        assert_eq!(back.len(), events.len());
+        assert!(back.iter().all(|e| e.job_id == 0));
+        let plain: Vec<Event> = back.into_iter().map(|e| e.event).collect();
+        assert_eq!(plain, events);
+    }
+
+    #[test]
+    fn binary_reencode_is_byte_identical() {
+        let events = sample_events();
+        let bytes = encode_stream(&events);
+        let back = decode_stream(&bytes).unwrap();
+        assert_eq!(encode_stream(&back), bytes);
+    }
+
+    #[test]
+    fn nan_and_inf_bit_patterns_survive() {
+        // A NaN with a payload, the quiet NaN, ±inf and -0.0 must all come
+        // back with the exact same bit pattern (PartialEq would lie for
+        // NaN, so compare bits).
+        let patterns: Vec<u64> = vec![
+            0x7ff8_0000_0000_0000,         // quiet NaN
+            0x7ff8_dead_beef_0001,         // NaN with payload
+            0xfff0_0000_0000_0001,         // signaling-ish negative NaN
+            f64::INFINITY.to_bits(),
+            f64::NEG_INFINITY.to_bits(),
+            (-0.0f64).to_bits(),
+        ];
+        for &bits in &patterns {
+            let v = f64::from_bits(bits);
+            let ev = Event::TaskEnd(TaskRecord {
+                task_id: 1,
+                stage_id: 2,
+                node: 3,
+                executor: 4,
+                start: v,
+                finish: v,
+                locality: Locality::RackLocal,
+                bytes_read: v,
+                shuffle_read_bytes: v,
+                shuffle_write_bytes: v,
+                memory_bytes_spilled: v,
+                disk_bytes_spilled: v,
+                jvm_gc_time: v,
+                serialize_time: v,
+                deserialize_time: v,
+            });
+            let mut buf = Vec::new();
+            encode_frame_into(&mut buf, Some(9), &ev);
+            let f = decode_frame(&buf, true).unwrap().expect("complete frame");
+            assert_eq!(f.job, Some(9));
+            match f.event {
+                Event::TaskEnd(t) => {
+                    for got in [
+                        t.start,
+                        t.finish,
+                        t.bytes_read,
+                        t.shuffle_read_bytes,
+                        t.shuffle_write_bytes,
+                        t.memory_bytes_spilled,
+                        t.disk_bytes_spilled,
+                        t.jvm_gc_time,
+                        t.serialize_time,
+                        t.deserialize_time,
+                    ] {
+                        assert_eq!(got.to_bits(), bits, "bit pattern {bits:#018x} mangled");
+                    }
+                }
+                other => panic!("wrong event kind back: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn every_truncation_point_errors_or_waits_never_panics() {
+        let events = sample_events();
+        let bytes = encode_stream(&events);
+        for cut in 0..bytes.len().min(600) {
+            // Whole-file decode of a truncated capture: always Err.
+            assert!(decode_stream(&bytes[..cut]).is_err(), "cut at {cut} must error");
+        }
+        // Truncating anywhere past the header leaves a partial trailing
+        // frame: strict decode errors, the tail reader just waits.
+        let mid = bytes.len() - 3;
+        let mut tail = BinaryTail::new();
+        let got = tail.feed(&bytes[..mid]).unwrap();
+        assert!(got.len() < events.len());
+        assert!(tail.buffered() > 0);
+        assert!(tail.finish().is_err(), "EOF inside a frame is truncation");
+    }
+
+    #[test]
+    fn corrupt_frames_error_not_panic() {
+        let events = sample_events();
+        let bytes = encode_stream(&events);
+
+        // Bad magic.
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xff;
+        assert!(decode_stream(&bad).is_err());
+
+        // Unsupported version.
+        let mut bad = bytes.clone();
+        bad[4] = 0xff;
+        bad[5] = 0xff;
+        assert!(decode_stream(&bad).is_err());
+
+        // Unknown flag bit.
+        let mut bad = bytes.clone();
+        bad[6] |= 0x80;
+        assert!(decode_stream(&bad).is_err());
+
+        // Unknown frame kind (first payload byte after the first length
+        // prefix).
+        let mut bad = bytes.clone();
+        bad[HEADER_LEN + 4] = 0xee;
+        assert!(decode_stream(&bad).is_err());
+
+        // Implausible length prefix.
+        let mut bad = bytes.clone();
+        bad[HEADER_LEN..HEADER_LEN + 4]
+            .copy_from_slice(&((MAX_FRAME_LEN as u32) + 1).to_le_bytes());
+        assert!(decode_stream(&bad).is_err());
+
+        // Length prefix that lies (longer than the real payload): either
+        // the next frame's bytes misparse or the length check trips —
+        // both are errors, not panics or silent misreads.
+        let mut bad = bytes.clone();
+        let real = u32::from_le_bytes(bad[HEADER_LEN..HEADER_LEN + 4].try_into().unwrap());
+        bad[HEADER_LEN..HEADER_LEN + 4].copy_from_slice(&(real + 3).to_le_bytes());
+        assert!(decode_stream(&bad).is_err());
+
+        // Random byte flips through the first few frames: must never
+        // panic (errors and even silently-wrong field values are
+        // acceptable for flipped *data* bytes; crashes are not).
+        for i in 0..bytes.len().min(400) {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x5a;
+            let _ = decode_stream(&bad);
+        }
+    }
+
+    #[test]
+    fn binary_tail_byte_by_byte_equals_batch_decode() {
+        let events = sample_events();
+        let bytes = encode_stream(&events);
+        let mut tail = BinaryTail::new();
+        let mut got = Vec::new();
+        for b in &bytes {
+            got.extend(tail.feed(std::slice::from_ref(b)).unwrap());
+        }
+        tail.finish().unwrap();
+        assert_eq!(got, events);
+        assert_eq!(tail.frames(), events.len());
+        assert_eq!(tail.buffered(), 0);
+        assert_eq!(tail.header().unwrap().tagged, true);
+    }
+
+    #[test]
+    fn binary_tail_reset_reads_a_fresh_stream() {
+        let tagged = encode_stream(&sample_events());
+        let untagged = encode_untagged_stream(&single_job_events());
+        let mut tail = BinaryTail::new();
+        let a = tail.feed(&tagged).unwrap();
+        assert!(!a.is_empty());
+        tail.reset();
+        assert_eq!(tail.frames(), 0);
+        let b = tail.feed(&untagged).unwrap();
+        assert!(b.iter().all(|e| e.job_id == 0));
+        tail.finish().unwrap();
+    }
+
+    #[test]
+    fn codec_seam_parity() {
+        let events = sample_events();
+        for codec in [&NdjsonCodec as &dyn EventCodec, &BinaryCodec] {
+            let bytes = codec.encode_stream(&events);
+            assert!(codec.sniff(&bytes), "{} must sniff its own output", codec.name());
+            let back = codec.decode_stream(&bytes).unwrap();
+            assert_eq!(back, events, "{} round-trip", codec.name());
+        }
+        let nd = NdjsonCodec.encode_stream(&events);
+        let bi = BinaryCodec.encode_stream(&events);
+        assert_eq!(codec_for(&nd).name(), "ndjson");
+        assert_eq!(codec_for(&bi).name(), "binary");
+        assert!(bi.len() < nd.len(), "binary must be the compact encoding");
+    }
+
+    #[test]
+    fn varint_boundaries() {
+        for v in [0u32, 1, 127, 128, 16383, 16384, u32::MAX] {
+            let mut buf = Vec::new();
+            put_varint(&mut buf, v);
+            let mut r = Reader::new(&buf, 0);
+            assert_eq!(r.varint().unwrap(), v);
+            assert_eq!(r.pos, buf.len());
+        }
+        // 5-byte varint with high bits set past u32 range.
+        let mut r = Reader::new(&[0xff, 0xff, 0xff, 0xff, 0x7f], 0);
+        assert!(r.varint().is_err());
+        // Varint that never terminates.
+        let mut r = Reader::new(&[0x80, 0x80, 0x80, 0x80, 0x80], 0);
+        assert!(r.varint().is_err());
+    }
+}

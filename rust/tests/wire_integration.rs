@@ -1,0 +1,114 @@
+//! End-to-end pin for the binary ingest path: a fleet analyzed from an
+//! mmap'd wire capture must be **indistinguishable** from the same fleet
+//! analyzed from the NDJSON event log. This is the acceptance gate for
+//! the wire format — if any field of any frame decodes differently, the
+//! `FleetReport`s diverge and this test fails.
+
+use bigroots::live::{
+    BinaryTailSource, EventSource, LiveConfig, LiveReport, LiveServer,
+    MmapReplaySource, SourcePoll,
+};
+use bigroots::sim::multi::{interleaved_workload, round_robin_specs};
+use bigroots::trace::eventlog::{parse_tagged_events, TaggedEvent};
+use bigroots::trace::wire;
+
+fn tmp_path(name: &str) -> String {
+    format!(
+        "{}/bigroots_wit_{}_{}",
+        std::env::temp_dir().display(),
+        std::process::id(),
+        name
+    )
+}
+
+fn run_fed(events: &[TaggedEvent]) -> LiveReport {
+    let mut server = LiveServer::new(LiveConfig { shards: 2, ..Default::default() });
+    server.feed_all(events);
+    server.finish()
+}
+
+fn run_source(mut source: Box<dyn EventSource>) -> LiveReport {
+    let mut server = LiveServer::new(LiveConfig { shards: 2, ..Default::default() });
+    loop {
+        match source.poll().expect("source poll") {
+            SourcePoll::Events(evs) => {
+                for e in evs {
+                    server.feed(e);
+                }
+            }
+            SourcePoll::Idle => server.pump(),
+            SourcePoll::End => break,
+        }
+    }
+    server.finish()
+}
+
+#[test]
+fn fleet_report_identical_for_ndjson_and_mmap_binary_ingest() {
+    // The canonical multi-job stream, serialized both ways.
+    let (_, events) = interleaved_workload(&round_robin_specs(3, 0.12, 9));
+    let ndjson: String = events.iter().map(|e| e.encode().to_string() + "\n").collect();
+
+    // Path A: the text hot path — parse the NDJSON log, feed the server.
+    let from_text = parse_tagged_events(&ndjson).expect("ndjson parses");
+    assert_eq!(from_text, events);
+    let report_text = run_fed(&from_text);
+
+    // Path B: the wire capture on disk, ingested through the mmap source.
+    let capture = tmp_path("capture.bew");
+    std::fs::write(&capture, wire::encode_stream(&events)).expect("write capture");
+    let source = MmapReplaySource::open(&capture).expect("open capture");
+    let report_bin = run_source(Box::new(source));
+
+    assert_eq!(
+        report_bin.fleet, report_text.fleet,
+        "FleetReport must be identical for NDJSON and binary ingest"
+    );
+    assert_eq!(report_bin.total_stages(), report_text.total_stages());
+    assert_eq!(report_bin.jobs.len(), report_text.jobs.len());
+    for (a, b) in report_bin.jobs.iter().zip(&report_text.jobs) {
+        assert_eq!(a.job_id, b.job_id, "same jobs retired in the same order");
+    }
+
+    let _ = std::fs::remove_file(&capture);
+}
+
+#[test]
+fn fleet_report_identical_for_binary_tail_ingest() {
+    // Same pin for the growing-file variant: a capture followed through
+    // `BinaryTailSource` (chunked reads + frame resync) analyzes
+    // identically to the parsed log.
+    let (_, events) = interleaved_workload(&round_robin_specs(2, 0.1, 4));
+    let report_text = run_fed(&events);
+
+    let capture = tmp_path("tail.bew");
+    std::fs::write(&capture, wire::encode_stream(&events)).expect("write capture");
+    let source = BinaryTailSource::new(&capture);
+
+    // A tail source never reports End on a static file; drain until the
+    // stream stops yielding, then finish.
+    let mut server = LiveServer::new(LiveConfig { shards: 2, ..Default::default() });
+    let mut idle = 0;
+    let mut source: Box<dyn EventSource> = Box::new(source);
+    while idle < 3 {
+        match source.poll().expect("tail poll") {
+            SourcePoll::Events(evs) => {
+                idle = 0;
+                for e in evs {
+                    server.feed(e);
+                }
+            }
+            SourcePoll::Idle => {
+                idle += 1;
+                server.pump();
+            }
+            SourcePoll::End => break,
+        }
+    }
+    let report_tail = server.finish();
+
+    assert_eq!(report_tail.fleet, report_text.fleet);
+    assert_eq!(report_tail.total_stages(), report_text.total_stages());
+
+    let _ = std::fs::remove_file(&capture);
+}

@@ -1,0 +1,293 @@
+//! Property tests for the binary event wire format (`trace/wire.rs`):
+//! the round-trip and robustness contracts the ISSUE pins.
+//!
+//! - binary → `Event` → binary is **byte**-identical (the container is
+//!   canonical);
+//! - NDJSON → binary → NDJSON is byte-identical on canonical NDJSON (the
+//!   form every tool in this repo emits), tagged and untagged;
+//! - NaN payloads, ±inf and -0.0 survive bit-exactly (compared through
+//!   `f64::to_bits` — `PartialEq` would lie for NaN), matching the
+//!   `live/persist.rs` hex convention;
+//! - truncated or corrupted captures decode to errors, never panics;
+//! - the `EventCodec` seam gives NDJSON and binary one interface with
+//!   identical decoded streams, cross-checked against
+//!   `decode_event_line` on the same logical events.
+
+use bigroots::sim::multi::{interleaved_workload, round_robin_specs};
+use bigroots::sim::{workloads, Engine, InjectionPlan, SimConfig};
+use bigroots::trace::codec::decode_event_line;
+use bigroots::trace::eventlog::{trace_to_events, Event, TaggedEvent};
+use bigroots::trace::wire::{
+    self, BinaryCodec, BinaryTail, EventCodec, NdjsonCodec, HEADER_LEN,
+};
+use bigroots::trace::model::{Locality, TaskRecord};
+use bigroots::trace::AnomalyKind;
+
+fn sample_streams() -> Vec<Vec<TaggedEvent>> {
+    // Several distinct shapes: multi-job interleaved traffic, a single
+    // injected job, and a tiny two-event stream.
+    let (_, a) = interleaved_workload(&round_robin_specs(4, 0.1, 3));
+    let w = workloads::wordcount(0.15);
+    let mut eng = Engine::new(SimConfig { seed: 31, ..Default::default() });
+    let t = eng.run(
+        "wire-props",
+        w.name,
+        &w.stages,
+        &InjectionPlan::intermittent(AnomalyKind::Io, 1, 15.0, 10.0, 300.0),
+    );
+    let b: Vec<TaggedEvent> = trace_to_events(&t)
+        .into_iter()
+        .map(|event| TaggedEvent { job_id: 42, event })
+        .collect();
+    let c = b[..2.min(b.len())].to_vec();
+    vec![a, b, c]
+}
+
+/// Compare two events field-by-field with floats as bit patterns, so NaN
+/// round-trips count as equal when (and only when) the bits match.
+fn bits_equal(a: &Event, b: &Event) -> bool {
+    fn task_bits(t: &TaskRecord) -> Vec<u64> {
+        vec![
+            t.start.to_bits(),
+            t.finish.to_bits(),
+            t.bytes_read.to_bits(),
+            t.shuffle_read_bytes.to_bits(),
+            t.shuffle_write_bytes.to_bits(),
+            t.memory_bytes_spilled.to_bits(),
+            t.disk_bytes_spilled.to_bits(),
+            t.jvm_gc_time.to_bits(),
+            t.serialize_time.to_bits(),
+            t.deserialize_time.to_bits(),
+        ]
+    }
+    match (a, b) {
+        (Event::TaskEnd(x), Event::TaskEnd(y)) => {
+            x.task_id == y.task_id
+                && x.stage_id == y.stage_id
+                && x.node == y.node
+                && x.executor == y.executor
+                && x.locality == y.locality
+                && task_bits(x) == task_bits(y)
+        }
+        _ => a == b,
+    }
+}
+
+#[test]
+fn binary_event_binary_is_byte_identical() {
+    for events in sample_streams() {
+        let bytes = wire::encode_stream(&events);
+        let decoded = wire::decode_stream(&bytes).expect("decode");
+        assert_eq!(decoded, events);
+        let re = wire::encode_stream(&decoded);
+        assert_eq!(re, bytes, "binary→Event→binary must be byte-identical");
+    }
+}
+
+#[test]
+fn ndjson_binary_ndjson_is_byte_identical_tagged() {
+    for events in sample_streams() {
+        // Canonical NDJSON: what every tool in the repo writes (sorted
+        // keys, shortest-round-trip floats).
+        let ndjson: String = events.iter().map(|e| e.encode().to_string() + "\n").collect();
+        let binary = BinaryCodec.encode_stream(&events);
+        let back = BinaryCodec.decode_stream(&binary).expect("decode");
+        let ndjson2: String = back.iter().map(|e| e.encode().to_string() + "\n").collect();
+        assert_eq!(ndjson2, ndjson, "NDJSON→binary→NDJSON must be byte-identical");
+    }
+}
+
+#[test]
+fn ndjson_binary_ndjson_is_byte_identical_untagged() {
+    let w = workloads::wordcount(0.1);
+    let mut eng = Engine::new(SimConfig { seed: 5, ..Default::default() });
+    let t = eng.run("wire-untagged", w.name, &w.stages, &InjectionPlan::none());
+    let events = trace_to_events(&t);
+    let ndjson: String = events.iter().map(|e| e.encode().to_string() + "\n").collect();
+
+    let binary = wire::encode_untagged_stream(&events);
+    let back = wire::decode_stream(&binary).expect("decode");
+    assert!(back.iter().all(|e| e.job_id == 0), "untagged maps to job 0");
+    // Untagged events re-encode without a "job" key — byte-identity holds.
+    let ndjson2: String =
+        back.iter().map(|e| e.event.encode().to_string() + "\n").collect();
+    assert_eq!(ndjson2, ndjson);
+}
+
+#[test]
+fn float_special_bit_patterns_survive_all_paths() {
+    // The persist.rs contract: floats are bit patterns, not values. Walk
+    // NaNs with payloads, ±inf and -0.0 through frame encode/decode and
+    // through the codec seam.
+    let patterns: Vec<u64> = vec![
+        f64::NAN.to_bits(),
+        0x7ff8_dead_beef_0001, // quiet NaN, nonzero payload
+        0x7ff0_0000_0000_0001, // signaling NaN
+        0xfff8_0000_0000_1234, // negative NaN with payload
+        f64::INFINITY.to_bits(),
+        f64::NEG_INFINITY.to_bits(),
+        (-0.0f64).to_bits(),
+        f64::MIN_POSITIVE.to_bits(),
+        5e-324f64.to_bits(), // subnormal
+    ];
+    for &bits in &patterns {
+        let v = f64::from_bits(bits);
+        let events = vec![
+            TaggedEvent {
+                job_id: u64::MAX,
+                event: Event::ResourceSample {
+                    node: 3,
+                    time: v,
+                    cpu: v,
+                    disk: v,
+                    net_bytes: v,
+                },
+            },
+            TaggedEvent {
+                job_id: 0,
+                event: Event::TaskEnd(TaskRecord {
+                    task_id: u64::MAX,
+                    stage_id: 7,
+                    node: 1,
+                    executor: 0,
+                    start: v,
+                    finish: v,
+                    locality: Locality::Any,
+                    bytes_read: v,
+                    shuffle_read_bytes: v,
+                    shuffle_write_bytes: v,
+                    memory_bytes_spilled: v,
+                    disk_bytes_spilled: v,
+                    jvm_gc_time: v,
+                    serialize_time: v,
+                    deserialize_time: v,
+                }),
+            },
+        ];
+        let bytes = wire::encode_stream(&events);
+        let back = wire::decode_stream(&bytes).expect("decode");
+        assert_eq!(back.len(), events.len());
+        for (got, want) in back.iter().zip(&events) {
+            assert_eq!(got.job_id, want.job_id);
+            assert!(
+                bits_equal(&got.event, &want.event),
+                "bit pattern {bits:#018x} mangled: {:?}",
+                got.event
+            );
+        }
+        // And byte-identity of the re-encode (stronger than field bits).
+        assert_eq!(wire::encode_stream(&back), bytes);
+    }
+}
+
+#[test]
+fn truncation_never_panics_and_always_errors() {
+    let streams = sample_streams();
+    let events = &streams[0];
+    let bytes = wire::encode_stream(events);
+    // A cut exactly on a frame boundary is a valid shorter capture; every
+    // other cut is a truncation and must decode to an error (never a
+    // panic). Recover the boundary set from the length prefixes.
+    let mut boundaries = std::collections::HashSet::new();
+    let mut pos = HEADER_LEN;
+    boundaries.insert(pos);
+    while pos + 4 <= bytes.len() {
+        let len =
+            u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+        pos += 4 + len;
+        boundaries.insert(pos);
+    }
+    assert!(boundaries.contains(&bytes.len()), "capture ends on a boundary");
+
+    let cuts: Vec<usize> = (0..bytes.len().min(2048))
+        .chain(bytes.len().saturating_sub(40)..=bytes.len())
+        .collect();
+    for cut in cuts {
+        let res = wire::decode_stream(&bytes[..cut]);
+        if boundaries.contains(&cut) {
+            let got = res.unwrap_or_else(|e| panic!("boundary cut {cut}: {e}"));
+            assert_eq!(&got[..], &events[..got.len()], "boundary cut {cut} is a prefix");
+        } else {
+            assert!(res.is_err(), "truncation at {cut} must be an error");
+        }
+    }
+    // The full capture still decodes.
+    assert_eq!(wire::decode_stream(&bytes).expect("full decode"), *events);
+}
+
+#[test]
+fn corruption_never_panics() {
+    let streams = sample_streams();
+    let events = &streams[0];
+    let bytes = wire::encode_stream(events);
+    // Flip one byte at a time through header + first frames: decode may
+    // error or (for data bytes) succeed with different values, but must
+    // never panic and never loop forever.
+    for i in 0..bytes.len().min(1024) {
+        for flip in [0x01u8, 0x80, 0xff] {
+            let mut bad = bytes.clone();
+            bad[i] ^= flip;
+            let _ = wire::decode_stream(&bad);
+        }
+    }
+    // Targeted corruptions that must be *errors*:
+    // zeroed length prefix,
+    let mut bad = bytes.clone();
+    bad[HEADER_LEN..HEADER_LEN + 4].copy_from_slice(&0u32.to_le_bytes());
+    assert!(wire::decode_stream(&bad).is_err());
+    // absurd length prefix,
+    let mut bad = bytes.clone();
+    bad[HEADER_LEN..HEADER_LEN + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+    assert!(wire::decode_stream(&bad).is_err());
+    // unknown kind tag.
+    let mut bad = bytes;
+    bad[HEADER_LEN + 4] = 0x7f;
+    assert!(wire::decode_stream(&bad).is_err());
+}
+
+#[test]
+fn binary_tail_resyncs_across_arbitrary_chunking() {
+    let streams = sample_streams();
+    let events = &streams[0];
+    let bytes = wire::encode_stream(events);
+    // Several chunk sizes, none aligned to frames.
+    for chunk in [1usize, 3, 7, 23, 64, 1021] {
+        let mut tail = BinaryTail::new();
+        let mut got = Vec::new();
+        for c in bytes.chunks(chunk) {
+            got.extend(tail.feed(c).expect("feed"));
+        }
+        tail.finish().expect("no partial frame at end");
+        assert_eq!(&got, events, "chunk size {chunk}");
+    }
+    // Feeding a truncated stream then finishing is a truncation error.
+    let mut tail = BinaryTail::new();
+    let _ = tail.feed(&bytes[..bytes.len() - 1]).expect("partial feed is fine");
+    assert!(tail.finish().is_err());
+}
+
+#[test]
+fn codec_seam_matches_decode_event_line() {
+    for events in sample_streams() {
+        let codecs: [&dyn EventCodec; 2] = [&NdjsonCodec, &BinaryCodec];
+        for codec in codecs {
+            let bytes = codec.encode_stream(&events);
+            assert!(codec.sniff(&bytes), "{} sniffs its own output", codec.name());
+            let back = codec.decode_stream(&bytes).expect("decode");
+            assert_eq!(back, events, "{} round-trip", codec.name());
+        }
+        // Cross-check against the zero-alloc line decoder on the same
+        // logical events: the binary decode and the NDJSON hot path agree
+        // event for event.
+        let binary = BinaryCodec.encode_stream(&events);
+        let from_binary = BinaryCodec.decode_stream(&binary).expect("decode");
+        for (te, want) in from_binary.iter().zip(&events) {
+            let line = want.encode().to_string();
+            let d = decode_event_line(&line).expect("line decodes");
+            assert_eq!(te.event, d.event, "wire vs decode_event_line");
+        }
+        // The whole point: the binary capture is smaller.
+        let ndjson = NdjsonCodec.encode_stream(&events);
+        assert!(binary.len() < ndjson.len(), "binary must be the compact encoding");
+    }
+}
