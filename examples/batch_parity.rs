@@ -1,0 +1,104 @@
+//! Batched-ingest parity — PR 10's end-to-end demo and CI gate.
+//!
+//! Simulates a multi-job fleet, then analyzes it four ways: event by
+//! event, chunked through the columnar [`EventBatch`] path at awkward
+//! batch sizes, and replayed from a binary capture with 1 and 8 decode
+//! threads. **Exits non-zero** if any `FleetReport` differs in any field
+//! — the "batching is invisible, only faster" proof.
+//!
+//! ```sh
+//! cargo run --release --example batch_parity
+//! ```
+
+use bigroots::live::{EventSource, LiveConfig, LiveReport, LiveServer, MmapReplaySource, SourcePoll};
+use bigroots::sim::multi::{interleaved_workload, round_robin_specs};
+use bigroots::trace::batch::EventBatch;
+use bigroots::trace::eventlog::TaggedEvent;
+use bigroots::trace::wire;
+
+fn main() {
+    let scale = std::env::args()
+        .skip_while(|a| a != "--scale")
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.15);
+
+    let (_, events) = interleaved_workload(&round_robin_specs(4, scale, 17));
+    println!("simulated {} events across 4 jobs (scale {scale})", events.len());
+
+    // Baseline: one feed() per event, nothing batched by the caller.
+    let mut server = LiveServer::new(LiveConfig { shards: 4, ..Default::default() });
+    for e in &events {
+        server.feed(e.clone());
+    }
+    let baseline = server.finish();
+    print_summary("per-event", &baseline);
+
+    // Chunked: cut the stream at awkward sizes (always mid-job for an
+    // interleaved fleet), round-trip every chunk through the columnar
+    // EventBatch, feed through the run-length demux.
+    for chunk in [1usize, 7, 256] {
+        let mut server = LiveServer::new(LiveConfig { shards: 4, ..Default::default() });
+        for slice in events.chunks(chunk) {
+            let batch = EventBatch::from_events(slice);
+            let round_tripped: Vec<TaggedEvent> = batch.iter().collect();
+            if round_tripped != slice {
+                eprintln!("FAIL: EventBatch round-trip changed a chunk of {chunk}");
+                std::process::exit(1);
+            }
+            server.feed_all(&round_tripped);
+        }
+        let report = server.finish();
+        check(&baseline, &report, &format!("batches of {chunk}"));
+    }
+
+    // Parallel decode: same capture, 1 vs 8 decode threads.
+    let bew_path = format!("{}/batch_parity_{}.bew", std::env::temp_dir().display(), std::process::id());
+    std::fs::write(&bew_path, wire::encode_stream(&events)).expect("write capture");
+    for threads in [1usize, 8] {
+        let mut source = MmapReplaySource::open(&bew_path)
+            .expect("open capture")
+            .with_decode_threads(threads);
+        let mut server = LiveServer::new(LiveConfig { shards: 4, ..Default::default() });
+        loop {
+            match source.poll().expect("poll capture") {
+                SourcePoll::Events(evs) => server.feed_all(&evs),
+                SourcePoll::Idle => server.pump(),
+                SourcePoll::End => break,
+            }
+        }
+        let report = server.finish();
+        check(&baseline, &report, &format!("{threads} decode threads"));
+    }
+    let _ = std::fs::remove_file(&bew_path);
+
+    println!("OK: batched and parallel-decode ingest are indistinguishable from per-event");
+}
+
+fn check(baseline: &LiveReport, got: &LiveReport, what: &str) {
+    if got.fleet != baseline.fleet {
+        eprintln!("FAIL: FleetReport diverged for {what}");
+        std::process::exit(1);
+    }
+    if got.total_stages() != baseline.total_stages() || got.jobs.len() != baseline.jobs.len() {
+        eprintln!("FAIL: job/stage totals diverged for {what}");
+        std::process::exit(1);
+    }
+    for (a, b) in got.jobs.iter().zip(&baseline.jobs) {
+        if a.job_id != b.job_id || a.analyses != b.analyses {
+            eprintln!("FAIL: job {} diverged for {what}", b.job_id);
+            std::process::exit(1);
+        }
+    }
+    print_summary(what, got);
+}
+
+fn print_summary(tag: &str, r: &LiveReport) {
+    println!(
+        "[{tag}] jobs={} stages={} tasks={} stragglers={}",
+        r.jobs.len(),
+        r.fleet.stages,
+        r.fleet.tasks,
+        r.fleet.straggler_tasks,
+    );
+}

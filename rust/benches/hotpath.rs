@@ -29,7 +29,7 @@ use bigroots::analysis::stats::{
     compute_native, quantile_grid, NativeBackend, StageStats, StatsBackend, GRID_Q,
 };
 use bigroots::util::stats::quantile_sorted;
-use bigroots::live::{LiveConfig, LiveServer};
+use bigroots::live::{EventSource, LiveConfig, LiveServer, MmapReplaySource, SourcePoll};
 use bigroots::sim::multi::{interleaved_workload, round_robin_specs, MultiJobSpec};
 use bigroots::testing::bench::{black_box, Bench};
 use bigroots::trace::codec::decode_event_line;
@@ -271,6 +271,74 @@ fn main() {
         assert_eq!(live_run(&ev, 256).0, want_repeated);
     });
 
+    // --- batched ingest & parallel decode ---------------------------------
+    // ingest/e2e/*: pre-decoded events through the LiveServer, isolating
+    // per-event pipeline overhead from decode. per-event = one queue
+    // handshake and one route per event (ingest_batch 1); batched = the
+    // columnar EventBatch path, 256 events per handshake, run-length
+    // demux in front of the hash. Reports are identical either way (the
+    // batch_parity test/example pins every field; here we pin totals).
+    let ingest_run = |events: &[TaggedEvent], batch: usize, per_event: bool| -> usize {
+        let mut server = LiveServer::new(LiveConfig {
+            shards: 4,
+            ingest_batch: batch,
+            stats_cache_capacity: 256,
+            ..Default::default()
+        });
+        if per_event {
+            for e in events {
+                server.feed(e.clone());
+            }
+        } else {
+            server.feed_all(events);
+        }
+        server.finish().total_stages()
+    };
+    bench.run("ingest/e2e/per-event", unique.len() as f64, || {
+        assert_eq!(ingest_run(&unique, 1, true), want_unique);
+    });
+    bench.run("ingest/e2e/batched", unique.len() as f64, || {
+        assert_eq!(ingest_run(&unique, 256, false), want_unique);
+    });
+
+    // decode/mmap-*: a binary capture replayed off disk through
+    // MmapReplaySource — the sequential frame walk vs frame-aligned
+    // partitions decoded on the thread pool. The stream is replicated 8x
+    // so partition decode dominates the pool's startup cost even in
+    // --quick mode.
+    let big: Vec<TaggedEvent> = (0..8).flat_map(|_| unique.iter().cloned()).collect();
+    let cap_path = format!(
+        "{}/bigroots_hotpath_{}.bew",
+        std::env::temp_dir().display(),
+        std::process::id()
+    );
+    std::fs::write(&cap_path, wire::encode_stream(&big)).expect("write capture");
+    let threads = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4)
+        .clamp(2, 8);
+    let drain_capture = |threads: usize| -> usize {
+        let mut src = MmapReplaySource::open(&cap_path)
+            .expect("open capture")
+            .with_decode_threads(threads);
+        let mut n = 0usize;
+        loop {
+            match src.poll().expect("poll capture") {
+                SourcePoll::Events(evs) => n += evs.len(),
+                SourcePoll::Idle => {}
+                SourcePoll::End => break,
+            }
+        }
+        n
+    };
+    bench.run("decode/mmap-sequential", big.len() as f64, || {
+        assert_eq!(drain_capture(1), big.len());
+    });
+    bench.run("decode/mmap-parallel", big.len() as f64, || {
+        assert_eq!(drain_capture(threads), big.len());
+    });
+    let _ = std::fs::remove_file(&cap_path);
+
     // --- headline ratios ----------------------------------------------------
     let tp = |name: &str| {
         bench
@@ -311,6 +379,19 @@ fn main() {
                 after / before
             );
         }
+    }
+    let per_event = tp("ingest/e2e/per-event");
+    let batched = tp("ingest/e2e/batched");
+    if per_event > 0.0 {
+        println!("batched ingest vs per-event: {:.2}x events/sec", batched / per_event);
+    }
+    let mmap_seq = tp("decode/mmap-sequential");
+    let mmap_par = tp("decode/mmap-parallel");
+    if mmap_seq > 0.0 {
+        println!(
+            "parallel mmap decode ({threads} threads) vs sequential: {:.2}x events/sec",
+            mmap_par / mmap_seq
+        );
     }
 
     // The perf trajectory is the point of this bench — a silent write

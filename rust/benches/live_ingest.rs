@@ -69,25 +69,29 @@ fn main() {
     };
     std::fs::write(&capture_path, wire::encode_stream(&eight_jobs))
         .expect("write bench capture");
-    let mmap_run = |path: &str| -> usize {
-        let mut source = MmapReplaySource::open(path).expect("open capture");
+    let mmap_run = |path: &str, decode_threads: usize| -> usize {
+        let mut source = MmapReplaySource::open(path)
+            .expect("open capture")
+            .with_decode_threads(decode_threads);
         let mut server = LiveServer::new(LiveConfig { shards: 4, ..Default::default() });
         loop {
             match source.poll().expect("poll capture") {
-                SourcePoll::Events(evs) => {
-                    for e in evs {
-                        server.feed(e);
-                    }
-                }
+                SourcePoll::Events(evs) => server.feed_all(&evs),
                 SourcePoll::Idle => server.pump(),
                 SourcePoll::End => break,
             }
         }
         server.finish().total_stages()
     };
-    assert_eq!(mmap_run(&capture_path), want, "mmap-replay stage-count parity");
+    assert_eq!(mmap_run(&capture_path, 1), want, "mmap-replay stage-count parity");
+    assert_eq!(mmap_run(&capture_path, 8), want, "parallel-decode stage-count parity");
     bench.run("ingest/live/mmap-replay", n, || {
-        black_box(mmap_run(&capture_path));
+        black_box(mmap_run(&capture_path, 1));
+    });
+    // The whole capture decoded up front on the pool (frame-aligned
+    // partitions, file-order merge), then batch-fed — PR 10's fast path.
+    bench.run("ingest/live/mmap-replay-parallel", n, || {
+        black_box(mmap_run(&capture_path, 8));
     });
     let _ = std::fs::remove_file(&capture_path);
 

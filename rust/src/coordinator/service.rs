@@ -264,9 +264,16 @@ impl AnalysisService {
 
     /// Ingest one event for an explicit job id.
     pub fn feed_job(&mut self, job_id: u64, event: &Event) {
+        let shard_idx = self.shard_of(job_id);
+        self.feed_routed(job_id, shard_idx, event);
+    }
+
+    /// [`Self::feed_job`] with the shard already resolved — the run-length
+    /// demux in [`Self::feed_all`] hashes once per same-job run and feeds
+    /// the rest of the run through here.
+    fn feed_routed(&mut self, job_id: u64, shard_idx: usize, event: &Event) {
         self.events_total += 1;
         let edge_width = self.cfg.bigroots.edge_width;
-        let shard_idx = self.shard_of(job_id);
         let ready = {
             let shard = &mut self.shards[shard_idx];
             shard.events += 1;
@@ -287,10 +294,23 @@ impl AnalysisService {
         self.drain_nonblocking();
     }
 
-    /// Ingest a whole slice of tagged events.
+    /// Ingest a whole slice of tagged events. Consecutive events with the
+    /// same job id — how real traces arrive: a job's task storm is one
+    /// long same-job run — are demuxed as a unit, paying one rendezvous
+    /// hash per run instead of one per event.
     pub fn feed_all(&mut self, events: &[TaggedEvent]) {
-        for e in events {
-            self.feed(e);
+        let mut i = 0;
+        while i < events.len() {
+            let job_id = events[i].job_id;
+            let mut end = i + 1;
+            while end < events.len() && events[end].job_id == job_id {
+                end += 1;
+            }
+            let shard_idx = self.shard_of(job_id);
+            for e in &events[i..end] {
+                self.feed_routed(job_id, shard_idx, &e.event);
+            }
+            i = end;
         }
     }
 

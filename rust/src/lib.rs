@@ -115,6 +115,20 @@
 //!   and corruption properties live in `rust/tests/wire_roundtrip.rs`;
 //!   `rust/tests/wire_integration.rs` pins FleetReport equality between
 //!   NDJSON and binary ingest. See `docs/WIRE_FORMAT.md`.
+//! - [`trace::batch::EventBatch`] — the **batched columnar ingest
+//!   path**: events cross the shard queues as struct-of-arrays batches
+//!   (one shared string arena per batch, f64 payloads as raw bits), one
+//!   lock acquisition and one condvar signal per batch instead of per
+//!   event, with drained batches recycled through a per-shard free
+//!   list. Routing is amortized by run-length demux (one rendezvous
+//!   hash per same-job run) and workers self-tick lifecycle scans via
+//!   [`util::queue`]'s `pop_timeout`. [`live::MmapReplaySource`] can
+//!   decode a capture across the in-tree thread pool
+//!   (`--decode-threads`): `wire::partition_frames` cuts frame-aligned
+//!   byte ranges whose in-order concatenation is bit-identical to the
+//!   sequential walk. `rust/tests/batch_parity.rs` and
+//!   `examples/batch_parity.rs` pin FleetReport equality across any
+//!   chunking and any thread count. See `docs/BATCHING.md`.
 //! - **L2 (python/compile/model.py)** — the batched per-stage feature
 //!   statistics graph in JAX, lowered once to HLO text.
 //! - **L1 (python/compile/kernels/)** — Pallas kernels for the fused

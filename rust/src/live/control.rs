@@ -558,6 +558,8 @@ pub fn live_metrics_json(m: &LiveMetrics) -> Json {
         ("events_dropped", m.events_dropped.into()),
         ("dropped_partial_lines", m.dropped_partial_lines.into()),
         ("source_parse_errors", m.source_parse_errors.into()),
+        ("source_frame_resyncs", m.source_frame_resyncs.into()),
+        ("source_dropped_frames", m.source_dropped_frames.into()),
         ("cache_hits", m.cache_hits.into()),
         ("cache_misses", m.cache_misses.into()),
         ("cache_evictions", m.cache_evictions.into()),

@@ -17,10 +17,21 @@
 //!                                                             per-job results, verdicts)
 //! ```
 //!
+//! Events move through the queues as columnar
+//! [`crate::trace::batch::EventBatch`]es: the router demuxes
+//! *runs* of consecutive same-job events (one rendezvous hash per run,
+//! not per event), each queue handshake moves a whole batch (one lock,
+//! one condvar signal), workers fold a batch under one `obs` span, and
+//! drained batch buffers cycle back to the router through a per-shard
+//! free-list so steady-state ingest allocates nothing. See
+//! `docs/BATCHING.md` for the full lifecycle.
+//!
 //! - **Backpressure**: `feed` blocks once the slowest shard's queue is
-//!   full — the transport naturally throttles to analysis speed, and
-//!   buffered memory is `shards × queue_capacity × ingest_batch` events
-//!   at most.
+//!   full — the transport naturally throttles to analysis speed. Queue
+//!   capacity is accounted in *events* (`queue_capacity × ingest_batch`
+//!   per shard), so buffered memory stays
+//!   `shards × queue_capacity × ingest_batch` events at most regardless
+//!   of how events pack into batches.
 //! - **Lifecycle GC**: each shard runs a [`Lifecycle`] that evicts
 //!   `JobState`s after `JobEnd` (drain or quiescence; see
 //!   [`crate::live::lifecycle`]), so resident state is bounded by the
@@ -62,8 +73,9 @@ use crate::live::lifecycle::{Lifecycle, LifecycleConfig};
 use crate::live::registry::{FeatureSnapshot, FleetFlag, FleetRegistry, FleetReport};
 use crate::obs::flight::{FlightRecorder, FlightWindow};
 use crate::obs::{self, SpanKind};
+use crate::trace::batch::EventBatch;
 use crate::trace::eventlog::TaggedEvent;
-use crate::util::queue::{bounded, BoundedSender};
+use crate::util::queue::{bounded, BoundedSender, PopTimeout};
 
 /// Live server tuning knobs. Correctness is independent of all of them.
 #[derive(Debug, Clone)]
@@ -71,9 +83,11 @@ pub struct LiveConfig {
     /// Shard worker threads (each owns its jobs' state and a backend).
     pub shards: usize,
     /// Events buffered per shard before a queue send (amortizes the
-    /// queue's lock).
+    /// queue's lock). Also the allocation size of recycled batch buffers.
     pub ingest_batch: usize,
-    /// Per-shard queue capacity in batches — the backpressure bound.
+    /// Per-shard queue capacity in full batches — the backpressure bound.
+    /// The queue itself accounts in events (`queue_capacity ×
+    /// ingest_batch`), so undersized batches don't inflate buffering.
     pub queue_capacity: usize,
     /// Job eviction policy.
     pub lifecycle: LifecycleConfig,
@@ -215,6 +229,14 @@ pub struct LiveMetrics {
     /// driver-loop iteration, so the `metrics` control verb sees it while
     /// the stream is still flowing.
     pub source_parse_errors: usize,
+    /// Binary frames completed across a chunk boundary by the source's
+    /// incremental reader (see
+    /// [`crate::live::source::EventSource::frame_resyncs`]).
+    pub source_frame_resyncs: usize,
+    /// Binary frames lost mid-buffer to rotation/truncation (see
+    /// [`crate::live::source::EventSource::dropped_frames`]) — the binary
+    /// twin of `dropped_partial_lines`.
+    pub source_dropped_frames: usize,
     /// Stage-stats memo hits across shard backends (live — shard workers
     /// publish after every ingest batch, so fleet snapshots see them).
     /// The memo is the cross-shard [`SharedStatsCache`], so hits include
@@ -278,8 +300,16 @@ impl LiveReport {
 /// The long-running shard-parallel analysis server. See module docs.
 pub struct LiveServer {
     cfg: LiveConfig,
-    senders: Vec<BoundedSender<Vec<TaggedEvent>>>,
-    pending: Vec<Vec<TaggedEvent>>,
+    senders: Vec<BoundedSender<EventBatch>>,
+    pending: Vec<EventBatch>,
+    /// Drained batch buffers coming back from the workers (per-shard
+    /// free-list): the router reuses them instead of allocating, so
+    /// steady-state ingest runs allocation-free. Bounded by construction —
+    /// a worker can only return buffers it was sent.
+    pools: Vec<Receiver<EventBatch>>,
+    /// Last (job id, shard) routed — consecutive same-job events skip the
+    /// rendezvous hash entirely (the run-length demux fast path).
+    route_memo: Option<(u64, usize)>,
     workers: Vec<JoinHandle<()>>,
     results_rx: Receiver<LiveMsg>,
     stats: Vec<Arc<ShardStats>>,
@@ -290,6 +320,10 @@ pub struct LiveServer {
     source_dropped_partial_lines: usize,
     /// Cumulative parse failures reported by the event source.
     source_parse_errors: usize,
+    /// Cumulative binary frame resyncs reported by the event source.
+    source_frame_resyncs: usize,
+    /// Cumulative binary frames lost mid-buffer, per the event source.
+    source_dropped_frames: usize,
     /// (job id, incarnation) → collected (seq, features, analysis, fleet
     /// flags). Features stay resident until the job retires — the
     /// counterfactual replay needs the full per-task matrices — and are
@@ -311,10 +345,13 @@ impl LiveServer {
         let shared_cache =
             Arc::new(SharedStatsCache::new(cfg.stats_cache_capacity, cfg.stats_cache_stripes));
         let mut senders = Vec::with_capacity(cfg.shards);
+        let mut pools = Vec::with_capacity(cfg.shards);
         let mut workers = Vec::with_capacity(cfg.shards);
         let mut stats = Vec::with_capacity(cfg.shards);
         for shard in 0..cfg.shards {
-            let (tx, rx) = bounded::<Vec<TaggedEvent>>(cfg.queue_capacity);
+            // Queue capacity in *events*: `queue_capacity` full batches.
+            let (tx, rx) = bounded::<EventBatch>(cfg.queue_capacity * cfg.ingest_batch);
+            let (pool_tx, pool_rx) = channel::<EventBatch>();
             let shard_stats = Arc::new(ShardStats::default());
             let worker_stats = Arc::clone(&shard_stats);
             let worker_tx = results_tx.clone();
@@ -327,6 +364,7 @@ impl LiveServer {
                 shard_worker(
                     shard,
                     rx,
+                    pool_tx,
                     worker_tx,
                     worker_stats,
                     bigroots,
@@ -337,24 +375,30 @@ impl LiveServer {
                 );
             }));
             senders.push(tx);
+            pools.push(pool_rx);
             stats.push(shard_stats);
         }
         // The workers hold the only result senders: when they exit, the
         // collector sees the channel disconnect and knows the drain is
         // complete.
         drop(results_tx);
-        let pending = (0..cfg.shards).map(|_| Vec::new()).collect();
+        let pending =
+            (0..cfg.shards).map(|_| EventBatch::with_capacity(cfg.ingest_batch)).collect();
         LiveServer {
             registry: FleetRegistry::new(cfg.fleet_min_samples),
             cfg,
             senders,
             pending,
+            pools,
+            route_memo: None,
             workers,
             results_rx,
             stats,
             shared_cache,
             source_dropped_partial_lines: 0,
             source_parse_errors: 0,
+            source_frame_resyncs: 0,
+            source_dropped_frames: 0,
             collected: HashMap::new(),
             completed: Vec::new(),
             jobs_completed: 0,
@@ -371,29 +415,71 @@ impl LiveServer {
         crate::util::shard::shard_of(job_id, self.cfg.shards)
     }
 
+    /// Route a job id, memoizing the last answer: a run of consecutive
+    /// same-job events pays for one rendezvous hash, not one per event.
+    fn route(&mut self, job_id: u64) -> usize {
+        if let Some((memo_id, shard)) = self.route_memo {
+            if memo_id == job_id {
+                return shard;
+            }
+        }
+        let shard = self.shard_of(job_id);
+        self.route_memo = Some((job_id, shard));
+        shard
+    }
+
+    /// Swap the shard's pending batch with a recycled (or fresh) buffer
+    /// and push it onto the shard queue. Blocks on a full queue — the
+    /// backpressure contract.
+    fn send_shard(&mut self, shard: usize) {
+        let fresh = self.pools[shard]
+            .try_recv()
+            .unwrap_or_else(|_| EventBatch::with_capacity(self.cfg.ingest_batch));
+        let batch = std::mem::replace(&mut self.pending[shard], fresh);
+        let events = batch.len();
+        let g = obs::span(SpanKind::EnqueueWait);
+        let sent = self.senders[shard].push_batch(batch, events);
+        g.finish();
+        if sent.is_err() {
+            panic!("live shard {shard} worker died");
+        }
+    }
+
     /// Ingest one event. Blocks when the target shard's queue is full —
     /// that is the backpressure contract.
     pub fn feed(&mut self, event: TaggedEvent) {
         self.events_total += 1;
-        let shard = self.shard_of(event.job_id);
-        self.pending[shard].push(event);
+        let shard = self.route(event.job_id);
+        self.pending[shard].push(&event);
         if self.pending[shard].len() >= self.cfg.ingest_batch {
-            let batch = std::mem::take(&mut self.pending[shard]);
-            let g = obs::span(SpanKind::EnqueueWait);
-            let sent = self.senders[shard].send(batch);
-            g.finish();
-            if sent.is_err() {
-                panic!("live shard {shard} worker died");
-            }
+            self.send_shard(shard);
         }
         self.drain_results();
     }
 
-    /// Ingest a slice (events are cloned into the shard queues).
+    /// Ingest a slice. The run-length demux: consecutive events with the
+    /// same job id route as one unit (a single rendezvous hash for the
+    /// whole run), which is where real traces spend most of their time —
+    /// a job's task storm arrives as long same-job runs.
     pub fn feed_all(&mut self, events: &[TaggedEvent]) {
-        for e in events {
-            self.feed(e.clone());
+        let mut i = 0;
+        while i < events.len() {
+            let job_id = events[i].job_id;
+            let mut end = i + 1;
+            while end < events.len() && events[end].job_id == job_id {
+                end += 1;
+            }
+            let shard = self.route(job_id);
+            for e in &events[i..end] {
+                self.pending[shard].push(e);
+                if self.pending[shard].len() >= self.cfg.ingest_batch {
+                    self.send_shard(shard);
+                }
+            }
+            self.events_total += end - i;
+            i = end;
         }
+        self.drain_results();
     }
 
     /// Push partially-filled ingest batches through and absorb any ready
@@ -407,7 +493,9 @@ impl LiveServer {
     pub fn pump(&mut self) {
         self.flush_pending();
         for shard in 0..self.cfg.shards {
-            let _ = self.senders[shard].try_send(Vec::new());
+            // Weight 0 floors to 1 in the queue, so ticks can't starve
+            // real batches; `try_push_batch` keeps the pump non-blocking.
+            let _ = self.senders[shard].try_push_batch(EventBatch::new(), 0);
         }
         self.drain_results();
     }
@@ -415,13 +503,7 @@ impl LiveServer {
     fn flush_pending(&mut self) {
         for shard in 0..self.cfg.shards {
             if !self.pending[shard].is_empty() {
-                let batch = std::mem::take(&mut self.pending[shard]);
-                let g = obs::span(SpanKind::EnqueueWait);
-                let sent = self.senders[shard].send(batch);
-                g.finish();
-                if sent.is_err() {
-                    panic!("live shard {shard} worker died");
-                }
+                self.send_shard(shard);
             }
         }
     }
@@ -464,6 +546,18 @@ impl LiveServer {
     pub fn record_source_stats(&mut self, dropped_partial_lines: usize, parse_errors: usize) {
         self.source_dropped_partial_lines = dropped_partial_lines;
         self.source_parse_errors = parse_errors;
+    }
+
+    /// Record the event source's cumulative binary-frame counters —
+    /// resyncs across chunk boundaries and frames lost to mid-buffer
+    /// rotation (surfaced in [`LiveMetrics::source_frame_resyncs`] /
+    /// [`LiveMetrics::source_dropped_frames`]). The driver loop calls
+    /// this with [`crate::live::source::EventSource::frame_resyncs`] and
+    /// [`crate::live::source::EventSource::dropped_frames`], mirroring
+    /// `record_source_stats` for NDJSON loss.
+    pub fn record_source_wire_stats(&mut self, frame_resyncs: usize, dropped_frames: usize) {
+        self.source_frame_resyncs = frame_resyncs;
+        self.source_dropped_frames = dropped_frames;
     }
 
     fn drain_results(&mut self) {
@@ -581,6 +675,8 @@ impl LiveServer {
                 .sum(),
             dropped_partial_lines: self.source_dropped_partial_lines,
             source_parse_errors: self.source_parse_errors,
+            source_frame_resyncs: self.source_frame_resyncs,
+            source_dropped_frames: self.source_dropped_frames,
             cache_hits: per_shard.iter().map(|s| s.cache_hits).sum(),
             cache_misses: per_shard.iter().map(|s| s.cache_misses).sum(),
             cache_evictions: self.shared_cache.evictions() as usize,
@@ -624,17 +720,27 @@ impl LiveServer {
     }
 }
 
+/// How long a shard worker waits on its queue before running a lifecycle
+/// scan on its own ([`crate::util::queue::BoundedReceiver::pop_timeout`]).
+/// Jobs that drain right before the stream goes quiet retire within one
+/// tick even if the driver never pumps. Wall-clock ticks cannot change
+/// analysis results — eviction is event-time gated (see
+/// [`crate::live::lifecycle`]) and the scan is idempotent.
+const WORKER_TICK: std::time::Duration = std::time::Duration::from_millis(25);
+
 /// One shard's worker loop: demux → lifecycle → analyze → report. The
 /// shard's backend memoizes through the *shared* striped cache —
 /// repeated stage shapes skip the stats kernel even when another shard
 /// computed them — and routes large stages to the XLA-capable backend
 /// when routing is enabled. Hit/miss counters (this worker's lookups)
 /// publish to [`ShardStats`] after every ingest batch so snapshots stay
-/// live.
+/// live. Drained batch buffers go back to the router through `pool_tx`
+/// (the free-list; sends after the router is gone are ignored).
 #[allow(clippy::too_many_arguments)]
 fn shard_worker(
     shard: usize,
-    rx: crate::util::queue::BoundedReceiver<Vec<TaggedEvent>>,
+    rx: crate::util::queue::BoundedReceiver<EventBatch>,
+    pool_tx: Sender<EventBatch>,
     tx: Sender<LiveMsg>,
     stats: Arc<ShardStats>,
     bigroots: BigRootsConfig,
@@ -708,15 +814,24 @@ fn shard_worker(
         stats.cache_misses.store(misses as usize, Ordering::Relaxed);
     };
     loop {
-        // Time the blocking recv so queue-idle shows up as dequeue wait in
+        // Time the bounded wait so queue-idle shows up as dequeue wait in
         // the span histograms and in this shard's self-analysis samples.
         let wait_t0 = obs::enabled().then(Instant::now);
-        let Some(batch) = rx.recv() else { break };
+        let batch = match rx.pop_timeout(WORKER_TICK) {
+            PopTimeout::Item(b) => Some(b),
+            // Self-tick: nothing arrived for a whole tick. Run the
+            // eviction scan below so a job that drained with the last
+            // events to arrive retires without waiting for the driver's
+            // pump (or for more traffic).
+            PopTimeout::TimedOut => None,
+            PopTimeout::Closed => break,
+        };
         let queue_wait = wait_t0.map(|t| t.elapsed()).unwrap_or_default();
-        if batch.is_empty() {
-            // Idle tick from `LiveServer::pump`: run the eviction scan so
-            // jobs that drained at the tail of the stream retire now. Not
-            // a real batch — no dequeue-wait span, no telemetry sample.
+        let is_tick = batch.as_ref().map(|b| b.is_empty()).unwrap_or(true);
+        if is_tick {
+            // A timeout, or an explicit empty batch from
+            // `LiveServer::pump`: run the eviction scan. Not a real batch
+            // — no dequeue-wait span, no telemetry sample.
             lc.force_scan();
             let mut kernel = 0.0;
             for e in lc.take_evictions() {
@@ -741,8 +856,12 @@ fn shard_worker(
                 });
             }
             publish(&backend, &lc, &stats);
+            if let Some(b) = batch {
+                let _ = pool_tx.send(b);
+            }
             continue;
         }
+        let mut batch = batch.unwrap();
         obs::record(SpanKind::DequeueWait, queue_wait);
         let batch_t0 = wait_t0.map(|_| Instant::now());
         let batch_start =
@@ -750,9 +869,10 @@ fn shard_worker(
         let misses_before =
             if batch_t0.is_some() { backend.lookup_counts().1 } else { 0 };
         let n_events = batch.len();
+        // One counter bump per batch, not per event.
+        stats.events.fetch_add(n_events, Ordering::Relaxed);
         let mut kernel = 0.0;
-        for ev in batch {
-            stats.events.fetch_add(1, Ordering::Relaxed);
+        for ev in batch.iter() {
             let job_id = ev.job_id;
             // Recorded before analysis so a verdict triggered by this very
             // event freezes a window that includes it.
@@ -793,6 +913,9 @@ fn shard_worker(
                 });
             }
         }
+        // Drained: recycle the buffer back to the router's free-list.
+        batch.clear();
+        let _ = pool_tx.send(batch);
         publish(&backend, &lc, &stats);
         if let Some(t0) = batch_t0 {
             let miss_delta = backend.lookup_counts().1.saturating_sub(misses_before);
@@ -887,6 +1010,55 @@ mod tests {
                 assert_eq!(a.analyses, b.analyses, "shards={shards}");
             }
         }
+    }
+
+    #[test]
+    fn batched_feed_all_matches_per_event_feed() {
+        // The run-length demux and the EventBatch round-trip must be
+        // invisible: feeding a slice and feeding event-by-event produce
+        // the same jobs, analyses and fleet report.
+        let specs = round_robin_specs(4, 0.12, 717);
+        let (_, events) = interleaved_workload(&specs);
+        let cfg = LiveConfig { shards: 3, ingest_batch: 7, ..Default::default() };
+        let per_event = {
+            let mut s = LiveServer::new(cfg.clone());
+            for e in &events {
+                s.feed(e.clone());
+            }
+            s.finish()
+        };
+        let batched = run_live(&events, cfg);
+        assert_eq!(per_event.jobs.len(), batched.jobs.len());
+        for (a, b) in per_event.jobs.iter().zip(&batched.jobs) {
+            assert_eq!(a.job_id, b.job_id);
+            assert_eq!(a.analyses, b.analyses);
+        }
+        assert_eq!(per_event.fleet, batched.fleet);
+    }
+
+    #[test]
+    fn worker_self_ticks_retire_drained_jobs_without_pump() {
+        // Jobs whose final events have reached the workers must retire on
+        // the workers' own pop_timeout ticks — no `pump()` call, no
+        // further traffic. ingest_batch=1 so nothing lingers in the
+        // router's pending buffers.
+        let specs = round_robin_specs(2, 0.1, 808);
+        let (_, events) = interleaved_workload(&specs);
+        let mut server = LiveServer::new(LiveConfig {
+            shards: 2,
+            ingest_batch: 1,
+            ..Default::default()
+        });
+        server.feed_all(&events);
+        let deadline = Instant::now() + std::time::Duration::from_secs(10);
+        let mut done = Vec::new();
+        while done.len() < 2 && Instant::now() < deadline {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            done.extend(server.drain_completed());
+        }
+        assert_eq!(done.len(), 2, "drained jobs retire via worker self-ticks");
+        let report = server.finish();
+        assert!(report.jobs.is_empty(), "nothing left for shutdown to flush");
     }
 
     #[test]

@@ -16,7 +16,10 @@
 //!   benches, and the batch path of `bigroots serve`);
 //! - [`MmapReplaySource`] — walk a binary capture (`trace/wire.rs`) that
 //!   was memory-mapped read-only: frames decode straight out of the
-//!   mapped pages, zero copy into an intermediate buffer;
+//!   mapped pages, zero copy into an intermediate buffer; with
+//!   `with_decode_threads(n)` the capture splits into frame-aligned
+//!   partitions decoded on the shared thread pool and stitched back in
+//!   file order (bit-identical output, see `docs/BATCHING.md`);
 //! - [`BinaryTailSource`] — [`TailSource`]'s twin for a *growing* binary
 //!   capture, with partial-frame resync through
 //!   [`crate::trace::wire::BinaryTail`].
@@ -66,6 +69,24 @@ pub trait EventSource {
     /// that fail hard on a parse error instead (file tail, stdin) keep
     /// the default 0 — their errors surface through `poll`'s `Err`.
     fn parse_errors(&self) -> usize {
+        0
+    }
+
+    /// Binary frame resyncs: feeds that completed a frame whose leading
+    /// bytes arrived in an earlier chunk (cumulative). The binary twin of
+    /// a partial NDJSON line that later finished — each one means the
+    /// incremental reader buffered across a poll boundary instead of
+    /// losing data. Text sources keep the default 0.
+    fn frame_resyncs(&self) -> usize {
+        0
+    }
+
+    /// Binary frames *lost* while partially buffered — a rotation or
+    /// truncation hit mid-frame and the prefix could never complete
+    /// (cumulative). The serve loop copies this into
+    /// [`crate::live::LiveMetrics::source_dropped_frames`] so the loss is
+    /// visible mid-run, matching `dropped_partial_lines` for NDJSON.
+    fn dropped_frames(&self) -> usize {
         0
     }
 }
@@ -539,8 +560,10 @@ mod mapped {
     }
 
     // The mapping is PROT_READ/MAP_PRIVATE: no writers, safe to hand to
-    // another thread.
+    // another thread — and safe to read from several at once (parallel
+    // decode shares the mapping behind an `Arc`).
     unsafe impl Send for Mmap {}
+    unsafe impl Sync for Mmap {}
 
     impl Mmap {
         /// Map a whole file read-only. `None` on any failure (caller
@@ -602,13 +625,53 @@ const MMAP_FRAMES_PER_POLL: usize = 4096;
 /// poll emits a bounded batch so the serve loop's pump and control plane
 /// stay responsive mid-replay.
 pub struct MmapReplaySource {
-    backing: Backing,
-    /// Next frame boundary in the capture.
+    backing: std::sync::Arc<Backing>,
+    /// Next frame boundary in the capture (sequential mode).
     pos: usize,
     tagged: bool,
     mapped: bool,
     frames_per_poll: usize,
+    /// Pool threads used to decode the capture (1 = sequential walk).
+    decode_threads: usize,
+    /// Parallel mode: the whole capture, decoded up front on the first
+    /// poll and then served in `frames_per_poll` chunks.
+    decoded: Option<std::vec::IntoIter<TaggedEvent>>,
     path: String,
+}
+
+/// Decode every frame in `buf[start..end]` (a frame-aligned partition
+/// from [`wire::partition_frames`]). Offsets in errors are
+/// capture-absolute so messages match the sequential walk.
+fn decode_range(
+    buf: &[u8],
+    start: usize,
+    end: usize,
+    tagged: bool,
+) -> Result<Vec<TaggedEvent>, String> {
+    let mut events = Vec::new();
+    let mut pos = start;
+    while pos < end {
+        match wire::decode_frame(&buf[pos..end], tagged) {
+            Ok(Some(f)) => {
+                events.push(TaggedEvent { job_id: f.job.unwrap_or(0), event: f.event });
+                pos += f.consumed;
+            }
+            Ok(None) => {
+                return Err(format!(
+                    "truncated frame at byte {pos} ({} bytes left)",
+                    end - pos
+                ));
+            }
+            Err(e) => {
+                return Err(format!(
+                    "corrupt capture at byte {}: {}",
+                    pos + e.offset,
+                    e.message
+                ));
+            }
+        }
+    }
+    Ok(events)
 }
 
 impl MmapReplaySource {
@@ -631,11 +694,13 @@ impl MmapReplaySource {
         let header = wire::decode_header(backing.as_slice())
             .map_err(|e| format!("{path}: {e}"))?;
         Ok(MmapReplaySource {
-            backing,
+            backing: std::sync::Arc::new(backing),
             pos: wire::HEADER_LEN,
             tagged: header.tagged,
             mapped,
             frames_per_poll: MMAP_FRAMES_PER_POLL,
+            decode_threads: 1,
+            decoded: None,
             path: path.to_string(),
         })
     }
@@ -656,10 +721,62 @@ impl MmapReplaySource {
         self.frames_per_poll = n.max(1);
         self
     }
+
+    /// Decode the capture on `n` pool threads (1, the default, keeps the
+    /// incremental sequential walk). The first poll splits the capture
+    /// into frame-aligned partitions ([`wire::partition_frames`]),
+    /// decodes them concurrently and concatenates the results in file
+    /// order — so the emitted event sequence, and any `FleetReport` built
+    /// from it, is bit-identical to the sequential walk.
+    pub fn with_decode_threads(mut self, n: usize) -> Self {
+        self.decode_threads = n.max(1);
+        self
+    }
+
+    /// One-shot parallel decode of the whole capture (see
+    /// [`Self::with_decode_threads`]).
+    fn decode_all_parallel(&mut self) -> Result<std::vec::IntoIter<TaggedEvent>, String> {
+        let g = obs::span(SpanKind::Decode);
+        let ranges = wire::partition_frames(self.backing.as_slice(), self.decode_threads)
+            .map_err(|e| {
+                format!("{}: corrupt capture at byte {}: {}", self.path, e.offset, e.message)
+            })?;
+        let pool =
+            crate::util::threadpool::ThreadPool::new(self.decode_threads.min(ranges.len().max(1)));
+        let tagged = self.tagged;
+        let backing = std::sync::Arc::clone(&self.backing);
+        let parts: Vec<Result<Vec<TaggedEvent>, String>> =
+            pool.map(ranges, move |(start, end)| {
+                decode_range(backing.as_slice(), start, end, tagged)
+            });
+        let mut events = Vec::new();
+        for part in parts {
+            events.extend(part.map_err(|e| format!("{}: {e}", self.path))?);
+        }
+        g.finish();
+        Ok(events.into_iter())
+    }
 }
 
 impl EventSource for MmapReplaySource {
     fn poll(&mut self) -> Result<SourcePoll, String> {
+        if self.decode_threads > 1 {
+            if self.decoded.is_none() {
+                if self.pos >= self.backing.as_slice().len() {
+                    return Ok(SourcePoll::End);
+                }
+                let it = self.decode_all_parallel()?;
+                self.pos = self.backing.as_slice().len();
+                self.decoded = Some(it);
+            }
+            let it = self.decoded.as_mut().unwrap();
+            let chunk: Vec<TaggedEvent> = it.by_ref().take(self.frames_per_poll).collect();
+            return if chunk.is_empty() {
+                Ok(SourcePoll::End)
+            } else {
+                Ok(SourcePoll::Events(chunk))
+            };
+        }
         let buf = self.backing.as_slice();
         if self.pos >= buf.len() {
             return Ok(SourcePoll::End);
@@ -704,10 +821,16 @@ impl EventSource for MmapReplaySource {
     }
 
     fn describe(&self) -> String {
+        let threads = if self.decode_threads > 1 {
+            format!(", {} decode threads", self.decode_threads)
+        } else {
+            String::new()
+        };
         format!(
-            "mmap-replay {} ({})",
+            "mmap-replay {} ({}{})",
             self.path,
-            if self.mapped { "mapped" } else { "heap" }
+            if self.mapped { "mapped" } else { "heap" },
+            threads
         )
     }
 }
@@ -804,6 +927,14 @@ impl EventSource for BinaryTailSource {
 
     fn describe(&self) -> String {
         format!("binary-tail {}", self.path)
+    }
+
+    fn frame_resyncs(&self) -> usize {
+        self.parser.resyncs()
+    }
+
+    fn dropped_frames(&self) -> usize {
+        self.parser.dropped_partial()
     }
 }
 
@@ -1124,6 +1255,53 @@ mod tests {
         }
         assert_eq!(got, events);
         assert_eq!(src.generations(), 1);
+        // 23-byte appends split every frame, so the tail resynced many
+        // times — and the trait surfaces the count for LiveMetrics.
+        let as_source: &dyn EventSource = &src;
+        assert!(as_source.frame_resyncs() > 0, "split frames must count as resyncs");
+        assert_eq!(as_source.dropped_frames(), 0, "nothing was lost");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn mmap_parallel_decode_matches_sequential() {
+        let t = trace(11);
+        let events = interleave_jobs(&[(4, &t)]);
+        let bytes = wire::encode_stream(&events);
+        let path = tmp_path("mmap_parallel.bew");
+        std::fs::write(&path, &bytes).unwrap();
+
+        let mut seq = MmapReplaySource::open(&path).unwrap();
+        let sequential = drain_to_end(&mut seq);
+        assert_eq!(sequential, events);
+        for threads in [2usize, 8] {
+            let mut par = MmapReplaySource::open(&path)
+                .unwrap()
+                .with_decode_threads(threads)
+                .with_frames_per_poll(7);
+            let got = drain_to_end(&mut par);
+            assert_eq!(got, sequential, "{threads} decode threads must preserve order");
+            // Exhausted source keeps reporting End.
+            assert!(matches!(par.poll().unwrap(), SourcePoll::End));
+        }
+
+        // Corruption surfaces as Err in parallel mode too (the partition
+        // scan validates every length prefix before decoding starts).
+        std::fs::write(&path, &bytes[..bytes.len() - 2]).unwrap();
+        let mut bad = MmapReplaySource::open(&path).unwrap().with_decode_threads(4);
+        let mut saw_err = false;
+        loop {
+            match bad.poll() {
+                Ok(SourcePoll::End) => break,
+                Ok(_) => continue,
+                Err(e) => {
+                    saw_err = true;
+                    assert!(e.contains("truncated"), "unexpected error: {e}");
+                    break;
+                }
+            }
+        }
+        assert!(saw_err, "parallel decode must not swallow truncation");
         let _ = std::fs::remove_file(&path);
     }
 

@@ -117,6 +117,8 @@ fn main() {
                 .opt("shards", "4", "shard worker threads (parallel demux + analysis)")
                 .opt("queue-cap", "8", "per-shard queue capacity in batches (backpressure bound)")
                 .opt("ingest-batch", "64", "events per shard-queue send")
+                .opt("batch-events", "0", "events per columnar ingest batch (0 = use ingest-batch)")
+                .opt("decode-threads", "1", "parallel decode threads for an mmap capture replay (0 = one per core, 1 = sequential)")
                 .opt("evict-after", "5", "event-time quiescence (s) after job_end before eviction")
                 .opt("stats-cache", "256", "shared stage-stats cache capacity (0 disables)")
                 .opt("cache-stripes", "8", "lock stripes in the shared stage-stats cache")
@@ -841,7 +843,10 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
     let cfg = LiveConfig {
         shards: args.get_usize("shards", 4),
         queue_capacity: args.get_usize("queue-cap", 8),
-        ingest_batch: args.get_usize("ingest-batch", 64),
+        ingest_batch: match args.get_usize("batch-events", 0) {
+            0 => args.get_usize("ingest-batch", 64),
+            n => n,
+        },
         lifecycle: LifecycleConfig {
             evict_after: args.get_f64("evict-after", 5.0),
             ..Default::default()
@@ -913,8 +918,14 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
         if !input.is_empty() && wants_binary(&input) {
             // Binary capture: replay straight off the mapped pages —
             // frames decode with zero copy, no text parse anywhere.
+            // --decode-threads > 1 splits the capture into frame-aligned
+            // partitions decoded on the thread pool (same event order).
+            let decode_threads = match args.get_usize("decode-threads", 1) {
+                0 => std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4),
+                n => n,
+            };
             match MmapReplaySource::open(&input) {
-                Ok(s) => Box::new(s) as Box<dyn EventSource>,
+                Ok(s) => Box::new(s.with_decode_threads(decode_threads)) as Box<dyn EventSource>,
                 Err(e) => {
                     eprintln!("{e}");
                     return 1;
@@ -1097,9 +1108,9 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
         match polled {
             Ok(SourcePoll::Events(events)) => {
                 idle_since = None;
-                for e in events {
-                    server.feed(e);
-                }
+                // Batched ingest: the run-length demux routes whole
+                // same-job runs, not individual events.
+                server.feed_all(&events);
             }
             Ok(SourcePoll::Idle) => {
                 server.pump();
@@ -1137,6 +1148,7 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
             }
         }
         server.record_source_stats(source.dropped_partial_lines(), source.parse_errors());
+        server.record_source_wire_stats(source.frame_resyncs(), source.dropped_frames());
         for j in server.drain_completed() {
             let mut summary = control::job_summary_json(&j);
             summary.set("retired_at", unix_now().into());
@@ -1378,6 +1390,7 @@ fn cmd_serve(args: &bigroots::util::cli::Args) -> i32 {
     // Drain-then-snapshot exit: retire every resident job, then persist
     // the final baseline so the next boot resumes from it.
     server.record_source_stats(source.dropped_partial_lines(), source.parse_errors());
+    server.record_source_wire_stats(source.frame_resyncs(), source.dropped_frames());
     let (report, registry) = server.finish_with_registry();
     if !snapshot_path.is_empty() {
         match persist::save_snapshot(&registry, &snapshot_path) {

@@ -130,6 +130,16 @@ pub fn render(obs: &Obs, metrics: Option<&LiveMetrics>, fleet: Option<&FleetRepo
                 "Event lines the source failed to parse.",
                 m.source_parse_errors as f64,
             ),
+            (
+                "bigroots_source_frame_resyncs_total",
+                "Binary frames completed across a chunk boundary by the tail reader.",
+                m.source_frame_resyncs as f64,
+            ),
+            (
+                "bigroots_source_dropped_frames_total",
+                "Binary frames lost mid-buffer to rotation or truncation.",
+                m.source_dropped_frames as f64,
+            ),
             ("bigroots_cache_hits_total", "Stage-stats memo hits.", m.cache_hits as f64),
             ("bigroots_cache_misses_total", "Stage-stats memo misses.", m.cache_misses as f64),
             ("bigroots_cache_evictions_total", "Stage-stats memo evictions.", m.cache_evictions as f64),

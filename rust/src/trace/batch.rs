@@ -1,0 +1,373 @@
+//! `EventBatch` — the struct-of-arrays container the batched ingest path
+//! moves through queues instead of one `TaggedEvent` at a time.
+//!
+//! A batch holds its events columnar: one `u64` job column, one kind-tag
+//! column (the wire format's frame tags), one packed `u64` column for
+//! ids/counts/enum tags, one packed `u64` column for `f64` raw bits, and
+//! a **single shared string arena** for every job/stage name in the
+//! batch — so a drained batch is five `Vec`s and a `String`, and
+//! [`EventBatch::clear`] keeps all six allocations for reuse. That is
+//! what lets the live server recycle batch buffers through a free-list
+//! and ingest steady-state without allocating (see docs/BATCHING.md for
+//! the ownership rules).
+//!
+//! Per-kind column arity is fixed (the same layout discipline as
+//! `trace/wire.rs` frames), so no per-event offset tables are stored:
+//! [`EventBatch::iter`] walks the columns with running cursors. Floats
+//! are stored as raw bits, so NaN payloads, ±inf and -0.0 survive the
+//! round-trip bit-identically — `from_events` → `iter` is lossless by
+//! construction, which is what keeps batched ingest results bit-identical
+//! to the per-event path.
+
+use crate::trace::eventlog::{Event, TaggedEvent};
+use crate::trace::model::{ClusterInfo, InjectionRecord, TaskRecord};
+use crate::trace::wire;
+
+/// A columnar batch of job-tagged events. See module docs.
+#[derive(Debug, Default, Clone)]
+pub struct EventBatch {
+    /// Per-event job id (the demux key; runs of equal ids are routed once).
+    jobs: Vec<u64>,
+    /// Per-event kind tag (`trace/wire.rs` frame tags).
+    kinds: Vec<u8>,
+    /// Packed ids / counts / enum tags, fixed arity per kind.
+    ints: Vec<u64>,
+    /// Packed `f64::to_bits` payloads, fixed arity per kind.
+    bits: Vec<u64>,
+    /// One shared arena for every string in the batch.
+    arena: String,
+    /// (start, end) byte spans into `arena`, in consumption order.
+    spans: Vec<(u32, u32)>,
+}
+
+impl EventBatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A batch with room for roughly `events` task-shaped events before
+    /// the columns reallocate.
+    pub fn with_capacity(events: usize) -> Self {
+        EventBatch {
+            jobs: Vec::with_capacity(events),
+            kinds: Vec::with_capacity(events),
+            ints: Vec::with_capacity(events * 5),
+            bits: Vec::with_capacity(events * 4),
+            arena: String::new(),
+            spans: Vec::new(),
+        }
+    }
+
+    /// Events in the batch.
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    /// The job-id column — what the router's run-length demux scans.
+    pub fn jobs(&self) -> &[u64] {
+        &self.jobs
+    }
+
+    /// Forget the contents, keep every allocation. A cleared batch pushed
+    /// through the free-list pool makes the next fill allocation-free.
+    pub fn clear(&mut self) {
+        self.jobs.clear();
+        self.kinds.clear();
+        self.ints.clear();
+        self.bits.clear();
+        self.arena.clear();
+        self.spans.clear();
+    }
+
+    fn push_str(&mut self, s: &str) {
+        let start = self.arena.len() as u32;
+        self.arena.push_str(s);
+        self.spans.push((start, self.arena.len() as u32));
+    }
+
+    /// Append one event. Column writes mirror [`EventBatch::iter`]'s
+    /// reads exactly — the per-kind order below is the layout contract.
+    pub fn push(&mut self, ev: &TaggedEvent) {
+        self.jobs.push(ev.job_id);
+        match &ev.event {
+            Event::JobStart { job_name, workload, cluster } => {
+                self.kinds.push(wire::K_JOB_START);
+                self.push_str(job_name);
+                self.push_str(workload);
+                self.ints.push(cluster.nodes as u64);
+                self.ints.push(cluster.cores_per_node as u64);
+                self.ints.push(cluster.executors_per_node as u64);
+            }
+            Event::StageSubmitted { stage_id, name, num_tasks } => {
+                self.kinds.push(wire::K_STAGE_SUBMITTED);
+                self.push_str(name);
+                self.ints.push(*stage_id);
+                self.ints.push(*num_tasks as u64);
+            }
+            Event::TaskStart { task_id, stage_id, node, executor, time, locality } => {
+                self.kinds.push(wire::K_TASK_START);
+                self.ints.push(*task_id);
+                self.ints.push(*stage_id);
+                self.ints.push(*node as u64);
+                self.ints.push(*executor as u64);
+                self.ints.push(wire::locality_tag(*locality) as u64);
+                self.bits.push(time.to_bits());
+            }
+            Event::TaskEnd(t) => {
+                self.kinds.push(wire::K_TASK_END);
+                self.ints.push(t.task_id);
+                self.ints.push(t.stage_id);
+                self.ints.push(t.node as u64);
+                self.ints.push(t.executor as u64);
+                self.ints.push(wire::locality_tag(t.locality) as u64);
+                self.bits.push(t.start.to_bits());
+                self.bits.push(t.finish.to_bits());
+                self.bits.push(t.bytes_read.to_bits());
+                self.bits.push(t.shuffle_read_bytes.to_bits());
+                self.bits.push(t.shuffle_write_bytes.to_bits());
+                self.bits.push(t.memory_bytes_spilled.to_bits());
+                self.bits.push(t.disk_bytes_spilled.to_bits());
+                self.bits.push(t.jvm_gc_time.to_bits());
+                self.bits.push(t.serialize_time.to_bits());
+                self.bits.push(t.deserialize_time.to_bits());
+            }
+            Event::ResourceSample { node, time, cpu, disk, net_bytes } => {
+                self.kinds.push(wire::K_RESOURCE_SAMPLE);
+                self.ints.push(*node as u64);
+                self.bits.push(time.to_bits());
+                self.bits.push(cpu.to_bits());
+                self.bits.push(disk.to_bits());
+                self.bits.push(net_bytes.to_bits());
+            }
+            Event::Injection(inj) => {
+                self.kinds.push(wire::K_INJECTION);
+                self.ints.push(inj.node as u64);
+                self.ints.push(wire::anomaly_tag(inj.kind) as u64);
+                self.bits.push(inj.t_start.to_bits());
+                self.bits.push(inj.t_end.to_bits());
+            }
+            Event::JobEnd { time } => {
+                self.kinds.push(wire::K_JOB_END);
+                self.bits.push(time.to_bits());
+            }
+        }
+    }
+
+    /// Build a batch from a slice of events (the adapter existing
+    /// consumers use; the live sources fill batches directly).
+    pub fn from_events(events: &[TaggedEvent]) -> Self {
+        let mut b = EventBatch::with_capacity(events.len());
+        for e in events {
+            b.push(e);
+        }
+        b
+    }
+
+    /// Walk the batch, reconstructing each event. Most kinds rebuild
+    /// without touching the heap; only the two named kinds (`JobStart`,
+    /// `StageSubmitted` — a tiny fraction of real traffic) copy their
+    /// strings out of the arena.
+    pub fn iter(&self) -> EventBatchIter<'_> {
+        EventBatchIter { batch: self, idx: 0, int_i: 0, bit_i: 0, str_i: 0 }
+    }
+
+    /// The whole batch as owned events (test/adapter convenience).
+    pub fn to_events(&self) -> Vec<TaggedEvent> {
+        self.iter().collect()
+    }
+}
+
+/// Cursor-walking iterator over an [`EventBatch`]. The per-kind read
+/// order mirrors [`EventBatch::push`] — that pairing is the only place
+/// the column layout exists.
+pub struct EventBatchIter<'a> {
+    batch: &'a EventBatch,
+    idx: usize,
+    int_i: usize,
+    bit_i: usize,
+    str_i: usize,
+}
+
+impl EventBatchIter<'_> {
+    fn int(&mut self) -> u64 {
+        let v = self.batch.ints[self.int_i];
+        self.int_i += 1;
+        v
+    }
+
+    fn f(&mut self) -> f64 {
+        let v = f64::from_bits(self.batch.bits[self.bit_i]);
+        self.bit_i += 1;
+        v
+    }
+
+    fn s(&mut self) -> String {
+        let (start, end) = self.batch.spans[self.str_i];
+        self.str_i += 1;
+        self.batch.arena[start as usize..end as usize].to_string()
+    }
+}
+
+impl Iterator for EventBatchIter<'_> {
+    type Item = TaggedEvent;
+
+    fn next(&mut self) -> Option<TaggedEvent> {
+        if self.idx >= self.batch.len() {
+            return None;
+        }
+        let job_id = self.batch.jobs[self.idx];
+        let kind = self.batch.kinds[self.idx];
+        self.idx += 1;
+        let event = match kind {
+            wire::K_JOB_START => {
+                let job_name = self.s();
+                let workload = self.s();
+                Event::JobStart {
+                    job_name,
+                    workload,
+                    cluster: ClusterInfo {
+                        nodes: self.int() as usize,
+                        cores_per_node: self.int() as usize,
+                        executors_per_node: self.int() as usize,
+                    },
+                }
+            }
+            wire::K_STAGE_SUBMITTED => {
+                let name = self.s();
+                Event::StageSubmitted {
+                    stage_id: self.int(),
+                    name,
+                    num_tasks: self.int() as usize,
+                }
+            }
+            wire::K_TASK_START => Event::TaskStart {
+                task_id: self.int(),
+                stage_id: self.int(),
+                node: self.int() as usize,
+                executor: self.int() as usize,
+                locality: wire::locality_from_tag(self.int() as u8)
+                    .expect("EventBatch wrote a valid locality tag"),
+                time: self.f(),
+            },
+            wire::K_TASK_END => Event::TaskEnd(TaskRecord {
+                task_id: self.int(),
+                stage_id: self.int(),
+                node: self.int() as usize,
+                executor: self.int() as usize,
+                locality: wire::locality_from_tag(self.int() as u8)
+                    .expect("EventBatch wrote a valid locality tag"),
+                start: self.f(),
+                finish: self.f(),
+                bytes_read: self.f(),
+                shuffle_read_bytes: self.f(),
+                shuffle_write_bytes: self.f(),
+                memory_bytes_spilled: self.f(),
+                disk_bytes_spilled: self.f(),
+                jvm_gc_time: self.f(),
+                serialize_time: self.f(),
+                deserialize_time: self.f(),
+            }),
+            wire::K_RESOURCE_SAMPLE => Event::ResourceSample {
+                node: self.int() as usize,
+                time: self.f(),
+                cpu: self.f(),
+                disk: self.f(),
+                net_bytes: self.f(),
+            },
+            wire::K_INJECTION => Event::Injection(InjectionRecord {
+                node: self.int() as usize,
+                kind: wire::anomaly_from_tag(self.int() as u8)
+                    .expect("EventBatch wrote a valid anomaly tag"),
+                t_start: self.f(),
+                t_end: self.f(),
+            }),
+            wire::K_JOB_END => Event::JobEnd { time: self.f() },
+            other => unreachable!("corrupt EventBatch kind tag {other}"),
+        };
+        Some(TaggedEvent { job_id, event })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::multi::{interleaved_workload, round_robin_specs};
+    use crate::trace::model::Locality;
+
+    fn sample_events() -> Vec<TaggedEvent> {
+        let (_, events) = interleaved_workload(&round_robin_specs(3, 0.08, 21));
+        events
+    }
+
+    #[test]
+    fn roundtrip_is_lossless() {
+        let events = sample_events();
+        let batch = EventBatch::from_events(&events);
+        assert_eq!(batch.len(), events.len());
+        assert_eq!(batch.to_events(), events);
+        assert_eq!(batch.jobs(), events.iter().map(|e| e.job_id).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn float_bit_patterns_survive() {
+        let v = f64::from_bits(0x7ff8_dead_beef_0001); // NaN with payload
+        let ev = TaggedEvent {
+            job_id: 3,
+            event: Event::TaskEnd(TaskRecord {
+                task_id: 1,
+                stage_id: 2,
+                node: 0,
+                executor: 0,
+                start: -0.0,
+                finish: f64::NEG_INFINITY,
+                locality: Locality::Any,
+                bytes_read: v,
+                shuffle_read_bytes: v,
+                shuffle_write_bytes: v,
+                memory_bytes_spilled: v,
+                disk_bytes_spilled: v,
+                jvm_gc_time: v,
+                serialize_time: v,
+                deserialize_time: v,
+            }),
+        };
+        let batch = EventBatch::from_events(std::slice::from_ref(&ev));
+        let back = batch.to_events();
+        match (&back[0].event, &ev.event) {
+            (Event::TaskEnd(a), Event::TaskEnd(b)) => {
+                assert_eq!(a.start.to_bits(), b.start.to_bits());
+                assert_eq!(a.finish.to_bits(), b.finish.to_bits());
+                assert_eq!(a.bytes_read.to_bits(), b.bytes_read.to_bits());
+            }
+            _ => panic!("wrong kind back"),
+        }
+    }
+
+    #[test]
+    fn clear_retains_capacity_and_reuses() {
+        let events = sample_events();
+        let mut batch = EventBatch::from_events(&events);
+        let cap = batch.ints.capacity();
+        batch.clear();
+        assert!(batch.is_empty());
+        assert_eq!(batch.ints.capacity(), cap, "clear must keep the allocation");
+        for e in &events {
+            batch.push(e);
+        }
+        assert_eq!(batch.to_events(), events);
+    }
+
+    #[test]
+    fn incremental_push_matches_from_events() {
+        let events = sample_events();
+        let mut batch = EventBatch::new();
+        for e in &events {
+            batch.push(e);
+        }
+        assert_eq!(batch.to_events(), EventBatch::from_events(&events).to_events());
+    }
+}

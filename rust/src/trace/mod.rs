@@ -9,7 +9,11 @@
 //! - [`wire`] — compact length-prefixed binary event frames (the
 //!   parser-free hot-path encoding) and the [`wire::EventCodec`] seam that
 //!   puts NDJSON and binary behind one interface.
+//! - [`batch`] — [`batch::EventBatch`], the columnar struct-of-arrays
+//!   batch container the batched ingest path moves through queues (one
+//!   shared string arena per batch, recyclable buffers).
 
+pub mod batch;
 pub mod codec;
 pub mod eventlog;
 pub mod model;

@@ -59,13 +59,13 @@ pub const MAX_FRAME_LEN: usize = 1 << 22;
 pub const MAX_STR_LEN: usize = 1 << 20;
 
 // Frame kind tags. Stable on the wire — append, never renumber.
-const K_JOB_START: u8 = 1;
-const K_STAGE_SUBMITTED: u8 = 2;
-const K_TASK_START: u8 = 3;
-const K_TASK_END: u8 = 4;
-const K_RESOURCE_SAMPLE: u8 = 5;
-const K_INJECTION: u8 = 6;
-const K_JOB_END: u8 = 7;
+pub(crate) const K_JOB_START: u8 = 1;
+pub(crate) const K_STAGE_SUBMITTED: u8 = 2;
+pub(crate) const K_TASK_START: u8 = 3;
+pub(crate) const K_TASK_END: u8 = 4;
+pub(crate) const K_RESOURCE_SAMPLE: u8 = 5;
+pub(crate) const K_INJECTION: u8 = 6;
+pub(crate) const K_JOB_END: u8 = 7;
 
 /// Decode failure: byte offset (relative to the buffer handed in) plus a
 /// human-readable reason. Corrupt and truncated input always surfaces
@@ -170,7 +170,7 @@ fn put_str(out: &mut Vec<u8>, s: &str) {
     out.extend_from_slice(s.as_bytes());
 }
 
-fn locality_tag(l: Locality) -> u8 {
+pub(crate) fn locality_tag(l: Locality) -> u8 {
     match l {
         Locality::ProcessLocal => 0,
         Locality::NodeLocal => 1,
@@ -180,7 +180,7 @@ fn locality_tag(l: Locality) -> u8 {
     }
 }
 
-fn locality_from_tag(t: u8) -> Option<Locality> {
+pub(crate) fn locality_from_tag(t: u8) -> Option<Locality> {
     Some(match t {
         0 => Locality::ProcessLocal,
         1 => Locality::NodeLocal,
@@ -191,7 +191,7 @@ fn locality_from_tag(t: u8) -> Option<Locality> {
     })
 }
 
-fn anomaly_tag(k: AnomalyKind) -> u8 {
+pub(crate) fn anomaly_tag(k: AnomalyKind) -> u8 {
     match k {
         AnomalyKind::Cpu => 0,
         AnomalyKind::Io => 1,
@@ -199,7 +199,7 @@ fn anomaly_tag(k: AnomalyKind) -> u8 {
     }
 }
 
-fn anomaly_from_tag(t: u8) -> Option<AnomalyKind> {
+pub(crate) fn anomaly_from_tag(t: u8) -> Option<AnomalyKind> {
     Some(match t {
         0 => AnomalyKind::Cpu,
         1 => AnomalyKind::Io,
@@ -554,6 +554,62 @@ pub fn decode_stream(bytes: &[u8]) -> Result<Vec<TaggedEvent>, WireError> {
     Ok(out)
 }
 
+/// Split a whole capture into at most `parts` contiguous, frame-aligned
+/// byte ranges of roughly equal size — the partition step of parallel
+/// mmap decode. Only the length prefixes are walked (two loads per
+/// frame, no payload decode), so the scan costs a tiny fraction of the
+/// decode it parallelizes. Ranges come back in file order and cover the
+/// frames region exactly, so concatenating their decoded events in range
+/// order reproduces the sequential decode bit for bit (the "merge" of
+/// the parallel path is ordered concatenation; see docs/BATCHING.md).
+///
+/// The prefix walk applies the same corruption rules as
+/// [`decode_stream`]: a zero-length or oversized frame and a capture cut
+/// mid-frame are errors carrying an absolute byte offset.
+pub fn partition_frames(bytes: &[u8], parts: usize) -> Result<Vec<(usize, usize)>, WireError> {
+    decode_header(bytes)?;
+    let parts = parts.max(1);
+    let end = bytes.len();
+    let mut pos = HEADER_LEN;
+    let span = end - pos;
+    // Cut at the first frame boundary at or past each ideal byte edge.
+    let target = (span + parts - 1) / parts.max(1);
+    let target = target.max(1);
+    let mut ranges: Vec<(usize, usize)> = Vec::new();
+    let mut start = pos;
+    while pos < end {
+        if end - pos < 4 {
+            return err(
+                pos,
+                format!("truncated frame length prefix ({} bytes left)", end - pos),
+            );
+        }
+        let len = u32::from_le_bytes([bytes[pos], bytes[pos + 1], bytes[pos + 2], bytes[pos + 3]])
+            as usize;
+        if len == 0 {
+            return err(pos, "zero-length frame".to_string());
+        }
+        if len > MAX_FRAME_LEN {
+            return err(pos, format!("frame length {len} exceeds cap {MAX_FRAME_LEN}"));
+        }
+        if end - pos - 4 < len {
+            return err(
+                pos,
+                format!("truncated frame at end of capture ({} bytes left)", end - pos),
+            );
+        }
+        pos += 4 + len;
+        if pos - start >= target && ranges.len() + 1 < parts {
+            ranges.push((start, pos));
+            start = pos;
+        }
+    }
+    if pos > start {
+        ranges.push((start, pos));
+    }
+    Ok(ranges)
+}
+
 // ---------------------------------------------------------------------------
 // Incremental reader
 
@@ -569,6 +625,12 @@ pub struct BinaryTail {
     buf: Vec<u8>,
     header: Option<StreamHeader>,
     frames: usize,
+    /// Feeds that completed a frame begun in an earlier chunk. Cumulative
+    /// across resets — it is a health counter, not per-stream state.
+    resyncs: usize,
+    /// Partial frames abandoned by [`BinaryTail::reset`] (rotation or
+    /// reconnect cut a half-written frame). Cumulative across resets.
+    dropped_partial: usize,
 }
 
 impl BinaryTail {
@@ -578,6 +640,7 @@ impl BinaryTail {
 
     /// Consume one chunk; returns every event whose frame completed.
     pub fn feed(&mut self, chunk: &[u8]) -> Result<Vec<TaggedEvent>, WireError> {
+        let pending = !self.buf.is_empty();
         self.buf.extend_from_slice(chunk);
         if self.header.is_none() {
             if self.buf.len() < HEADER_LEN {
@@ -603,6 +666,9 @@ impl BinaryTail {
             }
         }
         self.buf.drain(..pos);
+        if pending && !out.is_empty() {
+            self.resyncs += 1;
+        }
         Ok(out)
     }
 
@@ -618,8 +684,13 @@ impl BinaryTail {
         }
     }
 
-    /// Start over on a fresh stream (log rotation / reconnect).
+    /// Start over on a fresh stream (log rotation / reconnect). A
+    /// half-buffered frame is abandoned and counted in
+    /// [`BinaryTail::dropped_partial`].
     pub fn reset(&mut self) {
+        if self.header.is_some() && !self.buf.is_empty() {
+            self.dropped_partial += 1;
+        }
         self.buf.clear();
         self.header = None;
         self.frames = 0;
@@ -633,6 +704,18 @@ impl BinaryTail {
     /// Complete frames decoded since creation or the last reset.
     pub fn frames(&self) -> usize {
         self.frames
+    }
+
+    /// Feeds that completed a frame begun in an earlier chunk — how often
+    /// the reader had to resync across a partial append. Cumulative.
+    pub fn resyncs(&self) -> usize {
+        self.resyncs
+    }
+
+    /// Partial frames abandoned at [`BinaryTail::reset`] (rotation cut a
+    /// half-written frame). Cumulative.
+    pub fn dropped_partial(&self) -> usize {
+        self.dropped_partial
     }
 
     /// The stream header, once enough bytes arrived to parse it.
@@ -1013,6 +1096,70 @@ mod tests {
         assert_eq!(codec_for(&nd).name(), "ndjson");
         assert_eq!(codec_for(&bi).name(), "binary");
         assert!(bi.len() < nd.len(), "binary must be the compact encoding");
+    }
+
+    #[test]
+    fn partition_frames_covers_the_stream_in_order() {
+        let events = sample_events();
+        let bytes = encode_stream(&events);
+        for parts in [1usize, 2, 3, 8, 64, 10_000] {
+            let ranges = partition_frames(&bytes, parts).unwrap();
+            assert!(!ranges.is_empty());
+            assert!(ranges.len() <= parts);
+            assert_eq!(ranges.first().unwrap().0, HEADER_LEN);
+            assert_eq!(ranges.last().unwrap().1, bytes.len());
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "ranges must be contiguous");
+            }
+            // Frame-aligned: every range decodes standalone, and the
+            // in-order concatenation is exactly the sequential decode.
+            let tagged = decode_header(&bytes).unwrap().tagged;
+            let mut all = Vec::new();
+            for &(s, e) in &ranges {
+                let mut pos = s;
+                while pos < e {
+                    let f = decode_frame(&bytes[pos..e], tagged)
+                        .unwrap()
+                        .expect("range cut on a frame boundary");
+                    all.push(TaggedEvent { job_id: f.job.unwrap_or(0), event: f.event });
+                    pos += f.consumed;
+                }
+                assert_eq!(pos, e);
+            }
+            assert_eq!(all, events);
+        }
+        // Header-only capture: no frames, no ranges.
+        assert!(partition_frames(&encode_header(true), 4).unwrap().is_empty());
+        // Truncated capture: the scan errors like the strict decoder.
+        assert!(partition_frames(&bytes[..bytes.len() - 1], 4).is_err());
+    }
+
+    #[test]
+    fn binary_tail_counts_resyncs_and_rotation_drops() {
+        let events = sample_events();
+        let bytes = encode_stream(&events);
+        let mut tail = BinaryTail::new();
+        // Whole stream in one feed: nothing to resync.
+        tail.feed(&bytes).unwrap();
+        assert_eq!(tail.resyncs(), 0);
+        assert_eq!(tail.dropped_partial(), 0);
+        // Clean rotation (no buffered bytes) drops nothing.
+        tail.reset();
+        assert_eq!(tail.dropped_partial(), 0);
+        // A chunk cut mid-frame: the next feed completes the buffered
+        // frame and counts one resync.
+        let cut = HEADER_LEN + 7;
+        tail.feed(&bytes[..cut]).unwrap();
+        assert!(tail.buffered() > 0);
+        let got = tail.feed(&bytes[cut..]).unwrap();
+        assert_eq!(got, events);
+        assert_eq!(tail.resyncs(), 1);
+        // Rotation mid-frame abandons the half-written frame.
+        tail.reset();
+        tail.feed(&bytes[..cut]).unwrap();
+        assert!(tail.buffered() > 0);
+        tail.reset();
+        assert_eq!(tail.dropped_partial(), 1);
     }
 
     #[test]

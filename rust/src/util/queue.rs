@@ -11,16 +11,41 @@
 //!   buffered, then returns `None`;
 //! - dropping the receiver poisons the channel — `send` returns the
 //!   rejected item back to the caller instead of blocking forever.
+//!
+//! Two batched-ingest refinements on top of the classic shape:
+//!
+//! - **Weighted capacity.** Every item carries a weight
+//!   ([`BoundedSender::send`] weighs 1; [`BoundedSender::push_batch`]
+//!   weighs its event count), and `cap` bounds the buffered weight — so a
+//!   queue of `EventBatch`es is bounded in *events*, not batch handles,
+//!   and memory stays proportional to `cap` no matter the batch size mix.
+//!   One batch is always admitted into an empty queue even when it
+//!   outweighs `cap` (progress guarantee: an oversize batch can never
+//!   deadlock).
+//! - **Targeted signaling.** Waiter counts live in the shared state, so a
+//!   push signals `not_empty` only when the receiver is actually parked
+//!   and a pop signals `not_full` only when a sender is — the common
+//!   uncontended push/pop is one lock acquisition and zero syscalls,
+//!   instead of an unconditional notify per operation.
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 struct State<T> {
-    buf: VecDeque<T>,
+    /// Buffered items with their weights.
+    buf: VecDeque<(T, usize)>,
+    /// Total buffered weight (Σ item weights) — what `cap` bounds.
+    weight: usize,
     /// No sender left — drain and stop.
     senders: usize,
     /// Receiver gone — sends are futile.
     receiver_alive: bool,
+    /// Senders parked on `not_full` (targeted wakeups).
+    send_waiters: usize,
+    /// Receivers parked on `not_empty` (0 or 1; the type is SPSC on the
+    /// pop side, but the count keeps the signaling logic uniform).
+    recv_waiters: usize,
 }
 
 struct Shared<T> {
@@ -30,13 +55,32 @@ struct Shared<T> {
     not_empty: Condvar,
 }
 
-/// Create a bounded channel with room for `cap` items (min 1).
+/// Outcome of a [`BoundedReceiver::pop_timeout`].
+#[derive(Debug, PartialEq, Eq)]
+pub enum PopTimeout<T> {
+    /// An item arrived (or was already buffered).
+    Item(T),
+    /// Nothing arrived within the window; the channel is still open. The
+    /// live shard workers use this tick to run lifecycle `force_scan`
+    /// without depending on the serve loop's pump cadence.
+    TimedOut,
+    /// Every sender dropped and the buffer is drained.
+    Closed,
+}
+
+/// Create a bounded channel with room for `cap` total weight (min 1).
+/// With the plain `send`/`try_send` API every item weighs 1, so `cap` is
+/// an item count, exactly as before; batched producers account capacity
+/// in events via [`BoundedSender::push_batch`].
 pub fn bounded<T>(cap: usize) -> (BoundedSender<T>, BoundedReceiver<T>) {
     let shared = Arc::new(Shared {
         state: Mutex::new(State {
             buf: VecDeque::new(),
+            weight: 0,
             senders: 1,
             receiver_alive: true,
+            send_waiters: 0,
+            recv_waiters: 0,
         }),
         cap: cap.max(1),
         not_full: Condvar::new(),
@@ -52,35 +96,61 @@ pub struct BoundedSender<T> {
 }
 
 impl<T> BoundedSender<T> {
-    /// Enqueue `item`, blocking while the queue is full. Returns the item
-    /// back if the receiver is gone.
+    /// Enqueue `item` at weight 1, blocking while the queue is full.
+    /// Returns the item back if the receiver is gone.
     pub fn send(&self, item: T) -> Result<(), T> {
+        self.push_batch(item, 1)
+    }
+
+    /// Enqueue one batch whose capacity cost is `events` (floored at 1 so
+    /// zero-weight ticks still occupy a slot and cannot accumulate
+    /// unboundedly). Blocks while the buffered weight is at `cap`, except
+    /// that a batch is always admitted into an *empty* queue — a batch
+    /// heavier than `cap` makes progress instead of deadlocking. One lock
+    /// acquisition and at most one condvar signal per batch, however many
+    /// events it carries.
+    pub fn push_batch(&self, item: T, events: usize) -> Result<(), T> {
+        let w = events.max(1);
         let mut st = self.shared.state.lock().unwrap();
         loop {
             if !st.receiver_alive {
                 return Err(item);
             }
-            if st.buf.len() < self.shared.cap {
-                st.buf.push_back(item);
-                self.shared.not_empty.notify_one();
+            if st.weight + w <= self.shared.cap || st.buf.is_empty() {
+                st.buf.push_back((item, w));
+                st.weight += w;
+                if st.recv_waiters > 0 {
+                    self.shared.not_empty.notify_one();
+                }
                 return Ok(());
             }
+            st.send_waiters += 1;
             st = self.shared.not_full.wait(st).unwrap();
+            st.send_waiters -= 1;
         }
     }
 
-    /// Enqueue `item` only if there is room right now — never blocks.
-    /// `Err` returns the item back, whether the queue was full or the
-    /// receiver is gone. The live server's idle tick uses this: a tick is
-    /// advisory, and a shard busy enough to have a full queue is already
-    /// running its scans through the normal feed path.
+    /// Enqueue `item` (weight 1) only if there is room right now — never
+    /// blocks. `Err` returns the item back, whether the queue was full or
+    /// the receiver is gone. The live server's idle tick uses this: a
+    /// tick is advisory, and a shard busy enough to have a full queue is
+    /// already running its scans through the normal feed path.
     pub fn try_send(&self, item: T) -> Result<(), T> {
+        self.try_push_batch(item, 1)
+    }
+
+    /// Non-blocking [`BoundedSender::push_batch`].
+    pub fn try_push_batch(&self, item: T, events: usize) -> Result<(), T> {
+        let w = events.max(1);
         let mut st = self.shared.state.lock().unwrap();
-        if !st.receiver_alive || st.buf.len() >= self.shared.cap {
+        if !st.receiver_alive || (st.weight + w > self.shared.cap && !st.buf.is_empty()) {
             return Err(item);
         }
-        st.buf.push_back(item);
-        self.shared.not_empty.notify_one();
+        st.buf.push_back((item, w));
+        st.weight += w;
+        if st.recv_waiters > 0 {
+            self.shared.not_empty.notify_one();
+        }
         Ok(())
     }
 
@@ -91,6 +161,11 @@ impl<T> BoundedSender<T> {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Total buffered weight — events, for a queue of batches.
+    pub fn weight(&self) -> usize {
+        self.shared.state.lock().unwrap().weight
     }
 }
 
@@ -105,7 +180,7 @@ impl<T> Drop for BoundedSender<T> {
     fn drop(&mut self) {
         let mut st = self.shared.state.lock().unwrap();
         st.senders -= 1;
-        if st.senders == 0 {
+        if st.senders == 0 && st.recv_waiters > 0 {
             // Wake a receiver blocked on an empty queue so it can observe
             // the close and return None.
             self.shared.not_empty.notify_all();
@@ -119,30 +194,77 @@ pub struct BoundedReceiver<T> {
 }
 
 impl<T> BoundedReceiver<T> {
+    /// Release `w` weight after a pop and wake one parked sender if any —
+    /// the pop-side half of targeted signaling. Callers hold the lock.
+    fn on_pop(&self, st: &mut State<T>, w: usize) {
+        st.weight -= w;
+        if st.send_waiters > 0 {
+            self.shared.not_full.notify_one();
+        }
+    }
+
     /// Dequeue one item, blocking while the queue is empty. Returns `None`
     /// once every sender has dropped and the buffer is drained.
     pub fn recv(&self) -> Option<T> {
         let mut st = self.shared.state.lock().unwrap();
         loop {
-            if let Some(item) = st.buf.pop_front() {
-                self.shared.not_full.notify_one();
+            if let Some((item, w)) = st.buf.pop_front() {
+                self.on_pop(&mut st, w);
                 return Some(item);
             }
             if st.senders == 0 {
                 return None;
             }
+            st.recv_waiters += 1;
             st = self.shared.not_empty.wait(st).unwrap();
+            st.recv_waiters -= 1;
+        }
+    }
+
+    /// [`BoundedReceiver::recv`] under the batch name, for symmetry with
+    /// [`BoundedSender::push_batch`].
+    pub fn pop_batch(&self) -> Option<T> {
+        self.recv()
+    }
+
+    /// Dequeue one item, blocking at most `timeout`. The tri-state result
+    /// distinguishes "nothing yet" from "channel closed", so a shard
+    /// worker can run its periodic lifecycle scan on [`PopTimeout::TimedOut`]
+    /// and still exit promptly on [`PopTimeout::Closed`].
+    pub fn pop_timeout(&self, timeout: Duration) -> PopTimeout<T> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if let Some((item, w)) = st.buf.pop_front() {
+                self.on_pop(&mut st, w);
+                return PopTimeout::Item(item);
+            }
+            if st.senders == 0 {
+                return PopTimeout::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return PopTimeout::TimedOut;
+            }
+            st.recv_waiters += 1;
+            let (guard, _res) = self.shared.not_empty.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+            st.recv_waiters -= 1;
+            // Loop re-checks the buffer: a wakeup racing the deadline
+            // still drains an item that actually arrived.
         }
     }
 
     /// Dequeue one item if immediately available.
     pub fn try_recv(&self) -> Option<T> {
         let mut st = self.shared.state.lock().unwrap();
-        let item = st.buf.pop_front();
-        if item.is_some() {
-            self.shared.not_full.notify_one();
+        match st.buf.pop_front() {
+            Some((item, w)) => {
+                self.on_pop(&mut st, w);
+                Some(item)
+            }
+            None => None,
         }
-        item
     }
 
     pub fn len(&self) -> usize {
@@ -152,6 +274,11 @@ impl<T> BoundedReceiver<T> {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// Total buffered weight — events, for a queue of batches.
+    pub fn weight(&self) -> usize {
+        self.shared.state.lock().unwrap().weight
+    }
 }
 
 impl<T> Drop for BoundedReceiver<T> {
@@ -159,6 +286,7 @@ impl<T> Drop for BoundedReceiver<T> {
         let mut st = self.shared.state.lock().unwrap();
         st.receiver_alive = false;
         st.buf.clear();
+        st.weight = 0;
         // Unblock senders waiting for room; they'll see the poisoned flag.
         self.shared.not_full.notify_all();
     }
@@ -247,5 +375,108 @@ mod tests {
         });
         assert_eq!(rx.recv(), Some(7));
         h.join().unwrap();
+    }
+
+    #[test]
+    fn batch_weight_bounds_capacity_in_events() {
+        // cap 10 events: two 4-event batches fit, the third blocks until
+        // a pop releases weight.
+        let (tx, rx) = bounded::<Vec<u64>>(10);
+        tx.push_batch(vec![0; 4], 4).unwrap();
+        tx.push_batch(vec![1; 4], 4).unwrap();
+        assert_eq!(tx.weight(), 8);
+        assert_eq!(
+            tx.try_push_batch(vec![2; 4], 4),
+            Err(vec![2; 4]),
+            "third batch exceeds the event budget"
+        );
+        let blocked = std::thread::spawn(move || {
+            tx.push_batch(vec![2; 4], 4).unwrap();
+            tx.weight()
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(rx.pop_batch(), Some(vec![0; 4]));
+        let w = blocked.join().unwrap();
+        assert!(w <= 10, "blocked push admitted within the budget, got weight {w}");
+        assert_eq!(rx.pop_batch(), Some(vec![1; 4]));
+        assert_eq!(rx.pop_batch(), Some(vec![2; 4]));
+    }
+
+    #[test]
+    fn oversize_batch_enters_an_empty_queue() {
+        // A batch heavier than the whole cap must not deadlock: it is
+        // admitted alone, and the queue refuses more until it drains.
+        let (tx, rx) = bounded::<Vec<u64>>(4);
+        tx.push_batch(vec![9; 100], 100).unwrap();
+        assert_eq!(tx.try_push_batch(vec![1], 1), Err(vec![1]));
+        assert_eq!(rx.pop_batch(), Some(vec![9; 100]));
+        tx.push_batch(vec![1], 1).unwrap();
+        assert_eq!(rx.pop_batch(), Some(vec![1]));
+    }
+
+    #[test]
+    fn pop_timeout_times_out_then_delivers_then_closes() {
+        let (tx, rx) = bounded::<u8>(2);
+        let t0 = Instant::now();
+        assert_eq!(rx.pop_timeout(Duration::from_millis(25)), PopTimeout::TimedOut);
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            tx.send(5).unwrap();
+            // tx drops here → channel closes.
+        });
+        assert_eq!(rx.pop_timeout(Duration::from_secs(5)), PopTimeout::Item(5));
+        h.join().unwrap();
+        assert_eq!(rx.pop_timeout(Duration::from_millis(1)), PopTimeout::Closed);
+    }
+
+    #[test]
+    fn targeted_signaling_counts_no_parked_waiters_when_uncontended() {
+        // Uncontended pushes and pops must leave both waiter counts at
+        // zero — the structural invariant behind "no notify per op".
+        let (tx, rx) = bounded::<u64>(64);
+        for i in 0..32 {
+            tx.send(i).unwrap();
+        }
+        for _ in 0..32 {
+            rx.try_recv().unwrap();
+        }
+        let st = rx.shared.state.lock().unwrap();
+        assert_eq!(st.send_waiters, 0);
+        assert_eq!(st.recv_waiters, 0);
+        assert_eq!(st.weight, 0);
+    }
+
+    #[test]
+    fn contended_producers_and_consumer_drain_everything() {
+        // Stress the targeted wakeups: several producers block and unblock
+        // against one slow consumer; every item must arrive exactly once.
+        let (tx, rx) = bounded::<u64>(3);
+        let mut handles = Vec::new();
+        for p in 0..4u64 {
+            let txc = tx.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..100 {
+                    txc.send(p * 1000 + i).unwrap();
+                }
+            }));
+        }
+        drop(tx);
+        let mut got = Vec::new();
+        loop {
+            match rx.pop_timeout(Duration::from_millis(200)) {
+                PopTimeout::Item(x) => got.push(x),
+                PopTimeout::TimedOut => continue,
+                PopTimeout::Closed => break,
+            }
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        got.sort_unstable();
+        let mut want: Vec<u64> =
+            (0..4u64).flat_map(|p| (0..100).map(move |i| p * 1000 + i)).collect();
+        want.sort_unstable();
+        assert_eq!(got, want);
     }
 }

@@ -1,0 +1,122 @@
+//! Bit-parity pin for the batched ingest path: however a stream is cut
+//! into batches — size 1, huge, or deliberately mid-job — and however
+//! many threads decode a capture, the resulting `FleetReport` must be
+//! identical to the single-event path. This is the acceptance gate for
+//! PR 10's batched columnar ingest (see `docs/BATCHING.md`).
+
+use bigroots::live::{EventSource, LiveConfig, LiveReport, LiveServer, MmapReplaySource, SourcePoll};
+use bigroots::sim::multi::{interleaved_workload, round_robin_specs};
+use bigroots::trace::batch::EventBatch;
+use bigroots::trace::eventlog::TaggedEvent;
+use bigroots::trace::wire;
+
+fn tmp_path(name: &str) -> String {
+    format!(
+        "{}/bigroots_bp_{}_{}",
+        std::env::temp_dir().display(),
+        std::process::id(),
+        name
+    )
+}
+
+/// The baseline: one `feed` call per event, nothing batched by the
+/// caller.
+fn run_per_event(events: &[TaggedEvent]) -> LiveReport {
+    let mut server = LiveServer::new(LiveConfig { shards: 2, ..Default::default() });
+    for e in events {
+        server.feed(e.clone());
+    }
+    server.finish()
+}
+
+fn assert_reports_match(a: &LiveReport, b: &LiveReport, what: &str) {
+    assert_eq!(a.fleet, b.fleet, "{what}: FleetReport diverged");
+    assert_eq!(a.total_stages(), b.total_stages(), "{what}");
+    assert_eq!(a.jobs.len(), b.jobs.len(), "{what}");
+    for (x, y) in a.jobs.iter().zip(&b.jobs) {
+        assert_eq!(x.job_id, y.job_id, "{what}: retirement order");
+        assert_eq!(x.analyses, y.analyses, "{what}: job {}", x.job_id);
+    }
+}
+
+#[test]
+fn any_chunking_into_batches_matches_the_single_event_path() {
+    let (_, events) = interleaved_workload(&round_robin_specs(3, 0.12, 21));
+    let baseline = run_per_event(&events);
+
+    // Deterministic LCG chunk sizes in 1..=max: interleaved streams get
+    // cut mid-job constantly, and size 1 degenerates to the per-event
+    // path. Each chunk round-trips through the columnar EventBatch
+    // before feeding, so the container itself is in the loop.
+    for (seed, max) in [(1u64, 1usize), (2, 5), (3, 64), (4, 1000)] {
+        let mut server = LiveServer::new(LiveConfig { shards: 2, ..Default::default() });
+        let mut state = seed;
+        let mut i = 0;
+        while i < events.len() {
+            state = state
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            let size = 1 + (state >> 33) as usize % max;
+            let end = (i + size).min(events.len());
+            let batch = EventBatch::from_events(&events[i..end]);
+            assert_eq!(batch.len(), end - i);
+            let round_tripped: Vec<TaggedEvent> = batch.iter().collect();
+            assert_eq!(round_tripped, events[i..end], "EventBatch round-trip");
+            server.feed_all(&round_tripped);
+            i = end;
+        }
+        let report = server.finish();
+        assert_reports_match(&baseline, &report, &format!("chunking seed {seed} max {max}"));
+    }
+}
+
+#[test]
+fn parallel_decode_thread_count_does_not_change_the_report() {
+    let (_, events) = interleaved_workload(&round_robin_specs(3, 0.1, 33));
+    let capture = tmp_path("parallel.bew");
+    std::fs::write(&capture, wire::encode_stream(&events)).expect("write capture");
+
+    // The decoded event sequences are identical, thread count aside…
+    let drain = |threads: usize| -> Vec<TaggedEvent> {
+        let mut src = MmapReplaySource::open(&capture)
+            .expect("open capture")
+            .with_decode_threads(threads);
+        let mut out = Vec::new();
+        loop {
+            match src.poll().expect("poll") {
+                SourcePoll::Events(evs) => out.extend(evs),
+                SourcePoll::Idle => {}
+                SourcePoll::End => break,
+            }
+        }
+        out
+    };
+    let sequential = drain(1);
+    assert_eq!(sequential, events);
+    for threads in [2usize, 8] {
+        assert_eq!(drain(threads), sequential, "{threads} decode threads");
+    }
+
+    // …and so are the reports built from them, fed through the batched
+    // feed_all path.
+    let run = |threads: usize| -> LiveReport {
+        let mut src = MmapReplaySource::open(&capture)
+            .expect("open capture")
+            .with_decode_threads(threads);
+        let mut server = LiveServer::new(LiveConfig { shards: 2, ..Default::default() });
+        loop {
+            match src.poll().expect("poll") {
+                SourcePoll::Events(evs) => server.feed_all(&evs),
+                SourcePoll::Idle => server.pump(),
+                SourcePoll::End => break,
+            }
+        }
+        server.finish()
+    };
+    let report_seq = run(1);
+    let report_par = run(8);
+    assert_reports_match(&report_seq, &report_par, "1 vs 8 decode threads");
+    assert_reports_match(&report_seq, &run_per_event(&events), "capture vs per-event");
+
+    let _ = std::fs::remove_file(&capture);
+}

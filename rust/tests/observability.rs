@@ -133,6 +133,8 @@ fn prom_render_covers_a_live_server_run() {
         "bigroots_span_quantile_seconds",
         "bigroots_source_dropped_partial_lines_total",
         "bigroots_source_parse_errors_total",
+        "bigroots_source_frame_resyncs_total",
+        "bigroots_source_dropped_frames_total",
         "bigroots_fleet_jobs_completed",
     ] {
         assert!(text.contains(&format!("# HELP {family} ")), "missing HELP for {family}");
@@ -178,13 +180,18 @@ fn metrics_verb_surfaces_source_counters_mid_run() {
     // The serve driver pushes the source's running totals in after each
     // poll; the `metrics` verb must reflect them *before* shutdown.
     server.record_source_stats(5, 3);
+    server.record_source_wire_stats(4, 1);
     let m = server.metrics();
     assert_eq!(m.dropped_partial_lines, 5, "partial-line drops invisible mid-run");
     assert_eq!(m.source_parse_errors, 3, "parse errors invisible mid-run");
+    assert_eq!(m.source_frame_resyncs, 4, "frame resyncs invisible mid-run");
+    assert_eq!(m.source_dropped_frames, 1, "dropped frames invisible mid-run");
 
     let j = control::live_metrics_json(&m);
     assert_eq!(j.get("dropped_partial_lines").as_usize(), Some(5));
     assert_eq!(j.get("source_parse_errors").as_usize(), Some(3));
+    assert_eq!(j.get("source_frame_resyncs").as_usize(), Some(4));
+    assert_eq!(j.get("source_dropped_frames").as_usize(), Some(1));
 
     // Totals are running state, not deltas: a later poll overwrites.
     server.record_source_stats(6, 3);
